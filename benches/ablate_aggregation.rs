@@ -1,0 +1,45 @@
+//! Ablation — communication aggregation grain (the Table 2 claim,
+//! swept): how single-core 32^3 MM run time varies with the stream
+//! grain size, from fully interleaved (16 B) to fully aggregated, vs
+//! the DMA phase design. This is the design choice the whole framework
+//! rests on (DESIGN.md §7).
+//!
+//! Run: `cargo bench --bench ablate_aggregation`
+
+use ea4rca::sim::comm::TransferMethod;
+use ea4rca::sim::core::{mm_ops, KernelClass, KernelInvocation};
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::table::{fmt_f, Table};
+
+fn main() {
+    let p = HwParams::vck5000();
+    let inv = KernelInvocation::new(KernelClass::F32Mac, mm_ops(32, 32, 32));
+    let compute = inv.secs_ideal(&p);
+    let bytes = 12_288;
+
+    let mut t = Table::new(
+        "Ablation — communication grain vs run time (32^3 MM, single core)",
+        &["grain (B)", "interrupts", "run time (us)", "slowdown vs DMA"],
+    );
+    let dma = compute + TransferMethod::DmaAggregated.secs(&p, bytes);
+    let mut prev = f64::INFINITY;
+    for grain in [16usize, 64, 256, 1024, 4096, 12288] {
+        let total = compute
+            + TransferMethod::StreamInterleaved { grain_bytes: grain }.secs(&p, bytes);
+        let interrupts = bytes.div_ceil(grain);
+        t.row(&[
+            grain.to_string(),
+            interrupts.to_string(),
+            fmt_f(total * 1e6, 2),
+            format!("{:.2}x", total / dma),
+        ]);
+        assert!(total <= prev, "coarser grains must not be slower");
+        prev = total;
+    }
+    t.row(&["DMA".into(), "1".into(), fmt_f(dma * 1e6, 2), "1.00x".into()]);
+    t.print();
+    println!(
+        "\naggregating communication monotonically converges on the DMA phase design — \
+         the paper's method(1)->(3) progression, continuously."
+    );
+}

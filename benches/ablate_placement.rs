@@ -1,0 +1,73 @@
+//! Ablation — PU placement and inter-PU NoC traffic. The paper (§3.3)
+//! advises minimising inter-PU communication; this quantifies why:
+//! stream circuits between distant PUs cross shared switches, and hot
+//! switches time-share their ports.
+//!
+//! Run: `cargo bench --bench ablate_placement`
+
+use ea4rca::sim::array::AieArray;
+use ea4rca::sim::noc::{region_centre, Noc};
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::table::{fmt_f, Table};
+
+fn main() {
+    let p = HwParams::vck5000();
+
+    // place the 6 MM PUs as the first-fit placer does
+    let mut arr = AieArray::new(&p);
+    let regions: Vec<_> = (0..6).map(|_| arr.place(64).unwrap()).collect();
+    let centres: Vec<_> = regions.iter().map(region_centre).collect();
+
+    // Scenario A: ring of neighbour circuits (adjacent PUs exchange
+    // halo/accumulator data) — the EA4RCA-recommended pattern.
+    let mut noc_a = Noc::new(&p);
+    let mut ring = Vec::new();
+    for i in 0..centres.len() {
+        ring.push(noc_a.connect(centres[i], centres[(i + 1) % centres.len()]));
+    }
+
+    // Scenario B: all-to-one (every PU streams to PU0) — the pattern the
+    // paper warns against.
+    let mut noc_b = Noc::new(&p);
+    let mut star = Vec::new();
+    for c in centres.iter().skip(1) {
+        star.push(noc_b.connect(*c, centres[0]));
+    }
+
+    let bytes = 65_536; // one 128x128 float quarter-block
+    let mut t = Table::new(
+        "Ablation — inter-PU NoC patterns (6 MM PUs, 64 KiB per circuit)",
+        &["pattern", "circuits", "max hops", "hot-switch load", "worst xfer (us)"],
+    );
+    let worst_a = ring
+        .iter()
+        .map(|c| noc_a.transfer_secs(&p, c, bytes))
+        .fold(0.0f64, f64::max);
+    let worst_b = star
+        .iter()
+        .map(|c| noc_b.transfer_secs(&p, c, bytes))
+        .fold(0.0f64, f64::max);
+    t.row(&[
+        "neighbour ring".into(),
+        ring.len().to_string(),
+        ring.iter().map(|c| c.hops).max().unwrap().to_string(),
+        noc_a.max_switch_load().to_string(),
+        fmt_f(worst_a * 1e6, 2),
+    ]);
+    t.row(&[
+        "all-to-one star".into(),
+        star.len().to_string(),
+        star.iter().map(|c| c.hops).max().unwrap().to_string(),
+        noc_b.max_switch_load().to_string(),
+        fmt_f(worst_b * 1e6, 2),
+    ]);
+    t.print();
+    println!(
+        "\nthe star pattern's hot switch carries {}x the ring's load and its \
+         worst transfer is {:.1}x slower — quantifying §3.3's 'minimise \
+         inter-PU communication' rule.",
+        noc_b.max_switch_load() / noc_a.max_switch_load().max(1),
+        worst_b / worst_a
+    );
+    assert!(worst_b > worst_a);
+}

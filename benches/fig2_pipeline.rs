@@ -1,0 +1,50 @@
+//! Figure 2 — the EA4RCA running process: DU-PU pairs alternating
+//! computation and communication phases, pipelined and independent
+//! across pairs. Rendered as an ASCII timeline from a traced run of the
+//! MM accelerator (3 pairs, a few iterations).
+//!
+//! Run: `cargo bench --bench fig2_pipeline`
+
+use ea4rca::apps::mm;
+use ea4rca::coordinator::scheduler::{ExecMode, GroupSpec, SimEngine};
+use ea4rca::sim::params::HwParams;
+use ea4rca::sim::trace::Phase;
+
+fn main() {
+    let p = HwParams::vck5000();
+    // three independent DU-PU pairs (1:2 each) to make Fig 2's "pairs in
+    // different stages simultaneously" visible
+    let groups: Vec<GroupSpec> = (0..3)
+        .map(|i| GroupSpec {
+            name: format!("pair{i}"),
+            du: mm::mm_du(2, 6),
+            pu: mm::mm_pu(),
+            engine_iters: 6,
+mode: ExecMode::Regular,
+        })
+        .collect();
+    let engine = SimEngine::new(p.clone()).with_trace(true);
+    let r = engine.run(&groups);
+
+    println!("Figure 2 — DU-PUs pair execution flow (MM, 3 pairs x 2 PUs, 6 iterations)\n");
+    let horizon = r.trace.horizon_ps();
+    println!("{}", r.trace.render(110, 0, horizon));
+
+    println!("per-lane duty over the run:");
+    for g in 0..3 {
+        for pu in 0..2 {
+            let lane = format!("G{g}.PU{pu}");
+            println!(
+                "  {lane}: compute {:.0}%  comm {:.0}%",
+                r.trace.duty(&lane, Phase::Compute, horizon) * 100.0,
+                r.trace.duty(&lane, Phase::Comm, horizon) * 100.0,
+            );
+        }
+    }
+    println!(
+        "\nphases alternate within a pair and overlap across pairs — the Fig 2 pipeline. \
+         makespan {:.1} us, mean compute duty {:.2}",
+        r.makespan_secs * 1e6,
+        r.compute_duty
+    );
+}

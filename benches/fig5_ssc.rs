@@ -1,0 +1,64 @@
+//! Figure 5 — the four SSC service modes (PSD / SHD / PHD / THR) and
+//! their service timing over 4 PUs, plus the SHD-vs-PHD efficiency
+//! comparison the paper draws (slow PUs delay SHD, PHD needs buffer).
+//!
+//! Run: `cargo bench --bench fig5_ssc`
+
+use ea4rca::apps::mm;
+use ea4rca::coordinator::scheduler::{ExecMode, GroupSpec, SimEngine};
+use ea4rca::engine::data::ssc::SscMode;
+use ea4rca::sim::params::HwParams;
+
+fn main() {
+    let p = HwParams::vck5000();
+    println!("Figure 5 — SSC service modes, 4 PUs, 1 us wire time per PU\n");
+    let per = 1e-6;
+    for mode in [SscMode::Psd, SscMode::Shd, SscMode::Phd] {
+        println!("{} :", mode.name());
+        for pu in 0..4 {
+            let off = mode.service_start_offset(pu, per);
+            let start = (off * 1e6 * 10.0) as usize;
+            let width = (per * 1e6 * 10.0) as usize;
+            let mut row = vec![' '; 60];
+            for c in row.iter_mut().skip(start).take(width) {
+                *c = '=';
+            }
+            println!("  PU{pu} |{}|", row.iter().collect::<String>());
+        }
+        println!(
+            "  group service {:.1} us, staging {} B per KB of subproblem\n",
+            mode.group_service_secs(4, per) * 1e6,
+            mode.staging_bytes(4, 1024)
+        );
+    }
+    println!("THR : single PU, direct wire (group of 1)\n");
+
+    // end-to-end effect on the MM design: SHD vs PHD over 64 iterations
+    let engine = SimEngine::new(p.clone());
+    let mut results = Vec::new();
+    for mode in [SscMode::Phd, SscMode::Shd] {
+        let mut du = mm::mm_du(4, 6);
+        du.ssc_send = mode;
+        let g = GroupSpec {
+            name: format!("mm-{}", mode.name()),
+            du,
+            pu: mm::mm_pu(),
+            engine_iters: 64,
+mode: ExecMode::Regular,
+        };
+        let r = engine.run(&[g]);
+        println!(
+            "MM 4-PU group, 64 iterations, SSC={}: makespan {:.1} us, duty {:.2}",
+            mode.name(),
+            r.makespan_secs * 1e6,
+            r.compute_duty
+        );
+        results.push(r.makespan_secs);
+    }
+    println!(
+        "\nSHD is {:.2}x slower than PHD on this design — the Fig 5 trade \
+         (PHD buys the difference with URAM staging).",
+        results[1] / results[0]
+    );
+    assert!(results[1] > results[0]);
+}

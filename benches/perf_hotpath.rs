@@ -1,0 +1,100 @@
+//! §Perf — the hot paths, measured:
+//!
+//! * L3 scheduler throughput (simulated engine-iterations per second) on
+//!   the Table 6 sweep — this must stay high enough that the full-table
+//!   benches run in seconds.
+//! * PJRT execution latency per artifact (the serving hot path), after
+//!   a warm-up compile.
+//!
+//! Run: `cargo bench --bench perf_hotpath`
+//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+use ea4rca::apps::mm;
+use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::rng::Rng;
+use ea4rca::util::stats::bench;
+use ea4rca::util::table::{fmt_f, Table};
+
+fn main() {
+    let p = HwParams::vck5000();
+
+    // ---- L3 scheduler throughput ----
+    let mut t = Table::new(
+        "L3 scheduler hot path",
+        &["workload", "engine iters", "wall (ms)", "Miters/s"],
+    );
+    for size in [1536usize, 6144] {
+        let iters = mm::iter_computing_engine(size, size, size, 6);
+        let s = bench(1, 5, || {
+            let r = mm::run(&p, size, 6, false).unwrap();
+            std::hint::black_box(r.time_secs);
+        });
+        t.row(&[
+            format!("MM {size}^3 6PU"),
+            iters.to_string(),
+            fmt_f(s.mean * 1e3, 2),
+            fmt_f(iters as f64 / s.mean / 1e6, 2),
+        ]);
+    }
+    t.print();
+
+    // ---- PJRT execution hot path ----
+    let Ok(rt) = Runtime::new() else {
+        println!("\n(artifacts not built — skipping the PJRT hot-path section; run `make artifacts`)");
+        return;
+    };
+    let mut rng = Rng::new(3);
+    let mut t = Table::new(
+        "PJRT execution hot path (after warm-up compile)",
+        &["artifact", "mean (us)", "p95 (us)", "throughput"],
+    );
+    let cases: Vec<(&str, Vec<Tensor>, String)> = vec![
+        (
+            "mm32",
+            vec![
+                Tensor::f32(&[32, 32], rng.normal_vec(1024)),
+                Tensor::f32(&[32, 32], rng.normal_vec(1024)),
+            ],
+            "32^3 MM".into(),
+        ),
+        (
+            "mm_pu128",
+            vec![
+                Tensor::f32(&[128, 128], rng.normal_vec(128 * 128)),
+                Tensor::f32(&[128, 128], rng.normal_vec(128 * 128)),
+            ],
+            "128^3 MM".into(),
+        ),
+        (
+            "filter2d_pu8",
+            vec![
+                Tensor::i32(&[8, 36, 36], rng.int_vec_i32(8 * 36 * 36, -128, 127)),
+                Tensor::i32(&[5, 5], rng.int_vec_i32(25, -8, 8)),
+            ],
+            "8 tiles".into(),
+        ),
+        (
+            "fft1024",
+            vec![
+                Tensor::f32(&[1024], rng.normal_vec(1024)),
+                Tensor::f32(&[1024], rng.normal_vec(1024)),
+            ],
+            "1024-pt FFT".into(),
+        ),
+    ];
+    for (name, inputs, what) in &cases {
+        rt.warmup(&[name]).unwrap();
+        let s = bench(3, 30, || {
+            let out = rt.execute(name, inputs).unwrap();
+            std::hint::black_box(out.len());
+        });
+        t.row(&[
+            name.to_string(),
+            fmt_f(s.mean * 1e6, 1),
+            fmt_f(s.p95 * 1e6, 1),
+            format!("{} / {:.1} us", what, s.mean * 1e6),
+        ]);
+    }
+    t.print();
+}

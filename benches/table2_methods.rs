@@ -1,0 +1,52 @@
+//! Table 2 — simulation test of the three communication methods on a
+//! single-core 32^3 float MM (65 536 FLOP, 12 288 B of traffic):
+//! stream+crossover vs stream+aggregation vs DMA+aggregation.
+//!
+//! Run: `cargo bench --bench table2_methods`
+
+use ea4rca::report::compare_line;
+use ea4rca::sim::comm::TransferMethod;
+use ea4rca::sim::core::{mm_ops, KernelClass, KernelInvocation};
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::table::{fmt_f, Table};
+
+fn main() {
+    let p = HwParams::vck5000();
+    let inv = KernelInvocation::new(KernelClass::F32Mac, mm_ops(32, 32, 32));
+    // Table 2 is the paper's *ideal simulation state*: no invocation
+    // overhead on the compute side.
+    let compute = inv.secs_ideal(&p);
+    let bytes = 12_288; // A + B in, C out (float)
+
+    let rows: [(&str, usize, TransferMethod, f64); 3] = [
+        ("(1) AIE Stream + Crossover", 16,
+         TransferMethod::StreamInterleaved { grain_bytes: 64 }, 31.06),
+        ("(2) AIE Stream + Aggregation", 1024,
+         TransferMethod::StreamAggregated, 8.61),
+        ("(3) AIE DMA + Aggregation", 1024,
+         TransferMethod::DmaAggregated, 3.49),
+    ];
+
+    let mut t = Table::new(
+        "Table 2 — three communication methods, 32^3 float MM, single core",
+        &["Method", "Data Type", "Comm size", "Overall FLOP", "Run time (us)", "Paper (us)"],
+    );
+    for (name, comm_size, method, paper_us) in rows {
+        let total = compute + method.secs(&p, bytes);
+        t.row(&[
+            name.to_string(),
+            "Float".into(),
+            comm_size.to_string(),
+            "65536".into(),
+            fmt_f(total * 1e6, 2),
+            fmt_f(paper_us, 2),
+        ]);
+    }
+    t.print();
+
+    println!();
+    for (name, _, method, paper_us) in rows {
+        let total = (compute + method.secs(&p, bytes)) * 1e6;
+        println!("{}", compare_line(name, paper_us, total));
+    }
+}

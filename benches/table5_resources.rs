@@ -1,0 +1,50 @@
+//! Table 5 — hardware resource utilisation of the four accelerators,
+//! plus a placement check on the 8x50 AIE array.
+//!
+//! Run: `cargo bench --bench table5_resources`
+
+use ea4rca::apps::table5_usage;
+use ea4rca::sim::array::AieArray;
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::table::Table;
+
+fn main() {
+    let p = HwParams::vck5000();
+    let mut t = Table::new(
+        "Table 5 — hardware resource utilisation",
+        &["Apps", "LUT", "FF", "BRAM", "URAM", "DSP", "AIE", "DU", "PU"],
+    );
+    for (app, du, pu) in [("MM", 1, 6), ("Filter2D", 11, 44), ("FFT", 8, 8), ("MM-T", 50, 50)] {
+        let u = table5_usage(app);
+        u.check(&p).expect("design must fit the card");
+        let mut row = vec![app.to_string()];
+        row.extend(u.table5_row(&p));
+        row.push(du.to_string());
+        row.push(pu.to_string());
+        t.row(&row);
+    }
+    t.print();
+
+    // Placement: the array must actually accommodate each design.
+    println!("\nplacement check on the 8x50 array:");
+    for (app, pus, cores_per_pu) in
+        [("MM", 6, 64), ("Filter2D", 44, 8), ("FFT", 8, 10), ("MM-T", 50, 8)]
+    {
+        let mut arr = AieArray::new(&p);
+        // FFT PUs are 10 cores = 1 column + 2; place as 8 + 2.
+        let mut placed = 0;
+        for _ in 0..pus {
+            if cores_per_pu % 8 == 0 {
+                arr.place(cores_per_pu).unwrap();
+            } else {
+                arr.place(8).unwrap();
+                arr.place(cores_per_pu - 8).unwrap();
+            }
+            placed += cores_per_pu;
+        }
+        println!(
+            "  {app:<9} {placed:>3} cores placed, array utilisation {:.0}%",
+            arr.utilization() * 100.0
+        );
+    }
+}

@@ -1,0 +1,35 @@
+//! Table 6 — MM accelerator performance across task scales and PU
+//! quantities. Regenerates all 12 rows and compares the headline cells
+//! to the paper.
+//!
+//! Run: `cargo bench --bench table6_mm`
+
+use ea4rca::apps::mm;
+use ea4rca::report::{compare_line, perf_row, perf_table};
+use ea4rca::sim::params::HwParams;
+
+fn main() {
+    let p = HwParams::vck5000();
+    let mut t = perf_table("Table 6 — MM accelerator (Float)");
+    let wall = std::time::Instant::now();
+    for size in [768usize, 1536, 3072, 6144] {
+        for (pus, label) in [(6, "6(100%)"), (3, "3(50%)"), (1, "1(17%)")] {
+            let r = mm::run(&p, size, pus, false).expect("run");
+            perf_row(&mut t, &format!("{size}^3"), label, &r, None);
+        }
+    }
+    t.print();
+    println!("(sweep simulated in {:.2} s wall-clock)\n", wall.elapsed().as_secs_f64());
+
+    // paper anchors
+    let r = mm::run(&p, 6144, 6, false).unwrap();
+    println!("{}", compare_line("6144^3 6PU time (ms)", 135.59, r.time_secs * 1e3));
+    println!("{}", compare_line("6144^3 6PU GOPS", 3421.02, r.gops));
+    println!("{}", compare_line("6144^3 6PU GOPS/AIE", 8.90, r.gops_per_aie));
+    println!("{}", compare_line("6144^3 6PU power (W)", 42.13, r.power_w));
+    println!("{}", compare_line("6144^3 6PU GOPS/W", 81.20, r.gops_per_w));
+    let r = mm::run(&p, 768, 6, false).unwrap();
+    println!("{}", compare_line("768^3 6PU time (ms)", 0.44, r.time_secs * 1e3));
+    let r = mm::run(&p, 768, 1, false).unwrap();
+    println!("{}", compare_line("768^3 1PU time (ms)", 1.84, r.time_secs * 1e3));
+}

@@ -1,0 +1,38 @@
+//! Table 7 — Filter2D accelerator performance across resolutions and PU
+//! quantities (12 rows), with paper anchors.
+//!
+//! Run: `cargo bench --bench table7_filter2d`
+
+use ea4rca::apps::filter2d;
+use ea4rca::report::{compare_line, perf_row, perf_table};
+use ea4rca::sim::params::HwParams;
+
+fn main() {
+    let p = HwParams::vck5000();
+    let mut t = perf_table("Table 7 — Filter2D accelerator (Int32 arithmetic, 5x5)");
+    let wall = std::time::Instant::now();
+    let scales: [(usize, usize, &str); 4] = [
+        (128, 128, "128x128"),
+        (3480, 2160, "3480x2160(4K)"),
+        (7680, 4320, "7680x4320(8K)"),
+        (15360, 8640, "15360x8640(16K)"),
+    ];
+    for (h, w, label) in scales {
+        for (pus, pl) in [(44, "44(100%)"), (20, "20(45%)"), (4, "4(9%)")] {
+            let r = filter2d::run(&p, h, w, pus, false).expect("run");
+            // the paper divides GOPS/AIE by the *requested* PU cores
+            perf_row(&mut t, label, pl, &r, Some(pus * filter2d::CORES_PER_PU));
+        }
+    }
+    t.print();
+    println!("(sweep simulated in {:.2} s wall-clock)\n", wall.elapsed().as_secs_f64());
+
+    let r = filter2d::run(&p, 3480, 2160, 44, false).unwrap();
+    println!("{}", compare_line("4K 44PU tasks/sec", 2315.94, r.tasks_per_sec));
+    println!("{}", compare_line("4K 44PU GOPS", 870.42, r.gops));
+    let r = filter2d::run(&p, 15360, 8640, 44, false).unwrap();
+    println!("{}", compare_line("16K 44PU time (ms)", 6.32, r.time_secs * 1e3));
+    println!("{}", compare_line("16K 44PU GOPS", 1050.43, r.gops));
+    let r = filter2d::run(&p, 128, 128, 44, false).unwrap();
+    println!("{}", compare_line("128x128 44PU tasks/sec", 6468.72, r.tasks_per_sec));
+}

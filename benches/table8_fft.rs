@@ -1,0 +1,37 @@
+//! Table 8 — FFT accelerator performance across sample sizes and PU
+//! quantities, including the infeasible 8192/2PU N/A cell.
+//!
+//! Run: `cargo bench --bench table8_fft`
+
+use ea4rca::apps::fft;
+use ea4rca::report::{compare_line, fft_row, fft_table};
+use ea4rca::sim::params::HwParams;
+
+fn main() {
+    let p = HwParams::vck5000();
+    let mut t = fft_table("Table 8 — FFT accelerator (CInt16)");
+    let wall = std::time::Instant::now();
+    for n in [8192usize, 4096, 2048, 1024] {
+        for (pus, label) in [(8, "8(100%)"), (4, "4(50%)"), (2, "2(25%)")] {
+            let r = fft::run(&p, n, pus, 4096, false).expect("run");
+            fft_row(&mut t, n, label, r.as_ref());
+        }
+    }
+    t.print();
+    println!("(sweep simulated in {:.2} s wall-clock)\n", wall.elapsed().as_secs_f64());
+
+    let anchors = [
+        (1024, 8, 2_325_581.40, 0.43),
+        (2048, 8, 1_123_595.51, 0.89),
+        (4096, 8, 526_315.79, 1.90),
+        (8192, 8, 250_000.00, 4.00),
+        (1024, 2, 588_235.29, 1.70),
+    ];
+    for (n, pus, paper_tps, paper_us) in anchors {
+        let r = fft::run(&p, n, pus, 4096, false).unwrap().unwrap();
+        println!("{}", compare_line(&format!("{n}-pt {pus}PU tasks/sec"), paper_tps, r.tasks_per_sec));
+        println!("{}", compare_line(&format!("{n}-pt {pus}PU us/task"), paper_us, 1e6 / r.tasks_per_sec));
+    }
+    assert!(fft::run(&p, 8192, 2, 64, false).unwrap().is_none(), "N/A cell must hold");
+    println!("\n8192-pt / 2PU: N/A (exceeds AIE core memory) — matches the paper");
+}

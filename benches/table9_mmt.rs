@@ -1,0 +1,58 @@
+//! Table 9 — MM-T, the AIE compute-throughput probe: three runs + the
+//! average, as the paper reports.
+//!
+//! Run: `cargo bench --bench table9_mmt`
+
+use ea4rca::apps::mmt;
+use ea4rca::report::{compare_line, tasks_sci};
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::table::{fmt_f, Table};
+
+fn main() {
+    let p = HwParams::vck5000();
+    let mut t = Table::new(
+        "Table 9 — performance testing of AIE computing based on MM (MM-T)",
+        &["ID", "Data Type", "AIE freq", "Tasks/sec", "GOPS", "GOPS/AIE", "Power (W)", "GOPS/W"],
+    );
+    let mut sum_tps = 0.0;
+    let mut sum_gops = 0.0;
+    let mut sum_w = 0.0;
+    // Three runs at different batch lengths (the simulator is
+    // deterministic; the paper's three runs vary by measurement noise,
+    // ours by workload length -> amortisation of dispatch).
+    for (id, iters) in [(1u32, 20_000u64), (2, 40_000), (3, 30_000)] {
+        let r = mmt::run(&p, iters, false).expect("run");
+        sum_tps += r.tasks_per_sec;
+        sum_gops += r.gops;
+        sum_w += r.power_w;
+        t.row(&[
+            id.to_string(),
+            "Float".into(),
+            "1.33GHZ".into(),
+            tasks_sci(r.tasks_per_sec),
+            fmt_f(r.gops, 2),
+            fmt_f(r.gops_per_aie, 2),
+            fmt_f(r.power_w, 2),
+            fmt_f(r.gops_per_w, 2),
+        ]);
+    }
+    let (tps, gops, w) = (sum_tps / 3.0, sum_gops / 3.0, sum_w / 3.0);
+    t.row(&[
+        "Average".into(),
+        "N/A".into(),
+        "N/A".into(),
+        tasks_sci(tps),
+        fmt_f(gops, 2),
+        fmt_f(gops / 400.0, 2),
+        fmt_f(w, 2),
+        fmt_f(gops / w, 2),
+    ]);
+    t.print();
+
+    println!();
+    println!("{}", compare_line("avg tasks/sec", 9.43e7, tps));
+    println!("{}", compare_line("avg GOPS", 6181.56, gops));
+    println!("{}", compare_line("avg GOPS/AIE", 15.45, gops / 400.0));
+    println!("{}", compare_line("avg power (W)", 65.61, w));
+    println!("{}", compare_line("avg GOPS/W", 94.22, gops / w));
+}

@@ -1,0 +1,34 @@
+//! AIE Graph Code Generator demo (paper §3.5): parse each accelerator's
+//! Graph Configuration File, validate the PU structure, and emit the
+//! ADF-style C++ project into `generated/<name>/`.
+//!
+//! Run: `cargo run --release --example codegen_demo`
+
+use ea4rca::codegen::{config::PuConfig, generator};
+
+fn main() -> anyhow::Result<()> {
+    println!("== AIE Graph Code Generator ==\n");
+    for name in ["mm", "filter2d", "fft", "mmt"] {
+        let path = format!("configs/{name}.json");
+        let cfg = PuConfig::from_file(std::path::Path::new(&path))?;
+        let proj = generator::generate(&cfg)?;
+        let out = std::path::PathBuf::from("generated").join(name);
+        proj.write_to(&out)?;
+        println!(
+            "{path:<22} -> {}/: PU '{}' | {:>3} cores | {:>2} PLIO | x{} copies | {} PST(s)",
+            out.display(),
+            cfg.name,
+            cfg.pu.cores(),
+            cfg.pu.total_plios(),
+            cfg.copies,
+            cfg.pu.psts.len()
+        );
+        // show a taste of the generated graph
+        for line in proj.graph_h.lines().take(6) {
+            println!("    | {line}");
+        }
+        println!();
+    }
+    println!("one-click generation complete — drop `generated/<app>/` into a Vitis AIE project.");
+    Ok(())
+}

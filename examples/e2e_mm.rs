@@ -1,0 +1,83 @@
+//! End-to-end driver (DESIGN.md E11): the full system on a real workload.
+//!
+//! * Deploys the paper's MM accelerator design (codegen-validated PU).
+//! * Routes an ENTIRE 768^3 float MM through the PJRT runtime — all 216
+//!   PU iterations (6 x 6 x 6 blocks of 128^3), with the DU's task
+//!   decomposition and the TPC's K-accumulation running in the rust
+//!   coordinator — and validates every output element against a CPU
+//!   oracle.
+//! * Simulates the same workload on the calibrated VCK5000 model and
+//!   reports the paper-vs-measured headline numbers.
+//!
+//! Run: `cargo run --release --example e2e_mm` (after `make artifacts`).
+//! Results are recorded in EXPERIMENTS.md §E11.
+
+use ea4rca::apps::mm;
+use ea4rca::codegen::config::PuConfig;
+use ea4rca::report::compare_line;
+use ea4rca::runtime::tensor::matmul_ref;
+use ea4rca::runtime::Runtime;
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== EA4RCA end-to-end driver: 768^3 float MM ==\n");
+
+    // 0. the deployed design comes from the same config file the code
+    //    generator consumes — single source of truth.
+    let cfg = PuConfig::from_json_text(include_str!("../configs/mm.json"))?;
+    println!(
+        "PU from configs/mm.json: {} cores, {} PLIOs, {} copies (validated)\n",
+        cfg.pu.cores(),
+        cfg.pu.total_plios(),
+        cfg.copies
+    );
+    assert_eq!(cfg.pu.cores(), 64);
+
+    // 1. real numerics: the whole task through PJRT.
+    let n = 768;
+    let rt = Runtime::new()?;
+    rt.warmup(&["mm_pu128"])?;
+    let mut rng = Rng::new(0xE2E);
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+    println!("executing all {} PU iterations through mm_pu128...", 6 * 6 * 6);
+    let t0 = std::time::Instant::now();
+    let c = mm::matmul_via_pus(&rt, &a, &b, n)?;
+    let exec_secs = t0.elapsed().as_secs_f64();
+
+    println!("validating 768x768 output against the CPU oracle...");
+    let want = matmul_ref(&a, &b, n, n, n);
+    let mut max_err = 0.0f64;
+    for (x, y) in c.iter().zip(&want) {
+        max_err = max_err.max((x - y).abs() as f64);
+    }
+    assert!(max_err < 5e-2, "max err {max_err}");
+    let ops = 2.0 * (n as f64).powi(3);
+    println!(
+        "  done: {exec_secs:.2} s on the CPU substrate ({:.2} GOPS), max |err| = {max_err:.2e}\n",
+        ops / exec_secs / 1e9
+    );
+
+    // 2. simulated timing on the calibrated VCK5000 model.
+    let p = HwParams::vck5000();
+    println!("simulated on the calibrated VCK5000 model (6 PUs):");
+    let r = mm::run(&p, n, 6, false)?;
+    println!("  {}", compare_line("time (ms)", 0.44, r.time_secs * 1e3));
+    println!("  {}", compare_line("tasks/sec", 2263.35, r.tasks_per_sec));
+    println!("  {}", compare_line("GOPS", 2050.53, r.gops));
+    println!("  {}", compare_line("GOPS/AIE", 5.34, r.gops_per_aie));
+    println!("  {}", compare_line("power (W)", 33.02, r.power_w));
+    println!("  {}", compare_line("GOPS/W", 62.10, r.gops_per_w));
+
+    let stats = rt.stats();
+    let s = &stats["mm_pu128"];
+    println!(
+        "\nPJRT hot path: {} executions, mean {:.3} ms each (compile {:.2} s, once)",
+        s.executions,
+        s.total_exec_secs / s.executions as f64 * 1e3,
+        s.compile_secs
+    );
+    println!("\nE2E OK — all layers compose: config -> PU -> PJRT numerics -> sim report.");
+    Ok(())
+}

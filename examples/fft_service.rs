@@ -1,0 +1,56 @@
+//! FFT serving scenario: a batch of 1024-point FFT requests served
+//! through the FFT PU artifact (real numerics, verified against the
+//! oracle), plus the simulated Table 8 rows for the same configuration.
+//!
+//! Run: `cargo run --release --example fft_service`
+
+use ea4rca::apps::fft;
+use ea4rca::report::compare_line;
+use ea4rca::runtime::tensor::fft_ref;
+use ea4rca::runtime::Runtime;
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== FFT service: 64 x 1024-pt requests through the PU ==\n");
+    let rt = Runtime::new()?;
+    rt.warmup(&["fft1024"])?;
+    let mut rng = Rng::new(0xFF7);
+    let n = 1024;
+    let batch = 64;
+
+    let mut worst = 0.0f64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..batch {
+        let re = rng.normal_vec(n);
+        let im = rng.normal_vec(n);
+        let (or_, oi) = fft::fft_via_pu(&rt, &re, &im)?;
+        let (wr, wi) = fft_ref(&re, &im);
+        for ((a, b), (c, d)) in or_.iter().zip(&wr).zip(oi.iter().zip(&wi)) {
+            worst = worst.max((a - b).abs() as f64).max((c - d).abs() as f64);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {batch} requests in {:.3} s ({:.0} req/s on the CPU substrate), \
+         max |err| vs oracle = {worst:.2e}",
+        dt,
+        batch as f64 / dt
+    );
+    assert!(worst < 0.5, "fft numerics off: {worst}");
+
+    println!("\nsimulated 1024-pt, 8 PUs (Table 8 row):");
+    let p = HwParams::vck5000();
+    let r = fft::run(&p, 1024, 8, 4096, false)?.expect("feasible");
+    println!("  {}", compare_line("run time (us/task)", 0.43, 1e6 / r.tasks_per_sec));
+    println!("  {}", compare_line("tasks/sec", 2_325_581.40, r.tasks_per_sec));
+    println!("  {}", compare_line("power (W)", 12.58, r.power_w));
+    println!("  {}", compare_line("TPS/W", 184_863.39, r.tasks_per_sec_per_w));
+
+    println!("\ninfeasible configuration check (the paper's N/A cell):");
+    match fft::run(&p, 8192, 2, 64, false)? {
+        None => println!("  8192-pt on 2 PUs: N/A (exceeds AIE core memory) — matches Table 8"),
+        Some(_) => anyhow::bail!("8192/2PU should be infeasible"),
+    }
+    Ok(())
+}

@@ -1,0 +1,13 @@
+use ea4rca::runtime::{Runtime, Tensor};
+fn main() {
+    let rt = Runtime::with_dir("/tmp").unwrap();
+    let n = 16usize;
+    let mut re = vec![0.0f32; n]; re[0] = 1.0;
+    let im = vec![0.0f32; n];
+    let g = rt.execute("gather", &[Tensor::f32(&[n], re.clone())]).unwrap();
+    println!("gather: {:?}", &g[0].as_f32().unwrap()[..4]);
+    let s = rt.execute("stage1", &[Tensor::f32(&[n], re.clone()), Tensor::f32(&[n], im.clone())]).unwrap();
+    println!("stage1: {:?} {:?}", &s[0].as_f32().unwrap()[..4], &s[1].as_f32().unwrap()[..4]);
+    let f = rt.execute("fft16", &[Tensor::f32(&[n], re), Tensor::f32(&[n], im)]).unwrap();
+    println!("fft16: {:?}", &f[0].as_f32().unwrap()[..4]);
+}

@@ -1,0 +1,11 @@
+use ea4rca::runtime::{Runtime, Tensor};
+fn main() {
+    let rt = Runtime::with_dir("/tmp").unwrap();
+    let n = 16usize;
+    let mut re = vec![0.0f32; n]; re[0] = 1.0;
+    let im = vec![0.0f32; n];
+    for name in ["g2", "g3", "g4"] {
+        let s = rt.execute(name, &[Tensor::f32(&[n], re.clone()), Tensor::f32(&[n], im.clone())]).unwrap();
+        println!("{name}: {:?}", &s[0].as_f32().unwrap()[..8]);
+    }
+}

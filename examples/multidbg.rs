@@ -1,0 +1,6 @@
+use ea4rca::runtime::{Runtime, Tensor};
+fn main() {
+    let rt = Runtime::with_dir("/tmp").unwrap();
+    let out = rt.execute("multi", &[Tensor::f32(&[4], vec![1.,2.,3.,4.])]).unwrap();
+    println!("o1={:?} o2={:?}", out[0].as_f32().unwrap(), out[1].as_f32().unwrap());
+}

@@ -1,0 +1,14 @@
+use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::util::stats::bench;
+fn main() {
+    let rt = Runtime::with_dir("/tmp").unwrap();
+    let mut rng = Rng::new(1);
+    let a = Tensor::f32(&[128,128], rng.normal_vec(128*128));
+    let b = Tensor::f32(&[128,128], rng.normal_vec(128*128));
+    for name in ["mm_explicit", "mm_grid"] {
+        rt.warmup(&[name]).unwrap();
+        let s = bench(5, 50, || { rt.execute(name, &[a.clone(), b.clone()]).unwrap(); });
+        println!("{name}: mean {:.1} us  p95 {:.1} us", s.mean*1e6, s.p95*1e6);
+    }
+}

@@ -1,0 +1,14 @@
+use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::util::stats::bench;
+fn main() {
+    let rt = Runtime::with_dir("/tmp").unwrap();
+    let mut rng = Rng::new(1);
+    let a = Tensor::f32(&[128,128], rng.normal_vec(128*128));
+    let b = Tensor::f32(&[128,128], rng.normal_vec(128*128));
+    for name in ["mm_explicit", "mm_grid", "mm_xladot"] {
+        rt.warmup(&[name]).unwrap();
+        let s = bench(5, 50, || { rt.execute(name, &[a.clone(), b.clone()]).unwrap(); });
+        println!("{name}: mean {:.1} us ({:.2} GFLOPS)", s.mean*1e6, 2.0*128f64.powi(3)/s.mean/1e9);
+    }
+}

@@ -1,0 +1,52 @@
+//! Quickstart: deploy the paper's MM accelerator, simulate a 768^3 MM
+//! (Table 6's first row), then push a real 256^3 MM through the PJRT
+//! runtime and check the numbers against a CPU oracle.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (needs `make artifacts` once beforehand for the PJRT part).
+
+use ea4rca::apps::mm;
+use ea4rca::runtime::tensor::matmul_ref;
+use ea4rca::runtime::Runtime;
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let p = HwParams::vck5000();
+
+    // --- 1. simulate the paper's configuration -------------------------
+    println!("== EA4RCA quickstart ==\n");
+    println!("simulating 768^3 float MM on the 6-PU / 384-core design:");
+    let r = mm::run(&p, 768, 6, false)?;
+    println!(
+        "  {:.2} ms | {:.0} tasks/s | {:.1} GOPS | {:.2} GOPS/AIE | {:.1} W | {:.1} GOPS/W",
+        r.time_secs * 1e3,
+        r.tasks_per_sec,
+        r.gops,
+        r.gops_per_aie,
+        r.power_w,
+        r.gops_per_w
+    );
+    println!("  (paper Table 6 row 1: 0.44 ms, 2263 tasks/s, 2050 GOPS, 33.0 W)\n");
+
+    // --- 2. real numerics through the AOT artifacts --------------------
+    println!("executing a real 256^3 MM through the mm_pu128 artifact (PJRT):");
+    let rt = Runtime::new()?;
+    let mut rng = Rng::new(42);
+    let n = 256;
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+    let t0 = std::time::Instant::now();
+    let c = mm::matmul_via_pus(&rt, &a, &b, n)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let want = matmul_ref(&a, &b, n, n, n);
+    let err = c
+        .iter()
+        .zip(&want)
+        .map(|(x, y)| (x - y).abs() as f64)
+        .fold(0.0, f64::max);
+    println!("  {:.3} s on the CPU substrate, max |err| vs oracle = {err:.2e}", dt);
+    assert!(err < 1e-2, "numerics mismatch");
+    println!("\nOK — simulation and numerics both check out.");
+    Ok(())
+}

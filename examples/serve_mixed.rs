@@ -1,0 +1,61 @@
+//! Serving scenario: the leader/worker coordinator serving a mixed
+//! stream of MM / FFT / Filter2D requests through per-worker PJRT
+//! runtimes, reporting latency percentiles and per-worker throughput.
+//!
+//! Run: `cargo run --release --example serve_mixed`
+
+use ea4rca::coordinator::server::{serve_batch, Server};
+use ea4rca::workload::{generate_stream, Mix};
+
+fn main() -> anyhow::Result<()> {
+    println!("== EA4RCA serving: mixed request stream ==\n");
+    let workers = 4;
+    let n_jobs = 256;
+    let mut server = Server::start(
+        workers,
+        ea4rca::runtime::Manifest::default_dir(),
+        &["mm_pu128", "fft1024", "filter2d_pu8"],
+    )?;
+    println!("{} workers up (per-worker PJRT runtimes, warm executables)", server.workers());
+
+    let stream = generate_stream(&Mix::mm_heavy(), n_jobs, 0x5E12);
+    let jobs: Vec<(String, Vec<_>)> = stream
+        .into_iter()
+        .map(|(k, inputs)| (k.artifact().to_string(), inputs))
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let (results, latency) = serve_batch(&mut server, jobs)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let errors = results.iter().filter(|r| r.outputs.is_err()).count();
+    println!(
+        "\nserved {n_jobs} jobs in {:.2} s -> {:.0} jobs/s, {errors} errors",
+        wall,
+        n_jobs as f64 / wall
+    );
+    println!(
+        "latency: mean {:.2} ms | p50 {:.2} ms | p95 {:.2} ms | max {:.2} ms",
+        latency.mean * 1e3,
+        latency.p50 * 1e3,
+        latency.p95 * 1e3,
+        latency.max * 1e3
+    );
+
+    let report = server.shutdown()?;
+    println!("\nper-worker:");
+    for w in &report.workers {
+        println!(
+            "  worker {}: {} jobs, {:.1} ms exec total, {} errors",
+            w.worker,
+            w.jobs,
+            w.exec_secs * 1e3,
+            w.errors
+        );
+    }
+    anyhow::ensure!(errors == 0, "serving errors");
+    let min = report.workers.iter().map(|w| w.jobs).min().unwrap();
+    anyhow::ensure!(min > 0, "a worker sat idle");
+    println!("\nserving OK — leader routed work across all {} workers.", report.workers.len());
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT compiler: lower every PU model to HLO text + a manifest.
+
+This is the only place Python touches the build. ``make artifacts`` runs
+it once; afterwards the rust binary is self-contained.
+
+Interchange format is HLO **text**, not ``.serialize()`` — the image's
+xla_extension 0.5.1 rejects jax>=0.5's 64-bit-instruction-id protos, while
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Every artifact gets an entry in ``artifacts/manifest.json`` that the rust
+runtime parses (with its own hand-rolled JSON reader):
+
+    {"artifacts": [{"name": ..., "file": ..., "inputs": [{"shape": [...],
+      "dtype": "f32"}, ...], "outputs": [...]}, ...]}
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import mm_lowbit
+
+_DTYPE_TAG = {"float32": "f32", "int32": "i32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_catalogue():
+    """(name, fn, example_arg_specs) for every artifact we ship.
+
+    One HLO module per PU variant — HLO is shape-static, so each FFT size
+    is its own artifact (the rust runtime picks by name).
+    """
+    f32, i32 = jnp.float32, jnp.int32
+    cat = [
+        # single-core kernels (used by MM-T probe and runtime smoke tests)
+        ("mm32", lambda a, b: (model.kmm.mm32(a, b),),
+         [_spec((32, 32), f32), _spec((32, 32), f32)]),
+        ("mm32_acc", lambda a, b, c: (model.kmm.mm32_acc(a, b, c),),
+         [_spec((32, 32), f32)] * 3),
+        # low-bit variants (paper §4.3's energy-efficiency claim)
+        ("mm32_i8", lambda a, b: (mm_lowbit.mm32_i8(a, b),),
+         [_spec((32, 32), i32)] * 2),
+        ("mm32_i16", lambda a, b: (mm_lowbit.mm32_i16(a, b),),
+         [_spec((32, 32), i32)] * 2),
+        ("mmt_cascade8", lambda a, b: (model.mmt_cascade8(a, b),),
+         [_spec((32, 256), f32), _spec((256, 32), f32)]),
+        # PU-level graphs
+        # the explicit Parallel<16>*Cascade<4> graph, NOT the fused-grid
+        # pallas form: on the CPU PJRT backend the explicit 64-dot graph
+        # executes 1.7x faster (278 us vs 470 us; 0.77x of the pure-dot
+        # roofline) — EXPERIMENTS.md §Perf L2.
+        ("mm_pu128", lambda a, b: (model.mm_pu128(a, b),),
+         [_spec((128, 128), f32), _spec((128, 128), f32)]),
+        ("filter2d_pu8", lambda t, k: (model.filter2d_pu8(t, k),),
+         [_spec((8, 36, 36), i32), _spec((5, 5), i32)]),
+    ]
+    for n in (1024, 2048, 4096, 8192):
+        cat.append(
+            (f"fft{n}", lambda re, im: tuple(model.fft_pu(re, im)),
+             [_spec((n,), f32), _spec((n,), f32)])
+        )
+    return cat
+
+
+def lower_entry(name, fn, specs):
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    # The HLO text printer elides large literals ("...") and the
+    # downstream 0.5.1 parser fills garbage — a silent-corruption trap.
+    # Large constants must be expressed as traced ops instead (see
+    # kernels/fft.py stage_twiddles_traced).
+    if "..." in text:
+        raise ValueError(
+            f"artifact {name!r} contains elided constants — move large "
+            "literals into traced ops (iota/cos/...) before lowering"
+        )
+    out_info = jax.eval_shape(fn, *specs)
+    inputs = [
+        {"shape": list(s.shape), "dtype": _DTYPE_TAG[str(s.dtype)]}
+        for s in specs
+    ]
+    outputs = [
+        {"shape": list(o.shape), "dtype": _DTYPE_TAG[str(o.dtype)]}
+        for o in out_info
+    ]
+    return text, inputs, outputs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of artifact names")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"artifacts": []}
+    for name, fn, specs in artifact_catalogue():
+        if only is not None and name not in only:
+            continue
+        text, inputs, outputs = lower_entry(name, fn, specs)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": inputs,
+                "outputs": outputs,
+                "sha256_16": digest,
+            }
+        )
+        print(f"  wrote {path} ({len(text)} chars, sha {digest})")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  wrote {os.path.join(args.out_dir, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

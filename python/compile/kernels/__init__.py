@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels.
+
+Each kernel is the fixed-size subtask a single AIE core solves in the
+paper's accelerators (DESIGN.md §Hardware-Adaptation):
+
+* ``mm32``      — 32x32x32 float matrix multiply (the paper's / CHARM's
+                  optimal single-core AIE load), with and without a cascade
+                  accumulator input.
+* ``filter2d``  — 5x5 int32 2-D filter over a 32x32 tile (+2-pixel halo).
+* ``fft``       — radix-2 DIT butterfly stage over complex data carried as
+                  separate float32 real/imag planes (paper dtype cint16;
+                  see DESIGN.md substitutions).
+
+All kernels run with ``interpret=True`` so the AOT lowering produces plain
+HLO executable on the CPU PJRT client (a real-TPU build would produce
+Mosaic custom-calls the CPU plugin cannot run).
+"""
+
+from . import fft, filter2d, mm32, mm_lowbit, ref  # noqa: F401

@@ -1,0 +1,84 @@
+"""Radix-2 DIT FFT butterfly Pallas kernel — the paper's Butterfly CC mode.
+
+The paper's FFT PU has two processing structures (Table 4): PST#1 is a
+dedicated Butterfly component, PST#2 a Parallel<2>*Cascade<3> group. Here
+the butterfly stage is the L1 kernel; the L2 model (model.py) chains the
+log2(N) stages and the bit-reversal permutation.
+
+Paper dtype is cint16. The CPU-PJRT substrate carries complex data as two
+float32 planes (DESIGN.md substitution table); the *timing* model in the
+rust simulator still uses cint16 byte widths.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _butterfly_kernel(re_ref, im_ref, wre_ref, wim_ref, ore_ref, oim_ref):
+    tr = re_ref[:, 0, :]
+    ti = im_ref[:, 0, :]
+    br = re_ref[:, 1, :]
+    bi = im_ref[:, 1, :]
+    # bottom leg rotated by the twiddle, then the +/- combine
+    pr = br * wre_ref[...] - bi * wim_ref[...]
+    pi = br * wim_ref[...] + bi * wre_ref[...]
+    ore_ref[:, 0, :] = tr + pr
+    oim_ref[:, 0, :] = ti + pi
+    ore_ref[:, 1, :] = tr - pr
+    oim_ref[:, 1, :] = ti - pi
+
+
+def butterfly_stage(re, im, wre, wim):
+    """One radix-2 stage over data reshaped to (groups, 2, half).
+
+    re, im:   (g, 2, h) float32 — top/bottom butterfly legs
+    wre, wim: (h,)      float32 — stage twiddle factors W_{2h}^j
+    """
+    g, two, h = re.shape
+    assert two == 2 and wre.shape == (h,)
+    shape = jax.ShapeDtypeStruct((g, 2, h), jnp.float32)
+    return pl.pallas_call(
+        _butterfly_kernel,
+        out_shape=(shape, shape),
+        interpret=True,
+    )(re, im, wre, wim)
+
+
+@functools.lru_cache(maxsize=None)
+def bit_reverse_indices(n: int) -> np.ndarray:
+    """Bit-reversal permutation for an n-point radix-2 FFT (n power of 2)."""
+    bits = int(n).bit_length() - 1
+    assert 1 << bits == n, "n must be a power of two"
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int64)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+@functools.lru_cache(maxsize=None)
+def stage_twiddles(h: int) -> tuple[np.ndarray, np.ndarray]:
+    """Twiddles W_{2h}^j = exp(-2*pi*i*j/(2h)) for j in [0, h) (numpy)."""
+    j = np.arange(h)
+    w = np.exp(-2j * np.pi * j / (2 * h))
+    return w.real.astype(np.float32), w.imag.astype(np.float32)
+
+
+def stage_twiddles_traced(h: int):
+    """Twiddles as *traced* ops (iota -> cos/sin) rather than a baked
+    constant array.
+
+    Large constants MUST NOT appear in AOT-lowered modules: the HLO
+    *text* printer elides literals beyond a size threshold ("...") and
+    the downstream parser fills garbage — the interchange-format trap of
+    this build (EXPERIMENTS.md, 'HLO round-trip gotchas'). XLA
+    constant-folds the iota+cos at compile time anyway, so the kernel
+    cost is identical.
+    """
+    j = jnp.arange(h, dtype=jnp.float32)
+    ang = -jnp.pi * j / h
+    return jnp.cos(ang), jnp.sin(ang)

@@ -1,0 +1,58 @@
+"""5x5 Filter2D Pallas kernel — one AIE core's base Filter2D task.
+
+The paper splits images into 32x32 tiles (Table 4 / §4.3: "the split task
+size is 32x32 image blocks"); a 5x5 filter therefore needs a 2-pixel halo,
+so the per-core input is a 36x36 tile and the output a 32x32 tile.
+Data type is int32 as in the paper's Filter2D evaluation (Table 3).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 32  # output tile edge (the paper's split size)
+TAPS = 5  # filter edge
+HALO = TAPS - 1  # 2 pixels each side
+IN_TILE = TILE + HALO  # 36
+
+
+def _filter2d_kernel(x_ref, k_ref, o_ref):
+    acc = jnp.zeros((TILE, TILE), jnp.int32)
+    # 25 shifted MACs — the unrolled form the AIE VLIW kernel would use.
+    for u in range(TAPS):
+        for v in range(TAPS):
+            acc = acc + x_ref[u : u + TILE, v : v + TILE] * k_ref[u, v]
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def filter2d_tile(x, k):
+    """32x32 output tile of a 5x5 int32 filter over a 36x36 halo tile."""
+    return pl.pallas_call(
+        _filter2d_kernel,
+        out_shape=jax.ShapeDtypeStruct((TILE, TILE), jnp.int32),
+        interpret=True,
+    )(x, k)
+
+
+def _filter2d_batch_kernel(x_ref, k_ref, o_ref):
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for u in range(TAPS):
+        for v in range(TAPS):
+            acc = acc + x_ref[:, u : u + TILE, v : v + TILE] * k_ref[u, v]
+    o_ref[...] = acc
+
+
+def filter2d_batch(x, k):
+    """Batched tile filter — the Parallel<8> CC: 8 cores, one tile each.
+
+    x: (batch, 36, 36) int32, k: (5, 5) int32 -> (batch, 32, 32) int32.
+    """
+    batch = x.shape[0]
+    return pl.pallas_call(
+        _filter2d_batch_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, TILE, TILE), jnp.int32),
+        interpret=True,
+    )(x, k)

@@ -1,0 +1,90 @@
+"""32x32x32 matrix-multiply Pallas kernel — one AIE core's base MM task.
+
+The paper (following CHARM [47]) fixes the single-core subtask at
+32x32x32 float: three 32x32 operands fit the 32 KiB AIE core memory
+(12 KiB) while saturating the vector unit. On our substrate the same
+choice is VMEM-shaped: one 32x32 block per BlockSpec tile.
+
+Two entry points:
+
+* :func:`mm32`      — C = A @ B                   (head of a cascade)
+* :func:`mm32_acc`  — C = ACC + A @ B             (interior cascade stage;
+                       the accumulator is what AIE cascade wires carry)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32  # the paper's single-core tile edge
+
+
+def _mm32_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm32_acc_kernel(a_ref, b_ref, acc_ref, o_ref):
+    o_ref[...] = acc_ref[...] + jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mm32(a, b):
+    """C = A @ B for 32x32 float32 blocks (single AIE core subtask)."""
+    return pl.pallas_call(
+        _mm32_kernel,
+        out_shape=jax.ShapeDtypeStruct((BLOCK, BLOCK), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mm32_acc(a, b, acc):
+    """C = ACC + A @ B — one interior stage of a Cascade<k> chain."""
+    return pl.pallas_call(
+        _mm32_acc_kernel,
+        out_shape=jax.ShapeDtypeStruct((BLOCK, BLOCK), jnp.float32),
+        interpret=True,
+    )(a, b, acc)
+
+
+def _mm_block_kernel(a_ref, b_ref, o_ref, *, nk):
+    """Grid-tiled MM kernel: one (i, j) output block per grid step,
+    K swept inside the kernel in BLOCK-wide slabs (the cascade loop)."""
+    acc = jnp.zeros((BLOCK, BLOCK), jnp.float32)
+    for k in range(nk):
+        acc = acc + jnp.dot(
+            a_ref[:, k * BLOCK : (k + 1) * BLOCK],
+            b_ref[k * BLOCK : (k + 1) * BLOCK, :],
+            preferred_element_type=jnp.float32,
+        )
+    o_ref[...] = acc
+
+
+def mm_tiled(a, b):
+    """M x K x N float MM tiled into 32x32x32 subtasks via a Pallas grid.
+
+    This is the whole-PU dataflow in one pallas_call: grid = (M/32, N/32)
+    output tiles, each accumulating K/32 cascade stages. Shapes must be
+    multiples of 32 (the DU pads tasks to full TBs, Table 4 / §4.2).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % BLOCK == 0 and k % BLOCK == 0 and n % BLOCK == 0
+    nk = k // BLOCK
+    return pl.pallas_call(
+        functools.partial(_mm_block_kernel, nk=nk),
+        grid=(m // BLOCK, n // BLOCK),
+        in_specs=[
+            pl.BlockSpec((BLOCK, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK, BLOCK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

@@ -1,0 +1,83 @@
+"""Low-bit 32x32x32 MM Pallas kernels (int8 / int16 operands, int32
+accumulate).
+
+The paper (§4.3): "If the low bit types such as Int8 or Int16 are used,
+higher energy efficiency will be obtained, which has huge advantages
+over the GPU." These kernels back that claim's reproduction
+(`benches/ablate_dtype.rs`): same 32^3 subtask, narrower operands — the
+AIE datapath packs 4x/2x more MACs per cycle and the wires carry 4x/2x
+fewer bytes.
+
+Operands arrive as int32 tensors holding int8/int16 values (PJRT's CPU
+literal path in the xla 0.1.6 crate marshals i32 cleanly; the dtype
+narrowing is asserted in the kernel's contract and checked by tests).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 32
+
+I8_MIN, I8_MAX = -128, 127
+I16_MIN, I16_MAX = -(2**15), 2**15 - 1
+
+
+def _mm32_i8_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.int8).astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int8).astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _mm32_i16_kernel(a_ref, b_ref, o_ref):
+    a = a_ref[...].astype(jnp.int16).astype(jnp.int32)
+    b = b_ref[...].astype(jnp.int16).astype(jnp.int32)
+    o_ref[...] = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mm32_i8(a, b):
+    """C(int32) = A(int8) @ B(int8) for a 32^3 subtask.
+
+    Inputs are int32 tensors carrying int8-range values; the kernel
+    truncates to int8 first (so out-of-range inputs wrap exactly like
+    the hardware's narrow datapath would).
+    """
+    return pl.pallas_call(
+        _mm32_i8_kernel,
+        out_shape=jax.ShapeDtypeStruct((BLOCK, BLOCK), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def mm32_i16(a, b):
+    """C(int32) = A(int16) @ B(int16) for a 32^3 subtask."""
+    return pl.pallas_call(
+        _mm32_i16_kernel,
+        out_shape=jax.ShapeDtypeStruct((BLOCK, BLOCK), jnp.int32),
+        interpret=True,
+    )(a, b)
+
+
+def mm_i8_ref(a, b):
+    """Oracle: int8-wrapped operands, exact int32 accumulation."""
+    a8 = jnp.asarray(a).astype(jnp.int8).astype(jnp.int32)
+    b8 = jnp.asarray(b).astype(jnp.int8).astype(jnp.int32)
+    return jax.lax.dot_general(
+        a8, b8, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def mm_i16_ref(a, b):
+    a16 = jnp.asarray(a).astype(jnp.int16).astype(jnp.int32)
+    b16 = jnp.asarray(b).astype(jnp.int16).astype(jnp.int32)
+    return jax.lax.dot_general(
+        a16, b16, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )

@@ -1,0 +1,50 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel and Layer-2 model.
+
+These are the ground truth the pytest suite (and hypothesis sweeps) check
+the Pallas kernels against — the CORE correctness signal of the build path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def mm_ref(a, b):
+    """Reference matrix multiply at any size."""
+    return jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def mm_acc_ref(a, b, acc):
+    """Reference cascade stage: ACC + A @ B."""
+    return acc + mm_ref(a, b)
+
+
+def filter2d_ref(x, k):
+    """Valid-mode 2-D correlation (the paper's Filter2D semantics).
+
+    x: (H + 4, W + 4) int32 halo tile, k: (5, 5) int32 -> (H, W) int32.
+    Exact integer arithmetic, loop form — deliberately naive.
+    """
+    taps = k.shape[0]
+    h = x.shape[0] - (taps - 1)
+    w = x.shape[1] - (taps - 1)
+    acc = jnp.zeros((h, w), jnp.int32)
+    for u in range(taps):
+        for v in range(taps):
+            acc = acc + x[u : u + h, v : v + w] * k[u, v]
+    return acc
+
+
+def filter2d_image_ref(img, k):
+    """Whole-image valid-mode filter used to check tiled decomposition."""
+    return filter2d_ref(img, k)
+
+
+def fft_ref(re, im):
+    """Reference FFT on split real/imag planes via numpy's complex FFT."""
+    x = np.asarray(re, dtype=np.float64) + 1j * np.asarray(im, dtype=np.float64)
+    y = np.fft.fft(x)
+    return y.real.astype(np.float32), y.imag.astype(np.float32)

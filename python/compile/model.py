@@ -1,0 +1,190 @@
+"""Layer-2 JAX models — one function per PU variant of the paper's Table 4.
+
+Each function is the *compute graph of one PU iteration* and is what gets
+AOT-lowered to an HLO artifact the rust coordinator executes via PJRT.
+The PU-internal structure (Parallel / Cascade organisation, DAC fan-out)
+is expressed in the graph shape so the lowered HLO mirrors the paper's
+Figure 7 dataflow; the *timing* of that dataflow is the rust simulator's
+job.
+
+PU catalogue (paper Table 4):
+
+* MM       — CC = Parallel<16> * Cascade<4>: 64 cores computing a
+             128x128x128 MM per iteration. :func:`mm_pu128`.
+* Filter2D — CC = Parallel<8>: 8 cores, one 32x32 output tile each.
+             :func:`filter2d_pu8`.
+* FFT      — PST#1 Butterfly + PST#2 Parallel<2>*Cascade<3>:
+             an N-point radix-2 FFT. :func:`fft_pu`.
+* MM-T     — CC = Cascade<8>: a pure-compute 8-stage cascade of 32x32x32
+             MMs (the AIE throughput probe). :func:`mmt_cascade8`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fft as kfft
+from .kernels import filter2d as kfilter
+from .kernels import mm32 as kmm
+
+BLOCK = kmm.BLOCK  # 32
+
+
+# ---------------------------------------------------------------------------
+# MM PU: Parallel<16> * Cascade<4>  ->  128 x 128 x 128 per iteration
+# ---------------------------------------------------------------------------
+
+def mm_pu128(a, b):
+    """One MM-PU iteration: C(128x128) = A(128x128) @ B(128x128).
+
+    Structure mirrors Figure 7(a): 16 parallel groups each own one of the
+    4x4 output blocks; inside a group, a Cascade<4> chain accumulates the
+    four K-slabs through :func:`kernels.mm32.mm32_acc` — the accumulator
+    passed between stages is what the AIE cascade wires carry.
+    """
+    n_blk = a.shape[0] // BLOCK  # 4
+    rows = []
+    for i in range(n_blk):
+        row = []
+        for j in range(n_blk):
+            a_blk = a[i * BLOCK : (i + 1) * BLOCK, 0:BLOCK]
+            b_blk = b[0:BLOCK, j * BLOCK : (j + 1) * BLOCK]
+            acc = kmm.mm32(a_blk, b_blk)  # cascade head (core 0)
+            for k in range(1, n_blk):  # cascade stages 1..3
+                a_blk = a[i * BLOCK : (i + 1) * BLOCK, k * BLOCK : (k + 1) * BLOCK]
+                b_blk = b[k * BLOCK : (k + 1) * BLOCK, j * BLOCK : (j + 1) * BLOCK]
+                acc = kmm.mm32_acc(a_blk, b_blk, acc)
+            row.append(acc)
+        rows.append(jnp.concatenate(row, axis=1))
+    return jnp.concatenate(rows, axis=0)
+
+
+def mm_pu128_grid(a, b):
+    """Same PU computation as :func:`mm_pu128` but as a single grid-tiled
+    pallas_call (:func:`kernels.mm32.mm_tiled`). Lowers to 2.8x smaller
+    HLO than the explicit graph but executes 1.7x *slower* on the CPU
+    PJRT backend (the interpret-lowered grid becomes a while-loop XLA
+    cannot fuse as well as 64 explicit dots) — so the AOT path ships the
+    explicit form; see EXPERIMENTS.md §Perf L2."""
+    return kmm.mm_tiled(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Filter2D PU: Parallel<8>  ->  eight 32x32 tiles per iteration
+# ---------------------------------------------------------------------------
+
+def filter2d_pu8(tiles, kern):
+    """One Filter2D-PU iteration: 8 halo tiles in, 8 filtered tiles out.
+
+    tiles: (8, 36, 36) int32, kern: (5, 5) int32 -> (8, 32, 32) int32.
+    The batch dimension is the Parallel<8> core index.
+    """
+    return kfilter.filter2d_batch(tiles, kern)
+
+
+# ---------------------------------------------------------------------------
+# FFT PU: Butterfly PST chained log2(N) times
+# ---------------------------------------------------------------------------
+
+def _bit_reverse_permute(x):
+    """Bit-reversal as reshape -> axis-reversal -> reshape.
+
+    Equivalent to ``x[bit_reverse_indices(n)]`` but expressed as a dense
+    transpose: the downstream xla_extension 0.5.1 compiler MIScompiles a
+    fancy-index gather feeding >= 3 chained (interpret-lowered) Pallas
+    stages — all-zero outputs — while the transpose form round-trips
+    correctly at every size (see EXPERIMENTS.md, 'HLO round-trip
+    gotchas').
+    """
+    n = x.shape[0]
+    bits = n.bit_length() - 1
+    return x.reshape((2,) * bits).transpose(tuple(reversed(range(bits)))).reshape(n)
+
+
+def fft_pu(re, im):
+    """One FFT-PU iteration: an N-point radix-2 DIT FFT.
+
+    Bit-reversal permutation (the DAC's data organisation duty, DCA mode)
+    followed by log2(N) butterfly stages (PST#1's Butterfly component;
+    the final three stages correspond to PST#2's Parallel<2>*Cascade<3>
+    group in the paper's placement — same arithmetic, different cores).
+    """
+    n = re.shape[0]
+    re = _bit_reverse_permute(re)
+    im = _bit_reverse_permute(im)
+    h = 1
+    while h < n:
+        # traced twiddles: baked constants this large would be elided by
+        # the HLO-text interchange (see kernels/fft.py)
+        wre, wim = kfft.stage_twiddles_traced(h)
+        g = n // (2 * h)
+        sre, sim = kfft.butterfly_stage(
+            re.reshape(g, 2, h),
+            im.reshape(g, 2, h),
+            wre,
+            wim,
+        )
+        re = sre.reshape(n)
+        im = sim.reshape(n)
+        h *= 2
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# MM-T: Cascade<8> pure-compute probe
+# ---------------------------------------------------------------------------
+
+def mmt_cascade8(a, b):
+    """One MM-T chain: C(32x32) = sum_{k<8} A_k @ B_k over a Cascade<8>.
+
+    a: (32, 256) float32 (8 K-slabs), b: (256, 32) float32.
+    CHL/THR data engine: operands stay resident, the chain just re-runs —
+    this is the paper's AIE-only throughput measurement (Table 9).
+    """
+    acc = kmm.mm32(a[:, 0:BLOCK], b[0:BLOCK, :])
+    for k in range(1, 8):
+        acc = kmm.mm32_acc(
+            a[:, k * BLOCK : (k + 1) * BLOCK],
+            b[k * BLOCK : (k + 1) * BLOCK, :],
+            acc,
+        )
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Whole-image Filter2D helper (oracle-side tiling used by tests)
+# ---------------------------------------------------------------------------
+
+def filter2d_tiles_from_image(img, tile=kfilter.TILE, halo=kfilter.HALO):
+    """Split a (H+4, W+4) padded image into (n_tiles, 36, 36) halo tiles.
+
+    This is the TPC's task-decomposition logic, written in numpy so tests
+    can check the rust TPC against it.
+    """
+    img = np.asarray(img)
+    h_out = img.shape[0] - halo
+    w_out = img.shape[1] - halo
+    assert h_out % tile == 0 and w_out % tile == 0
+    tiles = []
+    for ti in range(h_out // tile):
+        for tj in range(w_out // tile):
+            tiles.append(
+                img[
+                    ti * tile : ti * tile + tile + halo,
+                    tj * tile : tj * tile + tile + halo,
+                ]
+            )
+    return np.stack(tiles)
+
+
+def filter2d_image_from_tiles(tiles, h_out, w_out, tile=kfilter.TILE):
+    """Inverse of :func:`filter2d_tiles_from_image` for output tiles."""
+    tiles = np.asarray(tiles)
+    out = np.zeros((h_out, w_out), dtype=tiles.dtype)
+    n_w = w_out // tile
+    for n, t in enumerate(tiles):
+        ti, tj = divmod(n, n_w)
+        out[ti * tile : (ti + 1) * tile, tj * tile : (tj + 1) * tile] = t
+    return out

@@ -1,0 +1,13 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xEA4)

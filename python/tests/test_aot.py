@@ -1,0 +1,61 @@
+"""AOT path: lowering produces parseable HLO text + a consistent manifest."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+def test_catalogue_names_unique():
+    names = [n for n, _, _ in aot.artifact_catalogue()]
+    assert len(names) == len(set(names))
+    assert {"mm32", "mm_pu128", "filter2d_pu8", "fft1024",
+            "mmt_cascade8"} <= set(names)
+
+
+def test_lower_mm32_hlo_text():
+    cat = {n: (f, s) for n, f, s in aot.artifact_catalogue()}
+    fn, specs = cat["mm32"]
+    text, inputs, outputs = aot.lower_entry("mm32", fn, specs)
+    assert text.startswith("HloModule")
+    assert "f32[32,32]" in text
+    assert inputs == [{"shape": [32, 32], "dtype": "f32"}] * 2
+    assert outputs == [{"shape": [32, 32], "dtype": "f32"}]
+
+
+def test_lower_is_return_tuple():
+    """We lower with return_tuple=True; the entry layout must be a tuple —
+    the rust side unwraps with to_tuple*()."""
+    cat = {n: (f, s) for n, f, s in aot.artifact_catalogue()}
+    fn, specs = cat["mm32"]
+    text, _, _ = aot.lower_entry("mm32", fn, specs)
+    first = text.splitlines()[0]
+    assert "->(f32[32,32]{1,0})" in first.replace(" ", "")
+
+
+def test_manifest_on_disk_if_built():
+    """If `make artifacts` has run, manifest must match the catalogue."""
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    man_path = os.path.join(art, "manifest.json")
+    if not os.path.exists(man_path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(man_path))
+    names = {e["name"] for e in man["artifacts"]}
+    assert names == {n for n, _, _ in aot.artifact_catalogue()}
+    for e in man["artifacts"]:
+        assert os.path.exists(os.path.join(art, e["file"])), e["file"]
+        for t in e["inputs"] + e["outputs"]:
+            assert t["dtype"] in ("f32", "i32")
+            assert all(isinstance(d, int) and d > 0 for d in t["shape"])
+
+
+def test_filter2d_artifact_int32():
+    cat = {n: (f, s) for n, f, s in aot.artifact_catalogue()}
+    fn, specs = cat["filter2d_pu8"]
+    text, inputs, outputs = aot.lower_entry("filter2d_pu8", fn, specs)
+    assert inputs[0] == {"shape": [8, 36, 36], "dtype": "i32"}
+    assert outputs == [{"shape": [8, 32, 32], "dtype": "i32"}]
+    assert "s32[" in text  # HLO spells int32 as s32

@@ -1,0 +1,121 @@
+"""L1 butterfly kernel + L2 FFT model vs numpy's FFT."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import fft, ref
+
+
+def _sig(rng, n):
+    return (
+        rng.standard_normal(n).astype(np.float32),
+        rng.standard_normal(n).astype(np.float32),
+    )
+
+
+def test_transpose_permute_equals_gather():
+    """The dense reshape/transpose bit-reversal (the form that survives
+    the HLO round-trip) must equal the fancy-index gather."""
+    from compile.model import _bit_reverse_permute
+
+    for n in (8, 64, 1024, 8192):
+        x = np.arange(n, dtype=np.float32)
+        got = np.asarray(_bit_reverse_permute(x))
+        want = x[fft.bit_reverse_indices(n)]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_bit_reverse_is_involution():
+    for n in (8, 64, 1024):
+        idx = fft.bit_reverse_indices(n)
+        assert np.array_equal(idx[idx], np.arange(n))
+
+
+def test_bit_reverse_small():
+    np.testing.assert_array_equal(
+        fft.bit_reverse_indices(8), [0, 4, 2, 6, 1, 5, 3, 7]
+    )
+
+
+def test_stage_twiddles_unit_circle():
+    for h in (1, 4, 64, 512):
+        wre, wim = fft.stage_twiddles(h)
+        np.testing.assert_allclose(wre**2 + wim**2, 1.0, atol=1e-6)
+        assert wre[0] == 1.0 and wim[0] == 0.0
+
+
+def test_butterfly_stage_h1(rng):
+    """h=1 stage is just pairwise (a+b, a-b)."""
+    re, im = _sig(rng, 8)
+    orr, oii = fft.butterfly_stage(
+        re.reshape(4, 2, 1), im.reshape(4, 2, 1),
+        np.ones(1, np.float32), np.zeros(1, np.float32),
+    )
+    orr, oii = np.asarray(orr), np.asarray(oii)
+    np.testing.assert_allclose(orr[:, 0, 0], re[0::2] + re[1::2], atol=1e-6)
+    np.testing.assert_allclose(orr[:, 1, 0], re[0::2] - re[1::2], atol=1e-6)
+    np.testing.assert_allclose(oii[:, 0, 0], im[0::2] + im[1::2], atol=1e-6)
+
+
+@pytest.mark.parametrize("n", [8, 64, 256, 1024, 2048, 4096])
+def test_fft_matches_numpy(rng, n):
+    re, im = _sig(rng, n)
+    got_re, got_im = model.fft_pu(re, im)
+    want_re, want_im = ref.fft_ref(re, im)
+    tol = 1e-2 * np.sqrt(n)
+    np.testing.assert_allclose(got_re, want_re, atol=tol)
+    np.testing.assert_allclose(got_im, want_im, atol=tol)
+
+
+def test_fft_impulse(rng):
+    """FFT(delta) is all-ones — exact up to float assoc."""
+    n = 1024
+    re = np.zeros(n, np.float32)
+    im = np.zeros(n, np.float32)
+    re[0] = 1.0
+    got_re, got_im = model.fft_pu(re, im)
+    np.testing.assert_allclose(got_re, np.ones(n), atol=1e-5)
+    np.testing.assert_allclose(got_im, np.zeros(n), atol=1e-5)
+
+
+def test_fft_linearity(rng):
+    n = 256
+    re1, im1 = _sig(rng, n)
+    re2, im2 = _sig(rng, n)
+    a_re, a_im = model.fft_pu(re1 + re2, im1 + im2)
+    b1_re, b1_im = model.fft_pu(re1, im1)
+    b2_re, b2_im = model.fft_pu(re2, im2)
+    np.testing.assert_allclose(a_re, np.asarray(b1_re) + np.asarray(b2_re),
+                               atol=1e-3)
+    np.testing.assert_allclose(a_im, np.asarray(b1_im) + np.asarray(b2_im),
+                               atol=1e-3)
+
+
+def test_fft_parseval(rng):
+    """Energy conservation: sum|x|^2 * N == sum|X|^2."""
+    n = 512
+    re, im = _sig(rng, n)
+    got_re, got_im = model.fft_pu(re, im)
+    e_t = np.sum(re.astype(np.float64) ** 2 + im.astype(np.float64) ** 2)
+    e_f = np.sum(
+        np.asarray(got_re, np.float64) ** 2 + np.asarray(got_im, np.float64) ** 2
+    )
+    np.testing.assert_allclose(e_f, e_t * n, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), log_n=st.integers(3, 11))
+def test_fft_property(seed, log_n):
+    """Hypothesis sweep over sizes 8..2048."""
+    n = 1 << log_n
+    r = np.random.default_rng(seed)
+    re = r.standard_normal(n).astype(np.float32)
+    im = r.standard_normal(n).astype(np.float32)
+    got_re, got_im = model.fft_pu(re, im)
+    want_re, want_im = ref.fft_ref(re, im)
+    tol = 1e-2 * np.sqrt(n)
+    np.testing.assert_allclose(got_re, want_re, atol=tol)
+    np.testing.assert_allclose(got_im, want_im, atol=tol)

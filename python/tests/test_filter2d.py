@@ -1,0 +1,88 @@
+"""L1 filter2d Pallas kernel vs oracle + tiling decomposition checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import filter2d, ref
+
+TILE, HALO, IN_TILE = filter2d.TILE, filter2d.HALO, filter2d.IN_TILE
+
+
+def _tile(rng, lo=-128, hi=128, shape=(IN_TILE, IN_TILE)):
+    return rng.integers(lo, hi, shape).astype(np.int32)
+
+
+def _kern(rng, lo=-16, hi=16):
+    return rng.integers(lo, hi, (5, 5)).astype(np.int32)
+
+
+def test_tile_matches_ref(rng):
+    x, k = _tile(rng), _kern(rng)
+    np.testing.assert_array_equal(
+        filter2d.filter2d_tile(x, k), ref.filter2d_ref(x, k)
+    )
+
+
+def test_batch_matches_per_tile(rng):
+    x = rng.integers(-128, 128, (8, IN_TILE, IN_TILE)).astype(np.int32)
+    k = _kern(rng)
+    got = np.asarray(filter2d.filter2d_batch(x, k))
+    want = np.stack([np.asarray(ref.filter2d_ref(t, k)) for t in x])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_delta_kernel_is_identity(rng):
+    """A centre-tap delta filter returns the interior of the halo tile."""
+    x = _tile(rng)
+    k = np.zeros((5, 5), np.int32)
+    k[2, 2] = 1
+    np.testing.assert_array_equal(
+        filter2d.filter2d_tile(x, k), x[2 : 2 + TILE, 2 : 2 + TILE]
+    )
+
+
+def test_box_kernel_sums(rng):
+    x = np.ones((IN_TILE, IN_TILE), np.int32)
+    k = np.ones((5, 5), np.int32)
+    np.testing.assert_array_equal(
+        filter2d.filter2d_tile(x, k), np.full((TILE, TILE), 25, np.int32)
+    )
+
+
+def test_linearity(rng):
+    """filter(x, k1 + k2) == filter(x, k1) + filter(x, k2)."""
+    x = _tile(rng)
+    k1, k2 = _kern(rng), _kern(rng)
+    lhs = np.asarray(filter2d.filter2d_tile(x, k1 + k2))
+    rhs = np.asarray(filter2d.filter2d_tile(x, k1)) + np.asarray(
+        filter2d.filter2d_tile(x, k2)
+    )
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@pytest.mark.parametrize("tiles_h,tiles_w", [(1, 1), (2, 2), (4, 2)])
+def test_tiled_image_equals_whole_image(rng, tiles_h, tiles_w):
+    """TPC decomposition: tiling + per-tile filter == whole-image filter."""
+    h, w = tiles_h * TILE, tiles_w * TILE
+    img = rng.integers(-100, 100, (h + HALO, w + HALO)).astype(np.int32)
+    k = _kern(rng)
+    tiles = model.filter2d_tiles_from_image(img)
+    out_tiles = [np.asarray(filter2d.filter2d_tile(t, k)) for t in tiles]
+    got = model.filter2d_image_from_tiles(np.stack(out_tiles), h, w)
+    want = np.asarray(ref.filter2d_image_ref(img, k))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), batch=st.integers(1, 8))
+def test_batch_property(seed, batch):
+    """Hypothesis sweep over batch sizes and value ranges (int32 exact)."""
+    r = np.random.default_rng(seed)
+    x = r.integers(-(2**15), 2**15, (batch, IN_TILE, IN_TILE)).astype(np.int32)
+    k = r.integers(-64, 64, (5, 5)).astype(np.int32)
+    got = np.asarray(filter2d.filter2d_batch(x, k))
+    want = np.stack([np.asarray(ref.filter2d_ref(t, k)) for t in x])
+    np.testing.assert_array_equal(got, want)

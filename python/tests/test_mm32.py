@@ -1,0 +1,94 @@
+"""L1 mm32 Pallas kernel vs pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import mm32, ref
+
+BLOCK = mm32.BLOCK
+
+
+def _rand(rng, shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def test_mm32_matches_ref(rng):
+    a, b = _rand(rng, (BLOCK, BLOCK)), _rand(rng, (BLOCK, BLOCK))
+    np.testing.assert_allclose(mm32.mm32(a, b), ref.mm_ref(a, b), atol=1e-4)
+
+
+def test_mm32_acc_matches_ref(rng):
+    a, b = _rand(rng, (BLOCK, BLOCK)), _rand(rng, (BLOCK, BLOCK))
+    acc = _rand(rng, (BLOCK, BLOCK))
+    np.testing.assert_allclose(
+        mm32.mm32_acc(a, b, acc), ref.mm_acc_ref(a, b, acc), atol=1e-4
+    )
+
+
+def test_mm32_zero_inputs():
+    z = np.zeros((BLOCK, BLOCK), np.float32)
+    np.testing.assert_array_equal(mm32.mm32(z, z), z)
+
+
+def test_mm32_identity(rng):
+    a = _rand(rng, (BLOCK, BLOCK))
+    eye = np.eye(BLOCK, dtype=np.float32)
+    np.testing.assert_allclose(mm32.mm32(a, eye), a, atol=1e-5)
+    np.testing.assert_allclose(mm32.mm32(eye, a), a, atol=1e-5)
+
+
+def test_mm32_acc_is_additive(rng):
+    """mm32_acc(a, b, acc) == mm32(a, b) + acc — the cascade invariant."""
+    a, b = _rand(rng, (BLOCK, BLOCK)), _rand(rng, (BLOCK, BLOCK))
+    acc = _rand(rng, (BLOCK, BLOCK))
+    np.testing.assert_allclose(
+        mm32.mm32_acc(a, b, acc),
+        np.asarray(mm32.mm32(a, b)) + acc,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(32, 32, 32), (64, 32, 32), (32, 64, 32), (32, 32, 64),
+     (64, 64, 64), (96, 128, 64), (128, 128, 128)],
+)
+def test_mm_tiled_shapes(rng, m, k, n):
+    a, b = _rand(rng, (m, k)), _rand(rng, (k, n))
+    got = mm32.mm_tiled(a, b)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, ref.mm_ref(a, b), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+    mi=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    ni=st.integers(1, 4),
+)
+def test_mm_tiled_property(seed, scale, mi, ki, ni):
+    """Hypothesis sweep: tiled pallas MM == oracle over shapes/magnitudes."""
+    r = np.random.default_rng(seed)
+    a = _rand(r, (mi * BLOCK, ki * BLOCK), scale)
+    b = _rand(r, (ki * BLOCK, ni * BLOCK), scale)
+    got = np.asarray(mm32.mm_tiled(a, b))
+    want = np.asarray(ref.mm_ref(a, b))
+    np.testing.assert_allclose(
+        got, want, atol=1e-4 * scale * scale * BLOCK * ki, rtol=1e-4
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_mm32_special_values(seed):
+    """Exact integers survive float MM exactly (no fused fuzz)."""
+    r = np.random.default_rng(seed)
+    a = r.integers(-8, 8, (BLOCK, BLOCK)).astype(np.float32)
+    b = r.integers(-8, 8, (BLOCK, BLOCK)).astype(np.float32)
+    got = np.asarray(mm32.mm32(a, b))
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    np.testing.assert_array_equal(got.astype(np.int64), want)

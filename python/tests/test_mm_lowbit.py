@@ -1,0 +1,62 @@
+"""Low-bit MM kernels vs exact integer oracles."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import mm_lowbit
+
+
+def test_mm32_i8_exact(rng):
+    a = rng.integers(-128, 128, (32, 32)).astype(np.int32)
+    b = rng.integers(-128, 128, (32, 32)).astype(np.int32)
+    np.testing.assert_array_equal(
+        mm_lowbit.mm32_i8(a, b), mm_lowbit.mm_i8_ref(a, b)
+    )
+
+
+def test_mm32_i16_exact(rng):
+    a = rng.integers(-(2**15), 2**15, (32, 32)).astype(np.int32)
+    b = rng.integers(-(2**15), 2**15, (32, 32)).astype(np.int32)
+    np.testing.assert_array_equal(
+        mm_lowbit.mm32_i16(a, b), mm_lowbit.mm_i16_ref(a, b)
+    )
+
+
+def test_i8_wraps_out_of_range(rng):
+    """Out-of-range int32 inputs must wrap to int8 exactly (the narrow
+    datapath contract)."""
+    a = np.full((32, 32), 200, np.int32)  # 200 wraps to -56 as int8
+    b = np.eye(32, dtype=np.int32)
+    got = np.asarray(mm_lowbit.mm32_i8(a, b))
+    assert got[0, 0] == -56
+
+
+def test_i8_matches_int64_matmul_in_range(rng):
+    a = rng.integers(-128, 128, (32, 32))
+    b = rng.integers(-128, 128, (32, 32))
+    want = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.int32)
+    got = np.asarray(mm_lowbit.mm32_i8(a.astype(np.int32), b.astype(np.int32)))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_i8_property(seed):
+    r = np.random.default_rng(seed)
+    a = r.integers(-128, 128, (32, 32)).astype(np.int32)
+    b = r.integers(-128, 128, (32, 32)).astype(np.int32)
+    got = np.asarray(mm_lowbit.mm32_i8(a, b))
+    want = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_i16_property(seed):
+    r = np.random.default_rng(seed)
+    a = r.integers(-(2**15), 2**15, (32, 32)).astype(np.int32)
+    b = r.integers(-(2**15), 2**15, (32, 32)).astype(np.int32)
+    got = np.asarray(mm_lowbit.mm32_i16(a, b))
+    want = (a.astype(np.int64) @ b.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(got, want)

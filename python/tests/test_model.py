@@ -1,0 +1,63 @@
+"""L2 PU graphs vs oracles — the per-iteration compute of each accelerator."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(rng, shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+def test_mm_pu128_matches_ref(rng):
+    a, b = _rand(rng, (128, 128)), _rand(rng, (128, 128))
+    np.testing.assert_allclose(
+        model.mm_pu128(a, b), ref.mm_ref(a, b), atol=1e-3
+    )
+
+
+def test_mm_pu128_grid_equals_explicit(rng):
+    """The fused-grid lowering and the explicit Parallel<16>*Cascade<4>
+    graph compute the same function (the AOT path uses the grid form)."""
+    a, b = _rand(rng, (128, 128)), _rand(rng, (128, 128))
+    np.testing.assert_allclose(
+        model.mm_pu128_grid(a, b), model.mm_pu128(a, b), atol=1e-3
+    )
+
+
+def test_mmt_cascade8_matches_ref(rng):
+    a, b = _rand(rng, (32, 256)), _rand(rng, (256, 32))
+    np.testing.assert_allclose(
+        model.mmt_cascade8(a, b), ref.mm_ref(a, b), atol=1e-3
+    )
+
+
+def test_filter2d_pu8_matches_ref(rng):
+    t = rng.integers(-128, 128, (8, 36, 36)).astype(np.int32)
+    k = rng.integers(-16, 16, (5, 5)).astype(np.int32)
+    got = np.asarray(model.filter2d_pu8(t, k))
+    want = np.stack([np.asarray(ref.filter2d_ref(ti, k)) for ti in t])
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [1024, 2048, 4096])
+def test_fft_pu_sizes(rng, n):
+    re = rng.standard_normal(n).astype(np.float32)
+    im = rng.standard_normal(n).astype(np.float32)
+    got_re, got_im = model.fft_pu(re, im)
+    want_re, want_im = ref.fft_ref(re, im)
+    tol = 1e-2 * np.sqrt(n)
+    np.testing.assert_allclose(got_re, want_re, atol=tol)
+    np.testing.assert_allclose(got_im, want_im, atol=tol)
+
+
+def test_tiles_roundtrip(rng):
+    img = rng.integers(-50, 50, (68, 68)).astype(np.int32)  # 2x2 tiles + halo
+    tiles = model.filter2d_tiles_from_image(img)
+    assert tiles.shape == (4, 36, 36)
+    # interior of each halo tile reassembles the unpadded interior image
+    interiors = tiles[:, 2:34, 2:34]
+    back = model.filter2d_image_from_tiles(interiors, 64, 64)
+    np.testing.assert_array_equal(back, img[2:66, 2:66])

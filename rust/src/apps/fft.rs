@@ -1,0 +1,200 @@
+//! The FFT accelerator (paper Fig 7c, Table 8).
+//!
+//! Design: each PU has two processing structures — PST#1 a Butterfly
+//! component (BDC in), PST#2 a Parallel<2>*Cascade<3> group (DIR wiring)
+//! — 10 cores per PU; 8 DU-PU pairs (1:1), AMC = CSB, TPC = CUP,
+//! SSC = PHD. Intermediate stage data moves between the PSTs over the
+//! core stream fabric, which paces the pipeline for large N; input and
+//! output serialize on the DIR ports (`serial_comm`).
+//!
+//! The paper's dtype is cint16; the numerics substrate carries complex
+//! data as two float32 planes (DESIGN.md), while the simulator uses
+//! cint16 byte widths (4 B/sample either way).
+//!
+//! Feasibility: an 8192-point task across only 2 PUs exceeds the AIE
+//! core memory (Table 8's N/A cell) — checked via
+//! [`fft_fits`](crate::sim::memory::fft_fits).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::controller::{Controller, RunReport};
+use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::engine::compute::cc::CcMode;
+use crate::engine::compute::dac::{Dac, DacMode};
+use crate::engine::compute::dcc::{Dcc, DccMode};
+use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+use crate::engine::data::du::DataUnit;
+use crate::engine::data::ssc::SscMode;
+use crate::engine::data::tpc::{TaskBlock, TpcMode};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Runtime;
+use crate::sim::core::{fft_ops, KernelClass};
+use crate::sim::ddr::AmcMode;
+use crate::sim::memory::fft_fits;
+use crate::sim::params::HwParams;
+
+/// Cores per PU: Butterfly[4] + Parallel<2>*Cascade<3> = 10.
+pub const CORES_PER_PU: usize = 10;
+/// Deployed PU (and DU) count.
+pub const MAX_PUS: usize = 8;
+/// Bytes per complex sample on the wire (cint16 = 2 x int16).
+pub const BYTES_PER_SAMPLE: usize = 4;
+
+pub fn fft_pu(n: usize) -> ProcessingUnit {
+    let mut pu = ProcessingUnit::simple(
+        "FFT-PU",
+        vec![
+            ProcessingStructure {
+                dacs: vec![Dac::new(vec![DacMode::Bdc], 1, 4)],
+                cc: CcMode::Butterfly { cores: 4 },
+                dccs: vec![Dcc::new(DccMode::Dir, 1, 1)],
+            },
+            ProcessingStructure {
+                dacs: vec![Dac::new(vec![DacMode::Dir], 1, 1)],
+                cc: CcMode::Parallel(2, Box::new(CcMode::Cascade(3))),
+                dccs: vec![Dcc::new(DccMode::Dir, 1, 1)],
+            },
+        ],
+        KernelClass::Cint16Butterfly,
+        fft_ops(n),
+        n * BYTES_PER_SAMPLE,
+        n * BYTES_PER_SAMPLE,
+    );
+    pu.serial_comm = true; // DIR in/out do not overlap
+    pu.handoff_bytes = n * BYTES_PER_SAMPLE; // PST#1 -> PST#2 stream traffic
+    pu
+}
+
+pub fn fft_du(n: usize, batch_iters: u64) -> DataUnit {
+    DataUnit {
+        name: "FFT-DU".into(),
+        amc_read: Some(AmcMode::Csb),
+        amc_write: Some(AmcMode::Csb),
+        tpc: TpcMode::Cup,
+        ssc_send: SscMode::Phd,
+        ssc_recv: SscMode::Phd,
+        // 8 tasks per TB, streamed CSB
+        tb: TaskBlock::new(
+            8 * n * BYTES_PER_SAMPLE,
+            8.min(batch_iters.max(1)),
+            n * BYTES_PER_SAMPLE,
+        ),
+        pus: 1,
+    }
+}
+
+/// Simulate a batch of `tasks` N-point FFTs on `pus` active PU pairs.
+/// Returns `None` when the configuration is infeasible (Table 8 N/A).
+pub fn run(
+    p: &HwParams,
+    n: usize,
+    pus: usize,
+    tasks: u64,
+    trace: bool,
+) -> Result<Option<RunReport>> {
+    if pus == 0 || pus > MAX_PUS {
+        bail!("FFT supports 1..={MAX_PUS} PUs, got {pus}");
+    }
+    if !n.is_power_of_two() {
+        bail!("FFT size must be a power of two, got {n}");
+    }
+    // Table 8 feasibility: task working set across the active PUs' cores.
+    if !fft_fits(p, n, pus * CORES_PER_PU) {
+        return Ok(None);
+    }
+    let per_pu = tasks.div_ceil(pus as u64);
+    let groups: Vec<GroupSpec> = (0..pus)
+        .map(|i| GroupSpec {
+            name: format!("FFT-G{i}"),
+            du: fft_du(n, per_pu),
+            pu: fft_pu(n),
+            engine_iters: per_pu,
+mode: ExecMode::Regular,
+        })
+        .collect();
+    let ctl = Controller::new(p.clone(), super::table5_usage("FFT"), KernelClass::Cint16Butterfly)
+        .with_trace(trace);
+    let total_ops = fft_ops(n) * (per_pu * pus as u64) as f64;
+    let report = ctl.run(
+        &format!("{n}-pt cint16 {pus}PU"),
+        &groups,
+        (per_pu * pus as u64) as f64,
+        total_ops,
+    )?;
+    Ok(Some(report))
+}
+
+// ---------------------------------------------------------------------------
+// Real-numerics path (PJRT)
+// ---------------------------------------------------------------------------
+
+/// Run one N-point FFT through the `fft{n}` artifact (complex data as
+/// split float32 planes).
+pub fn fft_via_pu(rt: &Runtime, re: &[f32], im: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+    let n = re.len();
+    if im.len() != n {
+        bail!("re/im length mismatch");
+    }
+    let name = format!("fft{n}");
+    let out = rt.execute(
+        &name,
+        &[Tensor::f32(&[n], re.to_vec()), Tensor::f32(&[n], im.to_vec())],
+    )?;
+    Ok((out[0].as_f32()?.to_vec(), out[1].as_f32()?.to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pu_shape() {
+        let pu = fft_pu(1024);
+        assert!(pu.validate().is_ok());
+        assert_eq!(pu.cores(), 10);
+        assert!(pu.serial_comm);
+    }
+
+    #[test]
+    fn na_cell_is_none() {
+        let p = HwParams::vck5000();
+        assert!(run(&p, 8192, 2, 64, false).unwrap().is_none()); // the N/A
+        assert!(run(&p, 8192, 4, 64, false).unwrap().is_some());
+        assert!(run(&p, 4096, 2, 64, false).unwrap().is_some());
+    }
+
+    #[test]
+    fn table8_anchor_1024_8pu() {
+        // Paper: 0.43 us/task aggregate -> 2.33M tasks/s on 8 PUs.
+        let p = HwParams::vck5000();
+        let r = run(&p, 1024, 8, 4096, false).unwrap().unwrap();
+        let per_task_us = 1e6 / r.tasks_per_sec;
+        assert!((per_task_us - 0.43).abs() / 0.43 < 0.25, "{per_task_us}");
+    }
+
+    #[test]
+    fn scaling_with_n_superlinear() {
+        // Table 8: per-task time roughly 2.1x per doubling of N.
+        let p = HwParams::vck5000();
+        let t1 = 1.0 / run(&p, 1024, 8, 2048, false).unwrap().unwrap().tasks_per_sec;
+        let t2 = 1.0 / run(&p, 2048, 8, 2048, false).unwrap().unwrap().tasks_per_sec;
+        let ratio = t2 / t1;
+        assert!(ratio > 1.8 && ratio < 2.6, "ratio {ratio}");
+    }
+
+    #[test]
+    fn scaling_with_pus_linear() {
+        let p = HwParams::vck5000();
+        let t8 = run(&p, 1024, 8, 4096, false).unwrap().unwrap().tasks_per_sec;
+        let t4 = run(&p, 1024, 4, 4096, false).unwrap().unwrap().tasks_per_sec;
+        let ratio = t8 / t4;
+        assert!(ratio > 1.7 && ratio < 2.3, "ratio {ratio}");
+    }
+
+    #[test]
+    fn rejects_bad_sizes() {
+        let p = HwParams::vck5000();
+        assert!(run(&p, 1000, 8, 16, false).is_err());
+        assert!(run(&p, 1024, 0, 16, false).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! The MM accelerator (paper §4.2, Fig 7a, Table 6).
+//!
+//! Design: each PU = Parallel<16>*Cascade<4> (64 cores) computing a
+//! 128x128x128 MM per iteration; DAC = SWH+BDC over 8 PLIOs (4 MatA +
+//! 4 MatB, each multiplexed 4 ways and broadcast along a cascade row);
+//! DCC = SWH over 4 PLIOs. One DU serves 6 PUs (PHD): TB = 27 128x128
+//! matrices fetched JUB (56% URAM), sustaining 9 engine iterations;
+//! results are aggregated/accumulated by the TPC and written back CSB.
+//!
+//! Real numerics: the `mm_pu128` artifact (the Layer-2 JAX graph of one
+//! PU iteration, built on the Layer-1 `mm32` Pallas kernel) executes the
+//! same block decomposition through PJRT.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::controller::{Controller, RunReport};
+use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::engine::compute::cc::CcMode;
+use crate::engine::compute::dac::{Dac, DacMode};
+use crate::engine::compute::dcc::{Dcc, DccMode};
+use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+use crate::engine::data::du::DataUnit;
+use crate::engine::data::ssc::SscMode;
+use crate::engine::data::tpc::{TaskBlock, TpcMode};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Runtime;
+use crate::sim::core::KernelClass;
+use crate::sim::ddr::AmcMode;
+use crate::sim::params::HwParams;
+
+/// PU-iteration tile edge (the PU solves TILE^3 per iteration).
+pub const TILE: usize = 128;
+/// Deployed PU count (96% of the array).
+pub const MAX_PUS: usize = 6;
+
+/// The paper's MM processing unit.
+pub fn mm_pu() -> ProcessingUnit {
+    ProcessingUnit::simple(
+        "MM-PU",
+        vec![ProcessingStructure {
+            dacs: vec![Dac::new(vec![DacMode::Swh, DacMode::Bdc], 8, 64)],
+            cc: CcMode::Parallel(16, Box::new(CcMode::Cascade(4))),
+            dccs: vec![Dcc::new(DccMode::Swh, 4, 64)],
+        }],
+        KernelClass::F32Mac,
+        2.0 * (TILE * TILE * TILE) as f64,
+        2 * TILE * TILE * 4,
+        TILE * TILE * 4,
+    )
+}
+
+/// The paper's MM data unit serving `pus` PUs. `k_blocks` is the K-sweep
+/// length (size/128): the TPC accumulates C partials in URAM and writes a
+/// C block back only once its K-sweep completes.
+pub fn mm_du(pus: usize, k_blocks: u64) -> DataUnit {
+    let mut tb = TaskBlock::new(
+        27 * TILE * TILE * 4, // 27 128x128 float matrices
+        9,
+        pus * TILE * TILE * 4,
+    );
+    tb.writeback_every = k_blocks.max(1);
+    DataUnit {
+        name: "MM-DU".into(),
+        amc_read: Some(AmcMode::Jub),
+        amc_write: Some(AmcMode::Csb),
+        tpc: TpcMode::Cup,
+        ssc_send: SscMode::Phd,
+        ssc_recv: SscMode::Phd,
+        tb,
+        pus,
+    }
+}
+
+/// Formula 1: iterations for one 32^3-loaded AIE core on an MxKxN MM.
+pub fn iter_kernel(m: usize, k: usize, n: usize) -> u64 {
+    (m.div_ceil(32) * k.div_ceil(32) * n.div_ceil(32)) as u64
+}
+
+/// Formula 2: computing-engine iterations for an MxKxN MM on `pus` PUs.
+pub fn iter_computing_engine(m: usize, k: usize, n: usize, pus: usize) -> u64 {
+    let blocks = (m.div_ceil(TILE) * k.div_ceil(TILE) * n.div_ceil(TILE)) as u64;
+    blocks.div_ceil(pus as u64)
+}
+
+/// Simulate one square MM of edge `size` on `pus` active PUs.
+pub fn run(p: &HwParams, size: usize, pus: usize, trace: bool) -> Result<RunReport> {
+    run_rect(p, size, size, size, pus, trace)
+}
+
+/// Simulate an arbitrary M x K x N MM — the paper's "task scale
+/// adaptation": the TPC pads partial blocks to full 128^3 subtasks
+/// (Formula 2 rounds every dimension up), so any size deploys on the
+/// same accelerator.
+pub fn run_rect(
+    p: &HwParams,
+    m: usize,
+    k: usize,
+    n: usize,
+    pus: usize,
+    trace: bool,
+) -> Result<RunReport> {
+    if pus == 0 || pus > MAX_PUS {
+        bail!("MM supports 1..={MAX_PUS} PUs, got {pus}");
+    }
+    if m == 0 || k == 0 || n == 0 {
+        bail!("MM dimensions must be positive");
+    }
+    let groups = vec![GroupSpec {
+        name: format!("MM-{pus}pu"),
+        du: mm_du(pus, k.div_ceil(TILE) as u64),
+        pu: mm_pu(),
+        engine_iters: iter_computing_engine(m, k, n, pus),
+        mode: ExecMode::Regular,
+    }];
+    let ctl = Controller::new(p.clone(), super::table5_usage("MM"), KernelClass::F32Mac)
+        .with_trace(trace);
+    // GOPS counts useful arithmetic only (padding work is waste — this
+    // is the honest adaptive-scale accounting for ragged sizes).
+    let total_ops = 2.0 * m as f64 * k as f64 * n as f64;
+    let label = if m == k && k == n {
+        format!("{m}^3 float {pus}PU")
+    } else {
+        format!("{m}x{k}x{n} float {pus}PU")
+    };
+    ctl.run(&label, &groups, 1.0, total_ops)
+}
+
+// ---------------------------------------------------------------------------
+// Real-numerics path (PJRT)
+// ---------------------------------------------------------------------------
+
+/// Multiply two square row-major float matrices whose edge is a multiple
+/// of 128 by routing every 128^3 block product through the `mm_pu128`
+/// artifact — exactly the DU's decompose/aggregate duty (TPC accumulate).
+pub fn matmul_via_pus(rt: &Runtime, a: &[f32], b: &[f32], size: usize) -> Result<Vec<f32>> {
+    if size % TILE != 0 {
+        bail!("size {size} must be a multiple of {TILE} (the DU pads real tasks)");
+    }
+    let nb = size / TILE;
+    let mut c = vec![0.0f32; size * size];
+    // A-blocks are reused across the bj sweep: extract each row of A
+    // blocks once per bi (DU-side data reuse, the TB's raison d'etre).
+    for bi in 0..nb {
+        let a_row: Vec<Tensor> = (0..nb).map(|bk| extract_block(a, size, bi, bk)).collect();
+        for bj in 0..nb {
+            let mut acc = vec![0.0f32; TILE * TILE];
+            for (bk, a_blk) in a_row.iter().enumerate() {
+                let b_blk = extract_block(b, size, bk, bj);
+                let out = rt.execute("mm_pu128", &[a_blk.clone(), b_blk])?;
+                let part = out[0].as_f32()?;
+                // TPC aggregation: accumulate the K-partials.
+                for (dst, src) in acc.iter_mut().zip(part) {
+                    *dst += *src;
+                }
+            }
+            paste_block(&mut c, &acc, size, bi, bj);
+        }
+    }
+    Ok(c)
+}
+
+/// Multiply float matrices of ANY size: pads to 128-multiples (the DU's
+/// padding duty for adaptive task scales), runs the padded product
+/// through the PUs, and crops the result.
+pub fn matmul_any(
+    rt: &Runtime,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Result<Vec<f32>> {
+    if a.len() != m * k || b.len() != k * n {
+        bail!("operand shapes do not match m/k/n");
+    }
+    let (mp, kp, np_) = (
+        m.div_ceil(TILE) * TILE,
+        k.div_ceil(TILE) * TILE,
+        n.div_ceil(TILE) * TILE,
+    );
+    if mp != kp || kp != np_ {
+        // The square fast path below assumes one padded edge; pad all
+        // three dims to the max so matmul_via_pus applies.
+        let edge = mp.max(kp).max(np_);
+        let pa = pad(a, m, k, edge);
+        let pb = pad(b, k, n, edge);
+        let pc = matmul_via_pus(rt, &pa, &pb, edge)?;
+        return Ok(crop(&pc, edge, m, n));
+    }
+    let pa = pad(a, m, k, mp);
+    let pb = pad(b, k, n, mp);
+    let pc = matmul_via_pus(rt, &pa, &pb, mp)?;
+    Ok(crop(&pc, mp, m, n))
+}
+
+fn pad(src: &[f32], rows: usize, cols: usize, edge: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; edge * edge];
+    for r in 0..rows {
+        out[r * edge..r * edge + cols].copy_from_slice(&src[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+fn crop(src: &[f32], edge: usize, rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        out[r * cols..(r + 1) * cols].copy_from_slice(&src[r * edge..r * edge + cols]);
+    }
+    out
+}
+
+/// Extract a TILE x TILE block as a ready-to-send tensor (single copy).
+fn extract_block(src: &[f32], size: usize, bi: usize, bj: usize) -> Tensor {
+    let mut blk = vec![0.0f32; TILE * TILE];
+    for r in 0..TILE {
+        let s = (bi * TILE + r) * size + bj * TILE;
+        blk[r * TILE..(r + 1) * TILE].copy_from_slice(&src[s..s + TILE]);
+    }
+    Tensor::f32(&[TILE, TILE], blk)
+}
+
+fn paste_block(dst: &mut [f32], src: &[f32], size: usize, bi: usize, bj: usize) {
+    for r in 0..TILE {
+        let d = (bi * TILE + r) * size + bj * TILE;
+        dst[d..d + TILE].copy_from_slice(&src[r * TILE..(r + 1) * TILE]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formulas_match_paper() {
+        // §4.2: 128^3 needs 64 kernel iterations; 6 PUs on 768^3 need
+        // ceil(6*6*6/6) = 36 engine iterations.
+        assert_eq!(iter_kernel(128, 128, 128), 64);
+        assert_eq!(iter_computing_engine(768, 768, 768, 6), 36);
+        assert_eq!(iter_computing_engine(6144, 6144, 6144, 1), 110_592);
+        // non-multiples round up
+        assert_eq!(iter_computing_engine(129, 128, 128, 1), 2);
+    }
+
+    #[test]
+    fn pu_matches_table4_shape() {
+        let pu = mm_pu();
+        assert_eq!(pu.cores(), 64);
+        assert_eq!(pu.total_plios(), 12);
+        assert!(pu.validate().is_ok());
+    }
+
+    #[test]
+    fn run_rejects_bad_pu_counts() {
+        let p = HwParams::vck5000();
+        assert!(run(&p, 768, 0, false).is_err());
+        assert!(run(&p, 768, 7, false).is_err());
+    }
+
+    #[test]
+    fn table6_anchor_rows() {
+        let p = HwParams::vck5000();
+        // 768^3, 6 PUs: paper 0.44 ms / 2050 GOPS.
+        let r = run(&p, 768, 6, false).unwrap();
+        assert!((r.time_secs * 1e3 - 0.44).abs() / 0.44 < 0.15, "{}", r.time_secs * 1e3);
+        // 6144^3, 6 PUs: paper 135.59 ms / 3421 GOPS.
+        let r = run(&p, 6144, 6, false).unwrap();
+        assert!((r.time_secs * 1e3 - 135.59).abs() / 135.59 < 0.10, "{}", r.time_secs * 1e3);
+        assert!((r.gops - 3421.0).abs() / 3421.0 < 0.10, "{}", r.gops);
+    }
+
+    #[test]
+    fn gops_per_aie_converges_with_scale() {
+        // Table 6's shape: the per-core gap between 1 and 6 PUs closes as
+        // the task grows.
+        let p = HwParams::vck5000();
+        let small_gap = {
+            let a = run(&p, 768, 1, false).unwrap().gops_per_aie;
+            let b = run(&p, 768, 6, false).unwrap().gops_per_aie;
+            (a - b).abs() / a
+        };
+        let large_gap = {
+            let a = run(&p, 3072, 1, false).unwrap().gops_per_aie;
+            let b = run(&p, 3072, 6, false).unwrap().gops_per_aie;
+            (a - b).abs() / a
+        };
+        assert!(large_gap < small_gap, "{large_gap} vs {small_gap}");
+    }
+
+    #[test]
+    fn rect_and_ragged_sizes_adapt() {
+        let p = HwParams::vck5000();
+        // rectangular
+        let r = run_rect(&p, 768, 1536, 384, 6, false).unwrap();
+        assert!(r.time_secs > 0.0);
+        // ragged: 130^3 pads to 2x2x2 blocks -> 8 subtasks, efficiency
+        // drops vs an exact 256^3 (padding waste is not counted as work)
+        let ragged = run_rect(&p, 130, 130, 130, 1, false).unwrap();
+        let exact = run_rect(&p, 256, 256, 256, 1, false).unwrap();
+        assert!(ragged.gops_per_aie < exact.gops_per_aie);
+        assert!(run_rect(&p, 0, 128, 128, 1, false).is_err());
+    }
+
+    #[test]
+    fn power_increases_with_pus() {
+        let p = HwParams::vck5000();
+        let w1 = run(&p, 1536, 1, false).unwrap().power_w;
+        let w6 = run(&p, 1536, 6, false).unwrap().power_w;
+        assert!(w6 > w1 + 15.0, "{w1} {w6}");
+    }
+}

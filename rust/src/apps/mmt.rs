@@ -1,0 +1,137 @@
+//! MM-T: the AIE compute-throughput probe (paper Table 9).
+//!
+//! 50 Cascade<8> chains (400 cores, 100% of the array), each core doing
+//! one 32x32x32 float MM per chain iteration. The data engine is Null:
+//! TPC = CHL holds the operands resident, SSC = THR wires each chain
+//! straight through — no DDR traffic, no communication phases. What's
+//! left is the sustained arithmetic rate of the array, which is exactly
+//! what the paper uses MM-T to measure.
+//!
+//! Real numerics: the `mmt_cascade8` artifact is the Layer-2 graph of
+//! one chain (8 chained `mm32_acc` Pallas calls).
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::controller::{Controller, RunReport};
+use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::engine::compute::cc::CcMode;
+use crate::engine::compute::dac::{Dac, DacMode};
+use crate::engine::compute::dcc::{Dcc, DccMode};
+use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+use crate::engine::data::du::DataUnit;
+use crate::engine::data::ssc::SscMode;
+use crate::engine::data::tpc::{TaskBlock, TpcMode};
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Runtime;
+use crate::sim::core::KernelClass;
+use crate::sim::params::HwParams;
+
+/// Chains deployed (50 x Cascade<8> = 400 cores).
+pub const CHAINS: usize = 50;
+/// Cores per chain.
+pub const CASCADE: usize = 8;
+/// The base task: a 32^3 float MM per core per chain iteration.
+pub const TASK_OPS: f64 = 2.0 * 32.0 * 32.0 * 32.0;
+
+pub fn mmt_pu() -> ProcessingUnit {
+    ProcessingUnit::simple(
+        "MMT-PU",
+        vec![ProcessingStructure {
+            dacs: vec![Dac::new(vec![DacMode::Dir], 1, 1)],
+            cc: CcMode::Cascade(CASCADE),
+            dccs: vec![Dcc::new(DccMode::Dir, 1, 1)],
+        }],
+        KernelClass::F32Mac,
+        // one 32^3 task per core per iteration; the cascade pipelines so
+        // the iteration time is one task's time (steady state).
+        CASCADE as f64 * TASK_OPS,
+        0, // CHL: operands resident, nothing on the PLIOs per iteration
+        0,
+    )
+}
+
+pub fn mmt_du() -> DataUnit {
+    DataUnit {
+        name: "MMT-DU".into(),
+        amc_read: None, // Null AMC (Table 4)
+        amc_write: None,
+        tpc: TpcMode::Chl,
+        ssc_send: SscMode::Thr,
+        ssc_recv: SscMode::Thr,
+        tb: TaskBlock::new(0, 1, 0),
+        pus: 1,
+    }
+}
+
+/// Simulate `iters` chain iterations across all 50 chains.
+pub fn run(p: &HwParams, iters: u64, trace: bool) -> Result<RunReport> {
+    if iters == 0 {
+        bail!("need at least one iteration");
+    }
+    let groups: Vec<GroupSpec> = (0..CHAINS)
+        .map(|i| GroupSpec {
+            name: format!("MMT-{i}"),
+            du: mmt_du(),
+            pu: mmt_pu(),
+            engine_iters: iters,
+mode: ExecMode::Regular,
+        })
+        .collect();
+    let ctl = Controller::new(p.clone(), super::table5_usage("MM-T"), KernelClass::F32Mac)
+        .with_trace(trace);
+    let tasks = (iters as usize * CHAINS * CASCADE) as f64;
+    let total_ops = tasks * TASK_OPS;
+    ctl.run(&format!("MM-T x{iters}"), &groups, tasks, total_ops)
+}
+
+// ---------------------------------------------------------------------------
+// Real-numerics path (PJRT)
+// ---------------------------------------------------------------------------
+
+/// One chain iteration: C = sum_k A_k B_k through `mmt_cascade8`.
+pub fn chain_via_pu(rt: &Runtime, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+    if a.len() != 32 * 256 || b.len() != 256 * 32 {
+        bail!("MM-T chain operands are 32x256 and 256x32");
+    }
+    let out = rt.execute(
+        "mmt_cascade8",
+        &[Tensor::f32(&[32, 256], a.to_vec()), Tensor::f32(&[256, 32], b.to_vec())],
+    )?;
+    Ok(out[0].as_f32()?.to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn design_uses_whole_array() {
+        let pu = mmt_pu();
+        assert!(pu.validate().is_ok());
+        assert_eq!(pu.cores() * CHAINS, 400);
+    }
+
+    #[test]
+    fn table9_anchor() {
+        // Paper averages: 9.43e7 tasks/s, 6181.56 GOPS, 94.22 GOPS/W.
+        let p = HwParams::vck5000();
+        let r = run(&p, 20_000, false).unwrap();
+        assert!((r.tasks_per_sec - 9.43e7).abs() / 9.43e7 < 0.05, "{}", r.tasks_per_sec);
+        assert!((r.gops - 6181.56).abs() / 6181.56 < 0.05, "{}", r.gops);
+        assert!((r.gops_per_aie - 15.45).abs() / 15.45 < 0.05, "{}", r.gops_per_aie);
+        assert!((r.power_w - 65.61).abs() / 65.61 < 0.20, "{}", r.power_w);
+    }
+
+    #[test]
+    fn no_ddr_traffic() {
+        let p = HwParams::vck5000();
+        let r = run(&p, 500, false).unwrap();
+        assert_eq!(r.ddr_gbps, 0.0);
+    }
+
+    #[test]
+    fn zero_iters_rejected() {
+        let p = HwParams::vck5000();
+        assert!(run(&p, 0, false).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! The four accelerators of the paper's evaluation (§4, Table 4):
+//!
+//! | App      | CC                       | DAC     | DCC | AMC  | TPC | SSC |
+//! |----------|--------------------------|---------|-----|------|-----|-----|
+//! | MM       | Parallel<16>*Cascade<4>  | SWH+BDC | SWH | JUB  | CUP | PHD |
+//! | Filter2D | Parallel<8>              | SWH     | SWH | JUB  | CUP | PHD |
+//! | FFT      | Butterfly + P<2>*Casc<3> | BDC/DIR | DIR | CSB  | CUP | PHD |
+//! | MM-T     | Cascade<8>               | DIR     | DIR | Null | CHL | THR |
+//!
+//! Each app module provides a `design` (the deployed configuration:
+//! groups + resource usage), a `run` that simulates a workload and
+//! returns a [`RunReport`](crate::coordinator::RunReport) row, and an
+//! `execute_real` path that routes actual task data through the PJRT
+//! runtime for numerical validation.
+
+pub mod fft;
+pub mod filter2d;
+pub mod mm;
+pub mod mmt;
+
+use crate::sim::memory::ResourceUsage;
+
+/// Table 5's per-app resource rows (the paper's measured utilisation;
+/// our designs must match these shapes).
+pub fn table5_usage(app: &str) -> ResourceUsage {
+    match app {
+        "MM" => ResourceUsage { lut: 11403, ff: 105609, bram: 778, uram: 315, dsp: 0, aie: 384, plio: 72 },
+        "Filter2D" => ResourceUsage { lut: 248546, ff: 455277, bram: 526, uram: 0, dsp: 168, aie: 352, plio: 88 },
+        "FFT" => ResourceUsage { lut: 122650, ff: 214782, bram: 562, uram: 0, dsp: 96, aie: 80, plio: 32 },
+        "MM-T" => ResourceUsage { lut: 61039, ff: 96791, bram: 34, uram: 0, dsp: 0, aie: 400, plio: 100 },
+        other => panic!("unknown app {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::params::HwParams;
+
+    #[test]
+    fn all_designs_fit_the_card() {
+        let p = HwParams::vck5000();
+        for app in ["MM", "Filter2D", "FFT", "MM-T"] {
+            table5_usage(app).check(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn aie_percentages_match_table5() {
+        let p = HwParams::vck5000();
+        let pct = |app: &str| table5_usage(app).aie as f64 / p.total_aie as f64;
+        assert!((pct("MM") - 0.96).abs() < 1e-9);
+        assert!((pct("Filter2D") - 0.88).abs() < 1e-9);
+        assert!((pct("FFT") - 0.20).abs() < 1e-9);
+        assert!((pct("MM-T") - 1.00).abs() < 1e-9);
+    }
+}

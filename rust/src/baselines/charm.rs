@@ -1,0 +1,59 @@
+//! CHARM [47] — the MM SOTA on VCK5000 (FPGA'23).
+//!
+//! Published figures (paper Table 10): 3270 GOPS float MM at
+//! 62.40 GOPS/W using 384 AIE cores. CHARM's design point differs from
+//! EA4RCA's in the data path: its dedicated-accelerator composition
+//! leaves less PLIO-level reuse, modelled here as a lower effective duty
+//! on the same PU primitive (used by `benches/ablate_aggregation.rs` to
+//! show *why* the EA4RCA schedule edges it out).
+
+use crate::sim::params::HwParams;
+
+use super::BaselineRow;
+
+pub fn row() -> BaselineRow {
+    BaselineRow {
+        design: "CHARM[47]",
+        app: "MM",
+        problem: "N/A",
+        dtype: "Float",
+        tasks_per_sec: None,
+        gops: Some(3270.0),
+        efficiency: Some(62.40),
+        efficiency_unit: "GOPS/W",
+    }
+}
+
+/// Simulated CHARM-like configuration on our substrate: same 384 cores,
+/// stream-fed operands (no DMA-aggregated communication phases), which
+/// is the paper's Table 2 method-2 regime.
+pub fn simulated_gops(p: &HwParams) -> f64 {
+    let cores = 384.0;
+    // per 32^3 task: ideal compute + stream-fed operand time
+    let compute = 65536.0 / p.f32_ops_per_cycle / p.aie_clock_hz
+        + p.kernel_setup_cycles / p.aie_clock_hz;
+    // 5/8 of the stream time is exposed (partial double-buffering in
+    // CHARM's dataflow; calibrated to its published 3270 GOPS)
+    let stream = 12288.0 / p.stream_bytes_per_sec * 0.625;
+    let per_task = compute + stream;
+    cores * 65536.0 / per_task / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_charm_lands_near_published() {
+        let p = HwParams::vck5000();
+        let g = simulated_gops(&p);
+        assert!((g - 3270.0).abs() / 3270.0 < 0.15, "{g}");
+    }
+
+    #[test]
+    fn ea4rca_beats_simulated_charm() {
+        // the MM accelerator's 3421 GOPS must exceed the baseline model
+        let p = HwParams::vck5000();
+        assert!(simulated_gops(&p) < 3421.0);
+    }
+}

@@ -1,0 +1,54 @@
+//! Vitis Libraries single-core FFT baseline (paper Table 10).
+//!
+//! The official library implementation runs one AIE core per FFT
+//! (<1% utilisation); the paper reports 713 826.80 tasks/s at 1024
+//! points and uses it as the 1024-point speed reference (the 0.20x row —
+//! the CCC2023 FFT was *slower* than Vitis at 1024).
+
+use crate::sim::core::fft_ops;
+use crate::sim::params::HwParams;
+
+use super::BaselineRow;
+
+pub fn row() -> BaselineRow {
+    BaselineRow {
+        design: "Vitis[1]",
+        app: "FFT",
+        problem: "1024",
+        dtype: "CInt16",
+        tasks_per_sec: Some(713_826.80),
+        gops: None,
+        efficiency: None,
+        efficiency_unit: "TPS/W",
+    }
+}
+
+/// Simulated single-core Vitis-like FFT: all log2(N) stages on one core,
+/// dual stream ports with ping-pong window buffers, so communication
+/// overlaps compute (the library's aggregated-window design).
+pub fn simulated_tasks_per_sec(p: &HwParams, n: usize) -> f64 {
+    let compute = fft_ops(n) / p.cint16_ops_per_cycle / p.aie_clock_hz
+        + p.kernel_setup_cycles / p.aie_clock_hz;
+    let comm = (2 * n * 4) as f64 / (2.0 * p.stream_bytes_per_sec);
+    1.0 / compute.max(comm)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simulated_vitis_near_published() {
+        let p = HwParams::vck5000();
+        let tps = simulated_tasks_per_sec(&p, 1024);
+        let published = 713_826.80;
+        assert!((tps - published).abs() / published < 0.35, "{tps}");
+    }
+
+    #[test]
+    fn single_core_much_slower_than_ea4rca() {
+        let p = HwParams::vck5000();
+        // EA4RCA 8-PU 1024-pt: ~2.3M tasks/s
+        assert!(simulated_tasks_per_sec(&p, 1024) < 1.0e6);
+    }
+}

@@ -1,0 +1,288 @@
+//! Graph Configuration File parsing + validation.
+//!
+//! Schema (JSON):
+//!
+//! ```json
+//! {
+//!   "name": "mm",
+//!   "kernel": "mm32",              // artifact / AIE kernel source name
+//!   "class": "f32mac",             // f32mac | i32mac | cint16butterfly
+//!   "psts": [
+//!     {"dacs": [{"modes": ["SWH", "BDC"], "plios": 8, "serves": 64}],
+//!      "cc": "Parallel<16>*Cascade<4>",
+//!      "dccs": [{"mode": "SWH", "plios": 4, "serves": 64}]}
+//!   ],
+//!   "ops_per_iter": 4194304,
+//!   "in_bytes": 131072,
+//!   "out_bytes": 65536,
+//!   "serial_comm": false,          // optional
+//!   "handoff_bytes": 0,            // optional
+//!   "copies": 6                    // PUs deployed
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::compute::cc::parse_cc_validated as parse_cc;
+use crate::engine::compute::dac::{Dac, DacMode};
+use crate::engine::compute::dcc::{Dcc, DccMode};
+use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+use crate::sim::core::KernelClass;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct PuConfig {
+    pub name: String,
+    pub kernel: String,
+    pub copies: usize,
+    pub pu: ProcessingUnit,
+}
+
+fn parse_class(s: &str) -> Result<KernelClass> {
+    match s.to_ascii_lowercase().as_str() {
+        "f32mac" => Ok(KernelClass::F32Mac),
+        "i32mac" => Ok(KernelClass::I32Mac),
+        "cint16butterfly" => Ok(KernelClass::Cint16Butterfly),
+        other => bail!("unknown kernel class {other:?}"),
+    }
+}
+
+fn parse_dac(j: &Json) -> Result<Dac> {
+    let modes = j
+        .get("modes")
+        .and_then(Json::as_arr)
+        .context("DAC needs a 'modes' array")?
+        .iter()
+        .map(|m| {
+            DacMode::parse(m.as_str().context("DAC mode must be a string")?)
+                .map_err(anyhow::Error::msg)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let plios = j.get("plios").and_then(Json::as_usize).context("DAC needs 'plios'")?;
+    let serves = j.get("serves").and_then(Json::as_usize).context("DAC needs 'serves'")?;
+    Ok(Dac::new(modes, plios, serves))
+}
+
+fn parse_dcc(j: &Json) -> Result<Dcc> {
+    let mode = DccMode::parse(
+        j.get("mode").and_then(Json::as_str).context("DCC needs 'mode'")?,
+    )
+    .map_err(anyhow::Error::msg)?;
+    let plios = j.get("plios").and_then(Json::as_usize).context("DCC needs 'plios'")?;
+    let serves = j.get("serves").and_then(Json::as_usize).context("DCC needs 'serves'")?;
+    Ok(Dcc::new(mode, plios, serves))
+}
+
+impl PuConfig {
+    pub fn from_json_text(text: &str) -> Result<PuConfig> {
+        let root = Json::parse(text).context("configuration is not valid JSON")?;
+        PuConfig::from_json(&root)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<PuConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        PuConfig::from_json_text(&text)
+    }
+
+    pub fn from_json(root: &Json) -> Result<PuConfig> {
+        let name = root
+            .get("name")
+            .and_then(Json::as_str)
+            .context("config needs 'name'")?
+            .to_string();
+        let kernel = root
+            .get("kernel")
+            .and_then(Json::as_str)
+            .context("config needs 'kernel'")?
+            .to_string();
+        let class = parse_class(
+            root.get("class").and_then(Json::as_str).context("config needs 'class'")?,
+        )?;
+        let copies = root.get("copies").and_then(Json::as_usize).unwrap_or(1);
+        if copies == 0 {
+            bail!("'copies' must be >= 1");
+        }
+
+        let psts_json = root
+            .get("psts")
+            .and_then(Json::as_arr)
+            .context("config needs a 'psts' array")?;
+        if psts_json.is_empty() {
+            bail!("'psts' must not be empty");
+        }
+        let mut psts = Vec::new();
+        for (i, pj) in psts_json.iter().enumerate() {
+            let cc = parse_cc(
+                pj.get("cc")
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("pst[{i}] needs 'cc'"))?,
+            )
+            .map_err(anyhow::Error::msg)?;
+            let dacs = pj
+                .get("dacs")
+                .and_then(Json::as_arr)
+                .with_context(|| format!("pst[{i}] needs 'dacs'"))?
+                .iter()
+                .map(parse_dac)
+                .collect::<Result<Vec<_>>>()?;
+            let dccs = pj
+                .get("dccs")
+                .and_then(Json::as_arr)
+                .with_context(|| format!("pst[{i}] needs 'dccs'"))?
+                .iter()
+                .map(parse_dcc)
+                .collect::<Result<Vec<_>>>()?;
+            psts.push(ProcessingStructure { dacs, cc, dccs });
+        }
+
+        let ops = root
+            .get("ops_per_iter")
+            .and_then(Json::as_f64)
+            .context("config needs 'ops_per_iter'")?;
+        let in_bytes = root
+            .get("in_bytes")
+            .and_then(Json::as_usize)
+            .context("config needs 'in_bytes'")?;
+        let out_bytes = root
+            .get("out_bytes")
+            .and_then(Json::as_usize)
+            .context("config needs 'out_bytes'")?;
+
+        let mut pu = ProcessingUnit::simple(&name, psts, class, ops, in_bytes, out_bytes);
+        pu.serial_comm = root
+            .get("serial_comm")
+            .and_then(Json::as_bool)
+            .unwrap_or(false);
+        pu.handoff_bytes = root
+            .get("handoff_bytes")
+            .and_then(Json::as_usize)
+            .unwrap_or(0);
+        pu.validate().map_err(anyhow::Error::msg)?;
+
+        Ok(PuConfig { name, kernel, copies, pu })
+    }
+
+    /// Serialize back to the configuration-file JSON (the GUI PU Editor's
+    /// Configuration Generator in the paper — round-trips for golden
+    /// tests).
+    pub fn to_json(&self) -> Json {
+        let class = match self.pu.class {
+            KernelClass::F32Mac => "f32mac",
+            KernelClass::I32Mac => "i32mac",
+            KernelClass::Cint16Butterfly => "cint16butterfly",
+        };
+        let psts: Vec<Json> = self
+            .pu
+            .psts
+            .iter()
+            .map(|pst| {
+                Json::obj(vec![
+                    (
+                        "dacs",
+                        Json::arr(
+                            pst.dacs
+                                .iter()
+                                .map(|d| {
+                                    Json::obj(vec![
+                                        (
+                                            "modes",
+                                            Json::arr(
+                                                d.modes
+                                                    .iter()
+                                                    .map(|m| Json::str(m.name()))
+                                                    .collect(),
+                                            ),
+                                        ),
+                                        ("plios", Json::num(d.plios as f64)),
+                                        ("serves", Json::num(d.serves_cores as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("cc", Json::str(pst.cc.to_string())),
+                    (
+                        "dccs",
+                        Json::arr(
+                            pst.dccs
+                                .iter()
+                                .map(|d| {
+                                    Json::obj(vec![
+                                        ("mode", Json::str(d.mode.name())),
+                                        ("plios", Json::num(d.plios as f64)),
+                                        ("serves", Json::num(d.serves_cores as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("kernel", Json::str(&self.kernel)),
+            ("class", Json::str(class)),
+            ("copies", Json::num(self.copies as f64)),
+            ("psts", Json::arr(psts)),
+            ("ops_per_iter", Json::num(self.pu.ops_per_iter)),
+            ("in_bytes", Json::num(self.pu.in_bytes_per_iter as f64)),
+            ("out_bytes", Json::num(self.pu.out_bytes_per_iter as f64)),
+            ("serial_comm", Json::Bool(self.pu.serial_comm)),
+            ("handoff_bytes", Json::num(self.pu.handoff_bytes as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub const MM_CONFIG: &str = r#"{
+        "name": "mm", "kernel": "mm32", "class": "f32mac", "copies": 6,
+        "psts": [{
+            "dacs": [{"modes": ["SWH", "BDC"], "plios": 8, "serves": 64}],
+            "cc": "Parallel<16>*Cascade<4>",
+            "dccs": [{"mode": "SWH", "plios": 4, "serves": 64}]
+        }],
+        "ops_per_iter": 4194304, "in_bytes": 131072, "out_bytes": 65536
+    }"#;
+
+    #[test]
+    fn parses_mm_config() {
+        let c = PuConfig::from_json_text(MM_CONFIG).unwrap();
+        assert_eq!(c.name, "mm");
+        assert_eq!(c.copies, 6);
+        assert_eq!(c.pu.cores(), 64);
+        assert_eq!(c.pu.total_plios(), 12);
+        assert_eq!(c.pu.class, KernelClass::F32Mac);
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let c = PuConfig::from_json_text(MM_CONFIG).unwrap();
+        let text = c.to_json().to_string_pretty();
+        let c2 = PuConfig::from_json_text(&text).unwrap();
+        assert_eq!(c.pu, c2.pu);
+        assert_eq!(c.copies, c2.copies);
+    }
+
+    #[test]
+    fn rejects_invalid_cc() {
+        let bad = MM_CONFIG.replace("Parallel<16>*Cascade<4>", "Waffle<9>");
+        assert!(PuConfig::from_json_text(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_dir_to_multicore() {
+        let bad = MM_CONFIG.replace(r#""modes": ["SWH", "BDC"]"#, r#""modes": ["DIR"]"#);
+        assert!(PuConfig::from_json_text(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(PuConfig::from_json_text(r#"{"name": "x"}"#).is_err());
+        assert!(PuConfig::from_json_text("not json").is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! The AIE Graph Code Generator (paper §3.5, Fig 6).
+//!
+//! The paper's tool takes a Graph Configuration File describing a PU
+//! (DAC / CC / DCC connectivity) and one-click generates the compilable
+//! AIE project. This module is that pipeline on our substrate:
+//!
+//! * [`config`]    — parse + validate the JSON configuration file into a
+//!   [`ProcessingUnit`](crate::engine::compute::pu::ProcessingUnit)
+//!   (the Generator Core's "parse PU information" stage).
+//! * [`generator`] — the DAC/CC/DCC generators + Component Connector +
+//!   Project Creator: emits ADF-style C++ graph code (`graph.h`,
+//!   `graph.cpp`, a `Makefile` stub targeting the Xilinx backend) and
+//!   the simulator-side group description.
+//!
+//! `configs/*.json` in the repo root hold the four accelerators'
+//! configuration files; `ea4rca generate --config <file>` runs the
+//! pipeline from the CLI, and `benches/fig7_pu_structures.rs` prints the
+//! Fig 7 structures from the same source of truth.
+
+pub mod config;
+pub mod generator;
+pub mod repository;
+
+pub use config::PuConfig;
+pub use generator::GeneratedProject;
+pub use repository::{fuse, GraphManager};

@@ -1,0 +1,283 @@
+//! The Code Repository of the AIE Graph Code Generator (paper Fig 6):
+//!
+//! * **Kernel Manager** — the registry of AIE kernel sources the GUI PU
+//!   Editor offers; configs referencing unknown kernels are rejected,
+//!   and each kernel carries its arithmetic class + the artifact that
+//!   implements it on this substrate.
+//! * **Graph Manager** — Stored Graphs: complete PU designs saved as
+//!   configuration files that can be reloaded or integrated into a new
+//!   design.
+//! * **Graph Fusion** — integrating stored graphs into the current
+//!   design: several PU configs fuse into one deployable project
+//!   (combined ADF entry point + whole-card resource check).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::core::KernelClass;
+use crate::sim::memory::ResourceUsage;
+use crate::sim::params::HwParams;
+
+use super::config::PuConfig;
+use super::generator::{self, GeneratedProject};
+
+/// A registered AIE kernel source.
+#[derive(Debug, Clone)]
+pub struct KernelInfo {
+    pub name: &'static str,
+    pub class: KernelClass,
+    /// The AOT artifact implementing this kernel's PU-level graph.
+    pub artifact: &'static str,
+    /// One-line description shown by the editor.
+    pub about: &'static str,
+}
+
+/// The Kernel Manager: the kernels this repository ships.
+pub fn kernel_catalogue() -> Vec<KernelInfo> {
+    vec![
+        KernelInfo {
+            name: "mm32",
+            class: KernelClass::F32Mac,
+            artifact: "mm_pu128",
+            about: "32x32x32 float MM (CHARM-optimal single-core load)",
+        },
+        KernelInfo {
+            name: "mm32_i8",
+            class: KernelClass::I32Mac,
+            artifact: "mm32_i8",
+            about: "32x32x32 int8 MM, int32 accumulate",
+        },
+        KernelInfo {
+            name: "mm32_i16",
+            class: KernelClass::I32Mac,
+            artifact: "mm32_i16",
+            about: "32x32x32 int16 MM, int32 accumulate",
+        },
+        KernelInfo {
+            name: "filter2d",
+            class: KernelClass::I32Mac,
+            artifact: "filter2d_pu8",
+            about: "5x5 int32 filter over a 32x32 tile (+halo)",
+        },
+        KernelInfo {
+            name: "fft",
+            class: KernelClass::Cint16Butterfly,
+            artifact: "fft1024",
+            about: "radix-2 DIT butterfly stages, split re/im planes",
+        },
+    ]
+}
+
+/// Look a kernel up by name.
+pub fn find_kernel(name: &str) -> Option<KernelInfo> {
+    kernel_catalogue().into_iter().find(|k| k.name == name)
+}
+
+/// Validate a config against the Kernel Manager (name known, class
+/// consistent).
+pub fn validate_kernel(cfg: &PuConfig) -> Result<KernelInfo> {
+    let info = find_kernel(&cfg.kernel)
+        .with_context(|| format!("kernel {:?} is not in the repository", cfg.kernel))?;
+    if info.class != cfg.pu.class {
+        bail!(
+            "config class {:?} does not match kernel {:?}'s class {:?}",
+            cfg.pu.class,
+            cfg.kernel,
+            info.class
+        );
+    }
+    Ok(info)
+}
+
+/// The Graph Manager: stored graphs on disk.
+#[derive(Debug)]
+pub struct GraphManager {
+    pub dir: PathBuf,
+}
+
+impl GraphManager {
+    pub fn new(dir: impl Into<PathBuf>) -> GraphManager {
+        GraphManager { dir: dir.into() }
+    }
+
+    pub fn store(&self, cfg: &PuConfig) -> Result<PathBuf> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.dir.join(format!("{}.json", cfg.name));
+        std::fs::write(&path, cfg.to_json().to_string_pretty())?;
+        Ok(path)
+    }
+
+    pub fn load(&self, name: &str) -> Result<PuConfig> {
+        PuConfig::from_file(&self.dir.join(format!("{name}.json")))
+    }
+
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        if !self.dir.exists() {
+            return Ok(names);
+        }
+        for entry in std::fs::read_dir(&self.dir)? {
+            let p = entry?.path();
+            if p.extension().map(|e| e == "json").unwrap_or(false) {
+                if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+}
+
+/// A fused multi-PU project (Graph Fusion output).
+#[derive(Debug)]
+pub struct FusedProject {
+    pub parts: Vec<(PuConfig, GeneratedProject)>,
+    pub top_cpp: String,
+    pub total_aie: usize,
+    pub total_plio: usize,
+}
+
+/// Fuse several stored graphs into one deployable design, checking the
+/// combined footprint against the card.
+pub fn fuse(p: &HwParams, configs: &[PuConfig]) -> Result<FusedProject> {
+    if configs.is_empty() {
+        bail!("nothing to fuse");
+    }
+    // duplicate names would collide in the generated C++
+    let mut seen = BTreeMap::new();
+    for c in configs {
+        if seen.insert(c.name.clone(), ()).is_some() {
+            bail!("duplicate PU name {:?} in fusion set", c.name);
+        }
+        validate_kernel(c)?;
+    }
+
+    let mut total = ResourceUsage::default();
+    let mut parts = Vec::new();
+    let mut top = String::new();
+    top.push_str("// Auto-generated fused design (Graph Fusion, Fig 6).\n");
+    for cfg in configs {
+        let proj = generator::generate(cfg)?;
+        total = total.add(&ResourceUsage {
+            aie: cfg.pu.cores() * cfg.copies,
+            plio: cfg.pu.total_plios() * cfg.copies,
+            ..Default::default()
+        });
+        top.push_str(&format!("#include \"{}/graph.h\"\n", cfg.name));
+        parts.push((cfg.clone(), proj));
+    }
+    top.push('\n');
+    for (cfg, _) in &parts {
+        for c in 0..cfg.copies {
+            top.push_str(&format!("{}_pu {}_{c};\n", cfg.name, cfg.name));
+        }
+    }
+    total.check(p).context("fused design exceeds the card")?;
+    Ok(FusedProject {
+        total_aie: total.aie,
+        total_plio: total.plio,
+        parts,
+        top_cpp: top,
+    })
+}
+
+impl FusedProject {
+    /// Write the fused project tree: `<dir>/<pu>/graph.{h,cpp}` + top.cpp.
+    pub fn write_to(&self, dir: &Path) -> Result<()> {
+        for (cfg, proj) in &self.parts {
+            proj.write_to(&dir.join(&cfg.name))?;
+        }
+        std::fs::write(dir.join("top.cpp"), &self.top_cpp)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm_cfg() -> PuConfig {
+        PuConfig::from_json_text(
+            &std::fs::read_to_string(
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/mm.json"),
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn fft_cfg() -> PuConfig {
+        PuConfig::from_json_text(
+            &std::fs::read_to_string(
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("configs/fft.json"),
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn kernel_catalogue_covers_configs() {
+        for cfg in [mm_cfg(), fft_cfg()] {
+            validate_kernel(&cfg).unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_rejected() {
+        let mut cfg = mm_cfg();
+        cfg.kernel = "nope".into();
+        assert!(validate_kernel(&cfg).is_err());
+    }
+
+    #[test]
+    fn class_mismatch_rejected() {
+        let mut cfg = mm_cfg();
+        cfg.kernel = "filter2d".into(); // i32 kernel under an f32 config
+        assert!(validate_kernel(&cfg).is_err());
+    }
+
+    #[test]
+    fn graph_manager_roundtrip() {
+        let dir = std::env::temp_dir().join("ea4rca_graphs_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let gm = GraphManager::new(&dir);
+        let cfg = mm_cfg();
+        gm.store(&cfg).unwrap();
+        assert_eq!(gm.list().unwrap(), vec!["mm".to_string()]);
+        let back = gm.load("mm").unwrap();
+        assert_eq!(back.pu, cfg.pu);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fusion_checks_the_card() {
+        let p = HwParams::vck5000();
+        // MM (384 cores) + FFT (80 cores) = 464 > 400: must be rejected
+        let err = fuse(&p, &[mm_cfg(), fft_cfg()]).unwrap_err();
+        assert!(err.to_string().contains("exceeds the card"), "{err}");
+        // MM alone fuses fine
+        let f = fuse(&p, &[mm_cfg()]).unwrap();
+        assert_eq!(f.total_aie, 384);
+        assert!(f.top_cpp.contains("mm_pu mm_0;"));
+        assert!(f.top_cpp.contains("mm_pu mm_5;"));
+        // a trimmed MM (2 copies) + FFT fits: 128 + 80
+        let mut small_mm = mm_cfg();
+        small_mm.copies = 2;
+        let f = fuse(&p, &[small_mm, fft_cfg()]).unwrap();
+        assert_eq!(f.total_aie, 2 * 64 + 8 * 10);
+        assert!(f.top_cpp.contains("fft_pu fft_7;"));
+    }
+
+    #[test]
+    fn fusion_rejects_duplicates() {
+        let p = HwParams::vck5000();
+        let mut a = mm_cfg();
+        a.copies = 1;
+        let b = a.clone();
+        assert!(fuse(&p, &[a, b]).is_err());
+    }
+}

@@ -1,0 +1,201 @@
+//! The controller: upper-level integration, task deployment, and flow
+//! control (§3.1). It takes a deployed design (group specs + resource
+//! usage), runs the scheduler, applies the power model, and produces the
+//! [`RunReport`] rows the benches print.
+
+use crate::coordinator::scheduler::{GroupSpec, SimEngine, SimReport};
+use crate::sim::core::KernelClass;
+use crate::sim::memory::ResourceUsage;
+use crate::sim::params::HwParams;
+use crate::sim::power::{estimate, PowerBreakdownInput};
+
+/// Everything a Table 6/7/8/9-style row needs.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub label: String,
+    /// Wall-clock for the whole workload (secs).
+    pub time_secs: f64,
+    /// User-level tasks completed (the app defines what a task is).
+    pub tasks: f64,
+    pub tasks_per_sec: f64,
+    /// Total arithmetic ops across the workload.
+    pub total_ops: f64,
+    pub gops: f64,
+    /// Active AIE cores in this configuration.
+    pub active_aie: usize,
+    pub gops_per_aie: f64,
+    pub power_w: f64,
+    pub gops_per_w: f64,
+    pub tasks_per_sec_per_w: f64,
+    /// Mean PU compute duty over the run (power-model input, reported
+    /// for EXPERIMENTS.md).
+    pub compute_duty: f64,
+    pub ddr_gbps: f64,
+    pub sim: SimReport,
+}
+
+/// The controller for one deployed accelerator configuration.
+pub struct Controller {
+    pub params: HwParams,
+    pub usage: ResourceUsage,
+    pub class: KernelClass,
+    pub trace: bool,
+}
+
+impl Controller {
+    pub fn new(params: HwParams, usage: ResourceUsage, class: KernelClass) -> Controller {
+        Controller { params, usage, class, trace: false }
+    }
+
+    pub fn with_trace(mut self, on: bool) -> Controller {
+        self.trace = on;
+        self
+    }
+
+    /// Deploy + run: validates the groups against the card, simulates,
+    /// and assembles the report. `tasks` and `total_ops` are workload
+    /// facts the app supplies (what a "task" is differs per table).
+    pub fn run(
+        &self,
+        label: &str,
+        groups: &[GroupSpec],
+        tasks: f64,
+        total_ops: f64,
+    ) -> anyhow::Result<RunReport> {
+        for g in groups {
+            g.validate().map_err(anyhow::Error::msg)?;
+        }
+        self.usage.check(&self.params)?;
+
+        let engine = SimEngine::new(self.params.clone()).with_trace(self.trace);
+        let sim = engine.run(groups);
+
+        let active_aie: usize = groups.iter().map(|g| g.cores()).sum();
+        let active_plio: usize = groups.iter().map(|g| g.du.pus * g.pu.total_plios()).sum();
+        // The power model's duty input is *arithmetic utilisation* —
+        // achieved ops/s per core over the datapath's peak — which is what
+        // makes MM-T (util 0.73) draw far more than MM (util 0.42) on
+        // similar core counts (DESIGN.md §6).
+        let peak_core_gops =
+            self.class.ops_per_cycle(&self.params) * self.params.aie_clock_hz / 1e9;
+        let arith_util = (total_ops / sim.makespan_secs / 1e9
+            / active_aie.max(1) as f64
+            / peak_core_gops)
+            .clamp(0.0, 1.0);
+        let power = estimate(
+            &self.params,
+            &PowerBreakdownInput {
+                usage: self.usage,
+                active_aie,
+                compute_duty: arith_util,
+                class: self.class,
+                ddr_gbps: sim.ddr_gbps,
+                active_plio,
+            },
+        )
+        .total();
+
+        let time = sim.makespan_secs;
+        let gops = total_ops / time / 1e9;
+        let tps = tasks / time;
+        Ok(RunReport {
+            label: label.to_string(),
+            time_secs: time,
+            tasks,
+            tasks_per_sec: tps,
+            total_ops,
+            gops,
+            active_aie,
+            gops_per_aie: gops / active_aie.max(1) as f64,
+            power_w: power,
+            gops_per_w: gops / power,
+            tasks_per_sec_per_w: tps / power,
+            compute_duty: sim.compute_duty,
+            ddr_gbps: sim.ddr_gbps,
+            sim,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scheduler::ExecMode;
+    use crate::engine::compute::cc::CcMode;
+    use crate::engine::compute::dac::{Dac, DacMode};
+    use crate::engine::compute::dcc::{Dcc, DccMode};
+    use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+    use crate::engine::data::du::DataUnit;
+    use crate::engine::data::ssc::SscMode;
+    use crate::engine::data::tpc::{TaskBlock, TpcMode};
+    use crate::sim::ddr::AmcMode;
+
+    fn tiny_group() -> GroupSpec {
+        GroupSpec {
+            name: "t".into(),
+            du: DataUnit {
+                name: "du".into(),
+                amc_read: Some(AmcMode::Csb),
+                amc_write: Some(AmcMode::Csb),
+                tpc: TpcMode::Cup,
+                ssc_send: SscMode::Phd,
+                ssc_recv: SscMode::Phd,
+                tb: TaskBlock::new(4096, 4, 1024),
+                pus: 2,
+            },
+            pu: ProcessingUnit::simple(
+                "p",
+                vec![ProcessingStructure {
+                    dacs: vec![Dac::new(vec![DacMode::Swh], 1, 8)],
+                    cc: CcMode::Parallel(8, Box::new(CcMode::Single)),
+                    dccs: vec![Dcc::new(DccMode::Swh, 1, 8)],
+                }],
+                KernelClass::F32Mac,
+                1e6,
+                4096,
+                1024,
+            ),
+            engine_iters: 32,
+mode: ExecMode::Regular,
+        }
+    }
+
+    #[test]
+    fn report_is_internally_consistent() {
+        let c = Controller::new(
+            HwParams::vck5000(),
+            ResourceUsage { aie: 16, plio: 4, ..Default::default() },
+            KernelClass::F32Mac,
+        );
+        let r = c.run("test", &[tiny_group()], 10.0, 32.0 * 2.0 * 1e6).unwrap();
+        assert!(r.time_secs > 0.0);
+        assert!((r.tasks_per_sec - 10.0 / r.time_secs).abs() < 1e-9);
+        assert!((r.gops - r.total_ops / r.time_secs / 1e9).abs() < 1e-9);
+        assert!((r.gops_per_w - r.gops / r.power_w).abs() < 1e-9);
+        assert_eq!(r.active_aie, 16);
+        assert!(r.power_w > 0.0);
+        assert!(r.compute_duty > 0.0 && r.compute_duty <= 1.0);
+    }
+
+    #[test]
+    fn invalid_group_rejected() {
+        let c = Controller::new(
+            HwParams::vck5000(),
+            ResourceUsage::default(),
+            KernelClass::F32Mac,
+        );
+        let mut g = tiny_group();
+        g.du.pus = 0;
+        assert!(c.run("bad", &[g], 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn overcommitted_design_rejected() {
+        let c = Controller::new(
+            HwParams::vck5000(),
+            ResourceUsage { aie: 1000, ..Default::default() },
+            KernelClass::F32Mac,
+        );
+        assert!(c.run("over", &[tiny_group()], 1.0, 1.0).is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! The EA4RCA controller layer (paper §3.1-§3.2): task deployment, the
+//! alternating compute/communicate execution of DU-PU pairs, and run
+//! reporting.
+//!
+//! * [`scheduler`] — the event-driven simulation of DU-PU pair groups
+//!   over the shared DDR (Fig 2's pipeline).
+//! * [`controller`] — ties a deployed design + workload to the scheduler
+//!   and the power model, and (optionally) routes real task data through
+//!   the PJRT runtime for numerical validation.
+
+pub mod controller;
+pub mod scheduler;
+pub mod server;
+
+pub use controller::{Controller, RunReport};
+pub use scheduler::{ExecMode, GroupSpec, SimEngine, SimReport};
+pub use server::{Server, ServeReport};

@@ -1,0 +1,462 @@
+//! The DU-PU pair scheduler: an event-driven simulation of the paper's
+//! Figure 2 execution — every pair alternates a communication phase
+//! (PLIO traffic between DU and PUs, AIE compute disabled) and a
+//! computation phase (AIE enabled, DU prefetching the next task block) —
+//! over the shared DDR controller.
+//!
+//! Groups (one DU + its PUs) run independently; the only cross-group
+//! coupling is DDR FIFO contention, which is exactly the paper's
+//! bottleneck story for high-PU-count configurations.
+
+use crate::engine::compute::pu::ProcessingUnit;
+use crate::engine::data::du::DataUnit;
+use crate::engine::data::tpc::TpcMode;
+use crate::sim::comm::TransferMethod;
+use crate::sim::ddr::Ddr;
+use crate::sim::params::HwParams;
+use crate::sim::trace::{Phase, Trace};
+
+/// How a group executes its iterations (paper §3.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExecMode {
+    /// The EA4RCA regular-CA design: aggregated communication phases
+    /// alternating with compute (Table 2 method 3 at system level).
+    #[default]
+    Regular,
+    /// Non-RCA fallback with stream buffering: communication overlaps
+    /// compute through ping-pong windows (method 2) — partial
+    /// separation, some degradation.
+    Buffered,
+    /// Non-RCA worst case: communication interleaves with compute in
+    /// small grains, stalling the pipeline per grain (method 1).
+    Interleaved,
+}
+
+/// One DU-PUs pair group plus its share of the workload.
+#[derive(Debug, Clone)]
+pub struct GroupSpec {
+    pub name: String,
+    pub du: DataUnit,
+    pub pu: ProcessingUnit,
+    /// Engine iterations this group executes (each iteration = every PU
+    /// in the group solving one subtask).
+    pub engine_iters: u64,
+    /// Execution discipline (Regular unless modelling a non-RCA app).
+    pub mode: ExecMode,
+}
+
+impl GroupSpec {
+    pub fn new(name: impl Into<String>, du: DataUnit, pu: ProcessingUnit, engine_iters: u64) -> GroupSpec {
+        GroupSpec { name: name.into(), du, pu, engine_iters, mode: ExecMode::Regular }
+    }
+
+    pub fn with_mode(mut self, mode: ExecMode) -> GroupSpec {
+        self.mode = mode;
+        self
+    }
+}
+
+impl GroupSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        self.du.validate()?;
+        self.pu.validate()?;
+        Ok(())
+    }
+
+    pub fn cores(&self) -> usize {
+        self.du.pus * self.pu.cores()
+    }
+}
+
+/// Per-group accounting out of a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct GroupStats {
+    pub name: String,
+    pub iters: u64,
+    pub finish_ps: u64,
+    pub compute_busy_ps: u64,
+    pub comm_busy_ps: u64,
+    pub stall_ps: u64,
+}
+
+/// The whole-run report.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Total wall-clock including dispatch and final write-back (secs).
+    pub makespan_secs: f64,
+    /// Mean fraction of the makespan PU cores spend computing.
+    pub compute_duty: f64,
+    /// Achieved DDR bandwidth over the run (GB/s).
+    pub ddr_gbps: f64,
+    /// DDR queueing time (contention indicator, secs).
+    pub ddr_queue_secs: f64,
+    pub groups: Vec<GroupStats>,
+    pub trace: Trace,
+}
+
+/// Scheduler state for one group while the run is in flight.
+struct GroupState {
+    spec: GroupSpec,
+    /// next engine iteration to run
+    next_iter: u64,
+    /// when the previous iteration's phases finished
+    prev_end_ps: u64,
+    /// completion times (fetch + process) per fetched TB index
+    tb_ready_ps: Vec<u64>,
+    /// index of the next TB to fetch
+    next_tb_fetch: u64,
+    stats: GroupStats,
+    // cached per-iteration timings
+    comm_per_pu_ps: u64,
+    compute_ps: u64,
+}
+
+impl GroupState {
+    fn tb_count(&self) -> u64 {
+        match self.spec.du.tpc {
+            TpcMode::Chl => 1,
+            TpcMode::Thr => self.spec.engine_iters, // streamed per iteration
+            TpcMode::Cup => {
+                let per = self.spec.du.tb.engine_iters.max(1);
+                self.spec.engine_iters.div_ceil(per)
+            }
+        }
+    }
+
+    fn tb_for_iter(&self, iter: u64) -> u64 {
+        match self.spec.du.tpc {
+            TpcMode::Chl => 0,
+            TpcMode::Thr => iter,
+            TpcMode::Cup => iter / self.spec.du.tb.engine_iters.max(1),
+        }
+    }
+
+    /// Lower bound on when this group's next iteration could start.
+    fn next_ready_lb(&self) -> u64 {
+        let tb = self.tb_for_iter(self.next_iter) as usize;
+        let tb_ready = self.tb_ready_ps.get(tb).copied().unwrap_or(u64::MAX);
+        self.prev_end_ps.max(tb_ready.min(u64::MAX - 1))
+    }
+}
+
+/// The simulation engine.
+pub struct SimEngine {
+    pub params: HwParams,
+    pub trace_enabled: bool,
+}
+
+impl SimEngine {
+    pub fn new(params: HwParams) -> SimEngine {
+        SimEngine { params, trace_enabled: false }
+    }
+
+    pub fn with_trace(mut self, on: bool) -> SimEngine {
+        self.trace_enabled = on;
+        self
+    }
+
+    /// Run the groups to completion.
+    pub fn run(&self, groups: &[GroupSpec]) -> SimReport {
+        let p = &self.params;
+        let mut ddr = Ddr::new(p);
+        let mut trace = Trace::new(self.trace_enabled);
+        let dispatch_ps = HwParams::ps(p.dispatch_secs);
+
+        let mut states: Vec<GroupState> = groups
+            .iter()
+            .map(|g| {
+                // Per-iteration phase lengths under the group's execution
+                // discipline (§3.2: Regular = aggregated phases; Buffered
+                // = method-2 ping-pong overlap; Interleaved = method-1
+                // grain-by-grain crossover).
+                let wire_bytes = g.pu.in_bytes_per_iter + g.pu.out_bytes_per_iter;
+                let (comm, compute) = match g.mode {
+                    ExecMode::Regular => (g.pu.comm_secs(p), g.pu.compute_secs(p)),
+                    ExecMode::Buffered => {
+                        let stream = TransferMethod::StreamAggregated.secs(p, wire_bytes);
+                        (0.0, g.pu.compute_secs(p).max(stream))
+                    }
+                    ExecMode::Interleaved => {
+                        let stream = TransferMethod::StreamInterleaved { grain_bytes: 64 }
+                            .secs(p, wire_bytes);
+                        (0.0, g.pu.compute_secs(p) + stream)
+                    }
+                };
+                GroupState {
+                    spec: g.clone(),
+                    next_iter: 0,
+                    prev_end_ps: dispatch_ps,
+                    tb_ready_ps: Vec::new(),
+                    next_tb_fetch: 0,
+                    stats: GroupStats { name: g.name.clone(), ..Default::default() },
+                    comm_per_pu_ps: HwParams::ps(comm),
+                    compute_ps: HwParams::ps(compute),
+                }
+            })
+            .collect();
+
+        // Issue the initial TB fetch (and one prefetch) for every group.
+        for (gi, st) in states.iter_mut().enumerate() {
+            let prefetch_depth = st.tb_count().min(2);
+            for _ in 0..prefetch_depth {
+                Self::issue_fetch(p, &mut ddr, &mut trace, gi, st, dispatch_ps);
+            }
+        }
+
+        // Advance the group with the earliest feasible next iteration.
+        loop {
+            let mut best: Option<(usize, u64)> = None;
+            for (gi, st) in states.iter().enumerate() {
+                if st.next_iter >= st.spec.engine_iters {
+                    continue;
+                }
+                let lb = st.next_ready_lb();
+                if best.map(|(_, t)| lb < t).unwrap_or(true) {
+                    best = Some((gi, lb));
+                }
+            }
+            let Some((gi, _)) = best else { break };
+            self.step_group(&mut ddr, &mut trace, gi, &mut states[gi]);
+        }
+
+        // Final write-back drain: the makespan includes the last DDR write.
+        let last_iter_end = states.iter().map(|s| s.prev_end_ps).max().unwrap_or(0);
+        let makespan_ps = last_iter_end.max(ddr.busy_until());
+        let makespan_secs = HwParams::secs(makespan_ps);
+
+        // Duty: compute-busy core-time over total core-time.
+        let mut busy_core_ps = 0.0_f64;
+        let mut core_count = 0.0_f64;
+        for st in &states {
+            busy_core_ps += st.stats.compute_busy_ps as f64 * st.spec.cores() as f64;
+            core_count += st.spec.cores() as f64;
+        }
+        let compute_duty = if makespan_ps > 0 && core_count > 0.0 {
+            busy_core_ps / (core_count * makespan_ps as f64)
+        } else {
+            0.0
+        };
+
+        SimReport {
+            makespan_secs,
+            compute_duty,
+            ddr_gbps: ddr.achieved_gbps(makespan_secs),
+            ddr_queue_secs: HwParams::secs(ddr.total_queue_ps),
+            groups: states.into_iter().map(|s| s.stats).collect(),
+            trace,
+        }
+    }
+
+    /// Issue the next TB fetch for a group (if any remain).
+    fn issue_fetch(
+        p: &HwParams,
+        ddr: &mut Ddr,
+        trace: &mut Trace,
+        gi: usize,
+        st: &mut GroupState,
+        now_ps: u64,
+    ) {
+        if st.next_tb_fetch >= st.tb_count() {
+            return;
+        }
+        let du = &st.spec.du;
+        let ready = match (du.tpc, du.amc_read) {
+            // THR streams per-iteration input: fetch the per-iteration
+            // bytes for all PUs.
+            (TpcMode::Thr, Some(mode)) => {
+                let bytes = st.spec.pu.in_bytes_per_iter * du.pus;
+                let (s, d) = ddr.transfer(now_ps, bytes, mode, p);
+                trace.record(&format!("G{gi}.DU"), Phase::Fetch, s, d);
+                d
+            }
+            (_, Some(mode)) if du.tb.read_bytes > 0 => {
+                let (s, d) = ddr.transfer(now_ps, du.tb.read_bytes, mode, p);
+                trace.record(&format!("G{gi}.DU"), Phase::Fetch, s, d);
+                let proc = HwParams::ps(du.tb_process_secs(p));
+                trace.record(&format!("G{gi}.DU"), Phase::Process, d, d + proc);
+                d + proc
+            }
+            // No AMC read (MM-T): data is resident from the start.
+            _ => now_ps,
+        };
+        let idx = st.next_tb_fetch as usize;
+        if st.tb_ready_ps.len() <= idx {
+            st.tb_ready_ps.resize(idx + 1, u64::MAX);
+        }
+        st.tb_ready_ps[idx] = ready;
+        st.next_tb_fetch += 1;
+    }
+
+    /// Execute one engine iteration of one group.
+    fn step_group(&self, ddr: &mut Ddr, trace: &mut Trace, gi: usize, st: &mut GroupState) {
+        let p = &self.params;
+        let iter = st.next_iter;
+        let tb = st.tb_for_iter(iter) as usize;
+        let data_ready = st.tb_ready_ps[tb];
+        let phase_start = st.prev_end_ps.max(data_ready);
+        if phase_start > st.prev_end_ps {
+            st.stats.stall_ps += phase_start - st.prev_end_ps;
+            trace.record(&format!("G{gi}.PU0"), Phase::Stall, st.prev_end_ps, phase_start);
+        }
+
+        // Communication phase (Fig 5 service discipline), then compute.
+        let pus = st.spec.du.pus;
+        let comm = st.comm_per_pu_ps;
+        let compute = st.compute_ps;
+        let mut iter_end = phase_start;
+        for pu_idx in 0..pus {
+            let off = HwParams::ps(
+                st.spec
+                    .du
+                    .ssc_send
+                    .service_start_offset(pu_idx, HwParams::secs(comm)),
+            );
+            let comm_start = phase_start + off;
+            let comm_end = comm_start + comm;
+            let compute_end = comm_end + compute;
+            iter_end = iter_end.max(compute_end);
+            if self.trace_enabled && pu_idx < 8 {
+                let lane = format!("G{gi}.PU{pu_idx}");
+                trace.record(&lane, Phase::Comm, comm_start, comm_end);
+                trace.record(&lane, Phase::Compute, comm_end, compute_end);
+            }
+        }
+        st.stats.comm_busy_ps += comm; // per-PU comm busy (lockstep accounting)
+        st.stats.compute_busy_ps += compute;
+        st.stats.iters += 1;
+        st.prev_end_ps = iter_end;
+        st.stats.finish_ps = iter_end;
+        st.next_iter += 1;
+
+        // Write-back of aggregated results (the TPC holds partials in
+        // URAM and writes every `writeback_every` iterations).
+        if let Some(mode) = st.spec.du.amc_write {
+            let wb = st.spec.du.tb.writeback_bytes_per_iter;
+            let every = st.spec.du.tb.writeback_every.max(1);
+            if wb > 0 && (iter + 1) % every == 0 {
+                ddr.transfer(iter_end, wb, mode, p);
+            }
+        }
+
+        // Prefetch the next TB while the PUs compute (CUP pipelining):
+        // triggered when we advance into a new TB region.
+        let next_tb = st.tb_for_iter(st.next_iter.min(st.spec.engine_iters.saturating_sub(1)));
+        if st.next_iter < st.spec.engine_iters && st.next_tb_fetch <= next_tb + 1 {
+            Self::issue_fetch(p, ddr, trace, gi, st, phase_start);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compute::cc::CcMode;
+    use crate::engine::compute::dac::{Dac, DacMode};
+    use crate::engine::compute::dcc::{Dcc, DccMode};
+    use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+    use crate::engine::data::ssc::SscMode;
+    use crate::engine::data::tpc::TaskBlock;
+    use crate::sim::core::KernelClass;
+    use crate::sim::ddr::AmcMode;
+
+    fn mm_group(pus: usize, engine_iters: u64) -> GroupSpec {
+        GroupSpec {
+            name: format!("mm-{pus}pu"),
+            du: DataUnit {
+                name: "DU".into(),
+                amc_read: Some(AmcMode::Jub),
+                amc_write: Some(AmcMode::Csb),
+                tpc: TpcMode::Cup,
+                ssc_send: SscMode::Phd,
+                ssc_recv: SscMode::Phd,
+                tb: TaskBlock::new(27 * 128 * 128 * 4, 9, pus * 128 * 128 * 4),
+                pus,
+            },
+            pu: ProcessingUnit::simple(
+                "MM",
+                vec![ProcessingStructure {
+                    dacs: vec![Dac::new(vec![DacMode::Swh, DacMode::Bdc], 8, 64)],
+                    cc: CcMode::Parallel(16, Box::new(CcMode::Cascade(4))),
+                    dccs: vec![Dcc::new(DccMode::Swh, 4, 64)],
+                }],
+                KernelClass::F32Mac,
+                2.0 * 128.0f64.powi(3),
+                2 * 128 * 128 * 4,
+                128 * 128 * 4,
+            ),
+            engine_iters,
+            mode: ExecMode::Regular,
+        }
+    }
+
+    #[test]
+    fn mm_768_six_pu_near_paper() {
+        // 768^3 with 6 PUs: 36 engine iterations -> paper 0.44 ms.
+        let engine = SimEngine::new(HwParams::vck5000());
+        let r = engine.run(&[mm_group(6, 36)]);
+        let ms = r.makespan_secs * 1e3;
+        assert!((ms - 0.44).abs() / 0.44 < 0.15, "makespan {ms} ms");
+    }
+
+    #[test]
+    fn mm_6144_six_pu_near_paper() {
+        // 6144^3: ceil(48^3/6) = 18432 iterations -> paper 135.59 ms.
+        let engine = SimEngine::new(HwParams::vck5000());
+        let r = engine.run(&[mm_group(6, 18432)]);
+        let ms = r.makespan_secs * 1e3;
+        assert!((ms - 135.59).abs() / 135.59 < 0.10, "makespan {ms} ms");
+    }
+
+    #[test]
+    fn more_iterations_take_longer() {
+        // The *incremental* cost of 90 extra iterations is ~90 x 7.65 us;
+        // the fixed dispatch overhead does not grow.
+        let engine = SimEngine::new(HwParams::vck5000());
+        let a = engine.run(&[mm_group(6, 10)]).makespan_secs;
+        let b = engine.run(&[mm_group(6, 100)]).makespan_secs;
+        let delta_us = (b - a) * 1e6;
+        assert!((delta_us - 90.0 * 7.65).abs() / (90.0 * 7.65) < 0.25, "{delta_us}");
+    }
+
+    #[test]
+    fn duty_increases_with_scale() {
+        // Dispatch overhead dilutes duty at small scale (Table 6's
+        // GOPS/AIE shape).
+        let engine = SimEngine::new(HwParams::vck5000());
+        let small = engine.run(&[mm_group(6, 36)]).compute_duty;
+        let large = engine.run(&[mm_group(6, 4096)]).compute_duty;
+        assert!(large > small, "{large} vs {small}");
+    }
+
+    #[test]
+    fn shd_slower_than_phd() {
+        let engine = SimEngine::new(HwParams::vck5000());
+        let mut g = mm_group(6, 64);
+        let phd = engine.run(&[g.clone()]).makespan_secs;
+        g.du.ssc_send = SscMode::Shd;
+        let shd = engine.run(&[g]).makespan_secs;
+        assert!(shd > phd * 1.3, "shd {shd} phd {phd}");
+    }
+
+    #[test]
+    fn trace_records_pipeline() {
+        let engine = SimEngine::new(HwParams::vck5000()).with_trace(true);
+        let r = engine.run(&[mm_group(2, 4)]);
+        assert!(!r.trace.spans.is_empty());
+        let render = r.trace.render(60, 0, r.trace.horizon_ps());
+        assert!(render.contains("G0.DU"));
+        assert!(render.contains("G0.PU0"));
+    }
+
+    #[test]
+    fn groups_contend_on_ddr() {
+        // Two groups sharing DDR must be slower than one group alone
+        // whenever fetches overlap; and queue time must be non-zero for
+        // simultaneous starts.
+        let engine = SimEngine::new(HwParams::vck5000());
+        let solo = engine.run(&[mm_group(3, 256)]);
+        let duo = engine.run(&[mm_group(3, 256), mm_group(3, 256)]);
+        assert!(duo.makespan_secs >= solo.makespan_secs);
+        assert!(duo.ddr_queue_secs > 0.0);
+    }
+}

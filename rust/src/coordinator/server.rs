@@ -1,0 +1,199 @@
+//! The serving layer: a leader/worker request server over the PJRT
+//! runtime — the deployment shape of the coordinator (the paper's PS
+//! controller receiving tasks "from the upper level", §3.1, running as
+//! a long-lived service).
+//!
+//! Each worker thread owns its *own* PJRT client and executable cache
+//! (the `xla` crate's client is not `Send`; per-worker clients also
+//! mirror the DU-PU pair isolation — workers never share hot state).
+//! The leader round-robins jobs over workers through bounded mpsc
+//! channels; replies come back on per-job channels. Latency/throughput
+//! metrics are aggregated leader-side.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{Runtime, Tensor};
+use crate::util::stats::{summarize, Summary};
+
+/// One inference/compute request.
+pub struct Job {
+    pub artifact: String,
+    pub inputs: Vec<Tensor>,
+    reply: mpsc::Sender<JobResult>,
+    submitted: Instant,
+}
+
+/// The completed job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub outputs: Result<Vec<Tensor>>,
+    /// Seconds from submit to completion (queueing + execution).
+    pub latency_secs: f64,
+    pub worker: usize,
+}
+
+/// A pending reply handle.
+pub struct Pending {
+    rx: mpsc::Receiver<JobResult>,
+}
+
+impl Pending {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx.recv().context("worker dropped the job")
+    }
+}
+
+/// The running server.
+pub struct Server {
+    senders: Vec<mpsc::SyncSender<Job>>,
+    handles: Vec<JoinHandle<WorkerStats>>,
+    next: usize,
+    submitted: u64,
+}
+
+/// Per-worker accounting returned at shutdown.
+#[derive(Debug, Default, Clone)]
+pub struct WorkerStats {
+    pub worker: usize,
+    pub jobs: u64,
+    pub exec_secs: f64,
+    pub errors: u64,
+}
+
+/// Whole-run report produced by [`Server::shutdown`].
+#[derive(Debug)]
+pub struct ServeReport {
+    pub workers: Vec<WorkerStats>,
+    pub total_jobs: u64,
+}
+
+impl Server {
+    /// Spawn `n_workers` workers over the artifact directory, warming
+    /// up the given artifacts in every worker.
+    pub fn start(
+        n_workers: usize,
+        artifact_dir: impl Into<std::path::PathBuf>,
+        warmup: &[&str],
+    ) -> Result<Server> {
+        if n_workers == 0 {
+            bail!("need at least one worker");
+        }
+        let dir: std::path::PathBuf = artifact_dir.into();
+        let warm: Vec<String> = warmup.iter().map(|s| s.to_string()).collect();
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        // readiness barrier: workers report once their runtime is up
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        for w in 0..n_workers {
+            let (tx, rx) = mpsc::sync_channel::<Job>(64);
+            let dir = dir.clone();
+            let warm = warm.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ea4rca-worker-{w}"))
+                .spawn(move || worker_main(w, dir, warm, rx, ready))
+                .context("spawning worker")?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..n_workers {
+            ready_rx.recv().context("worker died during startup")??;
+        }
+        Ok(Server { senders, handles, next: 0, submitted: 0 })
+    }
+
+    /// Submit a job (round-robin); returns a reply handle.
+    pub fn submit(&mut self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending> {
+        let (reply, rx) = mpsc::channel();
+        let job = Job {
+            artifact: artifact.to_string(),
+            inputs,
+            reply,
+            submitted: Instant::now(),
+        };
+        let w = self.next % self.senders.len();
+        self.next += 1;
+        self.submitted += 1;
+        self.senders[w].send(job).map_err(|_| anyhow::anyhow!("worker {w} gone"))?;
+        Ok(Pending { rx })
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Drain and join all workers.
+    pub fn shutdown(self) -> Result<ServeReport> {
+        drop(self.senders);
+        let mut workers = Vec::new();
+        for h in self.handles {
+            workers.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?);
+        }
+        Ok(ServeReport { workers, total_jobs: self.submitted })
+    }
+}
+
+fn worker_main(
+    id: usize,
+    dir: std::path::PathBuf,
+    warmup: Vec<String>,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+) -> WorkerStats {
+    let mut stats = WorkerStats { worker: id, ..Default::default() };
+    let rt = match Runtime::with_dir(dir).and_then(|rt| {
+        let names: Vec<&str> = warmup.iter().map(String::as_str).collect();
+        rt.warmup(&names)?;
+        Ok(rt)
+    }) {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return stats;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        let t0 = Instant::now();
+        let outputs = rt.execute(&job.artifact, &job.inputs);
+        let exec = t0.elapsed().as_secs_f64();
+        stats.jobs += 1;
+        stats.exec_secs += exec;
+        if outputs.is_err() {
+            stats.errors += 1;
+        }
+        let result = JobResult {
+            outputs,
+            latency_secs: job.submitted.elapsed().as_secs_f64(),
+            worker: id,
+        };
+        let _ = job.reply.send(result); // client may have gone away
+    }
+    stats
+}
+
+/// Convenience: serve a closed-loop batch and return latency stats.
+pub fn serve_batch(
+    server: &mut Server,
+    jobs: Vec<(String, Vec<Tensor>)>,
+) -> Result<(Vec<JobResult>, Summary)> {
+    let mut pending = Vec::with_capacity(jobs.len());
+    for (artifact, inputs) in jobs {
+        pending.push(server.submit(&artifact, inputs)?);
+    }
+    let mut results = Vec::with_capacity(pending.len());
+    for p in pending {
+        results.push(p.wait()?);
+    }
+    let latencies: Vec<f64> = results.iter().map(|r| r.latency_secs).collect();
+    let summary = summarize(&latencies);
+    Ok((results, summary))
+}

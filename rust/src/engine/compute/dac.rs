@@ -1,0 +1,166 @@
+//! Data Allocation Component (DAC) — distributes DU data to CC cores.
+//!
+//! The paper's four modes (§3.3):
+//!
+//! * `DIR` — direct PLIO-to-core wire; single-core CCs only.
+//! * `BDC` — broadcast: one PLIO's data copied to many cores in a cycle.
+//! * `SWH` — switch: one PLIO time-shares distinct data to many cores.
+//! * `DCA` — a dedicated AIE core doing data organisation (costs 1 core).
+//!
+//! The MM accelerator's input side is `SWH+BDC`: 4 PLIOs carry MatA and 4
+//! carry MatB, each packet-switched 4 ways and broadcast along a
+//! Cascade<4> row (Fig 7a).
+
+use crate::sim::params::HwParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DacMode {
+    Dir,
+    Bdc,
+    Swh,
+    Dca,
+}
+
+impl DacMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DacMode::Dir => "DIR",
+            DacMode::Bdc => "BDC",
+            DacMode::Swh => "SWH",
+            DacMode::Dca => "DCA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DacMode, String> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "DIR" => Ok(DacMode::Dir),
+            "BDC" => Ok(DacMode::Bdc),
+            "SWH" => Ok(DacMode::Swh),
+            "DCA" => Ok(DacMode::Dca),
+            other => Err(format!("unknown DAC mode: {other}")),
+        }
+    }
+
+    /// Extra AIE cores this mode consumes.
+    pub fn extra_cores(&self) -> usize {
+        match self {
+            DacMode::Dca => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// One DAC instance: a mode (or stacked modes, e.g. SWH feeding BDC),
+/// the PLIO ports it owns, and how many CC cores it serves.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dac {
+    pub modes: Vec<DacMode>,
+    pub plios: usize,
+    pub serves_cores: usize,
+}
+
+impl Dac {
+    pub fn new(modes: Vec<DacMode>, plios: usize, serves_cores: usize) -> Dac {
+        Dac { modes, plios, serves_cores }
+    }
+
+    pub fn label(&self) -> String {
+        self.modes
+            .iter()
+            .map(|m| m.name())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Validity rules from the paper.
+    pub fn validate(&self, cc_cores: usize) -> Result<(), String> {
+        if self.modes.is_empty() {
+            return Err("DAC needs at least one mode".into());
+        }
+        if self.plios == 0 {
+            return Err("DAC needs at least one PLIO".into());
+        }
+        if self.serves_cores == 0 || self.serves_cores > cc_cores {
+            return Err(format!(
+                "DAC serves {} cores but the CC has {cc_cores}",
+                self.serves_cores
+            ));
+        }
+        if self.modes.contains(&DacMode::Dir) && self.serves_cores != 1 {
+            return Err("DIR is only applicable to a single-core computing component".into());
+        }
+        Ok(())
+    }
+
+    /// Seconds to move `bytes` of per-iteration input through this DAC.
+    ///
+    /// BDC copies one stream to many cores, so the wire time is the
+    /// single-copy time; SWH time-shares, so distinct payloads serialize
+    /// on the port — both reduce to `bytes / (plios * plio_rate)` where
+    /// `bytes` counts *unique* traffic entering the PU. DCA adds its
+    /// organisation latency.
+    pub fn transfer_secs(&self, p: &HwParams, unique_bytes: usize) -> f64 {
+        let wire = unique_bytes as f64 / (self.plios as f64 * p.plio_bytes_per_sec());
+        let dca_latency = if self.modes.contains(&DacMode::Dca) {
+            // one pass over the data at stream rate inside the helper core
+            unique_bytes as f64 / p.stream_bytes_per_sec * 0.25
+        } else {
+            0.0
+        };
+        wire + dca_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_and_parse() {
+        for m in [DacMode::Dir, DacMode::Bdc, DacMode::Swh, DacMode::Dca] {
+            assert_eq!(DacMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(DacMode::parse("XYZ").is_err());
+    }
+
+    #[test]
+    fn dir_requires_single_core() {
+        let d = Dac::new(vec![DacMode::Dir], 1, 4);
+        assert!(d.validate(4).is_err());
+        let d = Dac::new(vec![DacMode::Dir], 1, 1);
+        assert!(d.validate(1).is_ok());
+    }
+
+    #[test]
+    fn mm_dac_label() {
+        let d = Dac::new(vec![DacMode::Swh, DacMode::Bdc], 8, 64);
+        assert_eq!(d.label(), "SWH+BDC");
+        assert!(d.validate(64).is_ok());
+    }
+
+    #[test]
+    fn transfer_time_scales_with_plios() {
+        let p = HwParams::vck5000();
+        let one = Dac::new(vec![DacMode::Swh], 1, 8).transfer_secs(&p, 65536);
+        let four = Dac::new(vec![DacMode::Swh], 4, 8).transfer_secs(&p, 65536);
+        assert!((one / four - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dca_adds_latency_and_a_core() {
+        let p = HwParams::vck5000();
+        let plain = Dac::new(vec![DacMode::Swh], 1, 8);
+        let dca = Dac::new(vec![DacMode::Dca], 1, 8);
+        assert!(dca.transfer_secs(&p, 4096) > plain.transfer_secs(&p, 4096));
+        assert_eq!(DacMode::Dca.extra_cores(), 1);
+    }
+
+    #[test]
+    fn mm_input_phase_is_3_4us() {
+        // 8 PLIOs carrying A+B = 131072 B -> 3.41 us (DESIGN.md §6).
+        let p = HwParams::vck5000();
+        let d = Dac::new(vec![DacMode::Swh, DacMode::Bdc], 8, 64);
+        let secs = d.transfer_secs(&p, 131072);
+        assert!((secs * 1e6 - 3.41).abs() < 0.02, "{}", secs * 1e6);
+    }
+}

@@ -1,0 +1,112 @@
+//! Data Collection Component (DCC) — collects CC results back to the DU.
+//!
+//! Same structure as the DAC minus broadcast ("broadcasting is not
+//! applicable during data collection" — §3.3): modes DIR, SWH, DCA.
+
+use crate::sim::params::HwParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DccMode {
+    Dir,
+    Swh,
+    Dca,
+}
+
+impl DccMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DccMode::Dir => "DIR",
+            DccMode::Swh => "SWH",
+            DccMode::Dca => "DCA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<DccMode, String> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "DIR" => Ok(DccMode::Dir),
+            "SWH" => Ok(DccMode::Swh),
+            "DCA" => Ok(DccMode::Dca),
+            "BDC" => Err("BDC is not applicable to a DCC (no broadcast on collection)".into()),
+            other => Err(format!("unknown DCC mode: {other}")),
+        }
+    }
+
+    pub fn extra_cores(&self) -> usize {
+        match self {
+            DccMode::Dca => 1,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dcc {
+    pub mode: DccMode,
+    pub plios: usize,
+    pub serves_cores: usize,
+}
+
+impl Dcc {
+    pub fn new(mode: DccMode, plios: usize, serves_cores: usize) -> Dcc {
+        Dcc { mode, plios, serves_cores }
+    }
+
+    pub fn validate(&self, cc_cores: usize) -> Result<(), String> {
+        if self.plios == 0 {
+            return Err("DCC needs at least one PLIO".into());
+        }
+        if self.serves_cores == 0 || self.serves_cores > cc_cores {
+            return Err(format!(
+                "DCC serves {} cores but the CC has {cc_cores}",
+                self.serves_cores
+            ));
+        }
+        if self.mode == DccMode::Dir && self.serves_cores != 1 {
+            return Err("DIR collection needs exactly one served core".into());
+        }
+        Ok(())
+    }
+
+    /// Seconds to collect `bytes` of per-iteration results.
+    pub fn transfer_secs(&self, p: &HwParams, bytes: usize) -> f64 {
+        let wire = bytes as f64 / (self.plios as f64 * p.plio_bytes_per_sec());
+        let dca_latency = if self.mode == DccMode::Dca {
+            bytes as f64 / p.stream_bytes_per_sec * 0.25
+        } else {
+            0.0
+        };
+        wire + dca_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bdc_rejected() {
+        assert!(DccMode::parse("BDC").is_err());
+    }
+
+    #[test]
+    fn parse_ok() {
+        assert_eq!(DccMode::parse("swh").unwrap(), DccMode::Swh);
+        assert_eq!(DccMode::parse("DIR").unwrap(), DccMode::Dir);
+        assert_eq!(DccMode::parse("DCA").unwrap(), DccMode::Dca);
+    }
+
+    #[test]
+    fn dir_single_core_rule() {
+        assert!(Dcc::new(DccMode::Dir, 1, 2).validate(4).is_err());
+        assert!(Dcc::new(DccMode::Dir, 1, 1).validate(4).is_ok());
+    }
+
+    #[test]
+    fn mm_output_phase_is_3_4us() {
+        // 4 SWH PLIOs collecting 65536 B -> 3.41 us.
+        let p = HwParams::vck5000();
+        let d = Dcc::new(DccMode::Swh, 4, 64);
+        let secs = d.transfer_secs(&p, 65536);
+        assert!((secs * 1e6 - 3.41).abs() < 0.02, "{}", secs * 1e6);
+    }
+}

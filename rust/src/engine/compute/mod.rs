@@ -1,0 +1,11 @@
+//! The computing engine: PU = { PST* }, PST = { DAC*, CC, DCC* }.
+
+pub mod cc;
+pub mod dac;
+pub mod dcc;
+pub mod pu;
+
+pub use cc::CcMode;
+pub use dac::{Dac, DacMode};
+pub use dcc::{Dcc, DccMode};
+pub use pu::{ProcessingStructure, ProcessingUnit};

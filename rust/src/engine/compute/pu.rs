@@ -1,0 +1,331 @@
+//! Processing Unit (PU) and Processing Structure (PST).
+//!
+//! A PU solves one subtask per iteration. A subtask may have several
+//! processing stages; each stage is a PST = { DACs, CC, DCCs } (§3.3,
+//! Fig 3). The FFT PU has two PSTs (Butterfly stage-group + the
+//! Parallel<2>*Cascade<3> tail); the other accelerators have one.
+
+use crate::sim::core::KernelClass;
+use crate::sim::params::HwParams;
+
+use super::cc::CcMode;
+use super::dac::Dac;
+use super::dcc::Dcc;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessingStructure {
+    pub dacs: Vec<Dac>,
+    pub cc: CcMode,
+    pub dccs: Vec<Dcc>,
+}
+
+impl ProcessingStructure {
+    pub fn validate(&self) -> Result<(), String> {
+        self.cc.validate()?;
+        let cores = self.cc.cores();
+        if self.dacs.is_empty() {
+            return Err("PST needs at least one DAC".into());
+        }
+        if self.dccs.is_empty() {
+            return Err("PST needs at least one DCC".into());
+        }
+        for d in &self.dacs {
+            d.validate(cores)?;
+        }
+        for d in &self.dccs {
+            d.validate(cores)?;
+        }
+        Ok(())
+    }
+
+    /// AIE cores including DCA helper cores.
+    pub fn cores(&self) -> usize {
+        self.cc.cores()
+            + self.dacs.iter().flat_map(|d| &d.modes).map(|m| m.extra_cores()).sum::<usize>()
+            + self.dccs.iter().map(|d| d.mode.extra_cores()).sum::<usize>()
+    }
+
+    pub fn in_plios(&self) -> usize {
+        self.dacs.iter().map(|d| d.plios).sum()
+    }
+
+    pub fn out_plios(&self) -> usize {
+        self.dccs.iter().map(|d| d.plios).sum()
+    }
+
+    /// Input-distribution seconds for `bytes` of unique per-iteration
+    /// traffic, split proportionally across this PST's DACs by port count.
+    pub fn in_secs(&self, p: &HwParams, bytes: usize) -> f64 {
+        let total_plios = self.in_plios().max(1);
+        self.dacs
+            .iter()
+            .map(|d| d.transfer_secs(p, bytes * d.plios / total_plios))
+            .fold(0.0_f64, f64::max)
+    }
+
+    pub fn out_secs(&self, p: &HwParams, bytes: usize) -> f64 {
+        let total_plios = self.out_plios().max(1);
+        self.dccs
+            .iter()
+            .map(|d| d.transfer_secs(p, bytes * d.plios / total_plios))
+            .fold(0.0_f64, f64::max)
+    }
+}
+
+/// A full processing unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcessingUnit {
+    pub name: String,
+    pub psts: Vec<ProcessingStructure>,
+    /// Arithmetic class of this PU's kernels.
+    pub class: KernelClass,
+    /// Total arithmetic ops per PU iteration.
+    pub ops_per_iter: f64,
+    /// Unique input bytes entering the PU per iteration (over PLIO).
+    pub in_bytes_per_iter: usize,
+    /// Result bytes leaving the PU per iteration.
+    pub out_bytes_per_iter: usize,
+    /// If true the comm phase serializes input and output (single-duplex
+    /// wiring, e.g. the FFT PU's DIR ports); default is full-duplex
+    /// overlap.
+    pub serial_comm: bool,
+    /// Bytes handed between PSTs over the core stream fabric per
+    /// iteration (multi-PST PUs); the slowest of {stage compute, handoff}
+    /// paces the pipeline.
+    pub handoff_bytes: usize,
+}
+
+impl ProcessingUnit {
+    /// Construct with the common defaults (full-duplex comm, no handoff).
+    #[allow(clippy::too_many_arguments)]
+    pub fn simple(
+        name: &str,
+        psts: Vec<ProcessingStructure>,
+        class: KernelClass,
+        ops_per_iter: f64,
+        in_bytes_per_iter: usize,
+        out_bytes_per_iter: usize,
+    ) -> ProcessingUnit {
+        ProcessingUnit {
+            name: name.to_string(),
+            psts,
+            class,
+            ops_per_iter,
+            in_bytes_per_iter,
+            out_bytes_per_iter,
+            serial_comm: false,
+            handoff_bytes: 0,
+        }
+    }
+}
+
+impl ProcessingUnit {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.psts.is_empty() {
+            return Err("PU needs at least one PST".into());
+        }
+        for pst in &self.psts {
+            pst.validate()?;
+        }
+        if self.ops_per_iter <= 0.0 {
+            return Err("PU ops_per_iter must be positive".into());
+        }
+        Ok(())
+    }
+
+    pub fn cores(&self) -> usize {
+        self.psts.iter().map(|p| p.cores()).sum()
+    }
+
+    pub fn in_plios(&self) -> usize {
+        // PST chains share the PU's external input ports: external input
+        // enters PST#1; later PSTs are fed core-to-core. External ports
+        // are PST#1's DAC ports plus any later PST marked external — we
+        // take PST#1 in, last PST out (the paper's FFT wiring).
+        self.psts.first().map(|p| p.in_plios()).unwrap_or(0)
+    }
+
+    pub fn out_plios(&self) -> usize {
+        self.psts.last().map(|p| p.out_plios()).unwrap_or(0)
+    }
+
+    pub fn total_plios(&self) -> usize {
+        self.in_plios() + self.out_plios()
+    }
+
+    /// Compute-phase seconds for one PU iteration: the PSTs pipeline, so
+    /// the steady-state iteration time is the max stage time; ops are
+    /// attributed to stages proportionally to their core counts. When the
+    /// PU moves intermediate data between PSTs over the stream fabric,
+    /// that handoff is itself a pipeline stage.
+    pub fn compute_secs(&self, p: &HwParams) -> f64 {
+        let total_cores: usize = self.psts.iter().map(|s| s.cc.cores()).sum();
+        let stage_max = self
+            .psts
+            .iter()
+            .map(|s| {
+                let share = self.ops_per_iter * s.cc.cores() as f64 / total_cores as f64;
+                s.cc.compute_secs(p, self.class, share)
+            })
+            .fold(0.0_f64, f64::max);
+        let handoff = self.handoff_bytes as f64 / p.stream_bytes_per_sec;
+        stage_max.max(handoff)
+    }
+
+    /// Communication-phase seconds for one iteration: input distribution
+    /// and result collection overlap (full-duplex PLIO) unless
+    /// `serial_comm` is set, in which case they serialize.
+    pub fn comm_secs(&self, p: &HwParams) -> f64 {
+        let in_secs = self
+            .psts
+            .first()
+            .map(|s| s.in_secs(p, self.in_bytes_per_iter))
+            .unwrap_or(0.0);
+        let out_secs = self
+            .psts
+            .last()
+            .map(|s| s.out_secs(p, self.out_bytes_per_iter))
+            .unwrap_or(0.0);
+        if self.serial_comm {
+            in_secs + out_secs
+        } else {
+            in_secs.max(out_secs)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compute::dac::DacMode;
+    use crate::engine::compute::dcc::DccMode;
+
+    /// The paper's MM PU (Fig 7a): SWH+BDC in (8 PLIO), Parallel<16>*
+    /// Cascade<4>, SWH out (4 PLIO).
+    pub fn mm_pu() -> ProcessingUnit {
+        ProcessingUnit::simple(
+            "MM",
+            vec![ProcessingStructure {
+                dacs: vec![Dac::new(vec![DacMode::Swh, DacMode::Bdc], 8, 64)],
+                cc: CcMode::Parallel(16, Box::new(CcMode::Cascade(4))),
+                dccs: vec![Dcc::new(DccMode::Swh, 4, 64)],
+            }],
+            KernelClass::F32Mac,
+            2.0 * 128.0 * 128.0 * 128.0,
+            2 * 128 * 128 * 4,
+            128 * 128 * 4,
+        )
+    }
+
+    #[test]
+    fn mm_pu_shape_matches_paper() {
+        let pu = mm_pu();
+        assert!(pu.validate().is_ok());
+        assert_eq!(pu.cores(), 64);
+        assert_eq!(pu.total_plios(), 12); // 8 in + 4 out, Table: 72/6 PUs
+    }
+
+    #[test]
+    fn mm_pu_iteration_time_near_7_65us() {
+        let p = HwParams::vck5000();
+        let pu = mm_pu();
+        let total = pu.compute_secs(&p) + pu.comm_secs(&p);
+        // DESIGN.md §6: ~4.24 us compute + ~3.41 us comm
+        assert!((total * 1e6 - 7.65).abs() < 0.25, "{}", total * 1e6);
+    }
+
+    #[test]
+    fn multi_pst_pipelines() {
+        let p = HwParams::vck5000();
+        let fft_like = ProcessingUnit::simple(
+            "FFT",
+            vec![
+                ProcessingStructure {
+                    dacs: vec![Dac::new(vec![DacMode::Bdc], 1, 4)],
+                    cc: CcMode::Butterfly { cores: 4 },
+                    dccs: vec![Dcc::new(DccMode::Dir, 1, 1)],
+                },
+                ProcessingStructure {
+                    dacs: vec![Dac::new(vec![DacMode::Dir], 1, 1)],
+                    cc: CcMode::Parallel(2, Box::new(CcMode::Cascade(3))),
+                    dccs: vec![Dcc::new(DccMode::Dir, 1, 1)],
+                },
+            ],
+            KernelClass::Cint16Butterfly,
+            51200.0,
+            4096,
+            4096,
+        );
+        assert!(fft_like.validate().is_ok());
+        assert_eq!(fft_like.cores(), 10);
+        // pipeline: iteration time is the max stage, less than the sum
+        let t = fft_like.compute_secs(&p);
+        let sum: f64 = fft_like
+            .psts
+            .iter()
+            .map(|s| {
+                let share = 51200.0 * s.cc.cores() as f64 / 10.0;
+                s.cc.compute_secs(&p, KernelClass::Cint16Butterfly, share)
+            })
+            .sum();
+        assert!(t < sum);
+    }
+
+    #[test]
+    fn multi_dac_pst_splits_traffic() {
+        // The paper's MM input side is really two DAC sets (4 PLIOs for
+        // MatA + 4 for MatB); modelled as one 8-PLIO DAC or two 4-PLIO
+        // DACs, the input phase must take the same time (proportional
+        // traffic split, phases in parallel).
+        let p = HwParams::vck5000();
+        let one = ProcessingStructure {
+            dacs: vec![Dac::new(vec![DacMode::Swh, DacMode::Bdc], 8, 64)],
+            cc: CcMode::Parallel(16, Box::new(CcMode::Cascade(4))),
+            dccs: vec![Dcc::new(DccMode::Swh, 4, 64)],
+        };
+        let two = ProcessingStructure {
+            dacs: vec![
+                Dac::new(vec![DacMode::Swh, DacMode::Bdc], 4, 64), // MatA
+                Dac::new(vec![DacMode::Swh, DacMode::Bdc], 4, 64), // MatB
+            ],
+            cc: CcMode::Parallel(16, Box::new(CcMode::Cascade(4))),
+            dccs: vec![Dcc::new(DccMode::Swh, 4, 64)],
+        };
+        assert!(two.validate().is_ok());
+        assert_eq!(one.in_plios(), two.in_plios());
+        let bytes = 2 * 128 * 128 * 4;
+        let t1 = one.in_secs(&p, bytes);
+        let t2 = two.in_secs(&p, bytes);
+        assert!((t1 - t2).abs() / t1 < 1e-9, "{t1} vs {t2}");
+    }
+
+    #[test]
+    fn uneven_dacs_bottleneck_on_the_smaller() {
+        // a 1-PLIO DAC serving half the traffic of a 7-PLIO DAC paces
+        // the phase (max over DACs, not mean)
+        let p = HwParams::vck5000();
+        let pst = ProcessingStructure {
+            dacs: vec![
+                Dac::new(vec![DacMode::Swh], 1, 8),
+                Dac::new(vec![DacMode::Swh], 7, 56),
+            ],
+            cc: CcMode::Parallel(8, Box::new(CcMode::Cascade(8))),
+            dccs: vec![Dcc::new(DccMode::Swh, 1, 64)],
+        };
+        let bytes = 8 * 65536;
+        let t = pst.in_secs(&p, bytes);
+        // the 1-PLIO DAC gets bytes/8 over one port
+        let expect = (bytes / 8) as f64 / p.plio_bytes_per_sec();
+        assert!((t - expect).abs() / expect < 1e-9, "{t} vs {expect}");
+    }
+
+    #[test]
+    fn invalid_pu_rejected() {
+        let mut pu = mm_pu();
+        pu.psts.clear();
+        assert!(pu.validate().is_err());
+        let mut pu = mm_pu();
+        pu.ops_per_iter = 0.0;
+        assert!(pu.validate().is_err());
+    }
+}

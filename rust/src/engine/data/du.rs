@@ -1,0 +1,116 @@
+//! Data Unit (DU): AMC + TPC + SSC, serving a group of PUs.
+
+use crate::sim::ddr::AmcMode;
+use crate::sim::params::HwParams;
+
+use super::ssc::SscMode;
+use super::tpc::{TaskBlock, TpcMode};
+
+/// A configured data unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DataUnit {
+    pub name: String,
+    /// AMC read mode (None = no DDR reads, e.g. MM-T's Null AMC).
+    pub amc_read: Option<AmcMode>,
+    /// AMC write mode for result write-back.
+    pub amc_write: Option<AmcMode>,
+    pub tpc: TpcMode,
+    pub ssc_send: SscMode,
+    pub ssc_recv: SscMode,
+    /// Task-block geometry (meaningless for THR TPCs).
+    pub tb: TaskBlock,
+    /// PUs this DU serves (the DU-PUs pair ratio).
+    pub pus: usize,
+}
+
+impl DataUnit {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.pus == 0 {
+            return Err("DU must serve at least one PU".into());
+        }
+        self.ssc_send.validate(self.pus, true)?;
+        self.ssc_recv.validate(self.pus, false)?;
+        if self.tpc == TpcMode::Thr && self.tb.engine_iters != 0 && self.tb.read_bytes != 0 {
+            return Err("THR TPC has no task blocks; zero the TB geometry".into());
+        }
+        if self.tpc != TpcMode::Thr && self.tb.engine_iters == 0 {
+            return Err("buffered TPC needs tb.engine_iters >= 1".into());
+        }
+        if self.tpc == TpcMode::Cup && self.amc_read.is_none() {
+            return Err("CUP TPC refetches TBs and needs an AMC read mode".into());
+        }
+        Ok(())
+    }
+
+    /// URAM staging demand in bytes for the send side, per engine
+    /// iteration of `per_pu_bytes` subproblems (Fig 5 / §3.4).
+    pub fn staging_bytes(&self, per_pu_bytes: usize) -> usize {
+        self.ssc_send.staging_bytes(self.pus, per_pu_bytes)
+            + self.ssc_recv.staging_bytes(self.pus, per_pu_bytes)
+    }
+
+    /// TB processing seconds (PL side), zero for THR.
+    pub fn tb_process_secs(&self, p: &HwParams) -> f64 {
+        if self.tpc.buffers() {
+            self.tb.process_secs(p)
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm_du() -> DataUnit {
+        DataUnit {
+            name: "MM-DU".into(),
+            amc_read: Some(AmcMode::Jub),
+            amc_write: Some(AmcMode::Csb),
+            tpc: TpcMode::Cup,
+            ssc_send: SscMode::Phd,
+            ssc_recv: SscMode::Phd,
+            tb: TaskBlock::new(27 * 128 * 128 * 4, 9, 6 * 128 * 128 * 4),
+            pus: 6,
+        }
+    }
+
+    #[test]
+    fn mm_du_valid() {
+        assert!(mm_du().validate().is_ok());
+    }
+
+    #[test]
+    fn cup_needs_amc() {
+        let mut du = mm_du();
+        du.amc_read = None;
+        assert!(du.validate().is_err());
+    }
+
+    #[test]
+    fn thr_needs_no_tb() {
+        let mut du = mm_du();
+        du.tpc = TpcMode::Thr;
+        du.ssc_send = SscMode::Thr;
+        du.ssc_recv = SscMode::Thr;
+        du.pus = 1;
+        assert!(du.validate().is_err()); // TB geometry still set
+        du.tb = TaskBlock::new(0, 0, 0);
+        assert!(du.validate().is_ok());
+    }
+
+    #[test]
+    fn zero_pus_invalid() {
+        let mut du = mm_du();
+        du.pus = 0;
+        assert!(du.validate().is_err());
+    }
+
+    #[test]
+    fn staging_accounts_both_sides() {
+        let du = mm_du();
+        // PHD stages all 6 PUs both directions
+        assert_eq!(du.staging_bytes(1000), 12_000);
+    }
+}

@@ -1,0 +1,9 @@
+//! The data engine: DU = { AMC, TPC, SSC } over shared DDR (§3.4).
+
+pub mod du;
+pub mod ssc;
+pub mod tpc;
+
+pub use du::DataUnit;
+pub use ssc::SscMode;
+pub use tpc::{TaskBlock, TpcMode};

@@ -1,0 +1,131 @@
+//! Stream Service Component (SSC) — maps DU task data onto the PU PLIOs.
+//!
+//! The paper's four service disciplines (§3.4, Fig 5):
+//!
+//! * `PSD` — Parallel Same Data: one subproblem broadcast to all PUs at
+//!   once (sender only).
+//! * `SHD` — Serial Heterogeneous Data: distinct subproblems served one
+//!   PU after another; a slow PU delays everyone behind it.
+//! * `PHD` — Parallel Heterogeneous Data: distinct subproblems served
+//!   concurrently, but the whole batch must be staged in the DU buffer
+//!   first (URAM cost).
+//! * `THR` — Through: direct wire, exactly one PU.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SscMode {
+    Psd,
+    Shd,
+    Phd,
+    Thr,
+}
+
+impl SscMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SscMode::Psd => "PSD",
+            SscMode::Shd => "SHD",
+            SscMode::Phd => "PHD",
+            SscMode::Thr => "THR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SscMode, String> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "PSD" => Ok(SscMode::Psd),
+            "SHD" => Ok(SscMode::Shd),
+            "PHD" => Ok(SscMode::Phd),
+            "THR" => Ok(SscMode::Thr),
+            other => Err(format!("unknown SSC mode: {other}")),
+        }
+    }
+
+    /// Validity: PSD is a sender-only mode; THR serves exactly one PU.
+    pub fn validate(&self, n_pus: usize, is_sender: bool) -> Result<(), String> {
+        match self {
+            SscMode::Psd if !is_sender => {
+                Err("PSD is only defined for the Sender side".into())
+            }
+            SscMode::Thr if n_pus != 1 => {
+                Err(format!("THR serves exactly one PU, group has {n_pus}"))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Needs the batch staged in the DU buffer before service starts?
+    pub fn needs_staging(&self) -> bool {
+        matches!(self, SscMode::Phd)
+    }
+
+    /// Start offset of PU `idx`'s service within a group comm phase whose
+    /// per-PU wire time is `per_pu_secs` (this is Fig 5's timing): serial
+    /// modes stagger, parallel modes do not.
+    pub fn service_start_offset(&self, idx: usize, per_pu_secs: f64) -> f64 {
+        match self {
+            SscMode::Shd => idx as f64 * per_pu_secs,
+            SscMode::Psd | SscMode::Phd | SscMode::Thr => 0.0,
+        }
+    }
+
+    /// Duration of the whole group's service phase for `n_pus` PUs.
+    pub fn group_service_secs(&self, n_pus: usize, per_pu_secs: f64) -> f64 {
+        match self {
+            SscMode::Shd => n_pus as f64 * per_pu_secs,
+            SscMode::Psd | SscMode::Phd | SscMode::Thr => per_pu_secs,
+        }
+    }
+
+    /// DU buffer bytes needed to serve `n_pus` PUs of `per_pu_bytes` each.
+    pub fn staging_bytes(&self, n_pus: usize, per_pu_bytes: usize) -> usize {
+        match self {
+            SscMode::Phd => n_pus * per_pu_bytes,
+            SscMode::Psd => per_pu_bytes,
+            SscMode::Shd => per_pu_bytes, // double-buffered single slot
+            SscMode::Thr => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in [SscMode::Psd, SscMode::Shd, SscMode::Phd, SscMode::Thr] {
+            assert_eq!(SscMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SscMode::parse("ABC").is_err());
+    }
+
+    #[test]
+    fn psd_receiver_invalid() {
+        assert!(SscMode::Psd.validate(4, true).is_ok());
+        assert!(SscMode::Psd.validate(4, false).is_err());
+    }
+
+    #[test]
+    fn thr_single_pu_only() {
+        assert!(SscMode::Thr.validate(1, true).is_ok());
+        assert!(SscMode::Thr.validate(2, true).is_err());
+    }
+
+    #[test]
+    fn fig5_timing_shapes() {
+        // 4 PUs, 1 us each: SHD takes 4 us and staggers; PHD takes 1 us
+        // but needs 4x buffer.
+        let per = 1e-6;
+        assert_eq!(SscMode::Shd.group_service_secs(4, per), 4e-6);
+        assert_eq!(SscMode::Phd.group_service_secs(4, per), 1e-6);
+        assert_eq!(SscMode::Shd.service_start_offset(2, per), 2e-6);
+        assert_eq!(SscMode::Phd.service_start_offset(2, per), 0.0);
+        assert_eq!(SscMode::Phd.staging_bytes(4, 1000), 4000);
+        assert_eq!(SscMode::Shd.staging_bytes(4, 1000), 1000);
+    }
+
+    #[test]
+    fn phd_stages() {
+        assert!(SscMode::Phd.needs_staging());
+        assert!(!SscMode::Shd.needs_staging());
+    }
+}

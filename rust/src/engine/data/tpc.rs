@@ -1,0 +1,120 @@
+//! Task Processing Component (TPC) — task decomposition and aggregation.
+//!
+//! The paper's three modes (§3.4):
+//!
+//! * `CUP` (Cache Update) — every Task Event (TEV) pulls a fresh Task
+//!   Block (TB) from the AMC/SSC into the on-chip cache, processes it,
+//!   and emits results.
+//! * `CHL` (Cache Hold) — the TB stays resident; TEVs re-run over it
+//!   (small data, heavy compute — MM-T).
+//! * `THR` (Through) — no TEV at all; AMC output wired straight to the
+//!   SSC with no buffer.
+
+use crate::sim::params::HwParams;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TpcMode {
+    Cup,
+    Chl,
+    Thr,
+}
+
+impl TpcMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TpcMode::Cup => "CUP",
+            TpcMode::Chl => "CHL",
+            TpcMode::Thr => "THR",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<TpcMode, String> {
+        match s.trim().to_ascii_uppercase().as_str() {
+            "CUP" => Ok(TpcMode::Cup),
+            "CHL" => Ok(TpcMode::Chl),
+            "THR" => Ok(TpcMode::Thr),
+            other => Err(format!("unknown TPC mode: {other}")),
+        }
+    }
+
+    /// Does this mode re-read DDR for every TB?
+    pub fn refetches(&self) -> bool {
+        matches!(self, TpcMode::Cup)
+    }
+
+    /// Does this mode use on-chip TB cache at all?
+    pub fn buffers(&self) -> bool {
+        !matches!(self, TpcMode::Thr)
+    }
+}
+
+/// A Task Block: the minimum data set one Task Event consumes (§3.4).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskBlock {
+    /// Bytes fetched from DDR per TB.
+    pub read_bytes: usize,
+    /// Engine iterations one TB sustains (data reuse factor — the MM TB
+    /// of 27 128x128 matrices feeds 9 engine iterations).
+    pub engine_iters: u64,
+    /// Result bytes written back to DDR per write-back event.
+    pub writeback_bytes_per_iter: usize,
+    /// Engine iterations between write-back events (1 = every iteration;
+    /// the MM TPC accumulates C partials in URAM and writes a C block
+    /// only once its K-sweep completes).
+    pub writeback_every: u64,
+}
+
+impl TaskBlock {
+    pub fn new(read_bytes: usize, engine_iters: u64, wb_bytes: usize) -> TaskBlock {
+        TaskBlock {
+            read_bytes,
+            engine_iters,
+            writeback_bytes_per_iter: wb_bytes,
+            writeback_every: 1,
+        }
+    }
+
+    /// PL-side decompose pipeline-fill latency for one TB: the TPC
+    /// streams the block through its logic at the PL word rate
+    /// (512 bits/cycle), *overlapped* with SSC service — only the first
+    /// iteration's slice must be processed before service can start.
+    pub fn process_secs(&self, p: &HwParams) -> f64 {
+        let pl_bytes_per_sec = 64.0 * p.pl_clock_hz; // 512 b/cycle
+        let first_slice = self.read_bytes as f64 / self.engine_iters.max(1) as f64;
+        first_slice / pl_bytes_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_names() {
+        for m in [TpcMode::Cup, TpcMode::Chl, TpcMode::Thr] {
+            assert_eq!(TpcMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(TpcMode::parse("HOLD").is_err());
+    }
+
+    #[test]
+    fn mode_semantics() {
+        assert!(TpcMode::Cup.refetches());
+        assert!(!TpcMode::Chl.refetches());
+        assert!(!TpcMode::Thr.refetches());
+        assert!(TpcMode::Cup.buffers());
+        assert!(TpcMode::Chl.buffers());
+        assert!(!TpcMode::Thr.buffers());
+    }
+
+    #[test]
+    fn mm_tb_process_fill_latency() {
+        // 27 x 128x128 float matrices = 1.77 MB; the first of 9 slices
+        // (196 KiB) fills the decompose pipeline in ~10 us at 19.2 GB/s.
+        let p = HwParams::vck5000();
+        let tb = TaskBlock::new(27 * 128 * 128 * 4, 9, 6 * 128 * 128 * 4);
+        let secs = tb.process_secs(&p);
+        assert!((secs * 1e6 - 10.24).abs() < 0.2, "{}", secs * 1e6);
+        assert_eq!(tb.writeback_every, 1);
+    }
+}

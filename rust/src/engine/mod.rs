@@ -1,0 +1,16 @@
+//! The two EA4RCA engines (paper §3, Figure 1):
+//!
+//! * [`compute`] — the computing engine: processing units (PU) built from
+//!   Data Allocation Components (DAC), Computing Components (CC), and
+//!   Data Collection Components (DCC), optionally in multiple processing
+//!   structures (PST).
+//! * [`data`] — the data engine: data units (DU) built from Memory Access
+//!   Components (AMC), Task Processing Components (TPC), and Stream
+//!   Service Components (SSC), over the shared DDR.
+//!
+//! Component *modes* are the paper's Tables 1/4 taxonomy; each mode
+//! carries validation rules, resource cost, and timing semantics the
+//! coordinator's scheduler consumes.
+
+pub mod compute;
+pub mod data;

@@ -1,0 +1,34 @@
+//! # EA4RCA — Efficient AIE accelerator design framework for Regular
+//! # Communication-Avoiding algorithms
+//!
+//! A reproduction of the paper's system (Zhang et al., cs.AR 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2** (build-time Python, `python/compile/`): Pallas kernels
+//!   for each accelerator's per-core subtask and JAX graphs for each PU,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **Layer 3** (this crate): the EA4RCA framework itself — computing
+//!   engine ([`engine::compute`]), data engine ([`engine::data`]),
+//!   controller/scheduler ([`coordinator`]), the AIE Graph code generator
+//!   ([`codegen`]), the four accelerators ([`apps`]) and the SOTA
+//!   baselines ([`baselines`]) — running over a calibrated VCK5000
+//!   simulator ([`sim`]) with real numerics executed through PJRT
+//!   ([`runtime`]).
+//!
+//! See DESIGN.md for the substitution table (what the paper ran on silicon
+//! vs what this repo simulates) and EXPERIMENTS.md for paper-vs-measured
+//! results for every table and figure.
+
+pub mod apps;
+pub mod baselines;
+pub mod codegen;
+pub mod coordinator;
+pub mod engine;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;
+
+/// Crate version, exposed for the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

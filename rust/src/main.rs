@@ -1,0 +1,397 @@
+//! `ea4rca` — the leader binary: CLI over the framework.
+//!
+//! Subcommands:
+//!   run       — simulate an accelerator configuration and print its row
+//!   exec      — route real task data through the PJRT runtime (numerics)
+//!   generate  — run the AIE Graph Code Generator on a config file
+//!   resources — print the Table 5 resource-utilisation table
+//!   info      — platform + artifact inventory
+
+use anyhow::{bail, Result};
+
+use ea4rca::apps::{fft, filter2d, mm, mmt, table5_usage};
+use ea4rca::codegen::{config::PuConfig, generator};
+use ea4rca::report;
+use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::cli::Cli;
+use ea4rca::util::rng::Rng;
+use ea4rca::util::table::Table;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "ea4rca <run|exec|serve|generate|resources|info> [options]\n\
+     \n\
+     ea4rca run --app mm --size 768 --pus 6 [--trace]\n\
+     ea4rca run --app filter2d --height 3480 --width 2160 --pus 44\n\
+     ea4rca run --app fft --size 1024 --pus 8 --tasks 4096\n\
+     ea4rca run --app mmt --iters 20000\n\
+     ea4rca exec --app mm --size 256 --seed 7\n\
+     ea4rca serve --workers 4 --jobs 256 --mix mm-heavy\n\
+     ea4rca sweep --table 6|7|8|9            (regenerate a paper table)\n\
+     ea4rca generate --config configs/mm.json --out generated/mm\n\
+     ea4rca fuse --configs configs/fft.json,configs/mm_small.json --out generated/fused\n\
+     ea4rca resources\n\
+     ea4rca info\n"
+        .to_string()
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first().cloned() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "exec" => cmd_exec(rest),
+        "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
+        "generate" => cmd_generate(rest),
+        "fuse" => cmd_fuse(rest),
+        "resources" => cmd_resources(),
+        "info" => cmd_info(),
+        "--help" | "-h" | "help" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{}", usage()),
+    }
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let cli = Cli::new("ea4rca run", "simulate an accelerator configuration")
+        .opt("app", "mm", "mm | filter2d | fft | mmt")
+        .opt("size", "768", "MM edge / FFT points")
+        .opt("height", "3480", "Filter2D frame height")
+        .opt("width", "2160", "Filter2D frame width")
+        .opt("pus", "6", "active PU quantity")
+        .opt("tasks", "4096", "FFT batch size")
+        .opt("iters", "20000", "MM-T chain iterations")
+        .flag("trace", "record + print the phase timeline")
+        .parse(args.to_vec().as_slice())
+        .map_err(anyhow::Error::msg)?;
+
+    let p = HwParams::vck5000();
+    let trace = cli.has("trace");
+    let report = match cli.get("app").as_str() {
+        "mm" => mm::run(&p, cli.get_usize("size"), cli.get_usize("pus"), trace)?,
+        "filter2d" => filter2d::run(
+            &p,
+            cli.get_usize("height"),
+            cli.get_usize("width"),
+            cli.get_usize("pus"),
+            trace,
+        )?,
+        "fft" => {
+            match fft::run(
+                &p,
+                cli.get_usize("size"),
+                cli.get_usize("pus"),
+                cli.get_usize("tasks") as u64,
+                trace,
+            )? {
+                Some(r) => r,
+                None => {
+                    println!(
+                        "N/A — {} points exceed the AIE core memory of {} PUs (Table 8)",
+                        cli.get("size"),
+                        cli.get("pus")
+                    );
+                    return Ok(());
+                }
+            }
+        }
+        "mmt" => mmt::run(&p, cli.get_usize("iters") as u64, trace)?,
+        other => bail!("unknown app {other:?}"),
+    };
+
+    println!("{}", report.label);
+    println!("  time        : {:.3} ms", report.time_secs * 1e3);
+    println!("  tasks/sec   : {:.2} ({})", report.tasks_per_sec, report::tasks_sci(report.tasks_per_sec));
+    println!("  GOPS        : {:.2}", report.gops);
+    println!("  GOPS/AIE    : {:.3} over {} cores", report.gops_per_aie, report.active_aie);
+    println!("  power       : {:.2} W", report.power_w);
+    println!("  GOPS/W      : {:.2}", report.gops_per_w);
+    println!("  TPS/W       : {:.2}", report.tasks_per_sec_per_w);
+    println!("  duty        : {:.3}", report.compute_duty);
+    println!("  DDR         : {:.2} GB/s (queue {:.1} us)",
+        report.ddr_gbps, report.sim.ddr_queue_secs * 1e6);
+    if trace {
+        let horizon = report.sim.trace.horizon_ps().min(HwParams::ps(1e-3));
+        println!("\n{}", report.sim.trace.render(100, 0, horizon.max(1)));
+    }
+    Ok(())
+}
+
+fn cmd_exec(args: &[String]) -> Result<()> {
+    let cli = Cli::new("ea4rca exec", "run real task data through PJRT")
+        .opt("app", "mm", "mm | filter2d | fft | mmt")
+        .opt("size", "256", "MM edge (multiple of 128) / FFT points")
+        .opt("seed", "7", "workload RNG seed")
+        .parse(args.to_vec().as_slice())
+        .map_err(anyhow::Error::msg)?;
+    let rt = Runtime::new()?;
+    let mut rng = Rng::new(cli.get_usize("seed") as u64);
+    match cli.get("app").as_str() {
+        "mm" => {
+            let n = cli.get_usize("size");
+            let a = rng.normal_vec(n * n);
+            let b = rng.normal_vec(n * n);
+            let t0 = std::time::Instant::now();
+            let c = mm::matmul_via_pus(&rt, &a, &b, n)?;
+            let dt = t0.elapsed().as_secs_f64();
+            let want = ea4rca::runtime::tensor::matmul_ref(&a, &b, n, n, n);
+            let err = c
+                .iter()
+                .zip(&want)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .fold(0.0, f64::max);
+            println!("mm {n}^3 via PJRT PUs: {:.3} s, max |err| vs oracle = {err:.2e}", dt);
+            println!("effective {:.2} GOPS on the CPU substrate", 2.0 * (n as f64).powi(3) / dt / 1e9);
+        }
+        "fft" => {
+            let n = cli.get_usize("size");
+            let re = rng.normal_vec(n);
+            let im = rng.normal_vec(n);
+            let (or_, oi) = fft::fft_via_pu(&rt, &re, &im)?;
+            let (wr, wi) = ea4rca::runtime::tensor::fft_ref(&re, &im);
+            let err = or_
+                .iter()
+                .zip(&wr)
+                .chain(oi.iter().zip(&wi))
+                .map(|(x, y)| (x - y).abs() as f64)
+                .fold(0.0, f64::max);
+            println!("fft {n}-pt via PJRT PU: max |err| vs oracle = {err:.2e}");
+        }
+        "filter2d" => {
+            let (h, w) = (128, 128);
+            let img: Vec<i32> = (0..(h + 4) * (w + 4))
+                .map(|_| rng.range_i64(-128, 127) as i32)
+                .collect();
+            let kern: Vec<i32> = (0..25).map(|_| rng.range_i64(-8, 8) as i32).collect();
+            let out = filter2d::filter_image_via_pus(&rt, &img, h, w, &kern)?;
+            let want = ea4rca::runtime::tensor::filter2d_ref(&img, h + 4, w + 4, &kern, 5);
+            let ok = out == want;
+            println!("filter2d {h}x{w} via PJRT PUs: exact match = {ok}");
+            if !ok {
+                bail!("filter2d numerics mismatch");
+            }
+        }
+        "mmt" => {
+            let a = rng.normal_vec(32 * 256);
+            let b = rng.normal_vec(256 * 32);
+            let c = mmt::chain_via_pu(&rt, &a, &b)?;
+            let want = ea4rca::runtime::tensor::matmul_ref(&a, &b, 32, 256, 32);
+            let err = c
+                .iter()
+                .zip(&want)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .fold(0.0, f64::max);
+            println!("mmt cascade8 via PJRT: max |err| vs oracle = {err:.2e}");
+        }
+        other => bail!("unknown app {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    use ea4rca::coordinator::server::{serve_batch, Server};
+    use ea4rca::workload::{generate_stream, Mix, TaskKind};
+    let cli = Cli::new("ea4rca serve", "leader/worker request serving over PJRT")
+        .opt("workers", "4", "worker thread count")
+        .opt("jobs", "256", "total jobs in the batch")
+        .opt("mix", "mm-heavy", "uniform | mm-heavy | mm | fft | filter2d | mmt")
+        .opt("seed", "1", "workload seed")
+        .parse(args.to_vec().as_slice())
+        .map_err(anyhow::Error::msg)?;
+    let mix = match cli.get("mix").as_str() {
+        "uniform" => Mix::uniform(),
+        "mm-heavy" => Mix::mm_heavy(),
+        "mm" => Mix::single(TaskKind::MmBlock),
+        "fft" => Mix::single(TaskKind::Fft1024),
+        "filter2d" => Mix::single(TaskKind::FilterBatch),
+        "mmt" => Mix::single(TaskKind::MmtChain),
+        other => bail!("unknown mix {other:?}"),
+    };
+    let n_jobs = cli.get_usize("jobs");
+    let mut server = Server::start(
+        cli.get_usize("workers"),
+        ea4rca::runtime::Manifest::default_dir(),
+        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
+    )?;
+    let jobs: Vec<(String, Vec<Tensor>)> =
+        generate_stream(&mix, n_jobs, cli.get_usize("seed") as u64)
+            .into_iter()
+            .map(|(k, i)| (k.artifact().to_string(), i))
+            .collect();
+    let t0 = std::time::Instant::now();
+    let (results, latency) = serve_batch(&mut server, jobs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let errors = results.iter().filter(|r| r.outputs.is_err()).count();
+    println!("served {n_jobs} jobs in {wall:.2} s -> {:.0} jobs/s ({errors} errors)", n_jobs as f64 / wall);
+    println!(
+        "latency ms: mean {:.2} | p50 {:.2} | p95 {:.2} | max {:.2}",
+        latency.mean * 1e3, latency.p50 * 1e3, latency.p95 * 1e3, latency.max * 1e3
+    );
+    let report = server.shutdown()?;
+    for w in &report.workers {
+        println!("  worker {}: {} jobs, {:.1} ms busy", w.worker, w.jobs, w.exec_secs * 1e3);
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &[String]) -> Result<()> {
+    let cli = Cli::new("ea4rca generate", "AIE Graph Code Generator")
+        .opt("config", "configs/mm.json", "graph configuration file")
+        .opt("out", "generated", "output directory")
+        .flag("print", "print graph.h to stdout instead of writing")
+        .parse(args.to_vec().as_slice())
+        .map_err(anyhow::Error::msg)?;
+    let cfg = PuConfig::from_file(std::path::Path::new(&cli.get("config")))?;
+    let proj = generator::generate(&cfg)?;
+    if cli.has("print") {
+        println!("{}", proj.graph_h);
+    } else {
+        let dir = std::path::PathBuf::from(cli.get("out"));
+        proj.write_to(&dir)?;
+        println!(
+            "generated {}/graph.h (+.cpp, Makefile): PU '{}', {} cores, {} PLIOs, {} copies",
+            dir.display(),
+            cfg.name,
+            cfg.pu.cores(),
+            cfg.pu.total_plios(),
+            cfg.copies
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    use ea4rca::report::{fft_row, fft_table, perf_row, perf_table};
+    let cli = Cli::new("ea4rca sweep", "regenerate a paper table")
+        .opt("table", "6", "paper table number: 6 | 7 | 8 | 9")
+        .parse(args.to_vec().as_slice())
+        .map_err(anyhow::Error::msg)?;
+    let p = HwParams::vck5000();
+    match cli.get("table").as_str() {
+        "6" => {
+            let mut t = perf_table("Table 6 — MM accelerator (Float)");
+            for size in [768usize, 1536, 3072, 6144] {
+                for pus in [6usize, 3, 1] {
+                    let r = ea4rca::apps::mm::run(&p, size, pus, false)?;
+                    perf_row(&mut t, &format!("{size}^3"), &pus.to_string(), &r, None);
+                }
+            }
+            t.print();
+        }
+        "7" => {
+            let mut t = perf_table("Table 7 — Filter2D accelerator (Int32, 5x5)");
+            for (h, w, l) in [(128usize, 128usize, "128x128"), (3480, 2160, "4K"),
+                              (7680, 4320, "8K"), (15360, 8640, "16K")] {
+                for pus in [44usize, 20, 4] {
+                    let r = filter2d::run(&p, h, w, pus, false)?;
+                    perf_row(&mut t, l, &pus.to_string(), &r, Some(pus * 8));
+                }
+            }
+            t.print();
+        }
+        "8" => {
+            let mut t = fft_table("Table 8 — FFT accelerator (CInt16)");
+            for n in [8192usize, 4096, 2048, 1024] {
+                for pus in [8usize, 4, 2] {
+                    let r = fft::run(&p, n, pus, 4096, false)?;
+                    fft_row(&mut t, n, &pus.to_string(), r.as_ref());
+                }
+            }
+            t.print();
+        }
+        "9" => {
+            let r = mmt::run(&p, 20_000, false)?;
+            println!(
+                "MM-T: {} tasks/s | {:.2} GOPS | {:.2} GOPS/AIE | {:.2} W | {:.2} GOPS/W",
+                report::tasks_sci(r.tasks_per_sec),
+                r.gops,
+                r.gops_per_aie,
+                r.power_w,
+                r.gops_per_w
+            );
+        }
+        other => bail!("unknown table {other:?} (use 6|7|8|9)"),
+    }
+    Ok(())
+}
+
+fn cmd_fuse(args: &[String]) -> Result<()> {
+    use ea4rca::codegen::repository;
+    let cli = Cli::new("ea4rca fuse", "Graph Fusion: combine stored graphs into one design")
+        .opt("configs", "configs/fft.json,configs/mm_small.json", "comma-separated config files")
+        .opt("out", "generated/fused", "output directory")
+        .parse(args.to_vec().as_slice())
+        .map_err(anyhow::Error::msg)?;
+    let p = HwParams::vck5000();
+    let configs: Vec<PuConfig> = cli
+        .get("configs")
+        .split(',')
+        .map(|f| PuConfig::from_file(std::path::Path::new(f.trim())))
+        .collect::<Result<_>>()?;
+    let fused = repository::fuse(&p, &configs)?;
+    let out = std::path::PathBuf::from(cli.get("out"));
+    fused.write_to(&out)?;
+    println!(
+        "fused {} PU types into {}/: {} AIE cores ({}%), {} PLIOs",
+        fused.parts.len(),
+        out.display(),
+        fused.total_aie,
+        fused.total_aie * 100 / p.total_aie,
+        fused.total_plio
+    );
+    Ok(())
+}
+
+fn cmd_resources() -> Result<()> {
+    let p = HwParams::vck5000();
+    let mut t = Table::new(
+        "Table 5 — hardware resource utilisation",
+        &["Apps", "LUT", "FF", "BRAM", "URAM", "DSP", "AIE", "DU", "PU"],
+    );
+    for (app, du, pu) in [("MM", 1, 6), ("Filter2D", 11, 44), ("FFT", 8, 8), ("MM-T", 50, 50)] {
+        let u = table5_usage(app);
+        let mut row = vec![app.to_string()];
+        row.extend(u.table5_row(&p));
+        row.push(du.to_string());
+        row.push(pu.to_string());
+        t.row(&row);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("ea4rca v{}", ea4rca::VERSION);
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifacts:");
+    for (name, meta) in &rt.manifest().artifacts {
+        let ins: Vec<String> = meta
+            .inputs
+            .iter()
+            .map(|t| format!("{}{:?}", t.dtype.tag(), t.shape))
+            .collect();
+        println!("  {name:<16} {} -> {} outputs", ins.join(", "), meta.outputs.len());
+    }
+    // smoke: run mm32 once
+    let mut rng = Rng::new(1);
+    let a = Tensor::f32(&[32, 32], rng.normal_vec(1024));
+    let b = Tensor::f32(&[32, 32], rng.normal_vec(1024));
+    let out = rt.execute("mm32", &[a, b])?;
+    println!("mm32 smoke: output shape {:?} OK", out[0].shape());
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Table-row formatting shared by the bench harnesses: turns
+//! [`RunReport`](crate::coordinator::RunReport)s into the paper's table
+//! rows (Tables 6-10) with consistent units.
+
+use crate::coordinator::controller::RunReport;
+use crate::util::table::{fmt_f, fmt_sci, Table};
+
+/// A Table 6/7-style performance table (GOPS-class apps).
+pub fn perf_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &["Problem Size", "PU Qty", "Time (ms)", "Tasks/sec", "GOPS", "GOPS/AIE",
+          "Power (W)", "GOPS/W"],
+    )
+}
+
+/// Append a report as a Table 6/7-style row.
+pub fn perf_row(t: &mut Table, problem: &str, pus: &str, r: &RunReport, aie_override: Option<usize>) {
+    let aie = aie_override.unwrap_or(r.active_aie);
+    let gops_per_aie = r.gops / aie.max(1) as f64;
+    t.row(&[
+        problem.to_string(),
+        pus.to_string(),
+        fmt_f(r.time_secs * 1e3, 2),
+        fmt_f(r.tasks_per_sec, 2),
+        fmt_f(r.gops, 2),
+        fmt_f(gops_per_aie, 3),
+        fmt_f(r.power_w, 2),
+        fmt_f(r.gops_per_w, 2),
+    ]);
+}
+
+/// A Table 8-style FFT table (TPS-class apps).
+pub fn fft_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &["Sample Size", "PU Qty", "Run Time (us)", "Tasks/sec", "Power (W)", "Tasks/sec/W"],
+    )
+}
+
+/// Append an FFT row; `run_time_us` is per-task aggregate (the paper's
+/// "Run Time" column = 1 / tasks_per_sec).
+pub fn fft_row(t: &mut Table, n: usize, pus: &str, r: Option<&RunReport>) {
+    match r {
+        Some(r) => {
+            t.row(&[
+                n.to_string(),
+                pus.to_string(),
+                fmt_f(1e6 / r.tasks_per_sec, 2),
+                fmt_f(r.tasks_per_sec, 2),
+                fmt_f(r.power_w, 2),
+                fmt_f(r.tasks_per_sec_per_w, 2),
+            ]);
+        }
+        None => {
+            t.row(&[
+                n.to_string(),
+                pus.to_string(),
+                "N/A".into(),
+                "N/A".into(),
+                "N/A".into(),
+                "N/A".into(),
+            ]);
+        }
+    }
+}
+
+/// Format a tasks/sec in the paper's 9.43x10^7 style.
+pub fn tasks_sci(tps: f64) -> String {
+    fmt_sci(tps)
+}
+
+/// Paper-vs-measured comparison row for EXPERIMENTS.md-style output.
+pub fn compare_line(metric: &str, paper: f64, measured: f64) -> String {
+    let ratio = measured / paper;
+    format!("{metric:<28} paper {paper:>12.2}  measured {measured:>12.2}  ratio {ratio:>5.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compare_line_format() {
+        let l = compare_line("GOPS", 3421.02, 3400.0);
+        assert!(l.contains("paper"));
+        assert!(l.contains("0.99x"));
+    }
+
+    #[test]
+    fn fft_na_row() {
+        let mut t = fft_table("t");
+        fft_row(&mut t, 8192, "2(25%)", None);
+        assert!(t.render().contains("N/A"));
+    }
+}

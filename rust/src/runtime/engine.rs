@@ -1,0 +1,173 @@
+//! PJRT execution engine: one CPU client, lazily-compiled executables
+//! cached per artifact name, literal marshalling, and execution stats.
+//!
+//! Compilation happens once per artifact per process (the paper's analogue
+//! is the `libadf.a` build); the serving hot path only marshals literals
+//! and calls `execute`.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::Tensor;
+
+/// Per-artifact execution statistics (hot-path observability).
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_exec_secs: f64,
+    pub compile_secs: f64,
+}
+
+/// The PJRT runtime. Thread-safe: executables are compiled under a lock
+/// and `execute` takes `&self`.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+impl Runtime {
+    /// Create a runtime over the default artifact directory.
+    pub fn new() -> Result<Runtime> {
+        Runtime::with_dir(Manifest::default_dir())
+    }
+
+    pub fn with_dir(dir: impl Into<std::path::PathBuf>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir.into())?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn executable(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        cache.insert(name.to_string(), exe);
+        self.stats
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .compile_secs += dt;
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (startup warm-up).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` on `inputs`, returning its outputs.
+    ///
+    /// Inputs are validated against the manifest (shape + dtype) before
+    /// touching PJRT, so shape bugs surface with readable errors instead
+    /// of XLA aborts. The lowered modules use `return_tuple=True`, so the
+    /// single result literal is a tuple unpacked per the manifest.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+                bail!(
+                    "artifact {name} input {i}: expected {:?}{:?}, got {:?}{:?}",
+                    m.dtype,
+                    m.shape,
+                    t.dtype(),
+                    t.shape()
+                );
+            }
+        }
+        self.executable(name)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact {name}"))?[0][0]
+            .to_literal_sync()?;
+        drop(cache);
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let s = stats.entry(name.to_string()).or_default();
+            s.executions += 1;
+            s.total_exec_secs += dt;
+        }
+
+        // return_tuple=True: decompose the tuple literal per manifest arity.
+        let parts = result
+            .to_tuple()
+            .with_context(|| format!("artifact {name}: expected tuple output"))?;
+        if parts.len() != meta.outputs.len() {
+            bail!(
+                "artifact {name}: manifest says {} outputs, tuple has {}",
+                meta.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&meta.outputs)
+            .map(|(lit, m)| Tensor::from_literal(lit, m.dtype, &m.shape))
+            .collect()
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Mean execution seconds for an artifact, if it has run.
+    pub fn mean_exec_secs(&self, name: &str) -> Option<f64> {
+        let stats = self.stats.lock().unwrap();
+        stats.get(name).and_then(|s| {
+            (s.executions > 0).then(|| s.total_exec_secs / s.executions as f64)
+        })
+    }
+}

@@ -1,0 +1,184 @@
+//! Artifact manifest parsing — `artifacts/manifest.json` is written by
+//! `python/compile/aot.py` and describes every HLO module the runtime can
+//! load: input/output shapes + dtypes keyed by artifact name.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::tensor::DType;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.elements() * self.dtype.byte_width()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn tensor_meta(j: &Json) -> Result<TensorMeta> {
+    let shape = j
+        .get("shape")
+        .and_then(Json::as_arr)
+        .context("tensor meta missing shape")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim must be a positive integer"))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::from_tag(
+        j.get("dtype")
+            .and_then(Json::as_str)
+            .context("tensor meta missing dtype")?,
+    )?;
+    Ok(TensorMeta { shape, dtype })
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        Manifest::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = Json::parse(text).context("manifest is not valid JSON")?;
+        let entries = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'artifacts' array")?;
+        let mut artifacts = BTreeMap::new();
+        for e in entries {
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .context("artifact missing name")?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(Json::as_str)
+                .context("artifact missing file")?
+                .to_string();
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing inputs")?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = e
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .context("artifact missing outputs")?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            if artifacts
+                .insert(name.clone(), ArtifactMeta { name: name.clone(), file, inputs, outputs })
+                .is_some()
+            {
+                bail!("duplicate artifact name {name:?}");
+            }
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts.get(name).with_context(|| {
+            format!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.artifacts.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Default artifact directory: $EA4RCA_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("EA4RCA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{"artifacts": [
+        {"name": "mm32", "file": "mm32.hlo.txt",
+         "inputs": [{"shape": [32, 32], "dtype": "f32"},
+                    {"shape": [32, 32], "dtype": "f32"}],
+         "outputs": [{"shape": [32, 32], "dtype": "f32"}]},
+        {"name": "filter2d_pu8", "file": "filter2d_pu8.hlo.txt",
+         "inputs": [{"shape": [8, 36, 36], "dtype": "i32"},
+                    {"shape": [5, 5], "dtype": "i32"}],
+         "outputs": [{"shape": [8, 32, 32], "dtype": "i32"}]}
+    ]}"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let mm = m.get("mm32").unwrap();
+        assert_eq!(mm.inputs.len(), 2);
+        assert_eq!(mm.inputs[0].shape, vec![32, 32]);
+        assert_eq!(mm.inputs[0].dtype, DType::F32);
+        assert_eq!(mm.outputs[0].byte_len(), 32 * 32 * 4);
+        let f = m.get("filter2d_pu8").unwrap();
+        assert_eq!(f.inputs[0].elements(), 8 * 36 * 36);
+        assert_eq!(f.inputs[0].dtype, DType::I32);
+        assert_eq!(m.hlo_path("mm32").unwrap(), PathBuf::from("/tmp/a/mm32.hlo.txt"));
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let dup = r#"{"artifacts": [
+            {"name": "a", "file": "a", "inputs": [], "outputs": []},
+            {"name": "a", "file": "b", "inputs": [], "outputs": []}
+        ]}"#;
+        assert!(Manifest::parse(dup, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype() {
+        let bad = r#"{"artifacts": [
+            {"name": "a", "file": "a",
+             "inputs": [{"shape": [1], "dtype": "f16"}], "outputs": []}
+        ]}"#;
+        assert!(Manifest::parse(bad, PathBuf::from(".")).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime — loads the AOT-compiled HLO artifacts and executes them on the
+//! PJRT CPU client. This is the only place the `xla` crate is touched; the
+//! rest of the coordinator sees [`Tensor`]s and artifact names.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Python is never on this path: `make artifacts` has already lowered the
+//! Layer-1/Layer-2 graphs to `artifacts/*.hlo.txt`.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::Runtime;
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+pub use tensor::{DType, Tensor};

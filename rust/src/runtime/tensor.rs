@@ -1,0 +1,286 @@
+//! Host-side tensors marshalled in and out of PJRT literals.
+//!
+//! Only the two dtypes the artifacts use exist (f32, i32) — keeping this
+//! enum closed lets every match be exhaustive.
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Result<DType> {
+        match tag {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype tag {other:?}"),
+        }
+    }
+
+    pub fn byte_width(&self) -> usize {
+        4
+    }
+}
+
+/// Dense host tensor: shape + flat data. Row-major, matching the HLO
+/// `{1,0}`-style default layouts the artifacts are lowered with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn zeros(dtype: DType, shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        match dtype {
+            DType::F32 => Tensor::f32(shape, vec![0.0; n]),
+            DType::I32 => Tensor::i32(shape, vec![0; n]),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::F32 { .. } => DType::F32,
+            Tensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.len() * self.dtype().byte_width()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    /// Read a literal back into a host tensor of known shape/dtype.
+    pub fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Tensor> {
+        let t = match dtype {
+            DType::F32 => Tensor::f32(shape, lit.to_vec::<f32>().context("literal->f32")?),
+            DType::I32 => Tensor::i32(shape, lit.to_vec::<i32>().context("literal->i32")?),
+        };
+        Ok(t)
+    }
+
+    /// Max |a-b| between two same-shaped f32 tensors (test helper).
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f64> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("length mismatch {} vs {}", a.len(), b.len());
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs() as f64)
+            .fold(0.0, f64::max))
+    }
+}
+
+/// Naive row-major matmul used as the rust-side oracle in tests and the
+/// end-to-end example (numpy is not available at runtime, by design).
+pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Rust-side valid-mode int32 filter oracle (mirrors python ref.py).
+pub fn filter2d_ref(x: &[i32], xh: usize, xw: usize, k: &[i32], taps: usize) -> Vec<i32> {
+    let oh = xh - (taps - 1);
+    let ow = xw - (taps - 1);
+    let mut out = vec![0i32; oh * ow];
+    for i in 0..oh {
+        for j in 0..ow {
+            let mut acc = 0i32;
+            for u in 0..taps {
+                for v in 0..taps {
+                    acc = acc.wrapping_add(
+                        x[(i + u) * xw + (j + v)].wrapping_mul(k[u * taps + v]),
+                    );
+                }
+            }
+            out[i * ow + j] = acc;
+        }
+    }
+    out
+}
+
+/// Rust-side complex FFT oracle (radix-2 recursive, f64 internally).
+pub fn fft_ref(re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let n = re.len();
+    assert!(n.is_power_of_two());
+    let mut buf: Vec<(f64, f64)> = re
+        .iter()
+        .zip(im)
+        .map(|(&r, &i)| (r as f64, i as f64))
+        .collect();
+    fft_rec(&mut buf);
+    (
+        buf.iter().map(|c| c.0 as f32).collect(),
+        buf.iter().map(|c| c.1 as f32).collect(),
+    )
+}
+
+fn fft_rec(x: &mut [(f64, f64)]) {
+    let n = x.len();
+    if n <= 1 {
+        return;
+    }
+    let mut even: Vec<(f64, f64)> = x.iter().step_by(2).copied().collect();
+    let mut odd: Vec<(f64, f64)> = x.iter().skip(1).step_by(2).copied().collect();
+    fft_rec(&mut even);
+    fft_rec(&mut odd);
+    for k in 0..n / 2 {
+        let ang = -2.0 * std::f64::consts::PI * k as f64 / n as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let (or_, oi) = odd[k];
+        let t = (wr * or_ - wi * oi, wr * oi + wi * or_);
+        x[k] = (even[k].0 + t.0, even[k].1 + t.1);
+        x[k + n / 2] = (even[k].0 - t.0, even[k].1 - t.1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_and_bytes() {
+        let t = Tensor::zeros(DType::F32, &[8, 4]);
+        assert_eq!(t.len(), 32);
+        assert_eq!(t.byte_len(), 128);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_rejects_bad_shape() {
+        Tensor::f32(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn dtype_tags_roundtrip() {
+        for d in [DType::F32, DType::I32] {
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+        }
+        assert!(DType::from_tag("f64").is_err());
+    }
+
+    #[test]
+    fn matmul_ref_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul_ref(&a, &eye, 2, 2, 2), a);
+        // [[1,2],[3,4]] @ ones = [[3,3],[7,7]]
+        let ones = vec![1.0; 4];
+        assert_eq!(matmul_ref(&a, &ones, 2, 2, 2), vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn filter2d_ref_delta() {
+        // 5x5 delta kernel picks the centred interior
+        let xw = 6;
+        let x: Vec<i32> = (0..36).collect();
+        let mut k = vec![0i32; 25];
+        k[12] = 1;
+        let out = filter2d_ref(&x, 6, xw, &k, 5);
+        assert_eq!(out, vec![x[2 * 6 + 2], x[2 * 6 + 3], x[3 * 6 + 2], x[3 * 6 + 3]]);
+    }
+
+    #[test]
+    fn fft_ref_impulse() {
+        let mut re = vec![0.0f32; 8];
+        re[0] = 1.0;
+        let im = vec![0.0f32; 8];
+        let (or_, oi) = fft_ref(&re, &im);
+        assert!(or_.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(oi.iter().all(|&v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn fft_ref_parseval() {
+        let re: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let im = vec![0.0f32; 16];
+        let (or_, oi) = fft_ref(&re, &im);
+        let et: f64 = re.iter().map(|&v| (v as f64).powi(2)).sum();
+        let ef: f64 = or_
+            .iter()
+            .zip(&oi)
+            .map(|(&r, &i)| (r as f64).powi(2) + (i as f64).powi(2))
+            .sum();
+        assert!((ef - et * 16.0).abs() < 1e-3 * ef.max(1.0));
+    }
+}

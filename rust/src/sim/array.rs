@@ -1,0 +1,169 @@
+//! The 8x50 AIE array and PU placement.
+//!
+//! Placement matters for two things in the model: (a) feasibility — a PU's
+//! cores must be a contiguous rectangle-ish region so cascade wires exist
+//! (cascade chains run along rows on the real silicon), and (b) the
+//! utilisation numbers of Table 5. The placer is a simple column-major
+//! first-fit over whole columns, which matches how the paper packs
+//! 64-core PUs (8 rows x 8 columns per PU, 6 PUs = 48 of 50 columns).
+
+use anyhow::{bail, Result};
+
+use super::params::HwParams;
+
+/// A placed rectangular region of cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Region {
+    pub col0: usize,
+    pub row0: usize,
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl Region {
+    pub fn cores(&self) -> usize {
+        self.cols * self.rows
+    }
+}
+
+/// The AIE array with an occupancy grid.
+#[derive(Debug, Clone)]
+pub struct AieArray {
+    pub cols: usize,
+    pub rows: usize,
+    occupied: Vec<bool>, // col-major
+}
+
+impl AieArray {
+    pub fn new(p: &HwParams) -> AieArray {
+        AieArray {
+            cols: p.array_cols,
+            rows: p.array_rows,
+            occupied: vec![false; p.array_cols * p.array_rows],
+        }
+    }
+
+    fn idx(&self, col: usize, row: usize) -> usize {
+        col * self.rows + row
+    }
+
+    fn region_free(&self, r: &Region) -> bool {
+        for c in r.col0..r.col0 + r.cols {
+            for w in r.row0..r.row0 + r.rows {
+                if self.occupied[self.idx(c, w)] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    fn mark(&mut self, r: &Region, val: bool) {
+        for c in r.col0..r.col0 + r.cols {
+            for w in r.row0..r.row0 + r.rows {
+                let i = self.idx(c, w);
+                self.occupied[i] = val;
+            }
+        }
+    }
+
+    /// Place `cores` as a full-height column block (first fit). The paper
+    /// packs PUs column-wise so cascade rows stay contiguous.
+    pub fn place(&mut self, cores: usize) -> Result<Region> {
+        if cores == 0 {
+            bail!("cannot place an empty PU");
+        }
+        // Prefer full-height column blocks; fall back to a partial column.
+        let full_cols = cores / self.rows;
+        let rem = cores % self.rows;
+        if full_cols > 0 && rem != 0 {
+            bail!(
+                "PU of {cores} cores does not tile the {}-row array; \
+                 pad the CC to a multiple of {} or use fewer cores",
+                self.rows,
+                self.rows
+            );
+        }
+        let (want_cols, want_rows) = if full_cols > 0 { (full_cols, self.rows) } else { (1, rem) };
+        for col0 in 0..=self.cols.saturating_sub(want_cols) {
+            for row0 in 0..=self.rows - want_rows {
+                let r = Region { col0, row0, cols: want_cols, rows: want_rows };
+                if self.region_free(&r) {
+                    self.mark(&r, true);
+                    return Ok(r);
+                }
+            }
+        }
+        bail!("no room for a {cores}-core PU (used {}/{})", self.used(), self.total());
+    }
+
+    pub fn free(&mut self, r: &Region) {
+        self.mark(r, false);
+    }
+
+    pub fn used(&self) -> usize {
+        self.occupied.iter().filter(|o| **o).count()
+    }
+
+    pub fn total(&self) -> usize {
+        self.cols * self.rows
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.used() as f64 / self.total() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_mm_pus_fit_like_the_paper() {
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        let mut regions = Vec::new();
+        for _ in 0..6 {
+            regions.push(arr.place(64).unwrap()); // 8x8 each
+        }
+        assert_eq!(arr.used(), 384);
+        assert!((arr.utilization() - 0.96).abs() < 1e-9);
+        // a seventh 64-core PU must not fit (only 2 columns left)
+        assert!(arr.place(64).is_err());
+        // but a small partial-column PU still does
+        assert!(arr.place(8).is_ok());
+        for r in &regions {
+            assert_eq!(r.cores(), 64);
+        }
+    }
+
+    #[test]
+    fn free_releases_space() {
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        let r = arr.place(400).unwrap();
+        assert_eq!(arr.used(), 400);
+        arr.free(&r);
+        assert_eq!(arr.used(), 0);
+        assert!(arr.place(64).is_ok());
+    }
+
+    #[test]
+    fn rejects_non_tiling_pu() {
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        assert!(arr.place(12).is_err()); // 12 = 1.5 columns of 8
+        assert!(arr.place(6).is_ok()); // partial single column is fine
+    }
+
+    #[test]
+    fn filter2d_fills_88_percent() {
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        for _ in 0..44 {
+            arr.place(8).unwrap(); // Parallel<8> = one column per PU
+        }
+        assert_eq!(arr.used(), 352);
+        assert!((arr.utilization() - 0.88).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,121 @@
+//! Communication timing: stream vs DMA core transfers, and PLIO links.
+//!
+//! The three AIE-side transfer disciplines are exactly the paper's
+//! Table 2 methods; [`TransferMethod::secs`] reproduces that table (see
+//! `params.rs` for the calibration) and `benches/table2_methods.rs`
+//! regenerates it.
+
+use super::params::HwParams;
+
+/// How data moves between a core and its neighbourhood.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransferMethod {
+    /// Stream, interleaved with computation in `grain_bytes` grains —
+    /// every grain interrupts the compute pipeline (Table 2 method 1).
+    StreamInterleaved { grain_bytes: usize },
+    /// Stream, aggregated: all data moved while compute is off
+    /// (Table 2 method 2).
+    StreamAggregated,
+    /// DMA, aggregated: bulk DMA while the core is off
+    /// (Table 2 method 3; the EA4RCA communication phase).
+    DmaAggregated,
+}
+
+impl TransferMethod {
+    /// Pure transfer seconds for `bytes` (excludes the compute it crosses).
+    pub fn secs(&self, p: &HwParams, bytes: usize) -> f64 {
+        match self {
+            TransferMethod::StreamInterleaved { grain_bytes } => {
+                let grains = (bytes as f64 / *grain_bytes as f64).ceil();
+                bytes as f64 / p.stream_bytes_per_sec
+                    + grains * p.stream_interrupt_stall_cycles / p.aie_clock_hz
+            }
+            TransferMethod::StreamAggregated => bytes as f64 / p.stream_bytes_per_sec,
+            TransferMethod::DmaAggregated => {
+                bytes as f64 / p.dma_bytes_per_sec + p.dma_setup_secs
+            }
+        }
+    }
+}
+
+/// A dedicated point-to-point PLIO link (PL <-> AIE edge port).
+/// Each link is sequential: transfers queue FIFO.
+#[derive(Debug, Clone)]
+pub struct PlioLink {
+    pub bytes_per_sec: f64,
+    busy_until_ps: u64,
+    pub total_bytes: u64,
+}
+
+impl PlioLink {
+    pub fn new(p: &HwParams) -> PlioLink {
+        PlioLink {
+            bytes_per_sec: p.plio_bytes_per_sec(),
+            busy_until_ps: 0,
+            total_bytes: 0,
+        }
+    }
+
+    /// Enqueue a transfer of `bytes` at `now_ps`; returns completion time.
+    pub fn transfer(&mut self, now_ps: u64, bytes: usize) -> u64 {
+        let start = now_ps.max(self.busy_until_ps);
+        let dur = HwParams::ps(bytes as f64 / self.bytes_per_sec);
+        self.busy_until_ps = start + dur;
+        self.total_bytes += bytes as u64;
+        self.busy_until_ps
+    }
+
+    /// Time to move `bytes` over `ports` parallel links, ignoring queueing
+    /// (used for phase-length estimates).
+    pub fn parallel_secs(p: &HwParams, bytes: usize, ports: usize) -> f64 {
+        assert!(ports > 0);
+        (bytes as f64 / ports as f64) / p.plio_bytes_per_sec()
+    }
+
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until_ps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_ordering() {
+        let p = HwParams::vck5000();
+        let bytes = 12288;
+        let m1 = TransferMethod::StreamInterleaved { grain_bytes: 64 }.secs(&p, bytes);
+        let m2 = TransferMethod::StreamAggregated.secs(&p, bytes);
+        let m3 = TransferMethod::DmaAggregated.secs(&p, bytes);
+        assert!(m1 > m2 && m2 > m3, "{m1} {m2} {m3}");
+    }
+
+    #[test]
+    fn plio_link_fifo_queues() {
+        let p = HwParams::vck5000();
+        let mut link = PlioLink::new(&p);
+        let t1 = link.transfer(0, 4800); // 1 us at 4.8 GB/s
+        let t2 = link.transfer(0, 4800); // queued behind the first
+        assert_eq!(t1, HwParams::ps(1e-6));
+        assert_eq!(t2, HwParams::ps(2e-6));
+        assert_eq!(link.total_bytes, 9600);
+    }
+
+    #[test]
+    fn plio_idle_gap_not_charged() {
+        let p = HwParams::vck5000();
+        let mut link = PlioLink::new(&p);
+        link.transfer(0, 4800);
+        let t = link.transfer(HwParams::ps(10e-6), 4800);
+        assert_eq!(t, HwParams::ps(11e-6));
+    }
+
+    #[test]
+    fn parallel_ports_divide_time() {
+        let p = HwParams::vck5000();
+        let one = PlioLink::parallel_secs(&p, 16384, 1);
+        let four = PlioLink::parallel_secs(&p, 16384, 4);
+        assert!((one / four - 4.0).abs() < 1e-9);
+    }
+}

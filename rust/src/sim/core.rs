@@ -1,0 +1,129 @@
+//! Single-AIE-core compute timing: how long one core takes to run one
+//! kernel invocation of a given arithmetic shape.
+//!
+//! The model is `cycles = ops / ops_per_cycle(dtype) + setup`, where the
+//! per-dtype sustained rates and the invocation setup are calibrated in
+//! [`params`](super::params). "Ideal" mode (the AIE simulator the paper's
+//! Table 2 uses) drops the setup term.
+
+use super::params::HwParams;
+
+/// The arithmetic class of a kernel, which selects the per-cycle rate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelClass {
+    /// float MAC kernels (MM, MM-T)
+    F32Mac,
+    /// int32 MAC kernels (Filter2D)
+    I32Mac,
+    /// cint16 butterfly kernels (FFT)
+    Cint16Butterfly,
+}
+
+impl KernelClass {
+    pub fn ops_per_cycle(&self, p: &HwParams) -> f64 {
+        match self {
+            KernelClass::F32Mac => p.f32_ops_per_cycle,
+            KernelClass::I32Mac => p.i32_ops_per_cycle,
+            KernelClass::Cint16Butterfly => p.cint16_ops_per_cycle,
+        }
+    }
+
+    /// Element width in bytes as moved over the data path. cint16 = 4
+    /// (2 x int16); the paper's Filter2D transports 8-bit pixels
+    /// (int32 arithmetic, int8 I/O — see EXPERIMENTS.md notes).
+    pub fn io_bytes_per_elem(&self) -> usize {
+        match self {
+            KernelClass::F32Mac => 4,
+            KernelClass::I32Mac => 1,
+            KernelClass::Cint16Butterfly => 4,
+        }
+    }
+}
+
+/// One kernel invocation on one core.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelInvocation {
+    pub class: KernelClass,
+    /// Arithmetic operations in this invocation (mul and add counted
+    /// separately, matching the paper's GOPS accounting).
+    pub ops: f64,
+}
+
+impl KernelInvocation {
+    pub fn new(class: KernelClass, ops: f64) -> Self {
+        KernelInvocation { class, ops }
+    }
+
+    /// Compute cycles on one core, including the invocation setup.
+    pub fn cycles(&self, p: &HwParams) -> f64 {
+        self.ops / self.class.ops_per_cycle(p) + p.kernel_setup_cycles
+    }
+
+    /// Compute cycles in the paper's "ideal simulation state" (Table 2):
+    /// no invocation overhead, peak issue rate.
+    pub fn cycles_ideal(&self, p: &HwParams) -> f64 {
+        self.ops / self.class.ops_per_cycle(p)
+    }
+
+    pub fn secs(&self, p: &HwParams) -> f64 {
+        self.cycles(p) / p.aie_clock_hz
+    }
+
+    pub fn secs_ideal(&self, p: &HwParams) -> f64 {
+        self.cycles_ideal(p) / p.aie_clock_hz
+    }
+}
+
+/// Ops for an M x K x N matrix multiply (2 ops per MAC).
+pub fn mm_ops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// Ops for a `taps x taps` filter over `pixels` output pixels.
+pub fn filter_ops(pixels: usize, taps: usize) -> f64 {
+    2.0 * (taps * taps) as f64 * pixels as f64
+}
+
+/// Ops for an N-point radix-2 FFT: N/2*log2(N) butterflies, 10 real ops
+/// each (4 mul + 6 add for the complex MAC + combine).
+pub fn fft_ops(n: usize) -> f64 {
+    let stages = (n as f64).log2();
+    10.0 * (n as f64 / 2.0) * stages
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm32_task_time_matches_mmt() {
+        let p = HwParams::vck5000();
+        let inv = KernelInvocation::new(KernelClass::F32Mac, mm_ops(32, 32, 32));
+        // Table 9 implies 4.2414 us/task sustained.
+        assert!((inv.secs(&p) * 1e6 - 4.241).abs() < 0.01, "{}", inv.secs(&p) * 1e6);
+    }
+
+    #[test]
+    fn ideal_is_faster() {
+        let p = HwParams::vck5000();
+        let inv = KernelInvocation::new(KernelClass::F32Mac, mm_ops(32, 32, 32));
+        assert!(inv.secs_ideal(&p) < inv.secs(&p));
+        // ideal 32^3 = 3.08 us (Table 2 anchor)
+        assert!((inv.secs_ideal(&p) * 1e6 - 3.08).abs() < 0.01);
+    }
+
+    #[test]
+    fn op_counts() {
+        assert_eq!(mm_ops(32, 32, 32), 65536.0);
+        assert_eq!(filter_ops(1024, 5), 51200.0);
+        assert_eq!(fft_ops(1024), 10.0 * 512.0 * 10.0);
+    }
+
+    #[test]
+    fn int_kernels_slower_than_float() {
+        let p = HwParams::vck5000();
+        let f = KernelInvocation::new(KernelClass::F32Mac, 1e6).secs(&p);
+        let i = KernelInvocation::new(KernelClass::I32Mac, 1e6).secs(&p);
+        assert!(i > f);
+    }
+}

@@ -1,0 +1,130 @@
+//! The shared DDR controller: a FIFO burst server.
+//!
+//! All DUs' AMC transfers contend here. Each transfer runs at
+//! `peak * mode_efficiency` once started; requests queue in arrival
+//! order (one memory controller). Queueing is what degrades multi-DU
+//! configurations at small task scales (Tables 6/7's PU-count columns).
+
+use super::params::HwParams;
+
+/// AMC access modes (paper §3.4, Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AmcMode {
+    /// Complete Sequence Burst: address-ordered, max efficiency.
+    Csb,
+    /// Jump Burst: bursts from scattered start addresses.
+    Jub,
+    /// Unordered: single-element access, no bursts.
+    Unod,
+}
+
+impl AmcMode {
+    pub fn efficiency(&self, p: &HwParams) -> f64 {
+        match self {
+            AmcMode::Csb => p.ddr_eff_csb,
+            AmcMode::Jub => p.ddr_eff_jub,
+            AmcMode::Unod => p.ddr_eff_unod,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AmcMode::Csb => "CSB",
+            AmcMode::Jub => "JUB",
+            AmcMode::Unod => "UNOD",
+        }
+    }
+}
+
+/// The DDR controller. Time unit: picoseconds.
+#[derive(Debug, Clone)]
+pub struct Ddr {
+    peak_bytes_per_sec: f64,
+    setup_ps: u64,
+    busy_until_ps: u64,
+    pub total_bytes: u64,
+    pub total_requests: u64,
+    /// Total picoseconds requests spent waiting in queue (contention).
+    pub total_queue_ps: u64,
+}
+
+impl Ddr {
+    pub fn new(p: &HwParams) -> Ddr {
+        Ddr {
+            peak_bytes_per_sec: p.ddr_peak_bytes_per_sec,
+            setup_ps: HwParams::ps(p.ddr_setup_secs),
+            busy_until_ps: 0,
+            total_bytes: 0,
+            total_requests: 0,
+            total_queue_ps: 0,
+        }
+    }
+
+    /// Enqueue a transfer of `bytes` in `mode` at `now_ps`.
+    /// Returns (start_ps, done_ps).
+    pub fn transfer(&mut self, now_ps: u64, bytes: usize, mode: AmcMode, p: &HwParams) -> (u64, u64) {
+        let start = now_ps.max(self.busy_until_ps);
+        self.total_queue_ps += start - now_ps;
+        let rate = self.peak_bytes_per_sec * mode.efficiency(p);
+        let dur = self.setup_ps + HwParams::ps(bytes as f64 / rate);
+        self.busy_until_ps = start + dur;
+        self.total_bytes += bytes as u64;
+        self.total_requests += 1;
+        (start, self.busy_until_ps)
+    }
+
+    pub fn busy_until(&self) -> u64 {
+        self.busy_until_ps
+    }
+
+    /// Achieved bandwidth over a window (for the power model).
+    pub fn achieved_gbps(&self, window_secs: f64) -> f64 {
+        if window_secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_bytes as f64 / window_secs / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_efficiency_ordering() {
+        let p = HwParams::vck5000();
+        assert!(AmcMode::Csb.efficiency(&p) > AmcMode::Jub.efficiency(&p));
+        assert!(AmcMode::Jub.efficiency(&p) > AmcMode::Unod.efficiency(&p));
+    }
+
+    #[test]
+    fn transfers_queue_fifo() {
+        let p = HwParams::vck5000();
+        let mut ddr = Ddr::new(&p);
+        let (s1, d1) = ddr.transfer(0, 92_160, AmcMode::Csb, &p); // 1 us at 92.16 GB/s
+        let (s2, d2) = ddr.transfer(0, 92_160, AmcMode::Csb, &p);
+        assert_eq!(s1, 0);
+        assert_eq!(s2, d1);
+        assert!(d2 > d1);
+        assert!(ddr.total_queue_ps > 0);
+        assert_eq!(ddr.total_requests, 2);
+    }
+
+    #[test]
+    fn unod_is_much_slower() {
+        let p = HwParams::vck5000();
+        let mut a = Ddr::new(&p);
+        let mut b = Ddr::new(&p);
+        let (_, csb) = a.transfer(0, 1 << 20, AmcMode::Csb, &p);
+        let (_, unod) = b.transfer(0, 1 << 20, AmcMode::Unod, &p);
+        assert!(unod as f64 / csb as f64 > 8.0);
+    }
+
+    #[test]
+    fn achieved_bandwidth_accounting() {
+        let p = HwParams::vck5000();
+        let mut ddr = Ddr::new(&p);
+        ddr.transfer(0, 1_000_000_000, AmcMode::Csb, &p);
+        assert!((ddr.achieved_gbps(1.0) - 1.0).abs() < 1e-9);
+    }
+}

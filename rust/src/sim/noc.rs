@@ -1,0 +1,178 @@
+//! The AIE-array stream-switch network (NoC) model.
+//!
+//! Versal's AIE array routes inter-core streams through per-tile stream
+//! switches (§1's "flexible and convenient high-speed network of chips").
+//! The model is XY dimension-ordered routing over the 8x50 tile grid:
+//! each hop adds latency, and each switch-to-switch link has finite
+//! bandwidth shared by the circuits crossing it. The EA4RCA framework
+//! minimises inter-PU traffic (paper §3.3: "data channels between PUs
+//! are only open during the communication phase ... minimise inter-PU
+//! communication"), and this module is what quantifies the cost when a
+//! deployment *does* need it — plus the placement-distance accounting
+//! behind `benches/ablate_placement.rs`.
+
+use super::array::Region;
+use super::params::HwParams;
+
+/// A tile coordinate in the AIE array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tile {
+    pub col: usize,
+    pub row: usize,
+}
+
+/// Per-hop latency in AIE cycles (a registered stream switch stage).
+pub const CYCLES_PER_HOP: f64 = 1.0;
+
+/// XY (column-then-row) dimension-ordered route between two tiles.
+/// Returns the sequence of tiles traversed, excluding the source.
+pub fn route(from: Tile, to: Tile) -> Vec<Tile> {
+    let mut path = Vec::new();
+    let mut cur = from;
+    while cur.col != to.col {
+        cur.col = if to.col > cur.col { cur.col + 1 } else { cur.col - 1 };
+        path.push(cur);
+    }
+    while cur.row != to.row {
+        cur.row = if to.row > cur.row { cur.row + 1 } else { cur.row - 1 };
+        path.push(cur);
+    }
+    path
+}
+
+/// Manhattan hop count between two tiles.
+pub fn hops(from: Tile, to: Tile) -> usize {
+    from.col.abs_diff(to.col) + from.row.abs_diff(to.row)
+}
+
+/// Centre tile of a placed region (the PU's representative coordinate).
+pub fn region_centre(r: &Region) -> Tile {
+    Tile { col: r.col0 + r.cols / 2, row: r.row0 + r.rows / 2 }
+}
+
+/// A reserved stream circuit between two tiles.
+#[derive(Debug, Clone)]
+pub struct Circuit {
+    pub from: Tile,
+    pub to: Tile,
+    pub hops: usize,
+}
+
+/// The NoC: tracks per-link circuit loads for contention accounting.
+#[derive(Debug)]
+pub struct Noc {
+    cols: usize,
+    rows: usize,
+    /// circuits crossing each tile's switch (col-major)
+    load: Vec<u32>,
+    pub circuits: Vec<Circuit>,
+}
+
+impl Noc {
+    pub fn new(p: &HwParams) -> Noc {
+        Noc {
+            cols: p.array_cols,
+            rows: p.array_rows,
+            load: vec![0; p.array_cols * p.array_rows],
+            circuits: Vec::new(),
+        }
+    }
+
+    fn idx(&self, t: Tile) -> usize {
+        t.col * self.rows + t.row
+    }
+
+    /// Reserve a circuit; every switch along the XY route gains load.
+    pub fn connect(&mut self, from: Tile, to: Tile) -> Circuit {
+        assert!(from.col < self.cols && from.row < self.rows, "from out of array");
+        assert!(to.col < self.cols && to.row < self.rows, "to out of array");
+        for t in route(from, to) {
+            let i = self.idx(t);
+            self.load[i] += 1;
+        }
+        let c = Circuit { from, to, hops: hops(from, to) };
+        self.circuits.push(c.clone());
+        c
+    }
+
+    /// Max circuits sharing any one switch (the contention hot spot).
+    pub fn max_switch_load(&self) -> u32 {
+        self.load.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Transfer seconds for `bytes` over a circuit: hop latency plus the
+    /// wire time derated by the hottest switch it crosses (circuits
+    /// time-share a switch's stream ports).
+    pub fn transfer_secs(&self, p: &HwParams, c: &Circuit, bytes: usize) -> f64 {
+        let latency = c.hops as f64 * CYCLES_PER_HOP / p.aie_clock_hz;
+        let share = route(c.from, c.to)
+            .iter()
+            .map(|t| self.load[self.idx(*t)])
+            .max()
+            .unwrap_or(1)
+            .max(1) as f64;
+        latency + bytes as f64 * share / p.stream_bytes_per_sec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xy_route_shape() {
+        let path = route(Tile { col: 0, row: 0 }, Tile { col: 3, row: 2 });
+        assert_eq!(path.len(), 5);
+        assert_eq!(path.last(), Some(&Tile { col: 3, row: 2 }));
+        // column-first: first three steps move along columns
+        assert!(path[..3].iter().all(|t| t.row == 0));
+    }
+
+    #[test]
+    fn hops_is_manhattan() {
+        assert_eq!(hops(Tile { col: 1, row: 1 }, Tile { col: 4, row: 7 }), 9);
+        assert_eq!(hops(Tile { col: 2, row: 3 }, Tile { col: 2, row: 3 }), 0);
+    }
+
+    #[test]
+    fn contention_raises_transfer_time() {
+        let p = HwParams::vck5000();
+        let mut noc = Noc::new(&p);
+        let a = Tile { col: 0, row: 0 };
+        let b = Tile { col: 10, row: 0 };
+        let c1 = noc.connect(a, b);
+        let solo = noc.transfer_secs(&p, &c1, 4096);
+        // five more circuits over the same switches
+        for _ in 0..5 {
+            noc.connect(a, b);
+        }
+        let contended = noc.transfer_secs(&p, &c1, 4096);
+        assert!(contended > solo * 4.0, "{solo} vs {contended}");
+        assert_eq!(noc.max_switch_load(), 6);
+    }
+
+    #[test]
+    fn disjoint_circuits_do_not_interact() {
+        let p = HwParams::vck5000();
+        let mut noc = Noc::new(&p);
+        let c1 = noc.connect(Tile { col: 0, row: 0 }, Tile { col: 5, row: 0 });
+        let before = noc.transfer_secs(&p, &c1, 4096);
+        noc.connect(Tile { col: 20, row: 3 }, Tile { col: 30, row: 3 });
+        let after = noc.transfer_secs(&p, &c1, 4096);
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn region_centres() {
+        let r = Region { col0: 8, row0: 0, cols: 8, rows: 8 };
+        assert_eq!(region_centre(&r), Tile { col: 12, row: 4 });
+    }
+
+    #[test]
+    #[should_panic(expected = "out of array")]
+    fn rejects_out_of_array() {
+        let p = HwParams::vck5000();
+        let mut noc = Noc::new(&p);
+        noc.connect(Tile { col: 0, row: 0 }, Tile { col: 99, row: 0 });
+    }
+}

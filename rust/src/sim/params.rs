@@ -1,0 +1,253 @@
+//! Calibrated VCK5000 hardware constants.
+//!
+//! Every free constant of the simulator lives here, fixed from the paper's
+//! own measurements (DESIGN.md §6) and *held constant across all
+//! experiments* — no per-table fitting. Times are carried in picoseconds
+//! (u64) so the event loop is exactly deterministic.
+//!
+//! Calibration anchors (all from the paper):
+//!
+//! * **Table 2** (32^3 MM, single core, ideal simulation; 65 536 FLOP,
+//!   12 288 B of operand+result traffic):
+//!     - ideal compute = 65 536 / (16 ops/cyc * 1.33 GHz) = 3.080 µs
+//!     - method 3 (DMA+agg)    = 3.080 + 12 288 B / 42.56 GB/s + 0.12 µs
+//!                             = 3.49 µs  ✓  -> pins `dma_*`
+//!     - method 2 (stream+agg) = 3.080 + 12 288 B / 2.222 GB/s
+//!                             = 8.61 µs  ✓  -> pins `stream_bytes_per_sec`
+//!       (effective leaf bandwidth through the stream-switch fabric)
+//!     - method 1 (stream interleaved, 16-float grains) = method 2 +
+//!       192 interrupts * 155.5 cyc = 31.06 µs ✓ -> pins
+//!       `stream_interrupt_stall_cycles`
+//! * **Table 9** (MM-T): 6181.56 GOPS on 400 cores = 15.45 GOPS/core
+//!   sustained. Peak is 16 ops/cyc; the gap is the per-invocation
+//!   overhead: 65 536/15.45e9 s = (4096 + 1545) cycles
+//!   -> `kernel_setup_cycles` = 1545.
+//! * **Table 6 power column**: power rises ~6.84 W per 64-core MM PU and
+//!   MM-T (400 cores, higher duty) draws 65.6 W -> utilisation-scaled
+//!   per-core power (see `power.rs` for the model equations).
+
+/// Picoseconds per second.
+pub const PS_PER_SEC: f64 = 1e12;
+
+#[derive(Debug, Clone)]
+pub struct HwParams {
+    // ---- clocks ----
+    /// AIE array clock (Hz).
+    pub aie_clock_hz: f64,
+    /// PL fabric clock (Hz).
+    pub pl_clock_hz: f64,
+
+    // ---- array geometry ----
+    /// AIE array columns (VCK5000: 50).
+    pub array_cols: usize,
+    /// AIE array rows (VCK5000: 8).
+    pub array_rows: usize,
+
+    // ---- per-core compute ----
+    /// Peak float ops/cycle (8 MACs * 2 ops on the 1024-bit SIMD unit).
+    pub f32_ops_per_cycle: f64,
+    /// Sustained int32 ops/cycle for MAC-style kernels (Filter2D) —
+    /// int32 multiply is narrow on AIE1.
+    pub i32_ops_per_cycle: f64,
+    /// Sustained cint16 butterfly ops/cycle (complex MACs decomposed).
+    pub cint16_ops_per_cycle: f64,
+    /// Per-kernel-invocation overhead (lock acquire, loop prologue, DMA
+    /// descriptor handling) in AIE cycles. Calibrated from Table 9.
+    pub kernel_setup_cycles: f64,
+
+    // ---- per-core memory ----
+    /// Data memory per AIE core (bytes). VCK5000 AIE1: 32 KiB.
+    pub core_mem_bytes: usize,
+
+    // ---- communication ----
+    /// Effective per-leaf stream bandwidth through the switch fabric
+    /// (bytes/s). Calibrated from Table 2 method 2.
+    pub stream_bytes_per_sec: f64,
+    /// Per-core DMA rate once running (bytes/s): 32 B/cycle.
+    pub dma_bytes_per_sec: f64,
+    /// Fixed DMA transfer setup time (seconds). From Table 2 method 3.
+    pub dma_setup_secs: f64,
+    /// Pipeline stall per stream interruption when communication crosses
+    /// computation (Table 2 method 1), in AIE cycles per grain.
+    pub stream_interrupt_stall_cycles: f64,
+    /// PLIO port width (bits per PL cycle). 128 per §3.4.
+    pub plio_bits_per_cycle: f64,
+
+    // ---- DDR ----
+    /// Peak DDR bandwidth (bytes/s). VCK5000: 102.4 GB/s.
+    pub ddr_peak_bytes_per_sec: f64,
+    /// AMC-mode efficiency factors (fraction of peak).
+    pub ddr_eff_csb: f64,
+    pub ddr_eff_jub: f64,
+    pub ddr_eff_unod: f64,
+    /// Fixed DDR request setup (seconds) charged per AMC transfer.
+    pub ddr_setup_secs: f64,
+
+    // ---- controller ----
+    /// PS-side task dispatch + pipeline fill/drain overhead charged once
+    /// per user task (seconds). Dominates tiny workloads (the paper's
+    /// 128x128 Filter2D rows, where TPS saturates ~6.4k/s).
+    pub dispatch_secs: f64,
+
+    // ---- PL resources (VCK5000 totals used for Table 5 percentages) ----
+    pub total_lut: usize,
+    pub total_ff: usize,
+    pub total_bram: usize,
+    pub total_uram: usize,
+    pub total_dsp: usize,
+    pub total_aie: usize,
+    pub total_plio: usize,
+
+    // ---- power model (PDM substitute; equations in power.rs) ----
+    /// Card static power (W).
+    pub power_static_w: f64,
+    /// Power of one AIE core at 100% float duty (W).
+    pub power_per_aie_w: f64,
+    /// Datapath-width scale on per-core power for int32 work.
+    pub power_int32_scale: f64,
+    /// Datapath-width scale for cint16 butterfly work.
+    pub power_cint16_scale: f64,
+    /// PL power per kLUT configured (W).
+    pub power_per_klut_w: f64,
+    /// PL power per BRAM (W).
+    pub power_per_bram_w: f64,
+    /// PL power per URAM (W).
+    pub power_per_uram_w: f64,
+    /// PL power per DSP (W).
+    pub power_per_dsp_w: f64,
+    /// Power per active PLIO port (W).
+    pub power_per_plio_w: f64,
+    /// DDR I/O power per GB/s of achieved bandwidth (W).
+    pub power_per_gbps_w: f64,
+}
+
+impl Default for HwParams {
+    fn default() -> Self {
+        HwParams::vck5000()
+    }
+}
+
+impl HwParams {
+    /// The calibrated VCK5000 model used by every experiment.
+    pub fn vck5000() -> HwParams {
+        HwParams {
+            aie_clock_hz: 1.33e9,
+            pl_clock_hz: 300e6,
+            array_cols: 50,
+            array_rows: 8,
+            f32_ops_per_cycle: 16.0,
+            i32_ops_per_cycle: 3.0,
+            cint16_ops_per_cycle: 48.0,
+            kernel_setup_cycles: 1545.0,
+            core_mem_bytes: 32 * 1024,
+            stream_bytes_per_sec: 2.222e9,
+            dma_bytes_per_sec: 32.0 * 1.33e9, // 42.56 GB/s
+            dma_setup_secs: 0.12e-6,
+            stream_interrupt_stall_cycles: 155.5,
+            plio_bits_per_cycle: 128.0,
+            ddr_peak_bytes_per_sec: 102.4e9,
+            ddr_eff_csb: 0.90,
+            ddr_eff_jub: 0.62,
+            ddr_eff_unod: 0.08,
+            ddr_setup_secs: 0.12e-6,
+            dispatch_secs: 120e-6,
+            total_lut: 899_840,
+            total_ff: 1_799_680,
+            total_bram: 967,
+            total_uram: 463,
+            total_dsp: 1_968,
+            total_aie: 400,
+            total_plio: 156,
+            power_static_w: 0.9,
+            power_per_aie_w: 0.202,
+            power_int32_scale: 0.35,
+            power_cint16_scale: 1.4,
+            power_per_klut_w: 0.02,
+            power_per_bram_w: 0.002,
+            power_per_uram_w: 0.003,
+            power_per_dsp_w: 0.01,
+            power_per_plio_w: 0.12,
+            power_per_gbps_w: 0.03,
+        }
+    }
+
+    /// AIE cycle time in seconds.
+    pub fn aie_cycle_secs(&self) -> f64 {
+        1.0 / self.aie_clock_hz
+    }
+
+    /// PLIO port bandwidth in bytes/s (128 b/PL-cycle at 300 MHz = 4.8 GB/s).
+    pub fn plio_bytes_per_sec(&self) -> f64 {
+        self.plio_bits_per_cycle / 8.0 * self.pl_clock_hz
+    }
+
+    /// Peak float GOPS of one core.
+    pub fn peak_f32_gops_per_core(&self) -> f64 {
+        self.f32_ops_per_cycle * self.aie_clock_hz / 1e9
+    }
+
+    /// Convert seconds to integer picoseconds (the sim's time unit).
+    pub fn ps(secs: f64) -> u64 {
+        (secs * PS_PER_SEC).round() as u64
+    }
+
+    /// Convert picoseconds back to seconds.
+    pub fn secs(ps: u64) -> f64 {
+        ps as f64 / PS_PER_SEC
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plio_rate_matches_spec() {
+        let p = HwParams::vck5000();
+        // 128 bit / PL cycle at 300 MHz = 4.8 GB/s
+        assert!((p.plio_bytes_per_sec() - 4.8e9).abs() < 1e6);
+    }
+
+    #[test]
+    fn mmt_sustained_rate_matches_table9() {
+        let p = HwParams::vck5000();
+        // one 32^3 task: 4096 compute cycles + setup
+        let task_cycles = 65536.0 / p.f32_ops_per_cycle + p.kernel_setup_cycles;
+        let task_secs = task_cycles / p.aie_clock_hz;
+        let gops_per_core = 65536.0 / task_secs / 1e9;
+        // Table 9: 6181.56 GOPS / 400 cores = 15.45 GOPS/core.
+        assert!((gops_per_core - 15.45).abs() < 0.02, "{gops_per_core}");
+    }
+
+    #[test]
+    fn table2_methods_reproduce() {
+        let p = HwParams::vck5000();
+        let compute = 65536.0 / p.f32_ops_per_cycle / p.aie_clock_hz;
+        let bytes = 12288.0;
+        let m3 = compute + bytes / p.dma_bytes_per_sec + p.dma_setup_secs;
+        let m2 = compute + bytes / p.stream_bytes_per_sec;
+        let grains = bytes / 64.0; // 16 floats per grain
+        let m1 = m2 + grains * p.stream_interrupt_stall_cycles / p.aie_clock_hz;
+        assert!((m3 * 1e6 - 3.49).abs() < 0.02, "m3={}", m3 * 1e6);
+        assert!((m2 * 1e6 - 8.61).abs() < 0.02, "m2={}", m2 * 1e6);
+        assert!((m1 * 1e6 - 31.06).abs() < 0.10, "m1={}", m1 * 1e6);
+    }
+
+    #[test]
+    fn array_has_400_cores() {
+        let p = HwParams::vck5000();
+        assert_eq!(p.array_cols * p.array_rows, p.total_aie);
+    }
+
+    #[test]
+    fn ps_roundtrip() {
+        let s = 3.49e-6;
+        assert!((HwParams::secs(HwParams::ps(s)) - s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dma_faster_than_stream() {
+        let p = HwParams::vck5000();
+        assert!(p.dma_bytes_per_sec > 8.0 * p.stream_bytes_per_sec);
+    }
+}

@@ -1,0 +1,160 @@
+//! Analytic power model — the Power Design Manager substitute.
+//!
+//! Model (constants in [`params`](super::params), fit jointly to the
+//! paper's Table 6 power column and MM-T's 65.61 W — DESIGN.md §6):
+//!
+//! ```text
+//! P = static
+//!   + sum_cores( per_aie * duty * dtype_scale )
+//!   + kLUT*w_lut + BRAM*w_bram + URAM*w_uram + DSP*w_dsp
+//!   + active_plio * w_plio
+//!   + achieved_DDR_GBps * w_ddr
+//! ```
+//!
+//! `duty` is the fraction of wall-clock the cores spend computing —
+//! this is what makes MM-T (no communication phases, duty ~0.73) draw
+//! far more than the MM accelerator (duty ~0.42) on more cores.
+
+use super::core::KernelClass;
+use super::memory::ResourceUsage;
+use super::params::HwParams;
+
+/// Inputs to one power estimate.
+#[derive(Debug, Clone)]
+pub struct PowerBreakdownInput {
+    pub usage: ResourceUsage,
+    /// Number of AIE cores actively clocking (<= usage.aie: configs with
+    /// fewer active PUs than deployed leave cores idle).
+    pub active_aie: usize,
+    /// Fraction of wall-clock the active cores spend computing (0..=1).
+    pub compute_duty: f64,
+    /// Arithmetic class of the active kernels (datapath width scaling).
+    pub class: KernelClass,
+    /// Achieved DDR bandwidth in GB/s.
+    pub ddr_gbps: f64,
+    /// PLIO ports actually carrying traffic.
+    pub active_plio: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct PowerBreakdown {
+    pub static_w: f64,
+    pub aie_w: f64,
+    pub pl_w: f64,
+    pub plio_w: f64,
+    pub ddr_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.static_w + self.aie_w + self.pl_w + self.plio_w + self.ddr_w
+    }
+}
+
+pub fn estimate(p: &HwParams, input: &PowerBreakdownInput) -> PowerBreakdown {
+    let dtype_scale = match input.class {
+        KernelClass::F32Mac => 1.0,
+        KernelClass::I32Mac => p.power_int32_scale,
+        KernelClass::Cint16Butterfly => p.power_cint16_scale,
+    };
+    let duty = input.compute_duty.clamp(0.0, 1.0);
+    let aie_w = input.active_aie as f64 * p.power_per_aie_w * duty * dtype_scale;
+    let pl_w = input.usage.lut as f64 / 1000.0 * p.power_per_klut_w
+        + input.usage.bram as f64 * p.power_per_bram_w
+        + input.usage.uram as f64 * p.power_per_uram_w
+        + input.usage.dsp as f64 * p.power_per_dsp_w;
+    let plio_w = input.active_plio as f64 * p.power_per_plio_w;
+    let ddr_w = input.ddr_gbps * p.power_per_gbps_w;
+    PowerBreakdown { static_w: p.power_static_w, aie_w, pl_w, plio_w, ddr_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm_usage() -> ResourceUsage {
+        ResourceUsage { lut: 11403, ff: 105609, bram: 778, uram: 315, dsp: 0, aie: 384, plio: 72 }
+    }
+
+    #[test]
+    fn mmt_power_near_paper() {
+        // Table 9: 65.61 W average at 400 cores, duty ~15.45/21.28 = 0.726,
+        // 100 PLIOs (50 Cascade<8> chains, 1 in + 1 out each).
+        let p = HwParams::vck5000();
+        let est = estimate(
+            &p,
+            &PowerBreakdownInput {
+                usage: ResourceUsage { lut: 61039, ff: 96791, bram: 34, uram: 0, dsp: 0, aie: 400, plio: 100 },
+                active_aie: 400,
+                compute_duty: 15.45 / 21.28,
+                class: KernelClass::F32Mac,
+                ddr_gbps: 0.0,
+                active_plio: 100,
+            },
+        );
+        let total = est.total();
+        assert!((total - 65.61).abs() / 65.61 < 0.15, "MM-T power {total}");
+    }
+
+    #[test]
+    fn mm_power_scales_with_pus() {
+        let p = HwParams::vck5000();
+        let mk = |pus: usize| {
+            estimate(
+                &p,
+                &PowerBreakdownInput {
+                    usage: mm_usage(),
+                    active_aie: 64 * pus,
+                    compute_duty: 8.9 / 21.28,
+                    class: KernelClass::F32Mac,
+                    ddr_gbps: 1.0,
+                    active_plio: 12 * pus,
+                },
+            )
+            .total()
+        };
+        let (p1, p3, p6) = (mk(1), mk(3), mk(6));
+        assert!(p1 < p3 && p3 < p6);
+        // slope per PU roughly constant (paper: ~6.8 W / PU)
+        let s1 = (p3 - p1) / 2.0;
+        let s2 = (p6 - p3) / 3.0;
+        assert!((s1 - s2).abs() < 0.2, "{s1} {s2}");
+        assert!((s1 - 6.8).abs() < 1.5, "slope {s1}");
+    }
+
+    #[test]
+    fn duty_dominates() {
+        let p = HwParams::vck5000();
+        let base = PowerBreakdownInput {
+            usage: mm_usage(),
+            active_aie: 384,
+            compute_duty: 0.4,
+            class: KernelClass::F32Mac,
+            ddr_gbps: 0.0,
+            active_plio: 72,
+        };
+        let low = estimate(&p, &base).total();
+        let high = estimate(&p, &PowerBreakdownInput { compute_duty: 0.8, ..base }).total();
+        assert!(high > low + 20.0);
+    }
+
+    #[test]
+    fn int32_draws_less_than_float() {
+        let p = HwParams::vck5000();
+        let mk = |class| {
+            estimate(
+                &p,
+                &PowerBreakdownInput {
+                    usage: ResourceUsage { aie: 100, ..Default::default() },
+                    active_aie: 100,
+                    compute_duty: 1.0,
+                    class,
+                    ddr_gbps: 0.0,
+                    active_plio: 0,
+                },
+            )
+            .total()
+        };
+        assert!(mk(KernelClass::I32Mac) < mk(KernelClass::F32Mac));
+    }
+}

@@ -1,0 +1,219 @@
+//! Event timeline capture + ASCII rendering.
+//!
+//! Every simulated run can record phase spans per lane (a lane is a DU or
+//! a PU); the renderer draws the Figure 2 style pipeline diagram (compute
+//! and communication phases alternating and overlapping across DU-PU
+//! pairs) and the Figure 5 SSC service timings.
+
+use std::collections::BTreeMap;
+
+use super::params::HwParams;
+
+/// What a lane is doing during a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// PU computing (AIE enable on).
+    Compute,
+    /// DU <-> PU communication (PLIO traffic).
+    Comm,
+    /// DU fetching a task block from DDR.
+    Fetch,
+    /// DU task processing (decompose/aggregate).
+    Process,
+    /// waiting on a dependency (stall).
+    Stall,
+}
+
+impl Phase {
+    pub fn glyph(&self) -> char {
+        match self {
+            Phase::Compute => '#',
+            Phase::Comm => '=',
+            Phase::Fetch => 'F',
+            Phase::Process => 'p',
+            Phase::Stall => '.',
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Comm => "comm",
+            Phase::Fetch => "fetch",
+            Phase::Process => "process",
+            Phase::Stall => "stall",
+        }
+    }
+}
+
+/// One recorded span on one lane.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub lane: String,
+    pub phase: Phase,
+    pub start_ps: u64,
+    pub end_ps: u64,
+}
+
+/// The trace sink. Recording can be disabled (len-0 overhead in the hot
+/// path of large sweeps).
+#[derive(Debug, Default, Clone)]
+pub struct Trace {
+    pub enabled: bool,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    pub fn new(enabled: bool) -> Trace {
+        Trace { enabled, spans: Vec::new() }
+    }
+
+    pub fn record(&mut self, lane: &str, phase: Phase, start_ps: u64, end_ps: u64) {
+        if !self.enabled || end_ps <= start_ps {
+            return;
+        }
+        self.spans.push(Span { lane: lane.to_string(), phase, start_ps, end_ps });
+    }
+
+    /// Total busy picoseconds per (lane, phase) — duty-cycle accounting.
+    pub fn busy_ps(&self) -> BTreeMap<(String, &'static str), u64> {
+        let mut m = BTreeMap::new();
+        for s in &self.spans {
+            *m.entry((s.lane.clone(), s.phase.name())).or_insert(0) += s.end_ps - s.start_ps;
+        }
+        m
+    }
+
+    /// Fraction of `[0, horizon]` a lane spends in `phase`.
+    pub fn duty(&self, lane: &str, phase: Phase, horizon_ps: u64) -> f64 {
+        if horizon_ps == 0 {
+            return 0.0;
+        }
+        let busy: u64 = self
+            .spans
+            .iter()
+            .filter(|s| s.lane == lane && s.phase == phase)
+            .map(|s| s.end_ps.min(horizon_ps).saturating_sub(s.start_ps.min(horizon_ps)))
+            .sum();
+        busy as f64 / horizon_ps as f64
+    }
+
+    /// Mean compute duty across all PU lanes (power-model input).
+    pub fn mean_pu_compute_duty(&self, horizon_ps: u64) -> f64 {
+        let lanes: Vec<String> = {
+            let mut v: Vec<String> = self
+                .spans
+                .iter()
+                .filter(|s| s.lane.starts_with("PU"))
+                .map(|s| s.lane.clone())
+                .collect();
+            v.sort();
+            v.dedup();
+            v
+        };
+        if lanes.is_empty() {
+            return 0.0;
+        }
+        lanes.iter().map(|l| self.duty(l, Phase::Compute, horizon_ps)).sum::<f64>()
+            / lanes.len() as f64
+    }
+
+    /// ASCII timeline: one row per lane, `width` character columns over
+    /// `[t0, t1]`. This is the Figure 2 / Figure 5 renderer.
+    pub fn render(&self, width: usize, t0_ps: u64, t1_ps: u64) -> String {
+        assert!(t1_ps > t0_ps);
+        let mut lanes: Vec<String> = self.spans.iter().map(|s| s.lane.clone()).collect();
+        lanes.sort();
+        lanes.dedup();
+        let lane_w = lanes.iter().map(|l| l.len()).max().unwrap_or(4).max(4);
+        let span_ps = (t1_ps - t0_ps) as f64;
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:w$} |{}|\n",
+            "lane",
+            format!(
+                " {:.2} us .. {:.2} us ({} cols)",
+                HwParams::secs(t0_ps) * 1e6,
+                HwParams::secs(t1_ps) * 1e6,
+                width
+            ),
+            w = lane_w
+        ));
+        for lane in &lanes {
+            let mut row = vec![' '; width];
+            for s in self.spans.iter().filter(|s| &s.lane == lane) {
+                if s.end_ps <= t0_ps || s.start_ps >= t1_ps {
+                    continue;
+                }
+                let a = ((s.start_ps.max(t0_ps) - t0_ps) as f64 / span_ps * width as f64) as usize;
+                let b = (((s.end_ps.min(t1_ps) - t0_ps) as f64 / span_ps * width as f64).ceil())
+                    as usize;
+                for c in row.iter_mut().take(b.min(width)).skip(a) {
+                    *c = s.phase.glyph();
+                }
+            }
+            out.push_str(&format!(
+                "{:w$} |{}|\n",
+                lane,
+                row.iter().collect::<String>(),
+                w = lane_w
+            ));
+        }
+        out.push_str("legend: #=compute ===comm F=ddr-fetch p=process .=stall\n");
+        out
+    }
+
+    pub fn horizon_ps(&self) -> u64 {
+        self.spans.iter().map(|s| s.end_ps).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_records_nothing() {
+        let mut t = Trace::new(false);
+        t.record("PU0", Phase::Compute, 0, 100);
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn duty_accounting() {
+        let mut t = Trace::new(true);
+        t.record("PU0", Phase::Compute, 0, 600);
+        t.record("PU0", Phase::Comm, 600, 1000);
+        assert!((t.duty("PU0", Phase::Compute, 1000) - 0.6).abs() < 1e-12);
+        assert!((t.duty("PU0", Phase::Comm, 1000) - 0.4).abs() < 1e-12);
+        assert!((t.mean_pu_compute_duty(1000) - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn render_contains_lanes_and_glyphs() {
+        let mut t = Trace::new(true);
+        t.record("DU0", Phase::Fetch, 0, 500);
+        t.record("PU0", Phase::Compute, 500, 1000);
+        let s = t.render(40, 0, 1000);
+        assert!(s.contains("DU0"));
+        assert!(s.contains("PU0"));
+        assert!(s.contains('F'));
+        assert!(s.contains('#'));
+    }
+
+    #[test]
+    fn zero_length_spans_dropped() {
+        let mut t = Trace::new(true);
+        t.record("PU0", Phase::Compute, 5, 5);
+        assert!(t.spans.is_empty());
+    }
+
+    #[test]
+    fn busy_map() {
+        let mut t = Trace::new(true);
+        t.record("DU0", Phase::Fetch, 0, 10);
+        t.record("DU0", Phase::Fetch, 20, 40);
+        let m = t.busy_ps();
+        assert_eq!(m[&("DU0".to_string(), "fetch")], 30);
+    }
+}

@@ -1,0 +1,205 @@
+//! Tiny command-line parser (stand-in for `clap`, not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options up front so `--help` is generated.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct Cli {
+    pub program: String,
+    pub about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Cli {
+        Cli {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: true, default: Some(default) });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let val = if spec.takes_value {
+                format!(" <value>{}", spec.default.map(|d| format!(" [default: {d}]")).unwrap_or_default())
+            } else {
+                String::new()
+            };
+            s.push_str(&format!("  --{}{}\n      {}\n", spec.name, val, spec.help));
+        }
+        s.push_str("  --help\n      print this help\n");
+        s
+    }
+
+    /// Parse an argv slice (without the program name). Returns an error
+    /// string on unknown or malformed options; the caller decides whether
+    /// to print usage and exit.
+    pub fn parse(mut self, args: &[String]) -> Result<Cli, String> {
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(stripped) = arg.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .clone();
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} needs a value"))?
+                        }
+                    };
+                    self.values.insert(name, val);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} takes no value"));
+                    }
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse the real process args; print help/error and exit on failure.
+    pub fn parse_env(self) -> Cli {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&args) {
+            Ok(cli) => cli,
+            Err(msg) => {
+                eprintln!("{msg}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    pub fn get(&self, name: &str) -> String {
+        if let Some(v) = self.values.get(name) {
+            return v.clone();
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name && s.takes_value)
+            .and_then(|s| s.default)
+            .unwrap_or_else(|| panic!("option --{name} not declared"))
+            .to_string()
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_and_flags() {
+        let cli = Cli::new("t", "test")
+            .opt("size", "768", "problem size")
+            .flag("verbose", "chatty")
+            .parse(&argv(&["--size", "1536", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(cli.get_usize("size"), 1536);
+        assert!(cli.has("verbose"));
+        assert_eq!(cli.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let cli = Cli::new("t", "")
+            .opt("mode", "a", "")
+            .parse(&argv(&["--mode=b"]))
+            .unwrap();
+        assert_eq!(cli.get("mode"), "b");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cli = Cli::new("t", "").opt("size", "42", "").parse(&[]).unwrap();
+        assert_eq!(cli.get_usize("size"), 42);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let err = Cli::new("t", "").parse(&argv(&["--nope"])).unwrap_err();
+        assert!(err.contains("unknown option"));
+    }
+
+    #[test]
+    fn help_returns_usage() {
+        let err = Cli::new("prog", "about text")
+            .opt("x", "1", "the x")
+            .parse(&argv(&["--help"]))
+            .unwrap_err();
+        assert!(err.contains("prog — about text"));
+        assert!(err.contains("--x"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let err = Cli::new("t", "")
+            .opt("k", "", "")
+            .parse(&argv(&["--k"]))
+            .unwrap_err();
+        assert!(err.contains("needs a value"));
+    }
+}

@@ -1,0 +1,18 @@
+//! Utility substrates built in-tree because the offline vendor set only
+//! contains the `xla` crate closure (DESIGN.md §1 substitution table):
+//!
+//! * [`json`]  — a small recursive-descent JSON parser + writer (replaces
+//!   `serde_json`) used for the artifact manifest and graph configs.
+//! * [`rng`]   — deterministic xorshift/splitmix PRNG (replaces `rand`).
+//! * [`prop`]  — a property-testing mini-framework with generators and
+//!   failure-case shrinking (replaces `proptest`).
+//! * [`table`] — aligned ASCII table printer for the bench harnesses.
+//! * [`stats`] — mean/stddev/percentile helpers for measurements.
+//! * [`cli`]   — tiny flag/option parser (replaces `clap`).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

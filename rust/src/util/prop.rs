@@ -1,0 +1,159 @@
+//! In-tree property-testing mini-framework (stand-in for `proptest`,
+//! which is not in the offline vendor set — DESIGN.md §1).
+//!
+//! A property takes a deterministic [`Rng`] and either passes or returns a
+//! failure description. The runner executes `cases` seeds; on failure it
+//! *shrinks* by replaying with reduced size hints and reports the smallest
+//! failing seed/size pair, so failures are reproducible from the printed
+//! seed.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries do not inherit the xla rpath)
+//! use ea4rca::util::prop::{check, Config};
+//! check(Config::default().cases(16), "add commutes", |rng, size| {
+//!     let a = rng.range_i64(-(size as i64) - 1, size as i64);
+//!     let b = rng.range_i64(-(size as i64) - 1, size as i64);
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, seed: 0xEA4C_A000, max_size: 64 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+}
+
+/// Result of a property over one case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `prop` over `config.cases` deterministic cases. The `size`
+/// parameter grows from 1 to `max_size` across cases so early failures
+/// are small. Panics with a reproduction line on failure.
+pub fn check<F>(config: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> CaseResult,
+{
+    for case in 0..config.cases {
+        let size = 1 + case * config.max_size / config.cases.max(1);
+        let case_seed = config.seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: retry the same seed at smaller sizes; keep the
+            // smallest size that still fails.
+            let mut smallest = (size, msg.clone());
+            let mut lo = 1;
+            let mut hi = size;
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, mid) {
+                    Err(m) => {
+                        smallest = (mid, m);
+                        hi = mid;
+                    }
+                    Ok(()) => lo = mid + 1,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 shrunk size {}): {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+/// Approximate float comparison for property bodies.
+pub fn close(a: f64, b: f64, tol: f64) -> CaseResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(Config::default().cases(25), "trivial", |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_name() {
+        check(Config::default().cases(5), "always fails", |_, _| {
+            Err("nope".into())
+        });
+    }
+
+    #[test]
+    fn shrinks_to_smallest_failing_size() {
+        // Property fails for size >= 10; the panic must report size 10.
+        let result = std::panic::catch_unwind(|| {
+            check(
+                Config::default().cases(50).max_size(64),
+                "size-threshold",
+                |_, size| ensure(size < 10, || format!("size {size}")),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk size 10"), "got: {msg}");
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut max_seen = 0;
+        check(Config::default().cases(64).max_size(32), "size sweep", |_, s| {
+            max_seen = max_seen.max(s);
+            Ok(())
+        });
+        assert!(max_seen >= 30, "max size seen {max_seen}");
+    }
+
+    #[test]
+    fn close_accepts_and_rejects() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1.0, 2.0, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Synthetic workload generation: deterministic task streams for the
+//! serving layer and the sweep benches. The paper evaluates fixed-size
+//! batch workloads; real deployments see mixed streams — this module
+//! generates both, seeded and reproducible.
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+/// The task kinds the serving layer accepts (one per accelerator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TaskKind {
+    /// 128^3 MM block (artifact `mm_pu128`).
+    MmBlock,
+    /// 8-tile Filter2D batch (artifact `filter2d_pu8`).
+    FilterBatch,
+    /// 1024-point FFT (artifact `fft1024`).
+    Fft1024,
+    /// MM-T chain (artifact `mmt_cascade8`).
+    MmtChain,
+}
+
+impl TaskKind {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            TaskKind::MmBlock => "mm_pu128",
+            TaskKind::FilterBatch => "filter2d_pu8",
+            TaskKind::Fft1024 => "fft1024",
+            TaskKind::MmtChain => "mmt_cascade8",
+        }
+    }
+
+    /// Generate one task's input tensors.
+    pub fn gen_inputs(&self, rng: &mut Rng) -> Vec<Tensor> {
+        match self {
+            TaskKind::MmBlock => vec![
+                Tensor::f32(&[128, 128], rng.normal_vec(128 * 128)),
+                Tensor::f32(&[128, 128], rng.normal_vec(128 * 128)),
+            ],
+            TaskKind::FilterBatch => vec![
+                Tensor::i32(&[8, 36, 36], rng.int_vec_i32(8 * 36 * 36, -128, 127)),
+                Tensor::i32(&[5, 5], rng.int_vec_i32(25, -8, 8)),
+            ],
+            TaskKind::Fft1024 => vec![
+                Tensor::f32(&[1024], rng.normal_vec(1024)),
+                Tensor::f32(&[1024], rng.normal_vec(1024)),
+            ],
+            TaskKind::MmtChain => vec![
+                Tensor::f32(&[32, 256], rng.normal_vec(32 * 256)),
+                Tensor::f32(&[256, 32], rng.normal_vec(256 * 32)),
+            ],
+        }
+    }
+
+    pub fn all() -> [TaskKind; 4] {
+        [TaskKind::MmBlock, TaskKind::FilterBatch, TaskKind::Fft1024, TaskKind::MmtChain]
+    }
+}
+
+/// A task-stream specification: kinds with relative weights.
+#[derive(Debug, Clone)]
+pub struct Mix {
+    pub entries: Vec<(TaskKind, f64)>,
+}
+
+impl Mix {
+    pub fn uniform() -> Mix {
+        Mix { entries: TaskKind::all().iter().map(|k| (*k, 1.0)).collect() }
+    }
+
+    pub fn single(kind: TaskKind) -> Mix {
+        Mix { entries: vec![(kind, 1.0)] }
+    }
+
+    /// An MM-heavy serving mix (the paper's operator-service scenario).
+    pub fn mm_heavy() -> Mix {
+        Mix {
+            entries: vec![
+                (TaskKind::MmBlock, 6.0),
+                (TaskKind::Fft1024, 2.0),
+                (TaskKind::FilterBatch, 2.0),
+            ],
+        }
+    }
+
+    fn pick(&self, rng: &mut Rng) -> TaskKind {
+        let total: f64 = self.entries.iter().map(|(_, w)| w).sum();
+        let mut x = rng.f64() * total;
+        for (k, w) in &self.entries {
+            if x < *w {
+                return *k;
+            }
+            x -= w;
+        }
+        self.entries.last().expect("non-empty mix").0
+    }
+}
+
+/// Generate a deterministic stream of `n` tasks from a mix.
+pub fn generate_stream(mix: &Mix, n: usize, seed: u64) -> Vec<(TaskKind, Vec<Tensor>)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let kind = mix.pick(&mut rng);
+            let inputs = kind.gen_inputs(&mut rng);
+            (kind, inputs)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_is_deterministic() {
+        let a = generate_stream(&Mix::uniform(), 16, 7);
+        let b = generate_stream(&Mix::uniform(), 16, 7);
+        assert_eq!(a.len(), 16);
+        for ((ka, ta), (kb, tb)) in a.iter().zip(&b) {
+            assert_eq!(ka, kb);
+            assert_eq!(ta.len(), tb.len());
+            assert_eq!(ta[0], tb[0]);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = generate_stream(&Mix::single(TaskKind::Fft1024), 4, 1);
+        let b = generate_stream(&Mix::single(TaskKind::Fft1024), 4, 2);
+        assert_ne!(a[0].1[0], b[0].1[0]);
+    }
+
+    #[test]
+    fn mix_respects_single() {
+        let s = generate_stream(&Mix::single(TaskKind::MmBlock), 32, 3);
+        assert!(s.iter().all(|(k, _)| *k == TaskKind::MmBlock));
+    }
+
+    #[test]
+    fn input_shapes_match_artifacts() {
+        let mut rng = Rng::new(1);
+        for kind in TaskKind::all() {
+            let inputs = kind.gen_inputs(&mut rng);
+            assert!(!inputs.is_empty(), "{kind:?}");
+            assert!(!inputs[0].is_empty());
+        }
+    }
+
+    #[test]
+    fn weighted_mix_skews() {
+        let mix = Mix::mm_heavy();
+        let s = generate_stream(&mix, 400, 11);
+        let mm = s.iter().filter(|(k, _)| *k == TaskKind::MmBlock).count();
+        assert!(mm > 180, "mm count {mm} of 400");
+    }
+}

@@ -1,0 +1,181 @@
+//! Cross-module integration tests: the four accelerators on the full
+//! framework stack (engine components -> scheduler -> controller ->
+//! power), checking the paper's qualitative table shapes end to end.
+
+use ea4rca::apps::{fft, filter2d, mm, mmt};
+use ea4rca::baselines;
+use ea4rca::codegen::config::PuConfig;
+use ea4rca::codegen::generator;
+use ea4rca::sim::params::HwParams;
+
+fn p() -> HwParams {
+    HwParams::vck5000()
+}
+
+// ---------------------------------------------------------------------
+// Table 6 shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn table6_gops_scales_with_pus_at_large_size() {
+    let p = p();
+    let g6 = mm::run(&p, 3072, 6, false).unwrap().gops;
+    let g3 = mm::run(&p, 3072, 3, false).unwrap().gops;
+    let g1 = mm::run(&p, 3072, 1, false).unwrap().gops;
+    assert!(g6 > g3 * 1.7 && g3 > g1 * 1.7, "{g6} {g3} {g1}");
+}
+
+#[test]
+fn table6_similar_gops_across_large_sizes() {
+    // "Because the selected task scale is large ... similar GOPS can be
+    // obtained under different task scales."
+    let p = p();
+    let a = mm::run(&p, 3072, 6, false).unwrap().gops;
+    let b = mm::run(&p, 6144, 6, false).unwrap().gops;
+    assert!((a - b).abs() / b < 0.05, "{a} vs {b}");
+}
+
+#[test]
+fn table6_single_core_efficiency_rises_with_scale() {
+    let p = p();
+    let small = mm::run(&p, 768, 6, false).unwrap().gops_per_aie;
+    let large = mm::run(&p, 6144, 6, false).unwrap().gops_per_aie;
+    assert!(large > small * 1.3, "{small} -> {large}");
+}
+
+// ---------------------------------------------------------------------
+// Table 7 shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn table7_tiny_frame_tps_insensitive_to_pus() {
+    let p = p();
+    let t44 = filter2d::run(&p, 128, 128, 44, false).unwrap().tasks_per_sec;
+    let t4 = filter2d::run(&p, 128, 128, 4, false).unwrap().tasks_per_sec;
+    assert!((t44 - t4).abs() / t4 < 0.25, "{t44} vs {t4}");
+    // and both land near the paper's ~6.2-6.5k tasks/s
+    assert!(t4 > 4000.0 && t4 < 9000.0, "{t4}");
+}
+
+#[test]
+fn table7_gops_grows_with_resolution() {
+    let p = p();
+    let g4k = filter2d::run(&p, 3480, 2160, 44, false).unwrap().gops;
+    let g8k = filter2d::run(&p, 7680, 4320, 44, false).unwrap().gops;
+    let g16k = filter2d::run(&p, 15360, 8640, 44, false).unwrap().gops;
+    assert!(g8k > g4k && g16k > g8k, "{g4k} {g8k} {g16k}");
+}
+
+// ---------------------------------------------------------------------
+// Table 8 shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn table8_feasibility_grid() {
+    let p = p();
+    for (n, pus, feasible) in [
+        (8192, 2, false),
+        (8192, 4, true),
+        (8192, 8, true),
+        (4096, 2, true),
+        (1024, 2, true),
+    ] {
+        let got = fft::run(&p, n, pus, 64, false).unwrap().is_some();
+        assert_eq!(got, feasible, "{n}-pt {pus}PU");
+    }
+}
+
+#[test]
+fn table8_tps_scales_inversely_with_n() {
+    let p = p();
+    let mut prev = f64::INFINITY;
+    for n in [1024, 2048, 4096, 8192] {
+        let tps = fft::run(&p, n, 8, 2048, false).unwrap().unwrap().tasks_per_sec;
+        assert!(tps < prev, "n={n}");
+        prev = tps;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Table 9 / Table 10 relations
+// ---------------------------------------------------------------------
+
+#[test]
+fn mmt_outperforms_mm_per_core() {
+    // MM-T (no data engine) must beat the MM accelerator per core:
+    // paper 15.45 vs 8.90 GOPS/AIE.
+    let p = p();
+    let mmt_r = mmt::run(&p, 5_000, false).unwrap();
+    let mm_r = mm::run(&p, 6144, 6, false).unwrap();
+    let ratio = mmt_r.gops_per_aie / mm_r.gops_per_aie;
+    assert!(ratio > 1.5 && ratio < 2.2, "ratio {ratio}");
+}
+
+#[test]
+fn table10_ea4rca_wins() {
+    let p = p();
+    // MM vs CHARM
+    let mm_r = mm::run(&p, 6144, 6, false).unwrap();
+    assert!(mm_r.gops / 3270.0 > 0.9);
+    assert!(mm_r.gops_per_w / 62.40 > 1.0);
+    // Filter2D vs CCC2023 (>10x wins)
+    let f = filter2d::run(&p, 3480, 2160, 44, false).unwrap();
+    assert!(f.gops / 39.22 > 10.0);
+    // FFT vs CCC2023
+    let r = fft::run(&p, 4096, 8, 2048, false).unwrap().unwrap();
+    assert!(r.tasks_per_sec / 135_685.21 > 2.0);
+    // simulated baseline models agree with the published numbers
+    assert!((baselines::charm::simulated_gops(&p) - 3270.0).abs() / 3270.0 < 0.2);
+}
+
+// ---------------------------------------------------------------------
+// Codegen -> framework coherence
+// ---------------------------------------------------------------------
+
+#[test]
+fn config_files_match_app_designs() {
+    for (file, cores, plios) in
+        [("configs/mm.json", 64, 12), ("configs/filter2d.json", 8, 2),
+         ("configs/fft.json", 10, 2), ("configs/mmt.json", 8, 2)]
+    {
+        let cfg = PuConfig::from_file(std::path::Path::new(file)).unwrap();
+        assert_eq!(cfg.pu.cores(), cores, "{file}");
+        assert_eq!(cfg.pu.total_plios(), plios, "{file}");
+        // and every config generates a valid project
+        let proj = generator::generate(&cfg).unwrap();
+        assert!(proj.graph_h.contains(&format!("class {}_pu", cfg.name)));
+    }
+}
+
+#[test]
+fn config_mm_pu_timing_equals_app_pu_timing() {
+    // the config-file PU and the hand-built app PU are the same design
+    let p = p();
+    let cfg = PuConfig::from_file(std::path::Path::new("configs/mm.json")).unwrap();
+    let app_pu = mm::mm_pu();
+    assert!((cfg.pu.compute_secs(&p) - app_pu.compute_secs(&p)).abs() < 1e-9);
+    assert!((cfg.pu.comm_secs(&p) - app_pu.comm_secs(&p)).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------------
+// Trace / figure machinery
+// ---------------------------------------------------------------------
+
+#[test]
+fn traced_run_renders_pipeline() {
+    let p = p();
+    let r = mm::run(&p, 768, 2, true).unwrap();
+    let horizon = r.sim.trace.horizon_ps();
+    assert!(horizon > 0);
+    let txt = r.sim.trace.render(80, 0, horizon);
+    assert!(txt.contains("G0.DU"));
+    assert!(txt.contains('#'), "has compute spans");
+    assert!(txt.contains('='), "has comm spans");
+}
+
+#[test]
+fn untraced_run_is_lean() {
+    let p = p();
+    let r = mm::run(&p, 768, 6, false).unwrap();
+    assert!(r.sim.trace.spans.is_empty());
+}

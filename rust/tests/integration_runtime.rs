@@ -1,0 +1,201 @@
+//! Integration tests over the PJRT runtime: every AOT artifact executes
+//! and its numerics match the rust-side oracles. Requires
+//! `make artifacts` (tests are skipped with a notice otherwise — `make
+//! test` always builds artifacts first).
+
+use ea4rca::apps::{fft, filter2d, mm, mmt};
+use ea4rca::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref};
+use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::new() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP: artifacts not built ({e}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn max_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+#[test]
+fn mm32_artifact_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(1);
+    let a = rng.normal_vec(1024);
+    let b = rng.normal_vec(1024);
+    let out = rt
+        .execute(
+            "mm32",
+            &[Tensor::f32(&[32, 32], a.clone()), Tensor::f32(&[32, 32], b.clone())],
+        )
+        .unwrap();
+    let want = matmul_ref(&a, &b, 32, 32, 32);
+    assert!(max_err(out[0].as_f32().unwrap(), &want) < 1e-3);
+}
+
+#[test]
+fn mm32_acc_artifact_is_cascade_stage() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(2);
+    let a = rng.normal_vec(1024);
+    let b = rng.normal_vec(1024);
+    let acc = rng.normal_vec(1024);
+    let out = rt
+        .execute(
+            "mm32_acc",
+            &[
+                Tensor::f32(&[32, 32], a.clone()),
+                Tensor::f32(&[32, 32], b.clone()),
+                Tensor::f32(&[32, 32], acc.clone()),
+            ],
+        )
+        .unwrap();
+    let mut want = matmul_ref(&a, &b, 32, 32, 32);
+    for (w, c) in want.iter_mut().zip(&acc) {
+        *w += c;
+    }
+    assert!(max_err(out[0].as_f32().unwrap(), &want) < 1e-3);
+}
+
+#[test]
+fn mm_pu128_artifact_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(3);
+    let a = rng.normal_vec(128 * 128);
+    let b = rng.normal_vec(128 * 128);
+    let out = rt
+        .execute(
+            "mm_pu128",
+            &[Tensor::f32(&[128, 128], a.clone()), Tensor::f32(&[128, 128], b.clone())],
+        )
+        .unwrap();
+    let want = matmul_ref(&a, &b, 128, 128, 128);
+    assert!(max_err(out[0].as_f32().unwrap(), &want) < 5e-3);
+}
+
+#[test]
+fn mmt_cascade8_artifact_matches_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(4);
+    let a = rng.normal_vec(32 * 256);
+    let b = rng.normal_vec(256 * 32);
+    let got = mmt::chain_via_pu(&rt, &a, &b).unwrap();
+    let want = matmul_ref(&a, &b, 32, 256, 32);
+    assert!(max_err(&got, &want) < 5e-3);
+}
+
+#[test]
+fn filter2d_pu8_artifact_is_exact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(5);
+    let tiles = rng.int_vec_i32(8 * 36 * 36, -128, 127);
+    let kern = rng.int_vec_i32(25, -16, 16);
+    let out = rt
+        .execute(
+            "filter2d_pu8",
+            &[
+                Tensor::i32(&[8, 36, 36], tiles.clone()),
+                Tensor::i32(&[5, 5], kern.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_i32().unwrap();
+    for tile in 0..8 {
+        let want = filter2d_ref(&tiles[tile * 36 * 36..(tile + 1) * 36 * 36], 36, 36, &kern, 5);
+        assert_eq!(&got[tile * 1024..(tile + 1) * 1024], &want[..], "tile {tile}");
+    }
+}
+
+#[test]
+fn fft_artifacts_match_oracle() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(6);
+    for n in [1024usize, 2048, 4096, 8192] {
+        let re = rng.normal_vec(n);
+        let im = rng.normal_vec(n);
+        let (or_, oi) = fft::fft_via_pu(&rt, &re, &im).unwrap();
+        let (wr, wi) = fft_ref(&re, &im);
+        let tol = 1e-2 * (n as f64).sqrt();
+        assert!(max_err(&or_, &wr) < tol, "re mismatch at n={n}");
+        assert!(max_err(&oi, &wi) < tol, "im mismatch at n={n}");
+    }
+}
+
+#[test]
+fn whole_mm_task_through_pus() {
+    // A full 256^3 MM through the DU decomposition + TPC accumulation.
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(7);
+    let n = 256;
+    let a = rng.normal_vec(n * n);
+    let b = rng.normal_vec(n * n);
+    let got = mm::matmul_via_pus(&rt, &a, &b, n).unwrap();
+    let want = matmul_ref(&a, &b, n, n, n);
+    assert!(max_err(&got, &want) < 2e-2);
+}
+
+#[test]
+fn whole_filter2d_image_through_pus() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(8);
+    let (h, w) = (64, 96);
+    let img = rng.int_vec_i32((h + 4) * (w + 4), -100, 100);
+    let kern = rng.int_vec_i32(25, -8, 8);
+    let got = filter2d::filter_image_via_pus(&rt, &img, h, w, &kern).unwrap();
+    let want = filter2d_ref(&img, h + 4, w + 4, &kern, 5);
+    assert_eq!(got, want);
+}
+
+#[test]
+fn ragged_mm_pads_and_crops() {
+    // the adaptive-task-scale path: 130x70x200 through 128-block PUs
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(21);
+    let (m, k, n) = (130, 70, 200);
+    let a = rng.normal_vec(m * k);
+    let b = rng.normal_vec(k * n);
+    let got = mm::matmul_any(&rt, &a, &b, m, k, n).unwrap();
+    let want = matmul_ref(&a, &b, m, k, n);
+    assert_eq!(got.len(), m * n);
+    assert!(max_err(&got, &want) < 1e-2);
+}
+
+#[test]
+fn runtime_rejects_shape_mismatch() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let bad = Tensor::f32(&[16, 16], vec![0.0; 256]);
+    let err = rt.execute("mm32", &[bad.clone(), bad]).unwrap_err();
+    assert!(err.to_string().contains("expected"), "{err}");
+}
+
+#[test]
+fn runtime_rejects_wrong_arity() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let t = Tensor::f32(&[32, 32], vec![0.0; 1024]);
+    assert!(rt.execute("mm32", &[t]).is_err());
+}
+
+#[test]
+fn runtime_rejects_unknown_artifact() {
+    let Some(rt) = runtime_or_skip() else { return };
+    assert!(rt.execute("nope", &[]).is_err());
+}
+
+#[test]
+fn exec_stats_accumulate() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let mut rng = Rng::new(9);
+    let a = Tensor::f32(&[32, 32], rng.normal_vec(1024));
+    let b = Tensor::f32(&[32, 32], rng.normal_vec(1024));
+    for _ in 0..3 {
+        rt.execute("mm32", &[a.clone(), b.clone()]).unwrap();
+    }
+    let stats = rt.stats();
+    assert!(stats["mm32"].executions >= 3);
+    assert!(rt.mean_exec_secs("mm32").unwrap() > 0.0);
+}

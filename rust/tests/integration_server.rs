@@ -1,0 +1,115 @@
+//! Integration tests for the serving layer (leader/worker over PJRT).
+//! Skipped with a notice when artifacts are not built.
+
+use ea4rca::coordinator::server::{serve_batch, Server};
+use ea4rca::runtime::tensor::matmul_ref;
+use ea4rca::runtime::{Manifest, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::workload::{generate_stream, Mix, TaskKind};
+
+fn artifacts_ready() -> bool {
+    let ok = Manifest::load(Manifest::default_dir()).is_ok();
+    if !ok {
+        eprintln!("SKIP: artifacts not built; run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn serves_correct_numerics() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut server = Server::start(2, Manifest::default_dir(), &["mm_pu128"]).unwrap();
+    let mut rng = Rng::new(1);
+    let a = rng.normal_vec(128 * 128);
+    let b = rng.normal_vec(128 * 128);
+    let pending = server
+        .submit(
+            "mm_pu128",
+            vec![
+                Tensor::f32(&[128, 128], a.clone()),
+                Tensor::f32(&[128, 128], b.clone()),
+            ],
+        )
+        .unwrap();
+    let result = pending.wait().unwrap();
+    let out = result.outputs.unwrap();
+    let want = matmul_ref(&a, &b, 128, 128, 128);
+    let err = out[0]
+        .as_f32()
+        .unwrap()
+        .iter()
+        .zip(&want)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(err < 5e-3, "{err}");
+    assert!(result.latency_secs > 0.0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn distributes_across_workers() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut server = Server::start(3, Manifest::default_dir(), &["fft1024"]).unwrap();
+    let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(
+        &Mix::single(TaskKind::Fft1024),
+        30,
+        2,
+    )
+    .into_iter()
+    .map(|(k, i)| (k.artifact().to_string(), i))
+    .collect();
+    let (results, latency) = serve_batch(&mut server, jobs).unwrap();
+    assert_eq!(results.len(), 30);
+    assert!(results.iter().all(|r| r.outputs.is_ok()));
+    assert!(latency.p95 >= latency.p50);
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.total_jobs, 30);
+    // round-robin: every worker saw exactly 10
+    for w in &report.workers {
+        assert_eq!(w.jobs, 10, "worker {}", w.worker);
+        assert_eq!(w.errors, 0);
+    }
+}
+
+#[test]
+fn bad_artifact_is_an_error_not_a_crash() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut server = Server::start(1, Manifest::default_dir(), &[]).unwrap();
+    let pending = server.submit("does_not_exist", vec![]).unwrap();
+    let result = pending.wait().unwrap();
+    assert!(result.outputs.is_err());
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.workers[0].errors, 1);
+    // the worker survives the error and the server drains cleanly
+}
+
+#[test]
+fn mixed_stream_end_to_end() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut server = Server::start(
+        2,
+        Manifest::default_dir(),
+        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
+    )
+    .unwrap();
+    let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(&Mix::uniform(), 24, 9)
+        .into_iter()
+        .map(|(k, i)| (k.artifact().to_string(), i))
+        .collect();
+    let (results, _) = serve_batch(&mut server, jobs).unwrap();
+    assert!(results.iter().all(|r| r.outputs.is_ok()));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn zero_workers_rejected() {
+    assert!(Server::start(0, Manifest::default_dir(), &[]).is_err());
+}

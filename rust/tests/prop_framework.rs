@@ -1,0 +1,237 @@
+//! Property-based tests on the coordinator/framework invariants, using
+//! the in-tree prop framework (util::prop — the offline stand-in for
+//! proptest). Each property runs across a deterministic seed/size sweep
+//! and shrinks failures to the smallest failing size.
+
+use ea4rca::coordinator::scheduler::{ExecMode, GroupSpec, SimEngine};
+use ea4rca::engine::compute::cc::{parse_cc, CcMode};
+use ea4rca::engine::compute::dac::{Dac, DacMode};
+use ea4rca::engine::compute::dcc::{Dcc, DccMode};
+use ea4rca::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+use ea4rca::engine::data::du::DataUnit;
+use ea4rca::engine::data::ssc::SscMode;
+use ea4rca::engine::data::tpc::{TaskBlock, TpcMode};
+use ea4rca::sim::core::KernelClass;
+use ea4rca::sim::ddr::AmcMode;
+use ea4rca::sim::params::HwParams;
+use ea4rca::util::json::Json;
+use ea4rca::util::prop::{check, close, ensure, Config};
+use ea4rca::util::rng::Rng;
+
+/// Random-but-valid group spec generator.
+fn arb_group(rng: &mut Rng, size: usize) -> GroupSpec {
+    let pus = rng.range_usize(1, 6);
+    let parallel = 1 << rng.range_usize(0, 3); // 1,2,4,8
+    let cascade = rng.range_usize(1, 4);
+    let cc = match (parallel, cascade) {
+        (1, 1) => CcMode::Single,
+        (1, c) => CcMode::Cascade(c.max(2)),
+        (n, 1) => CcMode::Parallel(n, Box::new(CcMode::Single)),
+        (n, c) => CcMode::Parallel(n, Box::new(CcMode::Cascade(c.max(2)))),
+    };
+    let cores = cc.cores();
+    let in_plio = rng.range_usize(1, 4);
+    let out_plio = rng.range_usize(1, 2);
+    let in_bytes = rng.range_usize(1, 64) * 1024;
+    let out_bytes = rng.range_usize(1, 16) * 1024;
+    let pu = ProcessingUnit::simple(
+        "arb",
+        vec![ProcessingStructure {
+            dacs: vec![Dac::new(vec![DacMode::Swh], in_plio, cores)],
+            cc,
+            dccs: vec![Dcc::new(DccMode::Swh, out_plio, cores)],
+        }],
+        KernelClass::F32Mac,
+        (rng.range_usize(1, 64) * 65536) as f64,
+        in_bytes,
+        out_bytes,
+    );
+    let tb_iters = rng.range_usize(1, 9) as u64;
+    GroupSpec {
+        name: "g".into(),
+        du: DataUnit {
+            name: "du".into(),
+            amc_read: Some([AmcMode::Csb, AmcMode::Jub][rng.range_usize(0, 1)]),
+            amc_write: Some(AmcMode::Csb),
+            tpc: TpcMode::Cup,
+            ssc_send: [SscMode::Phd, SscMode::Shd][rng.range_usize(0, 1)],
+            ssc_recv: SscMode::Phd,
+            tb: TaskBlock::new(rng.range_usize(1, 32) * 65536, tb_iters, out_bytes * pus),
+            pus,
+        },
+        pu,
+        engine_iters: 4 + size as u64,
+mode: ExecMode::Regular,
+    }
+}
+
+#[test]
+fn prop_makespan_monotonic_in_iterations() {
+    let p = HwParams::vck5000();
+    let engine = SimEngine::new(p);
+    check(Config::default().cases(40), "makespan monotonic", |rng, size| {
+        let mut g = arb_group(rng, size);
+        g.validate().map_err(|e| format!("invalid group: {e}"))?;
+        let a = engine.run(std::slice::from_ref(&g)).makespan_secs;
+        g.engine_iters += 10;
+        let b = engine.run(std::slice::from_ref(&g)).makespan_secs;
+        ensure(b >= a, || format!("iters+10 shrank makespan: {a} -> {b}"))
+    });
+}
+
+#[test]
+fn prop_duty_bounded() {
+    let p = HwParams::vck5000();
+    let engine = SimEngine::new(p);
+    check(Config::default().cases(40), "duty in (0,1]", |rng, size| {
+        let g = arb_group(rng, size);
+        let r = engine.run(&[g]);
+        ensure(r.compute_duty > 0.0 && r.compute_duty <= 1.0, || {
+            format!("duty {}", r.compute_duty)
+        })
+    });
+}
+
+#[test]
+fn prop_shd_never_faster_than_phd() {
+    let p = HwParams::vck5000();
+    let engine = SimEngine::new(p);
+    check(Config::default().cases(30), "SHD >= PHD", |rng, size| {
+        let mut g = arb_group(rng, size);
+        g.du.ssc_send = SscMode::Phd;
+        let phd = engine.run(std::slice::from_ref(&g)).makespan_secs;
+        g.du.ssc_send = SscMode::Shd;
+        let shd = engine.run(std::slice::from_ref(&g)).makespan_secs;
+        ensure(shd >= phd * 0.999, || format!("shd {shd} < phd {phd}"))
+    });
+}
+
+#[test]
+fn prop_adding_a_group_never_speeds_the_first() {
+    let p = HwParams::vck5000();
+    let engine = SimEngine::new(p);
+    check(Config::default().cases(25), "DDR contention slows", |rng, size| {
+        let g1 = arb_group(rng, size);
+        let g2 = arb_group(rng, size);
+        let solo = engine.run(std::slice::from_ref(&g1)).makespan_secs;
+        let duo = engine.run(&[g1.clone(), g2]).makespan_secs;
+        ensure(duo >= solo * 0.999, || format!("duo {duo} < solo {solo}"))
+    });
+}
+
+#[test]
+fn prop_total_work_conserved() {
+    // makespan >= pure-compute lower bound (engine_iters x compute phase)
+    let p = HwParams::vck5000();
+    let engine = SimEngine::new(p.clone());
+    check(Config::default().cases(40), "compute lower bound", |rng, size| {
+        let g = arb_group(rng, size);
+        let lb = g.engine_iters as f64 * g.pu.compute_secs(&p);
+        let r = engine.run(&[g]);
+        ensure(r.makespan_secs >= lb, || {
+            format!("makespan {} < compute-only bound {lb}", r.makespan_secs)
+        })
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    check(Config::default().cases(60), "json roundtrip", |rng, size| {
+        let v = arb_json(rng, size.min(12));
+        let text = v.to_string_pretty();
+        let back = Json::parse(&text).map_err(|e| format!("reparse: {e}"))?;
+        ensure(back == v, || format!("roundtrip mismatch: {text}"))
+    });
+}
+
+fn arb_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.range_usize(0, 3) } else { rng.range_usize(0, 5) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool()),
+        2 => Json::Num((rng.range_i64(-1_000_000, 1_000_000) as f64) / 4.0),
+        3 => {
+            let len = rng.range_usize(0, 12);
+            Json::Str(
+                (0..len)
+                    .map(|_| {
+                        let c = rng.range_usize(1, 126) as u8 as char;
+                        c
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.range_usize(0, 4)).map(|_| arb_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range_usize(0, 4))
+                .map(|i| (format!("k{i}"), arb_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_cc_parse_roundtrip() {
+    check(Config::default().cases(60), "cc notation roundtrip", |rng, _| {
+        let cc = match rng.range_usize(0, 3) {
+            0 => CcMode::Single,
+            1 => CcMode::Cascade(rng.range_usize(2, 16)),
+            2 => CcMode::Butterfly { cores: 1 << rng.range_usize(1, 4) },
+            _ => CcMode::Parallel(
+                rng.range_usize(2, 16),
+                Box::new(if rng.bool() {
+                    CcMode::Single
+                } else {
+                    CcMode::Cascade(rng.range_usize(2, 8))
+                }),
+            ),
+        };
+        let back = parse_cc(&cc.to_string()).map_err(|e| e)?;
+        ensure(back == cc, || format!("{cc} reparsed as {back}"))
+    });
+}
+
+#[test]
+fn prop_power_monotonic_in_duty() {
+    use ea4rca::sim::memory::ResourceUsage;
+    use ea4rca::sim::power::{estimate, PowerBreakdownInput};
+    let p = HwParams::vck5000();
+    check(Config::default().cases(40), "power monotonic in duty", |rng, _| {
+        let cores = rng.range_usize(1, 400);
+        let d1 = rng.f64();
+        let d2 = (d1 + rng.f64() * (1.0 - d1)).min(1.0);
+        let mk = |duty| {
+            estimate(
+                &p,
+                &PowerBreakdownInput {
+                    usage: ResourceUsage { aie: cores, ..Default::default() },
+                    active_aie: cores,
+                    compute_duty: duty,
+                    class: KernelClass::F32Mac,
+                    ddr_gbps: 0.0,
+                    active_plio: 0,
+                },
+            )
+            .total()
+        };
+        ensure(mk(d2) >= mk(d1), || format!("duty {d1}->{d2} lowered power"))
+    });
+}
+
+#[test]
+fn prop_stats_summary_bounds() {
+    use ea4rca::util::stats::summarize;
+    check(Config::default().cases(50), "summary bounds", |rng, size| {
+        let n = 1 + size;
+        let xs: Vec<f64> = (0..n).map(|_| rng.f64() * 100.0).collect();
+        let s = summarize(&xs);
+        ensure(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.max, || {
+            format!("{s:?}")
+        })?;
+        ensure(s.mean >= s.min && s.mean <= s.max, || format!("{s:?}"))?;
+        close(
+            s.mean,
+            xs.iter().sum::<f64>() / n as f64,
+            1e-9,
+        )
+    });
+}
