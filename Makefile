@@ -1,0 +1,20 @@
+# Convenience entry points. The rust build is hermetic; `artifacts` is
+# only needed for the PJRT backend (requires jax).
+
+.PHONY: build test artifacts pytest probe
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release && cargo test -q
+
+# AOT-lower the Layer-1/2 graphs to artifacts/*.hlo.txt + manifest.json
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+pytest:
+	cd python && pytest -q
+
+probe:
+	cargo run --release --example runtime_probe

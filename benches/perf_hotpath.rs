@@ -3,8 +3,8 @@
 //! * L3 scheduler throughput (simulated engine-iterations per second) on
 //!   the Table 6 sweep — this must stay high enough that the full-table
 //!   benches run in seconds.
-//! * PJRT execution latency per artifact (the serving hot path), after
-//!   a warm-up compile.
+//! * Runtime execution latency per artifact (the serving hot path) on
+//!   the active backend, after a warm-up prepare/compile.
 //!
 //! Run: `cargo bench --bench perf_hotpath`
 //! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
@@ -39,14 +39,14 @@ fn main() {
     }
     t.print();
 
-    // ---- PJRT execution hot path ----
+    // ---- runtime execution hot path ----
     let Ok(rt) = Runtime::new() else {
-        println!("\n(artifacts not built — skipping the PJRT hot-path section; run `make artifacts`)");
+        println!("\n(runtime unavailable — skipping the execution hot-path section)");
         return;
     };
     let mut rng = Rng::new(3);
     let mut t = Table::new(
-        "PJRT execution hot path (after warm-up compile)",
+        &format!("execution hot path on {} (after warm-up)", rt.platform()),
         &["artifact", "mean (us)", "p95 (us)", "throughput"],
     );
     let cases: Vec<(&str, Vec<Tensor>, String)> = vec![

@@ -15,7 +15,7 @@ fn main() {
         &["Apps", "LUT", "FF", "BRAM", "URAM", "DSP", "AIE", "DU", "PU"],
     );
     for (app, du, pu) in [("MM", 1, 6), ("Filter2D", 11, 44), ("FFT", 8, 8), ("MM-T", 50, 50)] {
-        let u = table5_usage(app);
+        let u = table5_usage(app).expect("known app");
         u.check(&p).expect("design must fit the card");
         let mut row = vec![app.to_string()];
         row.extend(u.table5_row(&p));

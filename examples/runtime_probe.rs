@@ -1,0 +1,93 @@
+//! Runtime probe: exercise every artifact in the manifest on the active
+//! backend and check its numerics against the reference oracles — the
+//! useful core of the old fftbisect/multidbg debug examples, folded into
+//! one assertive probe.
+//!
+//! Run: `cargo run --release --example runtime_probe`
+//! (`EA4RCA_BACKEND=pjrt` to probe the PJRT substrate instead).
+
+use ea4rca::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref};
+use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+
+fn max_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new()?;
+    println!("== runtime probe: {} ==\n", rt.platform());
+    let mut rng = Rng::new(0xB15EC7);
+
+    // f32 matmul family: mm32, mm_pu128, mmt_cascade8
+    for (name, m, k, n) in
+        [("mm32", 32, 32, 32), ("mm_pu128", 128, 128, 128), ("mmt_cascade8", 32, 256, 32)]
+    {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let out = rt.execute(
+            name,
+            &[Tensor::f32(&[m, k], a.clone()), Tensor::f32(&[k, n], b.clone())],
+        )?;
+        let err = max_err(out[0].as_f32()?, &matmul_ref(&a, &b, m, k, n));
+        println!("{name:<14} {m}x{k}x{n}  max |err| = {err:.2e}");
+        assert!(err < 5e-3, "{name} numerics off: {err}");
+    }
+
+    // cascade stage: mm32_acc
+    {
+        let a = rng.normal_vec(1024);
+        let b = rng.normal_vec(1024);
+        let acc = rng.normal_vec(1024);
+        let out = rt.execute(
+            "mm32_acc",
+            &[
+                Tensor::f32(&[32, 32], a.clone()),
+                Tensor::f32(&[32, 32], b.clone()),
+                Tensor::f32(&[32, 32], acc.clone()),
+            ],
+        )?;
+        let mut want = matmul_ref(&a, &b, 32, 32, 32);
+        for (w, c) in want.iter_mut().zip(&acc) {
+            *w += c;
+        }
+        let err = max_err(out[0].as_f32()?, &want);
+        println!("mm32_acc       32x32x32+acc  max |err| = {err:.2e}");
+        assert!(err < 1e-3, "mm32_acc numerics off: {err}");
+    }
+
+    // int32 filter: filter2d_pu8 (exact)
+    {
+        let tiles = rng.int_vec_i32(8 * 36 * 36, -128, 127);
+        let kern = rng.int_vec_i32(25, -16, 16);
+        let out = rt.execute(
+            "filter2d_pu8",
+            &[Tensor::i32(&[8, 36, 36], tiles.clone()), Tensor::i32(&[5, 5], kern.clone())],
+        )?;
+        let got = out[0].as_i32()?;
+        for t in 0..8 {
+            let want = filter2d_ref(&tiles[t * 36 * 36..(t + 1) * 36 * 36], 36, 36, &kern, 5);
+            assert_eq!(&got[t * 1024..(t + 1) * 1024], &want[..], "filter2d tile {t}");
+        }
+        println!("filter2d_pu8   8x36x36       exact");
+    }
+
+    // fft family across every size in the manifest
+    for n in [1024usize, 2048, 4096, 8192] {
+        let name = format!("fft{n}");
+        let re = rng.normal_vec(n);
+        let im = rng.normal_vec(n);
+        let out = rt.execute(
+            &name,
+            &[Tensor::f32(&[n], re.clone()), Tensor::f32(&[n], im.clone())],
+        )?;
+        let (wr, wi) = fft_ref(&re, &im);
+        let err = max_err(out[0].as_f32()?, &wr).max(max_err(out[1].as_f32()?, &wi));
+        let tol = 1e-2 * (n as f64).sqrt();
+        println!("{name:<14} {n}-pt        max |err| = {err:.2e}");
+        assert!(err < tol, "{name} numerics off: {err}");
+    }
+
+    println!("\nall artifacts OK on this backend");
+    Ok(())
+}

@@ -112,7 +112,7 @@ pub fn run(
 mode: ExecMode::Regular,
         })
         .collect();
-    let ctl = Controller::new(p.clone(), super::table5_usage("FFT"), KernelClass::Cint16Butterfly)
+    let ctl = Controller::new(p.clone(), super::table5_usage("FFT")?, KernelClass::Cint16Butterfly)
         .with_trace(trace);
     let total_ops = fft_ops(n) * (per_pu * pus as u64) as f64;
     let report = ctl.run(

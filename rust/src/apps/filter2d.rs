@@ -118,7 +118,7 @@ pub fn run(p: &HwParams, h: usize, w: usize, pus: usize, trace: bool) -> Result<
     // Tiny frames cannot occupy every PU (the paper's 128x128 rows).
     let usable = pus.min((total_tiles as usize).div_ceil(CORES_PER_PU).max(1));
     let groups = groups_for(usable, total_tiles);
-    let ctl = Controller::new(p.clone(), super::table5_usage("Filter2D"), KernelClass::I32Mac)
+    let ctl = Controller::new(p.clone(), super::table5_usage("Filter2D")?, KernelClass::I32Mac)
         .with_trace(trace);
     let total_ops = filter_ops(h * w, TAPS);
     ctl.run(&format!("{h}x{w} 5x5 {pus}PU"), &groups, 1.0, total_ops)

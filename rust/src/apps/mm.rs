@@ -112,7 +112,7 @@ pub fn run_rect(
         engine_iters: iter_computing_engine(m, k, n, pus),
         mode: ExecMode::Regular,
     }];
-    let ctl = Controller::new(p.clone(), super::table5_usage("MM"), KernelClass::F32Mac)
+    let ctl = Controller::new(p.clone(), super::table5_usage("MM")?, KernelClass::F32Mac)
         .with_trace(trace);
     // GOPS counts useful arithmetic only (padding work is waste — this
     // is the honest adaptive-scale accounting for ragged sizes).

@@ -77,7 +77,7 @@ pub fn run(p: &HwParams, iters: u64, trace: bool) -> Result<RunReport> {
 mode: ExecMode::Regular,
         })
         .collect();
-    let ctl = Controller::new(p.clone(), super::table5_usage("MM-T"), KernelClass::F32Mac)
+    let ctl = Controller::new(p.clone(), super::table5_usage("MM-T")?, KernelClass::F32Mac)
         .with_trace(trace);
     let tasks = (iters as usize * CHAINS * CASCADE) as f64;
     let total_ops = tasks * TASK_OPS;

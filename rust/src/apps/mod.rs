@@ -18,18 +18,23 @@ pub mod filter2d;
 pub mod mm;
 pub mod mmt;
 
+use anyhow::{bail, Result};
+
 use crate::sim::memory::ResourceUsage;
 
 /// Table 5's per-app resource rows (the paper's measured utilisation;
-/// our designs must match these shapes).
-pub fn table5_usage(app: &str) -> ResourceUsage {
-    match app {
+/// our designs must match these shapes). Unknown app names are an
+/// error, not a panic — callers (the CLI in particular) surface them
+/// with usage instead of aborting.
+pub fn table5_usage(app: &str) -> Result<ResourceUsage> {
+    let usage = match app {
         "MM" => ResourceUsage { lut: 11403, ff: 105609, bram: 778, uram: 315, dsp: 0, aie: 384, plio: 72 },
         "Filter2D" => ResourceUsage { lut: 248546, ff: 455277, bram: 526, uram: 0, dsp: 168, aie: 352, plio: 88 },
         "FFT" => ResourceUsage { lut: 122650, ff: 214782, bram: 562, uram: 0, dsp: 96, aie: 80, plio: 32 },
         "MM-T" => ResourceUsage { lut: 61039, ff: 96791, bram: 34, uram: 0, dsp: 0, aie: 400, plio: 100 },
-        other => panic!("unknown app {other}"),
-    }
+        other => bail!("unknown app {other:?} (known: MM, Filter2D, FFT, MM-T)"),
+    };
+    Ok(usage)
 }
 
 #[cfg(test)]
@@ -41,14 +46,21 @@ mod tests {
     fn all_designs_fit_the_card() {
         let p = HwParams::vck5000();
         for app in ["MM", "Filter2D", "FFT", "MM-T"] {
-            table5_usage(app).check(&p).unwrap();
+            table5_usage(app).unwrap().check(&p).unwrap();
         }
+    }
+
+    #[test]
+    fn unknown_app_is_an_error_not_a_panic() {
+        let err = table5_usage("NotAnApp").unwrap_err().to_string();
+        assert!(err.contains("NotAnApp"), "{err}");
+        assert!(err.contains("known:"), "{err}");
     }
 
     #[test]
     fn aie_percentages_match_table5() {
         let p = HwParams::vck5000();
-        let pct = |app: &str| table5_usage(app).aie as f64 / p.total_aie as f64;
+        let pct = |app: &str| table5_usage(app).unwrap().aie as f64 / p.total_aie as f64;
         assert!((pct("MM") - 0.96).abs() < 1e-9);
         assert!((pct("Filter2D") - 0.88).abs() < 1e-9);
         assert!((pct("FFT") - 0.20).abs() < 1e-9);

@@ -1,11 +1,12 @@
-//! The serving layer: a leader/worker request server over the PJRT
-//! runtime — the deployment shape of the coordinator (the paper's PS
-//! controller receiving tasks "from the upper level", §3.1, running as
-//! a long-lived service).
+//! The serving layer: a leader/worker request server over the runtime
+//! — the deployment shape of the coordinator (the paper's PS controller
+//! receiving tasks "from the upper level", §3.1, running as a
+//! long-lived service).
 //!
-//! Each worker thread owns its *own* PJRT client and executable cache
-//! (the `xla` crate's client is not `Send`; per-worker clients also
-//! mirror the DU-PU pair isolation — workers never share hot state).
+//! Each worker thread owns its *own* backend instance (runtime +
+//! executable/kernel cache). Backends are not `Send` in general (the
+//! real PJRT client is thread-bound), and per-worker instances also
+//! mirror the DU-PU pair isolation — workers never share hot state.
 //! The leader round-robins jobs over workers through bounded mpsc
 //! channels; replies come back on per-job channels. Latency/throughput
 //! metrics are aggregated leader-side.
@@ -16,7 +17,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{Runtime, Tensor};
+use crate::runtime::{BackendKind, Runtime, Tensor};
 use crate::util::stats::{summarize, Summary};
 
 /// One inference/compute request.
@@ -74,8 +75,20 @@ pub struct ServeReport {
 
 impl Server {
     /// Spawn `n_workers` workers over the artifact directory, warming
-    /// up the given artifacts in every worker.
+    /// up the given artifacts in every worker. The backend comes from
+    /// `$EA4RCA_BACKEND` (default: interpreter).
     pub fn start(
+        n_workers: usize,
+        artifact_dir: impl Into<std::path::PathBuf>,
+        warmup: &[&str],
+    ) -> Result<Server> {
+        Server::start_with_backend(BackendKind::from_env()?, n_workers, artifact_dir, warmup)
+    }
+
+    /// [`Server::start`] with an explicit backend. Every worker thread
+    /// instantiates its own backend (no shared substrate state).
+    pub fn start_with_backend(
+        kind: BackendKind,
         n_workers: usize,
         artifact_dir: impl Into<std::path::PathBuf>,
         warmup: &[&str],
@@ -96,7 +109,7 @@ impl Server {
             let ready = ready_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("ea4rca-worker-{w}"))
-                .spawn(move || worker_main(w, dir, warm, rx, ready))
+                .spawn(move || worker_main(w, kind, dir, warm, rx, ready))
                 .context("spawning worker")?;
             senders.push(tx);
             handles.push(handle);
@@ -141,13 +154,14 @@ impl Server {
 
 fn worker_main(
     id: usize,
+    kind: BackendKind,
     dir: std::path::PathBuf,
     warmup: Vec<String>,
     rx: mpsc::Receiver<Job>,
     ready: mpsc::Sender<Result<()>>,
 ) -> WorkerStats {
     let mut stats = WorkerStats { worker: id, ..Default::default() };
-    let rt = match Runtime::with_dir(dir).and_then(|rt| {
+    let rt = match Runtime::with_backend(kind, dir).and_then(|rt| {
         let names: Vec<&str> = warmup.iter().map(String::as_str).collect();
         rt.warmup(&names)?;
         Ok(rt)

@@ -12,12 +12,14 @@
 //!   controller/scheduler ([`coordinator`]), the AIE Graph code generator
 //!   ([`codegen`]), the four accelerators ([`apps`]) and the SOTA
 //!   baselines ([`baselines`]) — running over a calibrated VCK5000
-//!   simulator ([`sim`]) with real numerics executed through PJRT
-//!   ([`runtime`]).
+//!   simulator ([`sim`]) with real numerics executed through a pluggable
+//!   [`runtime::Backend`]: the pure-Rust interpreter (default, hermetic)
+//!   or the PJRT CPU client (`--features pjrt`).
 //!
 //! See DESIGN.md for the substitution table (what the paper ran on silicon
-//! vs what this repo simulates) and EXPERIMENTS.md for paper-vs-measured
-//! results for every table and figure.
+//! vs what this repo provides) and EXPERIMENTS.md for how to run the
+//! tier-1 tests and regenerate the paper tables; README.md covers
+//! building with and without the `pjrt` feature.
 
 pub mod apps;
 pub mod baselines;

@@ -2,10 +2,17 @@
 //!
 //! Subcommands:
 //!   run       — simulate an accelerator configuration and print its row
-//!   exec      — route real task data through the PJRT runtime (numerics)
+//!   exec      — route real task data through the runtime (numerics)
+//!   serve     — leader/worker request serving over per-worker runtimes
 //!   generate  — run the AIE Graph Code Generator on a config file
 //!   resources — print the Table 5 resource-utilisation table
-//!   info      — platform + artifact inventory
+//!   info      — backend platform + artifact inventory
+//!
+//! The execution backend is selected with `EA4RCA_BACKEND=interp|pjrt`
+//! (default: the pure-Rust interpreter, which needs no artifacts on
+//! disk and no native libraries).
+//!
+//! Exit codes: 0 success, 1 runtime error, 2 usage error.
 
 use anyhow::{bail, Result};
 
@@ -14,14 +21,27 @@ use ea4rca::codegen::{config::PuConfig, generator};
 use ea4rca::report;
 use ea4rca::runtime::{Runtime, Tensor};
 use ea4rca::sim::params::HwParams;
-use ea4rca::util::cli::Cli;
+use ea4rca::util::cli::{Cli, CliError};
 use ea4rca::util::rng::Rng;
 use ea4rca::util::table::Table;
 
 fn main() {
-    if let Err(e) = real_main() {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
+    match real_main() {
+        Ok(()) => {}
+        Err(e) => {
+            // Usage problems (bad flags, --help) are not runtime errors:
+            // help prints to stdout and exits 0, misuse exits 2.
+            if let Some(cli_err) = e.downcast_ref::<CliError>() {
+                if cli_err.help {
+                    print!("{}", cli_err.msg);
+                    std::process::exit(0);
+                }
+                eprintln!("error: {cli_err}");
+                std::process::exit(2);
+            }
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
     }
 }
 
@@ -62,7 +82,11 @@ fn real_main() -> Result<()> {
             print!("{}", usage());
             Ok(())
         }
-        other => bail!("unknown command {other:?}\n\n{}", usage()),
+        other => Err(CliError {
+            msg: format!("unknown command {other:?}\n\n{}", usage()),
+            help: false,
+        }
+        .into()),
     }
 }
 
@@ -76,41 +100,47 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("tasks", "4096", "FFT batch size")
         .opt("iters", "20000", "MM-T chain iterations")
         .flag("trace", "record + print the phase timeline")
-        .parse(args.to_vec().as_slice())
-        .map_err(anyhow::Error::msg)?;
+        .parse(args)?;
 
     let p = HwParams::vck5000();
     let trace = cli.has("trace");
-    let report = match cli.get("app").as_str() {
-        "mm" => mm::run(&p, cli.get_usize("size"), cli.get_usize("pus"), trace)?,
+    let app = cli.get("app")?;
+    let report = match app.as_str() {
+        "mm" => mm::run(&p, cli.get_usize("size")?, cli.get_usize("pus")?, trace)?,
         "filter2d" => filter2d::run(
             &p,
-            cli.get_usize("height"),
-            cli.get_usize("width"),
-            cli.get_usize("pus"),
+            cli.get_usize("height")?,
+            cli.get_usize("width")?,
+            cli.get_usize("pus")?,
             trace,
         )?,
         "fft" => {
             match fft::run(
                 &p,
-                cli.get_usize("size"),
-                cli.get_usize("pus"),
-                cli.get_usize("tasks") as u64,
+                cli.get_usize("size")?,
+                cli.get_usize("pus")?,
+                cli.get_usize("tasks")? as u64,
                 trace,
             )? {
                 Some(r) => r,
                 None => {
                     println!(
                         "N/A — {} points exceed the AIE core memory of {} PUs (Table 8)",
-                        cli.get("size"),
-                        cli.get("pus")
+                        cli.get("size")?,
+                        cli.get("pus")?
                     );
                     return Ok(());
                 }
             }
         }
-        "mmt" => mmt::run(&p, cli.get_usize("iters") as u64, trace)?,
-        other => bail!("unknown app {other:?}"),
+        "mmt" => mmt::run(&p, cli.get_usize("iters")? as u64, trace)?,
+        other => {
+            return Err(CliError {
+                msg: format!("unknown app {other:?}\n\n{}", usage()),
+                help: false,
+            }
+            .into())
+        }
     };
 
     println!("{}", report.label);
@@ -132,17 +162,18 @@ fn cmd_run(args: &[String]) -> Result<()> {
 }
 
 fn cmd_exec(args: &[String]) -> Result<()> {
-    let cli = Cli::new("ea4rca exec", "run real task data through PJRT")
+    let cli = Cli::new("ea4rca exec", "run real task data through the runtime")
         .opt("app", "mm", "mm | filter2d | fft | mmt")
         .opt("size", "256", "MM edge (multiple of 128) / FFT points")
         .opt("seed", "7", "workload RNG seed")
-        .parse(args.to_vec().as_slice())
-        .map_err(anyhow::Error::msg)?;
+        .parse(args)?;
     let rt = Runtime::new()?;
-    let mut rng = Rng::new(cli.get_usize("seed") as u64);
-    match cli.get("app").as_str() {
+    println!("backend: {}", rt.platform());
+    let mut rng = Rng::new(cli.get_usize("seed")? as u64);
+    let app = cli.get("app")?;
+    match app.as_str() {
         "mm" => {
-            let n = cli.get_usize("size");
+            let n = cli.get_usize("size")?;
             let a = rng.normal_vec(n * n);
             let b = rng.normal_vec(n * n);
             let t0 = std::time::Instant::now();
@@ -154,11 +185,11 @@ fn cmd_exec(args: &[String]) -> Result<()> {
                 .zip(&want)
                 .map(|(x, y)| (x - y).abs() as f64)
                 .fold(0.0, f64::max);
-            println!("mm {n}^3 via PJRT PUs: {:.3} s, max |err| vs oracle = {err:.2e}", dt);
+            println!("mm {n}^3 via PUs: {:.3} s, max |err| vs oracle = {err:.2e}", dt);
             println!("effective {:.2} GOPS on the CPU substrate", 2.0 * (n as f64).powi(3) / dt / 1e9);
         }
         "fft" => {
-            let n = cli.get_usize("size");
+            let n = cli.get_usize("size")?;
             let re = rng.normal_vec(n);
             let im = rng.normal_vec(n);
             let (or_, oi) = fft::fft_via_pu(&rt, &re, &im)?;
@@ -169,7 +200,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
                 .chain(oi.iter().zip(&wi))
                 .map(|(x, y)| (x - y).abs() as f64)
                 .fold(0.0, f64::max);
-            println!("fft {n}-pt via PJRT PU: max |err| vs oracle = {err:.2e}");
+            println!("fft {n}-pt via PU: max |err| vs oracle = {err:.2e}");
         }
         "filter2d" => {
             let (h, w) = (128, 128);
@@ -180,7 +211,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
             let out = filter2d::filter_image_via_pus(&rt, &img, h, w, &kern)?;
             let want = ea4rca::runtime::tensor::filter2d_ref(&img, h + 4, w + 4, &kern, 5);
             let ok = out == want;
-            println!("filter2d {h}x{w} via PJRT PUs: exact match = {ok}");
+            println!("filter2d {h}x{w} via PUs: exact match = {ok}");
             if !ok {
                 bail!("filter2d numerics mismatch");
             }
@@ -195,9 +226,15 @@ fn cmd_exec(args: &[String]) -> Result<()> {
                 .zip(&want)
                 .map(|(x, y)| (x - y).abs() as f64)
                 .fold(0.0, f64::max);
-            println!("mmt cascade8 via PJRT: max |err| vs oracle = {err:.2e}");
+            println!("mmt cascade8: max |err| vs oracle = {err:.2e}");
         }
-        other => bail!("unknown app {other:?}"),
+        other => {
+            return Err(CliError {
+                msg: format!("unknown app {other:?}\n\n{}", usage()),
+                help: false,
+            }
+            .into())
+        }
     }
     Ok(())
 }
@@ -205,30 +242,35 @@ fn cmd_exec(args: &[String]) -> Result<()> {
 fn cmd_serve(args: &[String]) -> Result<()> {
     use ea4rca::coordinator::server::{serve_batch, Server};
     use ea4rca::workload::{generate_stream, Mix, TaskKind};
-    let cli = Cli::new("ea4rca serve", "leader/worker request serving over PJRT")
+    let cli = Cli::new("ea4rca serve", "leader/worker request serving over the runtime")
         .opt("workers", "4", "worker thread count")
         .opt("jobs", "256", "total jobs in the batch")
         .opt("mix", "mm-heavy", "uniform | mm-heavy | mm | fft | filter2d | mmt")
         .opt("seed", "1", "workload seed")
-        .parse(args.to_vec().as_slice())
-        .map_err(anyhow::Error::msg)?;
-    let mix = match cli.get("mix").as_str() {
+        .parse(args)?;
+    let mix = match cli.get("mix")?.as_str() {
         "uniform" => Mix::uniform(),
         "mm-heavy" => Mix::mm_heavy(),
         "mm" => Mix::single(TaskKind::MmBlock),
         "fft" => Mix::single(TaskKind::Fft1024),
         "filter2d" => Mix::single(TaskKind::FilterBatch),
         "mmt" => Mix::single(TaskKind::MmtChain),
-        other => bail!("unknown mix {other:?}"),
+        other => {
+            return Err(CliError {
+                msg: format!("unknown mix {other:?} (use uniform | mm-heavy | mm | fft | filter2d | mmt)"),
+                help: false,
+            }
+            .into())
+        }
     };
-    let n_jobs = cli.get_usize("jobs");
+    let n_jobs = cli.get_usize("jobs")?;
     let mut server = Server::start(
-        cli.get_usize("workers"),
+        cli.get_usize("workers")?,
         ea4rca::runtime::Manifest::default_dir(),
         &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
     )?;
     let jobs: Vec<(String, Vec<Tensor>)> =
-        generate_stream(&mix, n_jobs, cli.get_usize("seed") as u64)
+        generate_stream(&mix, n_jobs, cli.get_usize("seed")? as u64)
             .into_iter()
             .map(|(k, i)| (k.artifact().to_string(), i))
             .collect();
@@ -253,14 +295,13 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         .opt("config", "configs/mm.json", "graph configuration file")
         .opt("out", "generated", "output directory")
         .flag("print", "print graph.h to stdout instead of writing")
-        .parse(args.to_vec().as_slice())
-        .map_err(anyhow::Error::msg)?;
-    let cfg = PuConfig::from_file(std::path::Path::new(&cli.get("config")))?;
+        .parse(args)?;
+    let cfg = PuConfig::from_file(std::path::Path::new(&cli.get("config")?))?;
     let proj = generator::generate(&cfg)?;
     if cli.has("print") {
         println!("{}", proj.graph_h);
     } else {
-        let dir = std::path::PathBuf::from(cli.get("out"));
+        let dir = std::path::PathBuf::from(cli.get("out")?);
         proj.write_to(&dir)?;
         println!(
             "generated {}/graph.h (+.cpp, Makefile): PU '{}', {} cores, {} PLIOs, {} copies",
@@ -278,10 +319,9 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     use ea4rca::report::{fft_row, fft_table, perf_row, perf_table};
     let cli = Cli::new("ea4rca sweep", "regenerate a paper table")
         .opt("table", "6", "paper table number: 6 | 7 | 8 | 9")
-        .parse(args.to_vec().as_slice())
-        .map_err(anyhow::Error::msg)?;
+        .parse(args)?;
     let p = HwParams::vck5000();
-    match cli.get("table").as_str() {
+    match cli.get("table")?.as_str() {
         "6" => {
             let mut t = perf_table("Table 6 — MM accelerator (Float)");
             for size in [768usize, 1536, 3072, 6144] {
@@ -324,7 +364,13 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
                 r.gops_per_w
             );
         }
-        other => bail!("unknown table {other:?} (use 6|7|8|9)"),
+        other => {
+            return Err(CliError {
+                msg: format!("unknown table {other:?} (use 6|7|8|9)"),
+                help: false,
+            }
+            .into())
+        }
     }
     Ok(())
 }
@@ -334,16 +380,15 @@ fn cmd_fuse(args: &[String]) -> Result<()> {
     let cli = Cli::new("ea4rca fuse", "Graph Fusion: combine stored graphs into one design")
         .opt("configs", "configs/fft.json,configs/mm_small.json", "comma-separated config files")
         .opt("out", "generated/fused", "output directory")
-        .parse(args.to_vec().as_slice())
-        .map_err(anyhow::Error::msg)?;
+        .parse(args)?;
     let p = HwParams::vck5000();
     let configs: Vec<PuConfig> = cli
-        .get("configs")
+        .get("configs")?
         .split(',')
         .map(|f| PuConfig::from_file(std::path::Path::new(f.trim())))
         .collect::<Result<_>>()?;
     let fused = repository::fuse(&p, &configs)?;
-    let out = std::path::PathBuf::from(cli.get("out"));
+    let out = std::path::PathBuf::from(cli.get("out")?);
     fused.write_to(&out)?;
     println!(
         "fused {} PU types into {}/: {} AIE cores ({}%), {} PLIOs",
@@ -363,7 +408,7 @@ fn cmd_resources() -> Result<()> {
         &["Apps", "LUT", "FF", "BRAM", "URAM", "DSP", "AIE", "DU", "PU"],
     );
     for (app, du, pu) in [("MM", 1, 6), ("Filter2D", 11, 44), ("FFT", 8, 8), ("MM-T", 50, 50)] {
-        let u = table5_usage(app);
+        let u = table5_usage(app)?;
         let mut row = vec![app.to_string()];
         row.extend(u.table5_row(&p));
         row.push(du.to_string());
@@ -377,8 +422,8 @@ fn cmd_resources() -> Result<()> {
 fn cmd_info() -> Result<()> {
     println!("ea4rca v{}", ea4rca::VERSION);
     let rt = Runtime::new()?;
-    println!("PJRT platform: {}", rt.platform());
-    println!("artifacts:");
+    println!("backend: {} ({})", rt.backend_kind().name(), rt.platform());
+    println!("artifacts ({}):", rt.manifest().dir.display());
     for (name, meta) in &rt.manifest().artifacts {
         let ins: Vec<String> = meta
             .inputs

@@ -1,0 +1,301 @@
+//! The pure-Rust interpreter backend: executes artifact *semantics*
+//! directly from the reference kernels (`runtime::tensor::{matmul_ref,
+//! filter2d_ref, fft_ref}` — the Rust mirrors of
+//! `python/compile/kernels/ref.py`), dispatched by artifact name and
+//! shaped by the manifest metadata.
+//!
+//! This is the default substrate: real numerics with zero native
+//! dependencies, so `exec`, `serve` and the integration tests run in a
+//! hermetic environment. Dimensions come from the manifest (not
+//! hard-coded), so any mm/fft/filter2d-shaped artifact a future AOT
+//! catalogue adds executes without code changes here.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref, Tensor};
+
+use super::Backend;
+
+/// How the interpreter realises one artifact family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kernel {
+    /// C[m,n] = A[m,k] @ B[k,n], f32 (covers mm32, mm_pu128 and the
+    /// mmt_cascade8 chain, whose 8 chained 32^3 stages sum to one
+    /// 32x256x32 product).
+    MatmulF32,
+    /// C = A @ B + ACC, f32 (the cascade-stage kernel mm32_acc).
+    MatmulAccF32,
+    /// Integer matmul with operands wrapped to `bits` first (the
+    /// mm32_i8/mm32_i16 low-bit contract: int32 tensors carrying
+    /// narrow values; out-of-range inputs wrap like the hardware's
+    /// narrow datapath).
+    MatmulInt { bits: u32 },
+    /// Batched valid-mode 2-D correlation over int32 halo tiles.
+    Filter2d,
+    /// Radix-2 FFT over split re/im f32 planes.
+    Fft,
+}
+
+/// Resolve the kernel for an artifact name (+ metadata sanity).
+fn kernel_for(meta: &ArtifactMeta) -> Result<Kernel> {
+    let name = meta.name.as_str();
+    let kernel = if name.starts_with("fft") {
+        Kernel::Fft
+    } else if name.starts_with("filter2d") {
+        Kernel::Filter2d
+    } else if name == "mm32_i8" {
+        Kernel::MatmulInt { bits: 8 }
+    } else if name == "mm32_i16" {
+        Kernel::MatmulInt { bits: 16 }
+    } else if name.starts_with("mm") && meta.inputs.len() == 3 {
+        Kernel::MatmulAccF32
+    } else if name.starts_with("mm") {
+        Kernel::MatmulF32
+    } else {
+        bail!(
+            "interpreter backend has no kernel for artifact {name:?} \
+             (knows mm*, filter2d*, fft*)"
+        );
+    };
+    Ok(kernel)
+}
+
+/// Matmul dims from the manifest: A[m,k] @ B[k,n].
+fn mm_dims(meta: &ArtifactMeta) -> Result<(usize, usize, usize)> {
+    if meta.inputs.len() < 2 {
+        bail!("artifact {}: matmul needs two operands", meta.name);
+    }
+    let (a, b) = (&meta.inputs[0], &meta.inputs[1]);
+    if a.shape.len() != 2 || b.shape.len() != 2 || a.shape[1] != b.shape[0] {
+        bail!(
+            "artifact {}: incompatible matmul shapes {:?} x {:?}",
+            meta.name,
+            a.shape,
+            b.shape
+        );
+    }
+    Ok((a.shape[0], a.shape[1], b.shape[1]))
+}
+
+/// Wrap an i32 value onto a narrower two's-complement width.
+fn wrap_to_bits(v: i32, bits: u32) -> i32 {
+    let shift = 32 - bits;
+    (v << shift) >> shift
+}
+
+/// Integer matmul with exact int32 accumulation (wrapping, like the
+/// hardware accumulator).
+fn matmul_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
+            }
+        }
+    }
+    c
+}
+
+/// The interpreter substrate. Stateless — "preparing" an artifact is
+/// just resolving its kernel, which doubles as early validation.
+pub struct InterpBackend;
+
+impl InterpBackend {
+    pub fn new() -> InterpBackend {
+        InterpBackend
+    }
+}
+
+impl Default for InterpBackend {
+    fn default() -> Self {
+        InterpBackend::new()
+    }
+}
+
+impl Backend for InterpBackend {
+    fn platform(&self) -> String {
+        "interp-cpu (pure-Rust reference kernels)".to_string()
+    }
+
+    fn prepare(&self, _manifest: &Manifest, meta: &ArtifactMeta) -> Result<()> {
+        let kernel = kernel_for(meta)?;
+        // validate the metadata shapes once, so execute-time errors are
+        // only about data
+        match kernel {
+            Kernel::MatmulF32 | Kernel::MatmulInt { .. } => {
+                mm_dims(meta)?;
+            }
+            Kernel::MatmulAccF32 => {
+                let (m, _, n) = mm_dims(meta)?;
+                if meta.inputs[2].shape != [m, n] {
+                    bail!(
+                        "artifact {}: accumulator shape {:?} must match the product [{m}, {n}]",
+                        meta.name,
+                        meta.inputs[2].shape
+                    );
+                }
+            }
+            Kernel::Filter2d => {
+                if meta.inputs.len() != 2 {
+                    bail!("artifact {}: filter2d needs tiles + kernel inputs", meta.name);
+                }
+                let (x, k) = (&meta.inputs[0], &meta.inputs[1]);
+                if x.shape.len() != 3 || k.shape.len() != 2 || k.shape[0] != k.shape[1] {
+                    bail!(
+                        "artifact {}: filter2d expects [batch, h, w] tiles and a square \
+                         kernel, got {:?} / {:?}",
+                        meta.name,
+                        x.shape,
+                        k.shape
+                    );
+                }
+                let taps = k.shape[0];
+                if x.shape[1] < taps || x.shape[2] < taps {
+                    bail!("artifact {}: tile smaller than the kernel", meta.name);
+                }
+            }
+            Kernel::Fft => {
+                let n = meta
+                    .inputs
+                    .first()
+                    .and_then(|t| t.shape.first())
+                    .copied()
+                    .unwrap_or(0);
+                if meta.inputs.len() != 2 || !n.is_power_of_two() {
+                    bail!(
+                        "artifact {}: fft expects two power-of-two planes, got {:?}",
+                        meta.name,
+                        meta.inputs.iter().map(|t| &t.shape).collect::<Vec<_>>()
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match kernel_for(meta)? {
+            Kernel::MatmulF32 => {
+                let (m, k, n) = mm_dims(meta)?;
+                let c = matmul_ref(inputs[0].as_f32()?, inputs[1].as_f32()?, m, k, n);
+                Ok(vec![Tensor::f32(&[m, n], c)])
+            }
+            Kernel::MatmulAccF32 => {
+                let (m, k, n) = mm_dims(meta)?;
+                let mut c = matmul_ref(inputs[0].as_f32()?, inputs[1].as_f32()?, m, k, n);
+                for (ci, acc) in c.iter_mut().zip(inputs[2].as_f32()?) {
+                    *ci += acc;
+                }
+                Ok(vec![Tensor::f32(&[m, n], c)])
+            }
+            Kernel::MatmulInt { bits } => {
+                let (m, k, n) = mm_dims(meta)?;
+                let a: Vec<i32> =
+                    inputs[0].as_i32()?.iter().map(|&v| wrap_to_bits(v, bits)).collect();
+                let b: Vec<i32> =
+                    inputs[1].as_i32()?.iter().map(|&v| wrap_to_bits(v, bits)).collect();
+                Ok(vec![Tensor::i32(&[m, n], matmul_i32(&a, &b, m, k, n))])
+            }
+            Kernel::Filter2d => {
+                let (batch, ih, iw) =
+                    (meta.inputs[0].shape[0], meta.inputs[0].shape[1], meta.inputs[0].shape[2]);
+                let taps = meta.inputs[1].shape[0];
+                let (oh, ow) = (ih - (taps - 1), iw - (taps - 1));
+                let tiles = inputs[0].as_i32()?;
+                let kern = inputs[1].as_i32()?;
+                let mut out = Vec::with_capacity(batch * oh * ow);
+                for t in 0..batch {
+                    let tile = &tiles[t * ih * iw..(t + 1) * ih * iw];
+                    out.extend(filter2d_ref(tile, ih, iw, kern, taps));
+                }
+                Ok(vec![Tensor::i32(&[batch, oh, ow], out)])
+            }
+            Kernel::Fft => {
+                let n = meta.inputs[0].shape[0];
+                let (re, im) = fft_ref(inputs[0].as_f32()?, inputs[1].as_f32()?);
+                Ok(vec![Tensor::f32(&[n], re), Tensor::f32(&[n], im)])
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend_and_manifest() -> (InterpBackend, Manifest) {
+        (InterpBackend::new(), Manifest::builtin("artifacts"))
+    }
+
+    #[test]
+    fn every_builtin_artifact_has_a_kernel() {
+        let (b, m) = backend_and_manifest();
+        for meta in m.artifacts.values() {
+            b.prepare(&m, meta).unwrap_or_else(|e| panic!("{}: {e}", meta.name));
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_a_readable_error() {
+        let meta = ArtifactMeta {
+            name: "weird_thing".into(),
+            file: "weird_thing.hlo.txt".into(),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        let err = kernel_for(&meta).unwrap_err().to_string();
+        assert!(err.contains("weird_thing"), "{err}");
+    }
+
+    #[test]
+    fn wrap_to_bits_is_twos_complement() {
+        assert_eq!(wrap_to_bits(127, 8), 127);
+        assert_eq!(wrap_to_bits(128, 8), -128);
+        assert_eq!(wrap_to_bits(-129, 8), 127);
+        assert_eq!(wrap_to_bits(300, 8), 44);
+        assert_eq!(wrap_to_bits(32768, 16), -32768);
+        assert_eq!(wrap_to_bits(5, 16), 5);
+    }
+
+    #[test]
+    fn mm32_acc_adds_the_accumulator() {
+        let (b, m) = backend_and_manifest();
+        let meta = m.get("mm32_acc").unwrap();
+        let a = Tensor::f32(&[32, 32], vec![1.0; 1024]);
+        let eye = {
+            let mut d = vec![0.0f32; 1024];
+            for i in 0..32 {
+                d[i * 32 + i] = 1.0;
+            }
+            Tensor::f32(&[32, 32], d)
+        };
+        let acc = Tensor::f32(&[32, 32], vec![0.5; 1024]);
+        let out = b.execute(meta, &[a, eye, acc]).unwrap();
+        assert!(out[0].as_f32().unwrap().iter().all(|&v| (v - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn int_mm_wraps_operands() {
+        let (b, m) = backend_and_manifest();
+        let meta = m.get("mm32_i8").unwrap();
+        // 130 wraps to -126 as int8; identity B picks it out
+        let mut a = vec![0i32; 1024];
+        a[0] = 130;
+        let mut eye = vec![0i32; 1024];
+        for i in 0..32 {
+            eye[i * 32 + i] = 1;
+        }
+        let out = b
+            .execute(meta, &[Tensor::i32(&[32, 32], a), Tensor::i32(&[32, 32], eye)])
+            .unwrap();
+        assert_eq!(out[0].as_i32().unwrap()[0], -126);
+    }
+}

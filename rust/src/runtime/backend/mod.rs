@@ -1,0 +1,122 @@
+//! The execution-substrate seam of the runtime.
+//!
+//! EA4RCA's core idea is decoupling the algorithm graph from the
+//! execution substrate (the paper's Graph Code Generator targets AIE
+//! silicon; this reproduction targets whatever can run the numerics).
+//! [`Backend`] is that seam on the serving side: the
+//! [`Runtime`](crate::runtime::Runtime) owns manifest lookup, input
+//! validation and stats, and delegates compile/execute to a backend:
+//!
+//! * [`interp::InterpBackend`] (default) — a pure-Rust interpreter that
+//!   executes the artifact semantics via the reference kernels mirrored
+//!   from `python/compile/kernels/ref.py` (mm, filter2d, fft). Zero
+//!   native dependencies; runs from the built-in manifest alone.
+//! * [`pjrt::PjrtBackend`] (`--features pjrt`) — the original
+//!   `xla::PjRtClient` path: parse the AOT HLO text, compile once per
+//!   process, execute literals. Needs the native XLA extension at link
+//!   time (see vendor/xla and README.md).
+//!
+//! Backend selection: explicit via
+//! [`Runtime::with_backend`](crate::runtime::Runtime::with_backend), or
+//! `EA4RCA_BACKEND=interp|pjrt` for the CLI entry points (default
+//! `interp`).
+
+pub mod interp;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::tensor::Tensor;
+
+/// An execution substrate for AOT artifacts.
+///
+/// Contract: the runtime calls [`Backend::prepare`] for an artifact
+/// before its first [`Backend::execute`], and validates inputs against
+/// the manifest before either call. Implementations cache whatever
+/// `prepare` builds; both methods take `&self` and must be callable
+/// concurrently.
+pub trait Backend {
+    /// Human-readable substrate description (for `ea4rca info`).
+    fn platform(&self) -> String;
+
+    /// Compile/instantiate `meta` (idempotent). `manifest` supplies the
+    /// artifact directory for substrates that load files.
+    fn prepare(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<()>;
+
+    /// Execute the artifact on already-validated inputs.
+    fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+}
+
+/// Which backend implementation to instantiate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust reference-kernel interpreter (always available).
+    Interp,
+    /// PJRT over AOT HLO artifacts (requires the `pjrt` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    /// Parse `$EA4RCA_BACKEND` (unset -> the default interpreter).
+    pub fn from_env() -> Result<BackendKind> {
+        match std::env::var("EA4RCA_BACKEND").ok().as_deref() {
+            None | Some("") | Some("interp") => Ok(BackendKind::Interp),
+            Some("pjrt") => Ok(BackendKind::Pjrt),
+            Some(other) => bail!("unknown EA4RCA_BACKEND {other:?} (expected interp | pjrt)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Interp => "interp",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// Instantiate the backend.
+    pub fn create(self) -> Result<Box<dyn Backend>> {
+        match self {
+            BackendKind::Interp => Ok(Box::new(interp::InterpBackend::new())),
+            BackendKind::Pjrt => {
+                #[cfg(feature = "pjrt")]
+                {
+                    Ok(Box::new(pjrt::PjrtBackend::new()?))
+                }
+                #[cfg(not(feature = "pjrt"))]
+                {
+                    bail!(
+                        "this binary was built without the `pjrt` feature; \
+                         rebuild with `cargo build --features pjrt` or use the \
+                         default interpreter backend"
+                    )
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interp_is_always_available() {
+        let b = BackendKind::Interp.create().unwrap();
+        assert!(b.platform().contains("interp"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_a_readable_error() {
+        let err = BackendKind::Pjrt.create().err().unwrap().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(BackendKind::Interp.name(), "interp");
+        assert_eq!(BackendKind::Pjrt.name(), "pjrt");
+    }
+}

@@ -1,16 +1,17 @@
-//! PJRT execution engine: one CPU client, lazily-compiled executables
-//! cached per artifact name, literal marshalling, and execution stats.
-//!
-//! Compilation happens once per artifact per process (the paper's analogue
-//! is the `libadf.a` build); the serving hot path only marshals literals
-//! and calls `execute`.
+//! The runtime: manifest lookup, input validation, execution statistics
+//! — backend-agnostic. The actual substrate (pure-Rust interpreter or
+//! PJRT) lives behind [`Backend`]; this type owns everything the
+//! substrate should not care about, so shape bugs surface with readable
+//! errors instead of substrate aborts and stats are comparable across
+//! backends.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
+use crate::runtime::backend::{Backend, BackendKind};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 
@@ -19,31 +20,44 @@ use crate::runtime::tensor::Tensor;
 pub struct ExecStats {
     pub executions: u64,
     pub total_exec_secs: f64,
+    /// Seconds spent preparing (compiling) the artifact on this backend.
     pub compile_secs: f64,
 }
 
-/// The PJRT runtime. Thread-safe: executables are compiled under a lock
-/// and `execute` takes `&self`.
+/// The execution runtime. Thread-safe: preparation happens under a
+/// lock and `execute` takes `&self`.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Box<dyn Backend>,
+    kind: BackendKind,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    prepared: Mutex<HashSet<String>>,
     stats: Mutex<HashMap<String, ExecStats>>,
 }
 
 impl Runtime {
-    /// Create a runtime over the default artifact directory.
+    /// Create a runtime over the default artifact directory, selecting
+    /// the backend from `$EA4RCA_BACKEND` (default: interpreter).
     pub fn new() -> Result<Runtime> {
         Runtime::with_dir(Manifest::default_dir())
     }
 
+    /// Create a runtime over `dir`, backend from the environment.
     pub fn with_dir(dir: impl Into<std::path::PathBuf>) -> Result<Runtime> {
-        let manifest = Manifest::load(dir.into())?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Runtime::with_backend(BackendKind::from_env()?, dir)
+    }
+
+    /// Create a runtime with an explicit backend.
+    pub fn with_backend(
+        kind: BackendKind,
+        dir: impl Into<std::path::PathBuf>,
+    ) -> Result<Runtime> {
+        let manifest = Manifest::load_or_builtin(dir.into())?;
+        let backend = kind.create()?;
         Ok(Runtime {
-            client,
+            backend,
+            kind,
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(HashSet::new()),
             stats: Mutex::new(HashMap::new()),
         })
     }
@@ -52,33 +66,30 @@ impl Runtime {
         &self.manifest
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Which backend this runtime executes on.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
     }
 
-    /// Compile (or fetch from cache) the executable for `name`.
-    fn executable(&self, name: &str) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(name) {
+    /// Human-readable substrate description.
+    pub fn platform(&self) -> String {
+        self.backend.platform()
+    }
+
+    /// Prepare (compile) the artifact if this runtime has not yet.
+    fn prepare(&self, meta: &crate::runtime::manifest::ArtifactMeta) -> Result<()> {
+        let mut prepared = self.prepared.lock().unwrap();
+        if prepared.contains(&meta.name) {
             return Ok(());
         }
-        let path = self.manifest.hlo_path(name)?;
         let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
+        self.backend.prepare(&self.manifest, meta)?;
         let dt = t0.elapsed().as_secs_f64();
-        cache.insert(name.to_string(), exe);
+        prepared.insert(meta.name.clone());
         self.stats
             .lock()
             .unwrap()
-            .entry(name.to_string())
+            .entry(meta.name.clone())
             .or_default()
             .compile_secs += dt;
         Ok(())
@@ -87,7 +98,7 @@ impl Runtime {
     /// Pre-compile a set of artifacts (startup warm-up).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.executable(n)?;
+            self.prepare(self.manifest.get(n)?)?;
         }
         Ok(())
     }
@@ -95,11 +106,12 @@ impl Runtime {
     /// Execute artifact `name` on `inputs`, returning its outputs.
     ///
     /// Inputs are validated against the manifest (shape + dtype) before
-    /// touching PJRT, so shape bugs surface with readable errors instead
-    /// of XLA aborts. The lowered modules use `return_tuple=True`, so the
-    /// single result literal is a tuple unpacked per the manifest.
+    /// touching the backend, so shape bugs surface with readable errors
+    /// instead of substrate aborts; output arity is validated on the way
+    /// back.
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let meta = self.manifest.get(name)?.clone();
+        // one manifest lookup, no meta clone: this is the serving hot path
+        let meta = self.manifest.get(name)?;
         if inputs.len() != meta.inputs.len() {
             bail!(
                 "artifact {name}: expected {} inputs, got {}",
@@ -118,21 +130,10 @@ impl Runtime {
                 );
             }
         }
-        self.executable(name)?;
-
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
+        self.prepare(meta)?;
 
         let t0 = Instant::now();
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(name).expect("compiled above");
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing artifact {name}"))?[0][0]
-            .to_literal_sync()?;
-        drop(cache);
+        let outputs = self.backend.execute(meta, inputs)?;
         let dt = t0.elapsed().as_secs_f64();
         {
             let mut stats = self.stats.lock().unwrap();
@@ -141,22 +142,14 @@ impl Runtime {
             s.total_exec_secs += dt;
         }
 
-        // return_tuple=True: decompose the tuple literal per manifest arity.
-        let parts = result
-            .to_tuple()
-            .with_context(|| format!("artifact {name}: expected tuple output"))?;
-        if parts.len() != meta.outputs.len() {
+        if outputs.len() != meta.outputs.len() {
             bail!(
-                "artifact {name}: manifest says {} outputs, tuple has {}",
+                "artifact {name}: manifest says {} outputs, backend returned {}",
                 meta.outputs.len(),
-                parts.len()
+                outputs.len()
             );
         }
-        parts
-            .iter()
-            .zip(&meta.outputs)
-            .map(|(lit, m)| Tensor::from_literal(lit, m.dtype, &m.shape))
-            .collect()
+        Ok(outputs)
     }
 
     pub fn stats(&self) -> HashMap<String, ExecStats> {

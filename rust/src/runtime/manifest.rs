@@ -1,6 +1,13 @@
 //! Artifact manifest parsing — `artifacts/manifest.json` is written by
 //! `python/compile/aot.py` and describes every HLO module the runtime can
 //! load: input/output shapes + dtypes keyed by artifact name.
+//!
+//! When no manifest has been built (`make artifacts` needs Python+JAX),
+//! [`Manifest::load_or_builtin`] falls back to [`Manifest::builtin`], a
+//! Rust mirror of the AOT artifact catalogue. The interpreter backend
+//! needs only the shape/dtype metadata, so the whole runtime works with
+//! zero files on disk; the PJRT backend still requires the `.hlo.txt`
+//! files and reports a readable error if they are missing.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -121,6 +128,77 @@ impl Manifest {
         Ok(self.dir.join(&self.get(name)?.file))
     }
 
+    /// Load `<dir>/manifest.json` if present, otherwise fall back to the
+    /// built-in catalogue. A *malformed* on-disk manifest is still an
+    /// error — silently shadowing a broken build would hide real bugs.
+    pub fn load_or_builtin(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        if dir.join("manifest.json").is_file() {
+            Manifest::load(dir)
+        } else {
+            Ok(Manifest::builtin(dir))
+        }
+    }
+
+    /// The built-in artifact catalogue: a Rust mirror of
+    /// `python/compile/aot.py::artifact_catalogue` (names, shapes,
+    /// dtypes). File names follow the same `<name>.hlo.txt` convention
+    /// so a later `make artifacts` drops the HLO next to the metadata.
+    pub fn builtin(dir: impl Into<PathBuf>) -> Manifest {
+        fn t(shape: &[usize], dtype: DType) -> TensorMeta {
+            TensorMeta { shape: shape.to_vec(), dtype }
+        }
+        let mut artifacts = BTreeMap::new();
+        let mut add = |name: &str, inputs: Vec<TensorMeta>, outputs: Vec<TensorMeta>| {
+            artifacts.insert(
+                name.to_string(),
+                ArtifactMeta {
+                    name: name.to_string(),
+                    file: format!("{name}.hlo.txt"),
+                    inputs,
+                    outputs,
+                },
+            );
+        };
+        let f = DType::F32;
+        let i = DType::I32;
+        // single-core kernels
+        add("mm32", vec![t(&[32, 32], f), t(&[32, 32], f)], vec![t(&[32, 32], f)]);
+        add(
+            "mm32_acc",
+            vec![t(&[32, 32], f), t(&[32, 32], f), t(&[32, 32], f)],
+            vec![t(&[32, 32], f)],
+        );
+        // low-bit variants (paper §4.3): int32 tensors carrying
+        // int8/int16-range values
+        add("mm32_i8", vec![t(&[32, 32], i), t(&[32, 32], i)], vec![t(&[32, 32], i)]);
+        add("mm32_i16", vec![t(&[32, 32], i), t(&[32, 32], i)], vec![t(&[32, 32], i)]);
+        add(
+            "mmt_cascade8",
+            vec![t(&[32, 256], f), t(&[256, 32], f)],
+            vec![t(&[32, 32], f)],
+        );
+        // PU-level graphs
+        add(
+            "mm_pu128",
+            vec![t(&[128, 128], f), t(&[128, 128], f)],
+            vec![t(&[128, 128], f)],
+        );
+        add(
+            "filter2d_pu8",
+            vec![t(&[8, 36, 36], i), t(&[5, 5], i)],
+            vec![t(&[8, 32, 32], i)],
+        );
+        for n in [1024usize, 2048, 4096, 8192] {
+            add(
+                &format!("fft{n}"),
+                vec![t(&[n], f), t(&[n], f)],
+                vec![t(&[n], f), t(&[n], f)],
+            );
+        }
+        Manifest { dir: dir.into(), artifacts }
+    }
+
     /// Default artifact directory: $EA4RCA_ARTIFACTS or ./artifacts.
     pub fn default_dir() -> PathBuf {
         std::env::var("EA4RCA_ARTIFACTS")
@@ -171,6 +249,41 @@ mod tests {
             {"name": "a", "file": "b", "inputs": [], "outputs": []}
         ]}"#;
         assert!(Manifest::parse(dup, PathBuf::from(".")).is_err());
+    }
+
+    #[test]
+    fn builtin_mirrors_aot_catalogue() {
+        let m = Manifest::builtin("artifacts");
+        // the artifact set python/compile/aot.py ships
+        for name in [
+            "mm32", "mm32_acc", "mm32_i8", "mm32_i16", "mmt_cascade8", "mm_pu128",
+            "filter2d_pu8", "fft1024", "fft2048", "fft4096", "fft8192",
+        ] {
+            assert!(m.get(name).is_ok(), "{name} missing from builtin manifest");
+        }
+        assert_eq!(m.artifacts.len(), 11);
+        let mm = m.get("mm_pu128").unwrap();
+        assert_eq!(mm.inputs[0].shape, vec![128, 128]);
+        assert_eq!(mm.outputs[0].dtype, DType::F32);
+        let fft = m.get("fft2048").unwrap();
+        assert_eq!(fft.inputs.len(), 2);
+        assert_eq!(fft.outputs[0].shape, vec![2048]);
+        assert_eq!(m.hlo_path("mm32").unwrap(), PathBuf::from("artifacts/mm32.hlo.txt"));
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let m = Manifest::load_or_builtin("/definitely/not/a/real/dir").unwrap();
+        assert!(m.get("mm32").is_ok());
+    }
+
+    #[test]
+    fn load_or_builtin_still_rejects_malformed_manifest() {
+        let dir = std::env::temp_dir().join("ea4rca_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(Manifest::load_or_builtin(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,16 +1,22 @@
-//! Runtime — loads the AOT-compiled HLO artifacts and executes them on the
-//! PJRT CPU client. This is the only place the `xla` crate is touched; the
-//! rest of the coordinator sees [`Tensor`]s and artifact names.
+//! Runtime — loads the AOT artifact manifest and executes artifacts on
+//! a pluggable [`Backend`]: the pure-Rust interpreter (default, zero
+//! native dependencies) or the PJRT CPU client (`--features pjrt`).
+//! The rest of the coordinator sees [`Tensor`]s and artifact names; no
+//! other module touches a substrate API.
 //!
-//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Python is never on this path: `make artifacts` has already lowered the
-//! Layer-1/Layer-2 graphs to `artifacts/*.hlo.txt`.
+//! PJRT flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`,
+//! over `artifacts/*.hlo.txt` lowered once by `make artifacts`.
+//! Interpreter flow: dispatch on the artifact name to the reference
+//! kernels mirrored from `python/compile/kernels/ref.py`, shapes from
+//! the (built-in or on-disk) manifest. Python is never on either path.
 
+pub mod backend;
 pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
+pub use backend::{Backend, BackendKind};
 pub use engine::Runtime;
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
 pub use tensor::{DType, Tensor};

@@ -3,7 +3,9 @@
 //! Only the two dtypes the artifacts use exist (f32, i32) — keeping this
 //! enum closed lets every match be exhaustive.
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::{bail, Result};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
@@ -101,7 +103,9 @@ impl Tensor {
         }
     }
 
-    /// Convert to an XLA literal with this tensor's shape.
+    /// Convert to an XLA literal with this tensor's shape (PJRT backend
+    /// marshalling; the interpreter never leaves host memory).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
         let lit = match self {
@@ -112,6 +116,7 @@ impl Tensor {
     }
 
     /// Read a literal back into a host tensor of known shape/dtype.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Tensor> {
         let t = match dtype {
             DType::F32 => Tensor::f32(shape, lit.to_vec::<f32>().context("literal->f32")?),

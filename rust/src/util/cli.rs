@@ -2,8 +2,36 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, and positional args.
 //! Each binary declares its options up front so `--help` is generated.
+//!
+//! All parsing and value access is `Result`-based: malformed or missing
+//! flags produce a [`CliError`] with a readable message (the `ea4rca`
+//! binary turns those into exit code 2 — no panics, no backtraces).
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A usage error (or a help request). The binary prints `msg` and exits
+/// with code 2 (or 0 for `help`).
+#[derive(Debug, Clone)]
+pub struct CliError {
+    pub msg: String,
+    /// True when the user asked for `--help` — not an error.
+    pub help: bool,
+}
+
+impl CliError {
+    fn new(msg: impl Into<String>) -> CliError {
+        CliError { msg: msg.into(), help: false }
+    }
+}
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Debug, Clone)]
 pub struct OptSpec {
@@ -56,15 +84,15 @@ impl Cli {
         s
     }
 
-    /// Parse an argv slice (without the program name). Returns an error
-    /// string on unknown or malformed options; the caller decides whether
-    /// to print usage and exit.
-    pub fn parse(mut self, args: &[String]) -> Result<Cli, String> {
+    /// Parse an argv slice (without the program name). Returns a
+    /// [`CliError`] on unknown or malformed options (or on `--help`,
+    /// with `help = true`); the caller decides how to exit.
+    pub fn parse(mut self, args: &[String]) -> Result<Cli, CliError> {
         let mut i = 0;
         while i < args.len() {
             let arg = &args[i];
             if arg == "--help" || arg == "-h" {
-                return Err(self.usage());
+                return Err(CliError { msg: self.usage(), help: true });
             }
             if let Some(stripped) = arg.strip_prefix("--") {
                 let (name, inline_val) = match stripped.split_once('=') {
@@ -75,7 +103,9 @@ impl Cli {
                     .specs
                     .iter()
                     .find(|s| s.name == name)
-                    .ok_or_else(|| format!("unknown option --{name}\n\n{}", self.usage()))?
+                    .ok_or_else(|| {
+                        CliError::new(format!("unknown option --{name}\n\n{}", self.usage()))
+                    })?
                     .clone();
                 if spec.takes_value {
                     let val = match inline_val {
@@ -84,13 +114,13 @@ impl Cli {
                             i += 1;
                             args.get(i)
                                 .cloned()
-                                .ok_or_else(|| format!("--{name} needs a value"))?
+                                .ok_or_else(|| CliError::new(format!("--{name} needs a value")))?
                         }
                     };
                     self.values.insert(name, val);
                 } else {
                     if inline_val.is_some() {
-                        return Err(format!("--{name} takes no value"));
+                        return Err(CliError::new(format!("--{name} takes no value")));
                     }
                     self.flags.insert(name, true);
                 }
@@ -102,40 +132,47 @@ impl Cli {
         Ok(self)
     }
 
-    /// Parse the real process args; print help/error and exit on failure.
+    /// Parse the real process args; print help/error and exit on failure
+    /// (0 for help, 2 for usage errors).
     pub fn parse_env(self) -> Cli {
         let args: Vec<String> = std::env::args().skip(1).collect();
         match self.parse(&args) {
             Ok(cli) => cli,
-            Err(msg) => {
-                eprintln!("{msg}");
+            Err(e) if e.help => {
+                print!("{}", e.msg);
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("{e}");
                 std::process::exit(2);
             }
         }
     }
 
-    pub fn get(&self, name: &str) -> String {
+    /// The string value of a declared option (given or default).
+    pub fn get(&self, name: &str) -> Result<String, CliError> {
         if let Some(v) = self.values.get(name) {
-            return v.clone();
+            return Ok(v.clone());
         }
         self.specs
             .iter()
             .find(|s| s.name == name && s.takes_value)
             .and_then(|s| s.default)
-            .unwrap_or_else(|| panic!("option --{name} not declared"))
-            .to_string()
+            .map(str::to_string)
+            .ok_or_else(|| CliError::new(format!("option --{name} not declared")))
     }
 
-    pub fn get_usize(&self, name: &str) -> usize {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{name} must be an integer"))
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.get(name)?;
+        v.parse().map_err(|_| {
+            CliError::new(format!("--{name} must be a non-negative integer, got {v:?}"))
+        })
     }
 
-    pub fn get_f64(&self, name: &str) -> f64 {
-        self.get(name)
-            .parse()
-            .unwrap_or_else(|_| panic!("--{name} must be a number"))
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.get(name)?;
+        v.parse()
+            .map_err(|_| CliError::new(format!("--{name} must be a number, got {v:?}")))
     }
 
     pub fn has(&self, name: &str) -> bool {
@@ -158,7 +195,7 @@ mod tests {
             .flag("verbose", "chatty")
             .parse(&argv(&["--size", "1536", "--verbose", "pos1"]))
             .unwrap();
-        assert_eq!(cli.get_usize("size"), 1536);
+        assert_eq!(cli.get_usize("size").unwrap(), 1536);
         assert!(cli.has("verbose"));
         assert_eq!(cli.positional, vec!["pos1"]);
     }
@@ -169,29 +206,31 @@ mod tests {
             .opt("mode", "a", "")
             .parse(&argv(&["--mode=b"]))
             .unwrap();
-        assert_eq!(cli.get("mode"), "b");
+        assert_eq!(cli.get("mode").unwrap(), "b");
     }
 
     #[test]
     fn defaults_apply() {
         let cli = Cli::new("t", "").opt("size", "42", "").parse(&[]).unwrap();
-        assert_eq!(cli.get_usize("size"), 42);
+        assert_eq!(cli.get_usize("size").unwrap(), 42);
     }
 
     #[test]
     fn unknown_option_errors() {
         let err = Cli::new("t", "").parse(&argv(&["--nope"])).unwrap_err();
-        assert!(err.contains("unknown option"));
+        assert!(err.to_string().contains("unknown option"));
+        assert!(!err.help);
     }
 
     #[test]
-    fn help_returns_usage() {
+    fn help_returns_usage_marked_as_help() {
         let err = Cli::new("prog", "about text")
             .opt("x", "1", "the x")
             .parse(&argv(&["--help"]))
             .unwrap_err();
-        assert!(err.contains("prog — about text"));
-        assert!(err.contains("--x"));
+        assert!(err.help);
+        assert!(err.to_string().contains("prog — about text"));
+        assert!(err.to_string().contains("--x"));
     }
 
     #[test]
@@ -200,6 +239,27 @@ mod tests {
             .opt("k", "", "")
             .parse(&argv(&["--k"]))
             .unwrap_err();
-        assert!(err.contains("needs a value"));
+        assert!(err.to_string().contains("needs a value"));
+    }
+
+    #[test]
+    fn malformed_values_are_errors_not_panics() {
+        let cli = Cli::new("t", "")
+            .opt("size", "768", "")
+            .opt("rate", "1.5", "")
+            .parse(&argv(&["--size", "banana", "--rate", "fast"]))
+            .unwrap();
+        let e = cli.get_usize("size").unwrap_err();
+        assert!(e.to_string().contains("must be a non-negative integer"), "{e}");
+        assert!(e.to_string().contains("banana"), "{e}");
+        let e = cli.get_f64("rate").unwrap_err();
+        assert!(e.to_string().contains("must be a number"), "{e}");
+    }
+
+    #[test]
+    fn undeclared_option_is_an_error() {
+        let cli = Cli::new("t", "").parse(&[]).unwrap();
+        assert!(cli.get("ghost").is_err());
+        assert!(cli.get_usize("ghost").is_err());
     }
 }

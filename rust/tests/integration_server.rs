@@ -1,5 +1,6 @@
-//! Integration tests for the serving layer (leader/worker over PJRT).
-//! Skipped with a notice when artifacts are not built.
+//! Integration tests for the serving layer (leader/worker, per-worker
+//! backend instances). The default interpreter backend needs no
+//! artifacts on disk, so these always run.
 
 use ea4rca::coordinator::server::{serve_batch, Server};
 use ea4rca::runtime::tensor::matmul_ref;
@@ -7,19 +8,8 @@ use ea4rca::runtime::{Manifest, Tensor};
 use ea4rca::util::rng::Rng;
 use ea4rca::workload::{generate_stream, Mix, TaskKind};
 
-fn artifacts_ready() -> bool {
-    let ok = Manifest::load(Manifest::default_dir()).is_ok();
-    if !ok {
-        eprintln!("SKIP: artifacts not built; run `make artifacts`");
-    }
-    ok
-}
-
 #[test]
 fn serves_correct_numerics() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut server = Server::start(2, Manifest::default_dir(), &["mm_pu128"]).unwrap();
     let mut rng = Rng::new(1);
     let a = rng.normal_vec(128 * 128);
@@ -50,9 +40,6 @@ fn serves_correct_numerics() {
 
 #[test]
 fn distributes_across_workers() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut server = Server::start(3, Manifest::default_dir(), &["fft1024"]).unwrap();
     let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(
         &Mix::single(TaskKind::Fft1024),
@@ -77,9 +64,6 @@ fn distributes_across_workers() {
 
 #[test]
 fn bad_artifact_is_an_error_not_a_crash() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut server = Server::start(1, Manifest::default_dir(), &[]).unwrap();
     let pending = server.submit("does_not_exist", vec![]).unwrap();
     let result = pending.wait().unwrap();
@@ -91,9 +75,6 @@ fn bad_artifact_is_an_error_not_a_crash() {
 
 #[test]
 fn mixed_stream_end_to_end() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut server = Server::start(
         2,
         Manifest::default_dir(),

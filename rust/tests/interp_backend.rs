@@ -1,0 +1,284 @@
+//! Golden-value tests for the interpreter backend: `Runtime::execute`
+//! on an explicit `BackendKind::Interp` runtime must reproduce the
+//! reference kernel semantics of `python/compile/kernels/ref.py`
+//! (mirrored in `runtime::tensor`) within 1e-4, with zero files on disk
+//! and zero native dependencies — the hermetic tier-1 contract.
+//!
+//! Plus serve-path smoke tests exercising `coordinator::server` with
+//! more than one worker on the interpreter backend.
+
+use ea4rca::coordinator::server::{serve_batch, Server};
+use ea4rca::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref};
+use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::workload::{generate_stream, Mix, TaskKind};
+
+const TOL: f64 = 1e-4;
+
+fn interp_runtime() -> Runtime {
+    // a directory that can never contain a manifest.json: these golden
+    // tests must always exercise the built-in catalogue, even after
+    // `make artifacts` has populated ./artifacts
+    Runtime::with_backend(BackendKind::Interp, "target/ea4rca-no-artifacts-here")
+        .expect("interpreter runtime needs nothing on disk")
+}
+
+fn max_err(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).fold(0.0, f64::max)
+}
+
+// ---------------------------------------------------------------------
+// golden values vs the reference kernels
+// ---------------------------------------------------------------------
+
+#[test]
+fn mm_artifacts_match_reference_within_tol() {
+    let rt = interp_runtime();
+    let mut rng = Rng::new(101);
+    for (name, m, k, n) in
+        [("mm32", 32, 32, 32), ("mm_pu128", 128, 128, 128), ("mmt_cascade8", 32, 256, 32)]
+    {
+        let a = rng.normal_vec(m * k);
+        let b = rng.normal_vec(k * n);
+        let out = rt
+            .execute(
+                name,
+                &[Tensor::f32(&[m, k], a.clone()), Tensor::f32(&[k, n], b.clone())],
+            )
+            .unwrap();
+        assert_eq!(out[0].shape(), &[m, n], "{name}");
+        let err = max_err(out[0].as_f32().unwrap(), &matmul_ref(&a, &b, m, k, n));
+        assert!(err < TOL, "{name}: max err {err}");
+    }
+}
+
+#[test]
+fn mm32_acc_is_a_cascade_stage() {
+    let rt = interp_runtime();
+    let mut rng = Rng::new(102);
+    let a = rng.normal_vec(1024);
+    let b = rng.normal_vec(1024);
+    let acc = rng.normal_vec(1024);
+    let out = rt
+        .execute(
+            "mm32_acc",
+            &[
+                Tensor::f32(&[32, 32], a.clone()),
+                Tensor::f32(&[32, 32], b.clone()),
+                Tensor::f32(&[32, 32], acc.clone()),
+            ],
+        )
+        .unwrap();
+    let mut want = matmul_ref(&a, &b, 32, 32, 32);
+    for (w, c) in want.iter_mut().zip(&acc) {
+        *w += c;
+    }
+    assert!(max_err(out[0].as_f32().unwrap(), &want) < TOL);
+}
+
+#[test]
+fn filter2d_artifact_is_exact() {
+    let rt = interp_runtime();
+    let mut rng = Rng::new(103);
+    let tiles = rng.int_vec_i32(8 * 36 * 36, -128, 127);
+    let kern = rng.int_vec_i32(25, -16, 16);
+    let out = rt
+        .execute(
+            "filter2d_pu8",
+            &[
+                Tensor::i32(&[8, 36, 36], tiles.clone()),
+                Tensor::i32(&[5, 5], kern.clone()),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].shape(), &[8, 32, 32]);
+    let got = out[0].as_i32().unwrap();
+    for tile in 0..8 {
+        let want = filter2d_ref(&tiles[tile * 36 * 36..(tile + 1) * 36 * 36], 36, 36, &kern, 5);
+        assert_eq!(&got[tile * 1024..(tile + 1) * 1024], &want[..], "tile {tile}");
+    }
+}
+
+#[test]
+fn fft_artifacts_match_reference_within_tol() {
+    let rt = interp_runtime();
+    let mut rng = Rng::new(104);
+    for n in [1024usize, 2048, 4096, 8192] {
+        let re = rng.normal_vec(n);
+        let im = rng.normal_vec(n);
+        let out = rt
+            .execute(
+                &format!("fft{n}"),
+                &[Tensor::f32(&[n], re.clone()), Tensor::f32(&[n], im.clone())],
+            )
+            .unwrap();
+        let (wr, wi) = fft_ref(&re, &im);
+        assert!(max_err(out[0].as_f32().unwrap(), &wr) < TOL, "fft{n} re");
+        assert!(max_err(out[1].as_f32().unwrap(), &wi) < TOL, "fft{n} im");
+    }
+}
+
+#[test]
+fn lowbit_mm_wraps_like_the_narrow_datapath() {
+    let rt = interp_runtime();
+    let mut rng = Rng::new(105);
+    // in-range operands: plain integer matmul
+    let a = rng.int_vec_i32(1024, -128, 127);
+    let b = rng.int_vec_i32(1024, -128, 127);
+    let out = rt
+        .execute(
+            "mm32_i8",
+            &[Tensor::i32(&[32, 32], a.clone()), Tensor::i32(&[32, 32], b.clone())],
+        )
+        .unwrap();
+    let want: Vec<i64> = (0..32 * 32)
+        .map(|idx| {
+            let (i, j) = (idx / 32, idx % 32);
+            (0..32).map(|p| a[i * 32 + p] as i64 * b[p * 32 + j] as i64).sum()
+        })
+        .collect();
+    for (g, w) in out[0].as_i32().unwrap().iter().zip(&want) {
+        assert_eq!(*g as i64, *w);
+    }
+    // out-of-range operands wrap to int8 before multiplying
+    let mut a = vec![0i32; 1024];
+    a[0] = 257; // wraps to 1
+    let mut eye = vec![0i32; 1024];
+    for i in 0..32 {
+        eye[i * 32 + i] = 1;
+    }
+    let out = rt
+        .execute("mm32_i8", &[Tensor::i32(&[32, 32], a), Tensor::i32(&[32, 32], eye)])
+        .unwrap();
+    assert_eq!(out[0].as_i32().unwrap()[0], 1);
+}
+
+// ---------------------------------------------------------------------
+// runtime behaviour on the interpreter
+// ---------------------------------------------------------------------
+
+#[test]
+fn works_with_no_artifact_directory_at_all() {
+    let rt = Runtime::with_backend(BackendKind::Interp, "/definitely/not/a/real/dir").unwrap();
+    let out = rt
+        .execute(
+            "mm32",
+            &[
+                Tensor::f32(&[32, 32], vec![1.0; 1024]),
+                Tensor::f32(&[32, 32], vec![0.0; 1024]),
+            ],
+        )
+        .unwrap();
+    assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn warmup_and_stats_work_on_interp() {
+    let rt = interp_runtime();
+    rt.warmup(&["mm32", "fft1024"]).unwrap();
+    let mut rng = Rng::new(106);
+    let a = Tensor::f32(&[32, 32], rng.normal_vec(1024));
+    let b = Tensor::f32(&[32, 32], rng.normal_vec(1024));
+    for _ in 0..3 {
+        rt.execute("mm32", &[a.clone(), b.clone()]).unwrap();
+    }
+    let stats = rt.stats();
+    assert_eq!(stats["mm32"].executions, 3);
+    assert!(rt.mean_exec_secs("mm32").unwrap() > 0.0);
+    assert_eq!(rt.backend_kind(), BackendKind::Interp);
+    assert!(rt.platform().contains("interp"));
+}
+
+#[test]
+fn unknown_artifact_in_manifest_is_a_readable_error() {
+    // an on-disk manifest naming an artifact the interpreter has no
+    // kernel for: preparing it must fail with the artifact name
+    let dir = std::env::temp_dir().join("ea4rca_interp_unknown");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"artifacts": [
+            {"name": "mystery_op", "file": "mystery_op.hlo.txt",
+             "inputs": [{"shape": [4], "dtype": "f32"}],
+             "outputs": [{"shape": [4], "dtype": "f32"}]}
+        ]}"#,
+    )
+    .unwrap();
+    let rt = Runtime::with_backend(BackendKind::Interp, &dir).unwrap();
+    let err = rt
+        .execute("mystery_op", &[Tensor::f32(&[4], vec![0.0; 4])])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("mystery_op"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------
+// serve path on the interpreter, >1 worker
+// ---------------------------------------------------------------------
+
+#[test]
+fn serve_smoke_multi_worker_mixed_stream() {
+    let mut server = Server::start_with_backend(
+        BackendKind::Interp,
+        3,
+        Manifest::default_dir(),
+        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
+    )
+    .unwrap();
+    assert_eq!(server.workers(), 3);
+    let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(&Mix::uniform(), 30, 42)
+        .into_iter()
+        .map(|(k, i)| (k.artifact().to_string(), i))
+        .collect();
+    let (results, latency) = serve_batch(&mut server, jobs).unwrap();
+    assert_eq!(results.len(), 30);
+    assert!(results.iter().all(|r| r.outputs.is_ok()));
+    assert!(latency.p95 >= latency.p50);
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.total_jobs, 30);
+    // round-robin over 3 workers: every worker saw exactly 10
+    for w in &report.workers {
+        assert_eq!(w.jobs, 10, "worker {}", w.worker);
+        assert_eq!(w.errors, 0);
+    }
+}
+
+#[test]
+fn served_numerics_match_oracle() {
+    let mut server =
+        Server::start_with_backend(BackendKind::Interp, 2, Manifest::default_dir(), &[]).unwrap();
+    let mut rng = Rng::new(7);
+    let a = rng.normal_vec(128 * 128);
+    let b = rng.normal_vec(128 * 128);
+    let pending = server
+        .submit(
+            "mm_pu128",
+            vec![
+                Tensor::f32(&[128, 128], a.clone()),
+                Tensor::f32(&[128, 128], b.clone()),
+            ],
+        )
+        .unwrap();
+    let result = pending.wait().unwrap();
+    let out = result.outputs.unwrap();
+    let want = matmul_ref(&a, &b, 128, 128, 128);
+    assert!(max_err(out[0].as_f32().unwrap(), &want) < TOL);
+    // a job for a missing artifact errors without killing the worker
+    let pending = server.submit("nope", vec![]).unwrap();
+    assert!(pending.wait().unwrap().outputs.is_err());
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn generated_workload_shapes_are_served() {
+    // every TaskKind the workload generator produces must execute on
+    // the interpreter (shapes line up with the built-in manifest)
+    let rt = interp_runtime();
+    let mut rng = Rng::new(9);
+    for kind in TaskKind::all() {
+        let inputs = kind.gen_inputs(&mut rng);
+        let out = rt.execute(kind.artifact(), &inputs);
+        assert!(out.is_ok(), "{kind:?}: {}", out.err().unwrap());
+    }
+}

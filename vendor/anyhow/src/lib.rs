@@ -1,0 +1,251 @@
+//! In-tree stand-in for the `anyhow` crate.
+//!
+//! The build is hermetic (no registry access), so the subset of the
+//! `anyhow` API this workspace uses is reimplemented here: [`Error`],
+//! [`Result`], the [`Context`] extension trait, and the `anyhow!` /
+//! `bail!` / `ensure!` macros. Error values carry their full context
+//! chain as rendered strings plus the original error value for
+//! [`Error::downcast_ref`] (used by the CLI to pick exit codes).
+//!
+//! Semantics match upstream where it matters to callers:
+//! * `Display` prints the outermost message only.
+//! * `{:#}` (alternate) prints the whole chain joined by `": "`.
+//! * `Debug` prints the outermost message plus a `Caused by:` list.
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`.
+
+use std::any::Any;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`, with an overridable error type like
+/// upstream's.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-carrying error. Messages are stored outermost-first.
+pub struct Error {
+    chain: Vec<String>,
+    payload: Option<Box<dyn Any + Send + Sync>>,
+}
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()], payload: None }
+    }
+
+    /// Build an error from a concrete error value, keeping it for
+    /// `downcast_ref` and flattening its `source()` chain.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let mut chain = vec![error.to_string()];
+        let mut src = error.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain, payload: Some(Box::new(error)) }
+    }
+
+    /// Wrap with an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// Reference to the original error value, if it is a `T`.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
+    }
+
+    /// The context chain, outermost first (at least one entry).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if f.alternate() {
+            for msg in &self.chain[1..] {
+                write!(f, ": {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for (i, msg) in self.chain[1..].iter().enumerate() {
+                write!(f, "\n    {i}: {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($msg:literal $(,)?) => {
+        return Err($crate::anyhow!($msg))
+    };
+    ($err:expr $(,)?) => {
+        return Err($crate::anyhow!($err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        return Err($crate::anyhow!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($rest:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($rest)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing thing");
+    }
+
+    #[test]
+    fn debug_shows_cause_chain() {
+        let e = Error::msg("root").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by"));
+        assert!(dbg.contains("root"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "missing thing");
+    }
+
+    #[test]
+    fn downcast_ref_recovers_payload() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // context wrapping keeps the payload
+        let e = Err::<(), _>(io_err()).context("ctx").unwrap_err();
+        assert!(e.downcast_ref::<std::io::Error>().is_some());
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(e.to_string(), "nothing there");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn macros() {
+        fn b() -> Result<()> {
+            bail!("bad {}", 42)
+        }
+        assert_eq!(b().unwrap_err().to_string(), "bad 42");
+        fn e(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        assert_eq!(e(3).unwrap(), 3);
+        assert_eq!(e(30).unwrap_err().to_string(), "x too big: 30");
+        let err = anyhow!("plain");
+        assert_eq!(err.to_string(), "plain");
+    }
+}

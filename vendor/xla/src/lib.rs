@@ -1,0 +1,197 @@
+//! Compile-time facade of the `xla` crate (xla-rs) API surface the
+//! `pjrt` runtime backend uses.
+//!
+//! This workspace builds hermetically — the real xla-rs crate needs a
+//! native `xla_extension` shared library that is not part of the image —
+//! so this facade keeps the `pjrt` feature *compile-checked* everywhere:
+//! `cargo check --features pjrt` exercises the whole backend against
+//! these exact signatures. At runtime every PJRT entry point returns a
+//! readable error from [`PjRtClient::cpu`], long before any artifact is
+//! touched.
+//!
+//! To run the real thing, replace this path dependency with xla-rs
+//! (<https://github.com/LaurentMazare/xla-rs>, the same `xla = "0.1.6"`
+//! API) in the root `Cargo.toml` — no source changes needed in the
+//! `ea4rca` crate.
+
+use std::fmt;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Error type mirroring `xla::Error` closely enough for `?` and
+/// `.context(...)` call sites.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "{what}: the native XLA/PJRT runtime is not linked into this build \
+         (the in-tree vendor/xla facade only compile-checks the backend). \
+         Swap vendor/xla for the real xla-rs crate to execute HLO artifacts, \
+         or use the default interpreter backend (unset EA4RCA_BACKEND)."
+    ))
+}
+
+/// Element types a [`Literal`] can hold on this substrate (f32/i32 are
+/// the only dtypes the artifacts use).
+pub trait NativeType: Copy {
+    fn wrap(data: Vec<Self>) -> Storage;
+    fn unwrap(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+/// Backing store for literal data.
+#[derive(Debug, Clone)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    fn wrap(data: Vec<f32>) -> Storage {
+        Storage::F32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<f32>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            Storage::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(data: Vec<i32>) -> Storage {
+        Storage::I32(data)
+    }
+    fn unwrap(storage: &Storage) -> Option<Vec<i32>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            Storage::F32(_) => None,
+        }
+    }
+}
+
+/// Host-side literal: flat data plus dimensions.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    storage: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            dims: vec![data.len() as i64],
+            storage: T::wrap(data.to_vec()),
+        }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have: i64 = self.dims.iter().product();
+        if want != have {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch",
+                self.dims
+            )));
+        }
+        Ok(Literal { storage: self.storage.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the data out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.storage)
+            .ok_or_else(|| Error("literal element type mismatch".to_string()))
+    }
+
+    /// Decompose a tuple literal. The facade never produces tuples
+    /// (execution is unavailable), so this is always an error here.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready for compilation.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// A compiled executable (never actually constructed by the facade).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer handle.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] is the single runtime gate: it
+/// fails fast with instructions, so callers never get half-way into an
+/// execution before discovering the native library is absent.
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "facade".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn runtime_entry_points_fail_readably() {
+        let err = PjRtClient::cpu().err().unwrap().to_string();
+        assert!(err.contains("vendor/xla"), "{err}");
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
