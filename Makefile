@@ -1,13 +1,17 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test artifacts pytest probe
+.PHONY: build test stress artifacts pytest probe
 
 build:
 	cargo build --release
 
 test:
 	cargo build --release && cargo test -q
+
+# full serving stress suite (500-job mixed streams, seeds 1-5)
+stress:
+	cargo test --release --test stress_server
 
 # AOT-lower the Layer-1/2 graphs to artifacts/*.hlo.txt + manifest.json
 artifacts:

@@ -1,0 +1,153 @@
+//! §Perf — serving-path throughput: micro-batched vs unbatched.
+//!
+//! Drives the leader/worker server with a pure `mm_pu128` stream (the
+//! acceptance workload) and a mixed stream, once with batching disabled
+//! (`max_batch = 1` — every job is its own dispatch, the old serving
+//! shape) and once with micro-batching on. The batched interpreter path
+//! stacks compatible jobs along a leading batch dimension and runs the
+//! cache-blocked kernels, so the same workers clear more jobs per
+//! second; the speedup line below is the number the ISSUE acceptance
+//! criterion reads (>= 1.5x on the pure-mm stream).
+//!
+//! A final open-loop section offers Poisson arrivals just above the
+//! measured batched capacity and reports shed rate plus the
+//! queue-vs-exec latency split — the backpressure story, measured.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use std::time::{Duration, Instant};
+
+use ea4rca::coordinator::server::{serve_open_loop, JobResult, Server, ServerConfig};
+use ea4rca::runtime::{BackendKind, Manifest, Tensor};
+use ea4rca::util::stats::summarize;
+use ea4rca::util::table::{fmt_f, Table};
+use ea4rca::workload::{generate_stream, open_loop_stream, Mix, TaskKind};
+
+const WORKERS: usize = 4;
+const WARMUP: [&str; 4] = ["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"];
+
+struct RunStats {
+    jobs_per_sec: f64,
+    mean_batch: f64,
+    queue_ms_p95: f64,
+    exec_ms_mean: f64,
+}
+
+/// Closed-loop: submit the whole stream, wait for every reply.
+fn run_closed(mix: &Mix, n_jobs: usize, seed: u64, max_batch: usize) -> RunStats {
+    let config = ServerConfig {
+        n_workers: WORKERS,
+        max_batch,
+        max_linger: Duration::from_micros(500),
+        queue_cap: 512,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &WARMUP,
+    )
+    .expect("server start");
+    let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(mix, n_jobs, seed)
+        .into_iter()
+        .map(|(k, i)| (k.artifact().to_string(), i))
+        .collect();
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(jobs.len());
+    for (artifact, inputs) in jobs {
+        pending.push(server.submit(&artifact, inputs).expect("submit"));
+    }
+    let results: Vec<JobResult> =
+        pending.into_iter().map(|p| p.wait().expect("reply")).collect();
+    let wall = t0.elapsed().as_secs_f64();
+    assert!(results.iter().all(|r| r.outputs.is_ok()), "serving errors");
+    let report = server.shutdown().expect("shutdown");
+    assert_eq!(report.completed_jobs(), n_jobs as u64, "jobs lost or duplicated");
+    let queue = summarize(&results.iter().map(|r| r.queue_secs).collect::<Vec<_>>());
+    let exec = summarize(&results.iter().map(|r| r.exec_secs).collect::<Vec<_>>());
+    let total_batches: u64 = report.batches;
+    RunStats {
+        jobs_per_sec: n_jobs as f64 / wall,
+        mean_batch: n_jobs as f64 / total_batches.max(1) as f64,
+        queue_ms_p95: queue.p95 * 1e3,
+        exec_ms_mean: exec.mean * 1e3,
+    }
+}
+
+fn main() {
+    let n_jobs = 256;
+
+    let mut t = Table::new(
+        "serving throughput: micro-batched vs unbatched (interp, 4 workers)",
+        &["stream", "mode", "jobs/s", "mean batch", "exec mean (ms)", "queue p95 (ms)"],
+    );
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for (label, mix) in [
+        ("pure mm_pu128".to_string(), Mix::single(TaskKind::MmBlock)),
+        ("mm-heavy mixed".to_string(), Mix::mm_heavy()),
+    ] {
+        let unbatched = run_closed(&mix, n_jobs, 17, 1);
+        let batched = run_closed(&mix, n_jobs, 17, 8);
+        for (mode, s) in [("unbatched", &unbatched), ("batched x8", &batched)] {
+            t.row(&[
+                label.clone(),
+                mode.to_string(),
+                fmt_f(s.jobs_per_sec, 0),
+                fmt_f(s.mean_batch, 2),
+                fmt_f(s.exec_ms_mean, 3),
+                fmt_f(s.queue_ms_p95, 2),
+            ]);
+        }
+        speedups.push((label, batched.jobs_per_sec / unbatched.jobs_per_sec));
+    }
+    t.print();
+    for (label, s) in &speedups {
+        println!("micro-batched speedup on {label}: {s:.2}x");
+    }
+    let mm_speedup = speedups[0].1;
+    println!(
+        "acceptance (pure mm_pu128 >= 1.5x): {}",
+        if mm_speedup >= 1.5 { "PASS" } else { "MISS" }
+    );
+
+    // ---- open loop: offered load just above batched capacity ----
+    let capacity = run_closed(&Mix::single(TaskKind::MmBlock), n_jobs, 19, 8).jobs_per_sec;
+    let rate = capacity * 1.2;
+    let config = ServerConfig {
+        n_workers: WORKERS,
+        max_batch: 8,
+        max_linger: Duration::from_micros(500),
+        queue_cap: 64,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &WARMUP,
+    )
+    .expect("server start");
+    let arrivals = open_loop_stream(&Mix::single(TaskKind::MmBlock), n_jobs, 23, rate)
+        .into_iter()
+        .map(|a| (a.at_secs, a.kind.artifact(), a.inputs));
+    let t0 = Instant::now();
+    let (results, shed) = serve_open_loop(&server, arrivals).expect("open loop");
+    let wall = t0.elapsed().as_secs_f64();
+    server.shutdown().expect("shutdown");
+    let served = results.len();
+    println!(
+        "\nopen loop at {rate:.0} jobs/s offered (1.2x capacity): served {served}/{n_jobs}, \
+         shed {shed}, {:.0} jobs/s goodput",
+        served as f64 / wall
+    );
+    if !results.is_empty() {
+        let queue = summarize(&results.iter().map(|r| r.queue_secs).collect::<Vec<_>>());
+        let exec = summarize(&results.iter().map(|r| r.exec_secs).collect::<Vec<_>>());
+        println!(
+            "  queue ms: mean {:.2} p95 {:.2} | exec ms: mean {:.3} p95 {:.3}",
+            queue.mean * 1e3,
+            queue.p95 * 1e3,
+            exec.mean * 1e3,
+            exec.p95 * 1e3
+        );
+    }
+}

@@ -1,22 +1,28 @@
-//! Serving scenario: the leader/worker coordinator serving a mixed
-//! stream of MM / FFT / Filter2D requests through per-worker PJRT
-//! runtimes, reporting latency percentiles and per-worker throughput.
+//! Serving scenario: the micro-batched leader/worker coordinator
+//! serving a mixed stream of MM / FFT / Filter2D requests through
+//! per-worker runtimes — admission queue in front, same-artifact
+//! micro-batches to the least-loaded worker, latency reported with its
+//! queue-vs-exec split.
 //!
 //! Run: `cargo run --release --example serve_mixed`
 
 use ea4rca::coordinator::server::{serve_batch, Server};
+use ea4rca::util::stats::summarize;
 use ea4rca::workload::{generate_stream, Mix};
 
 fn main() -> anyhow::Result<()> {
     println!("== EA4RCA serving: mixed request stream ==\n");
     let workers = 4;
     let n_jobs = 256;
-    let mut server = Server::start(
+    let server = Server::start(
         workers,
         ea4rca::runtime::Manifest::default_dir(),
         &["mm_pu128", "fft1024", "filter2d_pu8"],
     )?;
-    println!("{} workers up (per-worker PJRT runtimes, warm executables)", server.workers());
+    println!(
+        "{} workers up (per-worker runtimes, warm executables), micro-batching on",
+        server.workers()
+    );
 
     let stream = generate_stream(&Mix::mm_heavy(), n_jobs, 0x5E12);
     let jobs: Vec<(String, Vec<_>)> = stream
@@ -25,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     let t0 = std::time::Instant::now();
-    let (results, latency) = serve_batch(&mut server, jobs)?;
+    let (results, latency) = serve_batch(&server, jobs)?;
     let wall = t0.elapsed().as_secs_f64();
 
     let errors = results.iter().filter(|r| r.outputs.is_err()).count();
@@ -41,21 +47,49 @@ fn main() -> anyhow::Result<()> {
         latency.p95 * 1e3,
         latency.max * 1e3
     );
+    let queue = summarize(&results.iter().map(|r| r.queue_secs).collect::<Vec<_>>());
+    let exec = summarize(&results.iter().map(|r| r.exec_secs).collect::<Vec<_>>());
+    println!(
+        "  split: queue mean {:.2} ms (p95 {:.2}) | exec mean {:.3} ms (p95 {:.3})",
+        queue.mean * 1e3,
+        queue.p95 * 1e3,
+        exec.mean * 1e3,
+        exec.p95 * 1e3
+    );
 
     let report = server.shutdown()?;
+    println!("\nmicro-batches ({} dispatched):", report.batches);
+    for (artifact, hist) in &report.batch_hist {
+        let sizes: Vec<String> =
+            hist.iter().map(|(size, count)| format!("{size}x{count}")).collect();
+        println!(
+            "  {artifact:<16} mean batch {:.2} [{}]",
+            report.mean_batch_size(artifact).unwrap_or(0.0),
+            sizes.join(" ")
+        );
+    }
     println!("\nper-worker:");
     for w in &report.workers {
         println!(
-            "  worker {}: {} jobs, {:.1} ms exec total, {} errors",
+            "  worker {}: {} jobs in {} batches, {:.1} ms exec total, {} errors",
             w.worker,
             w.jobs,
+            w.batches,
             w.exec_secs * 1e3,
             w.errors
         );
     }
     anyhow::ensure!(errors == 0, "serving errors");
+    anyhow::ensure!(
+        report.completed_jobs() == n_jobs as u64,
+        "job conservation violated"
+    );
     let min = report.workers.iter().map(|w| w.jobs).min().unwrap();
     anyhow::ensure!(min > 0, "a worker sat idle");
-    println!("\nserving OK — leader routed work across all {} workers.", report.workers.len());
+    println!(
+        "\nserving OK — {} micro-batches over {} workers, every job accounted for.",
+        report.batches,
+        report.workers.len()
+    );
     Ok(())
 }

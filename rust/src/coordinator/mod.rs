@@ -7,6 +7,8 @@
 //! * [`controller`] — ties a deployed design + workload to the scheduler
 //!   and the power model, and (optionally) routes real task data through
 //!   the PJRT runtime for numerical validation.
+//! * [`server`] — the deployment shape: micro-batched, backpressure-
+//!   aware leader/worker serving over per-worker runtimes.
 
 pub mod controller;
 pub mod scheduler;
@@ -14,4 +16,4 @@ pub mod server;
 
 pub use controller::{Controller, RunReport};
 pub use scheduler::{ExecMode, GroupSpec, SimEngine, SimReport};
-pub use server::{Server, ServeReport};
+pub use server::{Server, ServeReport, ServerConfig, SubmitError};

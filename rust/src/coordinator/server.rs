@@ -3,38 +3,127 @@
 //! receiving tasks "from the upper level", §3.1, running as a
 //! long-lived service).
 //!
+//! The serving path is micro-batched and backpressure-aware:
+//!
+//! ```text
+//! clients --submit/try_submit--> admission queue (bounded; Saturated
+//!             when full)              |
+//!                                dispatcher thread: coalesce same-
+//!                                artifact jobs into micro-batches
+//!                                (max_batch / max_linger), pick the
+//!                                least-loaded worker
+//!                                     |
+//!                        worker threads (own Runtime + backend each)
+//!                        execute_batch --> per-job replies with a
+//!                        queue-vs-exec latency split
+//! ```
+//!
 //! Each worker thread owns its *own* backend instance (runtime +
 //! executable/kernel cache). Backends are not `Send` in general (the
 //! real PJRT client is thread-bound), and per-worker instances also
 //! mirror the DU-PU pair isolation — workers never share hot state.
-//! The leader round-robins jobs over workers through bounded mpsc
-//! channels; replies come back on per-job channels. Latency/throughput
-//! metrics are aggregated leader-side.
+//! Micro-batching mirrors the paper's PS controller organising data
+//! movement around the compute substrate: compatible jobs reach a
+//! worker as one dispatch, so the interpreter's stacked kernels (and a
+//! real array's DMA bursts) amortize per-task overhead. Metrics are
+//! aggregated leader-side, including per-artifact batch-size
+//! histograms.
 
-use std::sync::mpsc;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::{BackendKind, Runtime, Tensor};
 use crate::util::stats::{summarize, Summary};
 
+/// How long [`Server::submit`] waits for queue space before giving up
+/// with [`SubmitError::Saturated`] (blocking forever would hide
+/// overload from the caller — the bug this layer is designed to avoid).
+pub const DEFAULT_SUBMIT_WAIT: Duration = Duration::from_secs(30);
+
+/// Serving-path tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Worker thread count (each owns a backend instance).
+    pub n_workers: usize,
+    /// Most jobs coalesced into one dispatch. 1 disables batching.
+    pub max_batch: usize,
+    /// How long the dispatcher holds an under-full batch open waiting
+    /// for more same-artifact arrivals. Zero dispatches immediately.
+    pub max_linger: Duration,
+    /// Admission-queue capacity; beyond it submissions saturate.
+    pub queue_cap: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            n_workers: 4,
+            max_batch: 8,
+            max_linger: Duration::from_micros(200),
+            queue_cap: 256,
+        }
+    }
+}
+
+/// Why a submission was not accepted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is full — shed load or retry later.
+    Saturated,
+    /// The server is shutting down.
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Saturated => write!(f, "admission queue saturated"),
+            SubmitError::Closed => write!(f, "server closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// One inference/compute request.
-pub struct Job {
-    pub artifact: String,
-    pub inputs: Vec<Tensor>,
+struct Job {
+    artifact: String,
+    inputs: Vec<Tensor>,
     reply: mpsc::Sender<JobResult>,
     submitted: Instant,
 }
 
-/// The completed job.
+/// The completed job, with the end-to-end latency split into its queue
+/// and execution components.
 #[derive(Debug)]
 pub struct JobResult {
     pub outputs: Result<Vec<Tensor>>,
-    /// Seconds from submit to completion (queueing + execution).
-    pub latency_secs: f64,
+    /// Seconds from submit until the worker started executing the
+    /// micro-batch this job rode in (admission + dispatch + linger).
+    pub queue_secs: f64,
+    /// Wall-clock seconds this job's micro-batch spent executing. The
+    /// client waits for the whole batch, so this is the job's real
+    /// execution wait; divide by `batch_size` for the amortized per-job
+    /// compute share.
+    pub exec_secs: f64,
+    /// How many jobs shared the dispatch that produced this result.
+    pub batch_size: usize,
+    /// Index of the worker that executed the job (`usize::MAX` for
+    /// jobs that failed before reaching any worker).
     pub worker: usize,
+}
+
+impl JobResult {
+    /// End-to-end seconds from submit to completion (what the client
+    /// actually waited: queue + full batch execution).
+    pub fn latency_secs(&self) -> f64 {
+        self.queue_secs + self.exec_secs
+    }
 }
 
 /// A pending reply handle.
@@ -49,12 +138,28 @@ impl Pending {
     }
 }
 
-/// The running server.
-pub struct Server {
-    senders: Vec<mpsc::SyncSender<Job>>,
-    handles: Vec<JoinHandle<WorkerStats>>,
-    next: usize,
-    submitted: u64,
+/// Admission queue shared between clients and the dispatcher.
+struct AdmissionState {
+    queue: VecDeque<Job>,
+    closed: bool,
+    /// Successful submissions only — a rejected or failed enqueue must
+    /// never inflate [`ServeReport::total_jobs`].
+    accepted: u64,
+}
+
+struct Shared {
+    state: Mutex<AdmissionState>,
+    /// Signalled on enqueue (wakes the dispatcher).
+    not_empty: Condvar,
+    /// Signalled when the dispatcher frees queue space (wakes blocked
+    /// submitters).
+    not_full: Condvar,
+    cap: usize,
+}
+
+/// A coalesced same-artifact dispatch.
+struct Batch {
+    jobs: Vec<Job>,
 }
 
 /// Per-worker accounting returned at shutdown.
@@ -62,21 +167,62 @@ pub struct Server {
 pub struct WorkerStats {
     pub worker: usize,
     pub jobs: u64,
+    pub batches: u64,
     pub exec_secs: f64,
     pub errors: u64,
+}
+
+/// Dispatcher-side accounting (batch shapes).
+#[derive(Default)]
+struct DispatchStats {
+    batches: u64,
+    /// artifact -> (batch size -> how many batches of that size)
+    batch_hist: BTreeMap<String, BTreeMap<usize, u64>>,
 }
 
 /// Whole-run report produced by [`Server::shutdown`].
 #[derive(Debug)]
 pub struct ServeReport {
     pub workers: Vec<WorkerStats>,
+    /// Accepted submissions (== jobs that received or will receive a
+    /// reply; rejected submissions are not counted).
     pub total_jobs: u64,
+    /// Micro-batches dispatched.
+    pub batches: u64,
+    /// Per-artifact batch-size histogram: artifact -> (size -> count).
+    pub batch_hist: BTreeMap<String, BTreeMap<usize, u64>>,
+}
+
+impl ServeReport {
+    /// Jobs that completed on workers (== total_jobs after a drain).
+    pub fn completed_jobs(&self) -> u64 {
+        self.workers.iter().map(|w| w.jobs).sum()
+    }
+
+    /// Mean micro-batch size for one artifact, if it was served.
+    pub fn mean_batch_size(&self, artifact: &str) -> Option<f64> {
+        let hist = self.batch_hist.get(artifact)?;
+        let (mut jobs, mut batches) = (0u64, 0u64);
+        for (&size, &count) in hist {
+            jobs += size as u64 * count;
+            batches += count;
+        }
+        (batches > 0).then(|| jobs as f64 / batches as f64)
+    }
+}
+
+/// The running server.
+pub struct Server {
+    shared: Arc<Shared>,
+    dispatcher: Option<JoinHandle<DispatchStats>>,
+    handles: Vec<JoinHandle<WorkerStats>>,
 }
 
 impl Server {
-    /// Spawn `n_workers` workers over the artifact directory, warming
-    /// up the given artifacts in every worker. The backend comes from
-    /// `$EA4RCA_BACKEND` (default: interpreter).
+    /// Spawn workers over the artifact directory with the default
+    /// serving configuration, warming up the given artifacts in every
+    /// worker. The backend comes from `$EA4RCA_BACKEND` (default:
+    /// interpreter).
     pub fn start(
         n_workers: usize,
         artifact_dir: impl Into<std::path::PathBuf>,
@@ -85,70 +231,298 @@ impl Server {
         Server::start_with_backend(BackendKind::from_env()?, n_workers, artifact_dir, warmup)
     }
 
-    /// [`Server::start`] with an explicit backend. Every worker thread
-    /// instantiates its own backend (no shared substrate state).
+    /// [`Server::start`] with an explicit backend.
     pub fn start_with_backend(
         kind: BackendKind,
         n_workers: usize,
         artifact_dir: impl Into<std::path::PathBuf>,
         warmup: &[&str],
     ) -> Result<Server> {
-        if n_workers == 0 {
+        let config = ServerConfig { n_workers, ..ServerConfig::default() };
+        Server::start_with_config(kind, config, artifact_dir, warmup)
+    }
+
+    /// Full-control constructor. Every worker thread instantiates its
+    /// own backend (no shared substrate state); a dispatcher thread
+    /// owns micro-batch formation and least-loaded placement.
+    pub fn start_with_config(
+        kind: BackendKind,
+        config: ServerConfig,
+        artifact_dir: impl Into<std::path::PathBuf>,
+        warmup: &[&str],
+    ) -> Result<Server> {
+        if config.n_workers == 0 {
             bail!("need at least one worker");
+        }
+        if config.max_batch == 0 {
+            bail!("max_batch must be at least 1");
+        }
+        if config.queue_cap == 0 {
+            bail!("queue_cap must be at least 1");
         }
         let dir: std::path::PathBuf = artifact_dir.into();
         let warm: Vec<String> = warmup.iter().map(|s| s.to_string()).collect();
         let mut senders = Vec::new();
         let mut handles = Vec::new();
+        let mut loads = Vec::new();
         // readiness barrier: workers report once their runtime is up
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for w in 0..n_workers {
-            let (tx, rx) = mpsc::sync_channel::<Job>(64);
+        for w in 0..config.n_workers {
+            // a couple of batches of runway per worker keeps the
+            // dispatcher ahead without hiding queueing from the metric
+            let (tx, rx) = mpsc::sync_channel::<Batch>(2);
+            let load = Arc::new(AtomicUsize::new(0));
             let dir = dir.clone();
             let warm = warm.clone();
             let ready = ready_tx.clone();
+            let wload = Arc::clone(&load);
             let handle = std::thread::Builder::new()
                 .name(format!("ea4rca-worker-{w}"))
-                .spawn(move || worker_main(w, kind, dir, warm, rx, ready))
+                .spawn(move || worker_main(w, kind, dir, warm, rx, ready, wload))
                 .context("spawning worker")?;
             senders.push(tx);
             handles.push(handle);
+            loads.push(load);
         }
         drop(ready_tx);
-        for _ in 0..n_workers {
+        for _ in 0..config.n_workers {
             ready_rx.recv().context("worker died during startup")??;
         }
-        Ok(Server { senders, handles, next: 0, submitted: 0 })
+        let shared = Arc::new(Shared {
+            state: Mutex::new(AdmissionState {
+                queue: VecDeque::with_capacity(config.queue_cap),
+                closed: false,
+                accepted: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: config.queue_cap,
+        });
+        let dshared = Arc::clone(&shared);
+        let (max_batch, max_linger) = (config.max_batch, config.max_linger);
+        let dispatcher = std::thread::Builder::new()
+            .name("ea4rca-dispatch".to_string())
+            .spawn(move || dispatcher_main(dshared, senders, loads, max_batch, max_linger))
+            .context("spawning dispatcher")?;
+        Ok(Server { shared, dispatcher: Some(dispatcher), handles })
     }
 
-    /// Submit a job (round-robin); returns a reply handle.
-    pub fn submit(&mut self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending> {
+    /// Submit a job, waiting up to [`DEFAULT_SUBMIT_WAIT`] for queue
+    /// space; returns a reply handle, or [`SubmitError::Saturated`]
+    /// when the server stays overloaded for that long.
+    pub fn submit(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending, SubmitError> {
+        self.enqueue(artifact, inputs, Some(DEFAULT_SUBMIT_WAIT))
+    }
+
+    /// Non-blocking submit: [`SubmitError::Saturated`] immediately when
+    /// the admission queue is full (open-loop clients shed load here).
+    pub fn try_submit(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Pending, SubmitError> {
+        self.enqueue(artifact, inputs, None)
+    }
+
+    /// Submit, waiting at most `wait` for queue space.
+    pub fn submit_timeout(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+        wait: Duration,
+    ) -> Result<Pending, SubmitError> {
+        self.enqueue(artifact, inputs, Some(wait))
+    }
+
+    fn enqueue(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+        wait: Option<Duration>,
+    ) -> Result<Pending, SubmitError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(SubmitError::Closed);
+        }
+        if st.queue.len() >= self.shared.cap {
+            let Some(wait) = wait else {
+                return Err(SubmitError::Saturated);
+            };
+            let deadline = Instant::now() + wait;
+            while st.queue.len() >= self.shared.cap {
+                if st.closed {
+                    return Err(SubmitError::Closed);
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(SubmitError::Saturated);
+                }
+                let (guard, _) = self
+                    .shared
+                    .not_full
+                    .wait_timeout(st, deadline - now)
+                    .unwrap();
+                st = guard;
+            }
+            if st.closed {
+                return Err(SubmitError::Closed);
+            }
+        }
         let (reply, rx) = mpsc::channel();
-        let job = Job {
+        st.queue.push_back(Job {
             artifact: artifact.to_string(),
             inputs,
             reply,
             submitted: Instant::now(),
-        };
-        let w = self.next % self.senders.len();
-        self.next += 1;
-        self.submitted += 1;
-        self.senders[w].send(job).map_err(|_| anyhow::anyhow!("worker {w} gone"))?;
+        });
+        st.accepted += 1;
+        drop(st);
+        self.shared.not_empty.notify_one();
         Ok(Pending { rx })
     }
 
     pub fn workers(&self) -> usize {
-        self.senders.len()
+        self.handles.len()
     }
 
-    /// Drain and join all workers.
-    pub fn shutdown(self) -> Result<ServeReport> {
-        drop(self.senders);
+    /// Close admission, drain the queue through the workers, and join
+    /// everything. Every accepted job gets its reply before the report
+    /// is produced.
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+        let dstats = self
+            .dispatcher
+            .take()
+            .expect("dispatcher joined once")
+            .join()
+            .map_err(|_| anyhow::anyhow!("dispatcher panicked"))?;
+        // dispatcher return drops the worker senders -> workers drain
         let mut workers = Vec::new();
-        for h in self.handles {
+        for h in std::mem::take(&mut self.handles) {
             workers.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?);
         }
-        Ok(ServeReport { workers, total_jobs: self.submitted })
+        let total_jobs = self.shared.state.lock().unwrap().accepted;
+        Ok(ServeReport {
+            workers,
+            total_jobs,
+            batches: dstats.batches,
+            batch_hist: dstats.batch_hist,
+        })
+    }
+}
+
+/// Pull up to `want` jobs for `artifact` out of the queue (front to
+/// back, preserving both per-artifact FIFO order and the relative order
+/// of everything left behind).
+fn take_same_artifact(
+    queue: &mut VecDeque<Job>,
+    artifact: &str,
+    want: usize,
+    batch: &mut Vec<Job>,
+) {
+    if want == 0 {
+        return;
+    }
+    let mut taken = 0;
+    let mut i = 0;
+    while i < queue.len() && taken < want {
+        if queue[i].artifact == artifact {
+            // remove(i) preserves the order of the remaining jobs
+            batch.push(queue.remove(i).expect("index in bounds"));
+            taken += 1;
+        } else {
+            i += 1;
+        }
+    }
+}
+
+fn dispatcher_main(
+    shared: Arc<Shared>,
+    senders: Vec<mpsc::SyncSender<Batch>>,
+    loads: Vec<Arc<AtomicUsize>>,
+    max_batch: usize,
+    max_linger: Duration,
+) -> DispatchStats {
+    let mut stats = DispatchStats::default();
+    // a worker whose channel closed is dead: never route to it again
+    let mut alive = vec![true; senders.len()];
+    loop {
+        let mut st = shared.state.lock().unwrap();
+        loop {
+            if !st.queue.is_empty() {
+                break;
+            }
+            if st.closed {
+                return stats;
+            }
+            st = shared.not_empty.wait(st).unwrap();
+        }
+        let first = st.queue.pop_front().expect("queue non-empty");
+        let artifact = first.artifact.clone();
+        let mut jobs = vec![first];
+        take_same_artifact(&mut st.queue, &artifact, max_batch - jobs.len(), &mut jobs);
+        // linger: hold an under-full batch open briefly for more
+        // same-artifact arrivals (skipped during drain)
+        if jobs.len() < max_batch && !st.closed && !max_linger.is_zero() {
+            let deadline = Instant::now() + max_linger;
+            while jobs.len() < max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (guard, _) = shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+                st = guard;
+                take_same_artifact(&mut st.queue, &artifact, max_batch - jobs.len(), &mut jobs);
+            }
+        }
+        drop(st);
+        shared.not_full.notify_all();
+
+        stats.batches += 1;
+        *stats
+            .batch_hist
+            .entry(artifact)
+            .or_default()
+            .entry(jobs.len())
+            .or_insert(0) += 1;
+        // least-loaded placement by in-flight job count (ties -> lowest
+        // id); a dead worker is marked and the batch re-dispatched to a
+        // survivor, so one crash costs capacity, not correctness
+        let mut batch = Batch { jobs };
+        loop {
+            let Some(w) = (0..senders.len())
+                .filter(|&i| alive[i])
+                .min_by_key(|&i| loads[i].load(Ordering::SeqCst))
+            else {
+                // every worker is gone: fail the batch so clients
+                // unblock with an error instead of hanging
+                let k = batch.jobs.len();
+                for job in batch.jobs {
+                    let _ = job.reply.send(JobResult {
+                        outputs: Err(anyhow::anyhow!("all workers gone")),
+                        queue_secs: job.submitted.elapsed().as_secs_f64(),
+                        exec_secs: 0.0,
+                        batch_size: k,
+                        worker: usize::MAX,
+                    });
+                }
+                break;
+            };
+            loads[w].fetch_add(batch.jobs.len(), Ordering::SeqCst);
+            match senders[w].send(batch) {
+                Ok(()) => break,
+                Err(send_err) => {
+                    batch = send_err.0;
+                    loads[w].fetch_sub(batch.jobs.len(), Ordering::SeqCst);
+                    alive[w] = false;
+                }
+            }
+        }
     }
 }
 
@@ -157,8 +531,9 @@ fn worker_main(
     kind: BackendKind,
     dir: std::path::PathBuf,
     warmup: Vec<String>,
-    rx: mpsc::Receiver<Job>,
+    rx: mpsc::Receiver<Batch>,
     ready: mpsc::Sender<Result<()>>,
+    load: Arc<AtomicUsize>,
 ) -> WorkerStats {
     let mut stats = WorkerStats { worker: id, ..Default::default() };
     let rt = match Runtime::with_backend(kind, dir).and_then(|rt| {
@@ -175,28 +550,55 @@ fn worker_main(
             return stats;
         }
     };
-    while let Ok(job) = rx.recv() {
+    while let Ok(batch) = rx.recv() {
+        let mut jobs = batch.jobs;
+        let k = jobs.len();
+        let artifact = jobs[0].artifact.clone();
+        let inputs: Vec<Vec<Tensor>> =
+            jobs.iter_mut().map(|j| std::mem::take(&mut j.inputs)).collect();
         let t0 = Instant::now();
-        let outputs = rt.execute(&job.artifact, &job.inputs);
+        let results = rt.execute_batch(&artifact, &inputs);
         let exec = t0.elapsed().as_secs_f64();
-        stats.jobs += 1;
+        load.fetch_sub(k, Ordering::SeqCst);
+        stats.jobs += k as u64;
+        stats.batches += 1;
         stats.exec_secs += exec;
-        if outputs.is_err() {
-            stats.errors += 1;
-        }
-        let result = JobResult {
-            outputs,
-            latency_secs: job.submitted.elapsed().as_secs_f64(),
-            worker: id,
+        let reply_one = |job: Job, outputs: Result<Vec<Tensor>>, errors: &mut u64| {
+            if outputs.is_err() {
+                *errors += 1;
+            }
+            let queue_secs = t0.saturating_duration_since(job.submitted).as_secs_f64();
+            let _ = job.reply.send(JobResult {
+                outputs,
+                queue_secs,
+                // the whole batch's wall time: what this client waited
+                exec_secs: exec,
+                batch_size: k,
+                worker: id,
+            }); // client may have gone away
         };
-        let _ = job.reply.send(result); // client may have gone away
+        match results {
+            Ok(per_job) => {
+                for (job, outputs) in jobs.into_iter().zip(per_job) {
+                    reply_one(job, outputs, &mut stats.errors);
+                }
+            }
+            Err(e) => {
+                // artifact-level failure: every job in the batch gets
+                // the same story
+                let msg = format!("{e:#}");
+                for job in jobs {
+                    reply_one(job, Err(anyhow::anyhow!("{msg}")), &mut stats.errors);
+                }
+            }
+        }
     }
     stats
 }
 
 /// Convenience: serve a closed-loop batch and return latency stats.
 pub fn serve_batch(
-    server: &mut Server,
+    server: &Server,
     jobs: Vec<(String, Vec<Tensor>)>,
 ) -> Result<(Vec<JobResult>, Summary)> {
     let mut pending = Vec::with_capacity(jobs.len());
@@ -207,7 +609,39 @@ pub fn serve_batch(
     for p in pending {
         results.push(p.wait()?);
     }
-    let latencies: Vec<f64> = results.iter().map(|r| r.latency_secs).collect();
+    let latencies: Vec<f64> = results.iter().map(|r| r.latency_secs()).collect();
     let summary = summarize(&latencies);
     Ok((results, summary))
+}
+
+/// Convenience: drive an open-loop arrival stream against the server.
+/// Each arrival is `(at_secs, artifact, inputs)` with `at_secs`
+/// relative to the first call; the driver sleeps until each arrival is
+/// due and submits with [`Server::try_submit`], so a saturated
+/// admission queue *sheds* the job (counted in the second return
+/// value) instead of stalling the arrival clock — offered load stays
+/// honest under overload.
+pub fn serve_open_loop(
+    server: &Server,
+    arrivals: impl IntoIterator<Item = (f64, &'static str, Vec<Tensor>)>,
+) -> Result<(Vec<JobResult>, u64)> {
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for (at_secs, artifact, inputs) in arrivals {
+        let due = t0 + Duration::from_secs_f64(at_secs);
+        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        match server.try_submit(artifact, inputs) {
+            Ok(p) => pending.push(p),
+            Err(SubmitError::Saturated) => shed += 1,
+            Err(e) => bail!("open-loop submit failed: {e}"),
+        }
+    }
+    let mut results = Vec::with_capacity(pending.len());
+    for p in pending {
+        results.push(p.wait()?);
+    }
+    Ok((results, shed))
 }

@@ -53,7 +53,8 @@ fn usage() -> String {
      ea4rca run --app fft --size 1024 --pus 8 --tasks 4096\n\
      ea4rca run --app mmt --iters 20000\n\
      ea4rca exec --app mm --size 256 --seed 7\n\
-     ea4rca serve --workers 4 --jobs 256 --mix mm-heavy\n\
+     ea4rca serve --workers 4 --jobs 256 --mix mm-heavy --batch 8 --linger-us 200\n\
+     ea4rca serve --rate 2000 --queue-cap 128     (open-loop arrivals, shed on saturation)\n\
      ea4rca sweep --table 6|7|8|9            (regenerate a paper table)\n\
      ea4rca generate --config configs/mm.json --out generated/mm\n\
      ea4rca fuse --configs configs/fft.json,configs/mm_small.json --out generated/fused\n\
@@ -169,7 +170,7 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         .parse(args)?;
     let rt = Runtime::new()?;
     println!("backend: {}", rt.platform());
-    let mut rng = Rng::new(cli.get_usize("seed")? as u64);
+    let mut rng = Rng::new(cli.get_u64("seed")?);
     let app = cli.get("app")?;
     match app.as_str() {
         "mm" => {
@@ -240,14 +241,22 @@ fn cmd_exec(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use ea4rca::coordinator::server::{serve_batch, Server};
-    use ea4rca::workload::{generate_stream, Mix, TaskKind};
-    let cli = Cli::new("ea4rca serve", "leader/worker request serving over the runtime")
-        .opt("workers", "4", "worker thread count")
-        .opt("jobs", "256", "total jobs in the batch")
-        .opt("mix", "mm-heavy", "uniform | mm-heavy | mm | fft | filter2d | mmt")
-        .opt("seed", "1", "workload seed")
-        .parse(args)?;
+    use ea4rca::coordinator::server::{serve_open_loop, JobResult, Server, ServerConfig};
+    use ea4rca::util::stats::summarize;
+    use ea4rca::workload::{generate_stream, open_loop_stream, Mix, TaskKind};
+    let cli = Cli::new(
+        "ea4rca serve",
+        "micro-batched leader/worker request serving over the runtime",
+    )
+    .opt("workers", "4", "worker thread count")
+    .opt("jobs", "256", "total jobs in the stream")
+    .opt("mix", "mm-heavy", "uniform | mm-heavy | mm | fft | filter2d | mmt")
+    .opt("seed", "1", "workload seed")
+    .opt("batch", "8", "max micro-batch size (1 disables batching)")
+    .opt("linger-us", "200", "max microseconds an under-full batch waits for company")
+    .opt("queue-cap", "256", "admission queue capacity (backpressure bound)")
+    .opt("rate", "0", "open-loop arrival rate in jobs/s (0 = closed loop)")
+    .parse(args)?;
     let mix = match cli.get("mix")?.as_str() {
         "uniform" => Mix::uniform(),
         "mm-heavy" => Mix::mm_heavy(),
@@ -264,28 +273,73 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
     };
     let n_jobs = cli.get_usize("jobs")?;
-    let mut server = Server::start(
-        cli.get_usize("workers")?,
+    let seed = cli.get_u64("seed")?;
+    let rate = cli.get_f64("rate")?;
+    let config = ServerConfig {
+        n_workers: cli.get_usize("workers")?,
+        max_batch: cli.get_usize("batch")?,
+        max_linger: std::time::Duration::from_micros(cli.get_u64("linger-us")?),
+        queue_cap: cli.get_usize("queue-cap")?,
+    };
+    let server = Server::start_with_config(
+        ea4rca::runtime::BackendKind::from_env()?,
+        config,
         ea4rca::runtime::Manifest::default_dir(),
         &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
     )?;
-    let jobs: Vec<(String, Vec<Tensor>)> =
-        generate_stream(&mix, n_jobs, cli.get_usize("seed")? as u64)
-            .into_iter()
-            .map(|(k, i)| (k.artifact().to_string(), i))
-            .collect();
+
     let t0 = std::time::Instant::now();
-    let (results, latency) = serve_batch(&mut server, jobs)?;
+    let (results, shed) = if rate > 0.0 {
+        // open loop: arrivals at the target rate; a saturated queue
+        // sheds the job instead of blocking the arrival clock
+        let arrivals = open_loop_stream(&mix, n_jobs, seed, rate)
+            .into_iter()
+            .map(|a| (a.at_secs, a.kind.artifact(), a.inputs));
+        serve_open_loop(&server, arrivals)?
+    } else {
+        // closed loop: submit everything, let backpressure pace us
+        let mut pending = Vec::with_capacity(n_jobs);
+        for (kind, inputs) in generate_stream(&mix, n_jobs, seed) {
+            pending.push(server.submit(kind.artifact(), inputs)?);
+        }
+        let results: Vec<JobResult> =
+            pending.into_iter().map(|p| p.wait()).collect::<Result<_>>()?;
+        (results, 0)
+    };
     let wall = t0.elapsed().as_secs_f64();
+
+    let served = results.len();
     let errors = results.iter().filter(|r| r.outputs.is_err()).count();
-    println!("served {n_jobs} jobs in {wall:.2} s -> {:.0} jobs/s ({errors} errors)", n_jobs as f64 / wall);
     println!(
-        "latency ms: mean {:.2} | p50 {:.2} | p95 {:.2} | max {:.2}",
-        latency.mean * 1e3, latency.p50 * 1e3, latency.p95 * 1e3, latency.max * 1e3
+        "served {served} of {n_jobs} jobs in {wall:.2} s -> {:.0} jobs/s ({errors} errors, {shed} shed)",
+        served as f64 / wall
     );
+    if !results.is_empty() {
+        let total = summarize(&results.iter().map(JobResult::latency_secs).collect::<Vec<_>>());
+        let queue = summarize(&results.iter().map(|r| r.queue_secs).collect::<Vec<_>>());
+        let exec = summarize(&results.iter().map(|r| r.exec_secs).collect::<Vec<_>>());
+        println!(
+            "latency ms: mean {:.2} | p50 {:.2} | p95 {:.2} | max {:.2}",
+            total.mean * 1e3, total.p50 * 1e3, total.p95 * 1e3, total.max * 1e3
+        );
+        println!(
+            "  queue ms: mean {:.2} | p95 {:.2}    exec ms: mean {:.2} | p95 {:.2}",
+            queue.mean * 1e3, queue.p95 * 1e3, exec.mean * 1e3, exec.p95 * 1e3
+        );
+    }
     let report = server.shutdown()?;
+    println!("micro-batches: {} dispatched", report.batches);
+    for (artifact, hist) in &report.batch_hist {
+        let sizes: Vec<String> =
+            hist.iter().map(|(size, count)| format!("{size}x{count}")).collect();
+        let mean = report.mean_batch_size(artifact).unwrap_or(0.0);
+        println!("  {artifact:<16} mean batch {mean:.2} [{}]", sizes.join(" "));
+    }
     for w in &report.workers {
-        println!("  worker {}: {} jobs, {:.1} ms busy", w.worker, w.jobs, w.exec_secs * 1e3);
+        println!(
+            "  worker {}: {} jobs in {} batches, {:.1} ms busy",
+            w.worker, w.jobs, w.batches, w.exec_secs * 1e3
+        );
     }
     Ok(())
 }

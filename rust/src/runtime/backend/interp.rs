@@ -13,7 +13,9 @@
 use anyhow::{bail, Result};
 
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
-use crate::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref, Tensor};
+use crate::runtime::tensor::{
+    fft_ref, filter2d_ref, matmul_batch_ref, matmul_ref, FftPlan, Tensor,
+};
 
 use super::Backend;
 
@@ -225,6 +227,74 @@ impl Backend for InterpBackend {
             }
         }
     }
+
+    /// The micro-batch fast path: stack compatible jobs along a leading
+    /// batch dimension and resolve the kernel/shape metadata once for
+    /// the whole batch.
+    ///
+    /// * mm — operands packed into `[batch, m, k]` / `[batch, k, n]`
+    ///   and run through the cache-blocked [`matmul_batch_ref`] kernel
+    ///   (bitwise-identical accumulation order to `matmul_ref`).
+    /// * fft — one [`FftPlan`] (bit-reversal table + per-stage
+    ///   twiddles) shared by every transform in the batch; the trig
+    ///   calls and per-level allocations of the recursive oracle are
+    ///   paid once instead of per job.
+    /// * filter2d — per-job kernels differ, so tiles run per job but
+    ///   with the dispatch/dims resolved once.
+    /// * everything else falls back to the per-job loop.
+    fn execute_batch(&self, meta: &ArtifactMeta, jobs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        if jobs.len() < 2 {
+            return jobs.iter().map(|inputs| self.execute(meta, inputs)).collect();
+        }
+        match kernel_for(meta)? {
+            Kernel::MatmulF32 => {
+                let (m, k, n) = mm_dims(meta)?;
+                let batch = jobs.len();
+                let mut a = Vec::with_capacity(batch * m * k);
+                let mut b = Vec::with_capacity(batch * k * n);
+                for job in jobs {
+                    a.extend_from_slice(job[0].as_f32()?);
+                    b.extend_from_slice(job[1].as_f32()?);
+                }
+                let c = matmul_batch_ref(&a, &b, batch, m, k, n);
+                Ok(c
+                    .chunks_exact(m * n)
+                    .map(|cj| vec![Tensor::f32(&[m, n], cj.to_vec())])
+                    .collect())
+            }
+            Kernel::Fft => {
+                let n = meta.inputs[0].shape[0];
+                let plan = FftPlan::new(n);
+                jobs.iter()
+                    .map(|job| {
+                        let (re, im) = plan.run(job[0].as_f32()?, job[1].as_f32()?);
+                        Ok(vec![Tensor::f32(&[n], re), Tensor::f32(&[n], im)])
+                    })
+                    .collect()
+            }
+            Kernel::Filter2d => {
+                let (batch, ih, iw) =
+                    (meta.inputs[0].shape[0], meta.inputs[0].shape[1], meta.inputs[0].shape[2]);
+                let taps = meta.inputs[1].shape[0];
+                let (oh, ow) = (ih - (taps - 1), iw - (taps - 1));
+                jobs.iter()
+                    .map(|job| {
+                        let tiles = job[0].as_i32()?;
+                        let kern = job[1].as_i32()?;
+                        let mut out = Vec::with_capacity(batch * oh * ow);
+                        for t in 0..batch {
+                            let tile = &tiles[t * ih * iw..(t + 1) * ih * iw];
+                            out.extend(filter2d_ref(tile, ih, iw, kern, taps));
+                        }
+                        Ok(vec![Tensor::i32(&[batch, oh, ow], out)])
+                    })
+                    .collect()
+            }
+            Kernel::MatmulAccF32 | Kernel::MatmulInt { .. } => {
+                jobs.iter().map(|inputs| self.execute(meta, inputs)).collect()
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -280,6 +350,58 @@ mod tests {
         let acc = Tensor::f32(&[32, 32], vec![0.5; 1024]);
         let out = b.execute(meta, &[a, eye, acc]).unwrap();
         assert!(out[0].as_f32().unwrap().iter().all(|&v| (v - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn execute_batch_matches_execute_for_every_family() {
+        use crate::util::rng::Rng;
+        let (b, m) = backend_and_manifest();
+        let mut rng = Rng::new(41);
+        for name in ["mm32", "mm32_acc", "mm32_i8", "filter2d_pu8", "fft1024"] {
+            let meta = m.get(name).unwrap();
+            let jobs: Vec<Vec<Tensor>> = (0..3)
+                .map(|_| {
+                    meta.inputs
+                        .iter()
+                        .map(|tm| match tm.dtype {
+                            crate::runtime::tensor::DType::F32 => {
+                                Tensor::f32(&tm.shape, rng.normal_vec(tm.elements()))
+                            }
+                            crate::runtime::tensor::DType::I32 => {
+                                Tensor::i32(&tm.shape, rng.int_vec_i32(tm.elements(), -10, 10))
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let batched = b.execute_batch(meta, &jobs).unwrap();
+            assert_eq!(batched.len(), jobs.len(), "{name}");
+            for (j, job) in jobs.iter().enumerate() {
+                let single = b.execute(meta, job).unwrap();
+                assert_eq!(single.len(), batched[j].len(), "{name} job {j}");
+                for (s, bt) in single.iter().zip(&batched[j]) {
+                    match s {
+                        Tensor::I32 { .. } => assert_eq!(s, bt, "{name} job {j}"),
+                        Tensor::F32 { .. } => {
+                            let d = s.max_abs_diff(bt).unwrap();
+                            assert!(d < 1e-6, "{name} job {j}: max diff {d}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batch_of_one_matches_execute() {
+        let (b, m) = backend_and_manifest();
+        let meta = m.get("mm32").unwrap();
+        let a = Tensor::f32(&[32, 32], vec![0.5; 1024]);
+        let eye = Tensor::f32(&[32, 32], vec![1.0; 1024]);
+        let jobs = vec![vec![a.clone(), eye.clone()]];
+        let batched = b.execute_batch(meta, &jobs).unwrap();
+        let single = b.execute(meta, &[a, eye]).unwrap();
+        assert_eq!(batched[0], single);
     }
 
     #[test]

@@ -47,6 +47,23 @@ pub trait Backend {
 
     /// Execute the artifact on already-validated inputs.
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>>;
+
+    /// Execute one artifact over a micro-batch of jobs (each element of
+    /// `jobs` is one job's full input list, already validated). Returns
+    /// one output list per job, in job order.
+    ///
+    /// The default is a plain loop over [`Backend::execute`]; substrates
+    /// that can amortize work across compatible jobs (the interpreter
+    /// stacks them along a leading batch dimension) override this. The
+    /// serving layer's micro-batcher guarantees every job in a batch
+    /// targets the same artifact.
+    ///
+    /// Contract: batching is a throughput optimisation only — per-job
+    /// results must match what `execute` would have returned for the
+    /// same inputs (the tier-1 property tests enforce 1e-6 agreement).
+    fn execute_batch(&self, meta: &ArtifactMeta, jobs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        jobs.iter().map(|inputs| self.execute(meta, inputs)).collect()
+    }
 }
 
 /// Which backend implementation to instantiate.

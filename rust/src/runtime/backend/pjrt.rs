@@ -61,37 +61,54 @@ impl Backend for PjrtBackend {
     }
 
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-
         let cache = self.cache.lock().unwrap();
         let Some(exe) = cache.get(&meta.name) else {
             bail!("artifact {} was not prepared before execute", meta.name);
         };
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing artifact {}", meta.name))?[0][0]
-            .to_literal_sync()?;
-        drop(cache);
-
-        // return_tuple=True: decompose the tuple literal per manifest arity.
-        let parts = result
-            .to_tuple()
-            .with_context(|| format!("artifact {}: expected tuple output", meta.name))?;
-        if parts.len() != meta.outputs.len() {
-            bail!(
-                "artifact {}: manifest says {} outputs, tuple has {}",
-                meta.name,
-                meta.outputs.len(),
-                parts.len()
-            );
-        }
-        parts
-            .iter()
-            .zip(&meta.outputs)
-            .map(|(lit, m)| Tensor::from_literal(lit, m.dtype, &m.shape))
-            .collect()
+        run_one(exe, meta, inputs)
     }
+
+    /// Micro-batch path: one executable-cache lookup (and lock) for the
+    /// whole batch; each job still marshals its own literals — PJRT has
+    /// no cross-job fusion for distinct operand sets.
+    fn execute_batch(&self, meta: &ArtifactMeta, jobs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let cache = self.cache.lock().unwrap();
+        let Some(exe) = cache.get(&meta.name) else {
+            bail!("artifact {} was not prepared before execute", meta.name);
+        };
+        jobs.iter().map(|inputs| run_one(exe, meta, inputs)).collect()
+    }
+}
+
+/// Marshal one job through a compiled executable and decompose the
+/// tuple output per the manifest arity (return_tuple=True lowering).
+fn run_one(
+    exe: &xla::PjRtLoadedExecutable,
+    meta: &ArtifactMeta,
+    inputs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let literals: Vec<xla::Literal> = inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .with_context(|| format!("executing artifact {}", meta.name))?[0][0]
+        .to_literal_sync()?;
+    let parts = result
+        .to_tuple()
+        .with_context(|| format!("artifact {}: expected tuple output", meta.name))?;
+    if parts.len() != meta.outputs.len() {
+        bail!(
+            "artifact {}: manifest says {} outputs, tuple has {}",
+            meta.name,
+            meta.outputs.len(),
+            parts.len()
+        );
+    }
+    parts
+        .iter()
+        .zip(&meta.outputs)
+        .map(|(lit, m)| Tensor::from_literal(lit, m.dtype, &m.shape))
+        .collect()
 }

@@ -22,6 +22,9 @@ pub struct ExecStats {
     pub total_exec_secs: f64,
     /// Seconds spent preparing (compiling) the artifact on this backend.
     pub compile_secs: f64,
+    /// How many backend calls were micro-batched `execute_batch`
+    /// dispatches (each covering one or more of `executions`).
+    pub batch_calls: u64,
 }
 
 /// The execution runtime. Thread-safe: preparation happens under a
@@ -112,24 +115,7 @@ impl Runtime {
     pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
         // one manifest lookup, no meta clone: this is the serving hot path
         let meta = self.manifest.get(name)?;
-        if inputs.len() != meta.inputs.len() {
-            bail!(
-                "artifact {name}: expected {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
-            );
-        }
-        for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
-            if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
-                bail!(
-                    "artifact {name} input {i}: expected {:?}{:?}, got {:?}{:?}",
-                    m.dtype,
-                    m.shape,
-                    t.dtype(),
-                    t.shape()
-                );
-            }
-        }
+        validate_inputs(meta, inputs)?;
         self.prepare(meta)?;
 
         let t0 = Instant::now();
@@ -152,6 +138,78 @@ impl Runtime {
         Ok(outputs)
     }
 
+    /// Execute a micro-batch of same-artifact jobs in one backend
+    /// dispatch (manifest lookup, validation sweep, prepare, and stats
+    /// update amortized over the whole batch).
+    ///
+    /// The outer `Result` covers artifact-level failures (unknown name,
+    /// compile error) — nothing ran. The inner per-job `Result`s keep
+    /// job isolation: a job with malformed inputs fails alone while the
+    /// rest of the batch executes.
+    pub fn execute_batch(
+        &self,
+        name: &str,
+        jobs: &[Vec<Tensor>],
+    ) -> Result<Vec<Result<Vec<Tensor>>>> {
+        let meta = self.manifest.get(name)?;
+        self.prepare(meta)?;
+
+        // validation sweep: remember which jobs are runnable
+        let verdicts: Vec<Option<anyhow::Error>> = jobs
+            .iter()
+            .map(|inputs| validate_inputs(meta, inputs).err())
+            .collect();
+        let valid: Vec<usize> =
+            (0..jobs.len()).filter(|&i| verdicts[i].is_none()).collect();
+
+        let t0 = Instant::now();
+        let outputs = if valid.len() == jobs.len() {
+            self.backend.execute_batch(meta, jobs)?
+        } else {
+            // rare path: batch with malformed members — run the valid
+            // ones per job rather than deep-copying tensors into a
+            // dense sub-batch
+            valid
+                .iter()
+                .map(|&i| self.backend.execute(meta, &jobs[i]))
+                .collect::<Result<Vec<_>>>()?
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        if outputs.len() != valid.len() {
+            bail!(
+                "artifact {name}: batch of {} jobs returned {} results",
+                valid.len(),
+                outputs.len()
+            );
+        }
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let s = stats.entry(name.to_string()).or_default();
+            s.executions += valid.len() as u64;
+            s.total_exec_secs += dt;
+            s.batch_calls += 1;
+        }
+
+        // stitch per-job results back into submission order (valid
+        // slots are placeholders until the loop below fills them)
+        let mut results: Vec<Result<Vec<Tensor>>> = verdicts
+            .into_iter()
+            .map(|v| Err(v.unwrap_or_else(|| anyhow::anyhow!("unreached"))))
+            .collect();
+        for (&i, outs) in valid.iter().zip(outputs) {
+            if outs.len() != meta.outputs.len() {
+                results[i] = Err(anyhow::anyhow!(
+                    "artifact {name}: manifest says {} outputs, backend returned {}",
+                    meta.outputs.len(),
+                    outs.len()
+                ));
+            } else {
+                results[i] = Ok(outs);
+            }
+        }
+        Ok(results)
+    }
+
     pub fn stats(&self) -> HashMap<String, ExecStats> {
         self.stats.lock().unwrap().clone()
     }
@@ -163,4 +221,32 @@ impl Runtime {
             (s.executions > 0).then(|| s.total_exec_secs / s.executions as f64)
         })
     }
+}
+
+/// Check one job's inputs against the manifest (arity, shape, dtype) so
+/// shape bugs surface with readable errors instead of substrate aborts.
+fn validate_inputs(
+    meta: &crate::runtime::manifest::ArtifactMeta,
+    inputs: &[Tensor],
+) -> Result<()> {
+    let name = &meta.name;
+    if inputs.len() != meta.inputs.len() {
+        bail!(
+            "artifact {name}: expected {} inputs, got {}",
+            meta.inputs.len(),
+            inputs.len()
+        );
+    }
+    for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
+        if t.shape() != m.shape.as_slice() || t.dtype() != m.dtype {
+            bail!(
+                "artifact {name} input {i}: expected {:?}{:?}, got {:?}{:?}",
+                m.dtype,
+                m.shape,
+                t.dtype(),
+                t.shape()
+            );
+        }
+    }
+    Ok(())
 }

@@ -141,6 +141,10 @@ impl Tensor {
 
 /// Naive row-major matmul used as the rust-side oracle in tests and the
 /// end-to-end example (numpy is not available at runtime, by design).
+///
+/// Every term is accumulated, even for zero A elements — skipping them
+/// would change results for non-finite B (0 * inf = NaN) and break the
+/// exact-equivalence contract with [`matmul_batch_ref`].
 pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -148,9 +152,6 @@ pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32
     for i in 0..m {
         for p in 0..k {
             let av = a[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
             let brow = &b[p * n..(p + 1) * n];
             let crow = &mut c[i * n..(i + 1) * n];
             for j in 0..n {
@@ -159,6 +160,146 @@ pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32
         }
     }
     c
+}
+
+/// Cache-blocked matmul over operands stacked along a leading batch
+/// dimension: `a` is `[batch, m, k]`, `b` is `[batch, k, n]`, the result
+/// is `[batch, m, n]`. This is the interpreter's micro-batch fast path:
+/// one output allocation for the whole batch, and a 4-way k-unrolled
+/// inner kernel that keeps a C-row chunk live across four B rows
+/// (4x less C load/store traffic than [`matmul_ref`]'s rank-1 updates).
+///
+/// Per output element the additions happen in the same ascending-k
+/// order as [`matmul_ref`], so results are bitwise identical to `batch`
+/// independent `matmul_ref` calls — batching must never change what a
+/// client observes.
+pub fn matmul_batch_ref(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(a.len(), batch * m * k, "stacked A shape mismatch");
+    assert_eq!(b.len(), batch * k * n, "stacked B shape mismatch");
+    let mut c = vec![0.0f32; batch * m * n];
+    for t in 0..batch {
+        let a = &a[t * m * k..(t + 1) * m * k];
+        let b = &b[t * k * n..(t + 1) * k * n];
+        let c = &mut c[t * m * n..(t + 1) * m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let mut p = 0;
+            while p + 4 <= k {
+                let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+                let b0 = &b[p * n..(p + 1) * n];
+                let b1 = &b[(p + 1) * n..(p + 2) * n];
+                let b2 = &b[(p + 2) * n..(p + 3) * n];
+                let b3 = &b[(p + 3) * n..(p + 4) * n];
+                for j in 0..n {
+                    let mut v = crow[j];
+                    v += a0 * b0[j];
+                    v += a1 * b1[j];
+                    v += a2 * b2[j];
+                    v += a3 * b3[j];
+                    crow[j] = v;
+                }
+                p += 4;
+            }
+            while p < k {
+                let av = arow[p];
+                let brow = &b[p * n..(p + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+                p += 1;
+            }
+        }
+    }
+    c
+}
+
+/// Precomputed radix-2 FFT plan: bit-reversal permutation plus the
+/// twiddle factors of every stage, computed once and shared by all the
+/// transforms in a micro-batch (the trig calls dominate [`fft_ref`]'s
+/// cost; the recursive oracle also reallocates at every level).
+///
+/// [`FftPlan::run`] evaluates the same butterfly dataflow as
+/// [`fft_ref`] — identical twiddle angles, identical f64 arithmetic per
+/// output — so batched FFT results match the recursive oracle.
+pub struct FftPlan {
+    n: usize,
+    /// Bit-reversal permutation of the input indices.
+    rev: Vec<u32>,
+    /// Stage twiddles, concatenated: stage `len` contributes `len/2`
+    /// factors `e^{-2πik/len}`, for len = 2, 4, …, n (n-1 in total).
+    tw: Vec<(f64, f64)>,
+}
+
+impl FftPlan {
+    pub fn new(n: usize) -> FftPlan {
+        assert!(n.is_power_of_two(), "FFT size must be a power of two");
+        let rev = if n <= 1 {
+            vec![0u32; n]
+        } else {
+            let bits = n.trailing_zeros();
+            (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits)).collect()
+        };
+        let mut tw = Vec::with_capacity(n.saturating_sub(1));
+        let mut len = 2;
+        while len <= n {
+            for k in 0..len / 2 {
+                let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
+                tw.push((ang.cos(), ang.sin()));
+            }
+            len <<= 1;
+        }
+        FftPlan { n, rev, tw }
+    }
+
+    pub fn points(&self) -> usize {
+        self.n
+    }
+
+    /// Transform one split-plane (re, im) pair.
+    pub fn run(&self, re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let n = self.n;
+        assert_eq!(re.len(), n, "re plane length");
+        assert_eq!(im.len(), n, "im plane length");
+        if n <= 1 {
+            return (re.to_vec(), im.to_vec());
+        }
+        let mut buf: Vec<(f64, f64)> = (0..n)
+            .map(|i| {
+                let s = self.rev[i] as usize;
+                (re[s] as f64, im[s] as f64)
+            })
+            .collect();
+        let mut base = 0;
+        let mut len = 2;
+        while len <= n {
+            let half = len / 2;
+            for start in (0..n).step_by(len) {
+                for k in 0..half {
+                    let (wr, wi) = self.tw[base + k];
+                    let (er, ei) = buf[start + k];
+                    let (or_, oi) = buf[start + k + half];
+                    let tr = wr * or_ - wi * oi;
+                    let ti = wr * oi + wi * or_;
+                    buf[start + k] = (er + tr, ei + ti);
+                    buf[start + k + half] = (er - tr, ei - ti);
+                }
+            }
+            base += half;
+            len <<= 1;
+        }
+        (
+            buf.iter().map(|c| c.0 as f32).collect(),
+            buf.iter().map(|c| c.1 as f32).collect(),
+        )
+    }
 }
 
 /// Rust-side valid-mode int32 filter oracle (mirrors python ref.py).
@@ -263,6 +404,62 @@ mod tests {
         k[12] = 1;
         let out = filter2d_ref(&x, 6, xw, &k, 5);
         assert_eq!(out, vec![x[2 * 6 + 2], x[2 * 6 + 3], x[3 * 6 + 2], x[3 * 6 + 3]]);
+    }
+
+    #[test]
+    fn matmul_batch_matches_per_job_ref() {
+        // stacked batch == independent matmul_ref calls, bit for bit
+        let (batch, m, k, n) = (3usize, 5usize, 7usize, 4usize);
+        let mut x = 0.37f32;
+        let mut next = || {
+            x = (x * 1.7 + 0.13) % 2.0 - 1.0;
+            x
+        };
+        let a: Vec<f32> = (0..batch * m * k).map(|_| next()).collect();
+        let b: Vec<f32> = (0..batch * k * n).map(|_| next()).collect();
+        let got = matmul_batch_ref(&a, &b, batch, m, k, n);
+        for t in 0..batch {
+            let want = matmul_ref(&a[t * m * k..(t + 1) * m * k], &b[t * k * n..(t + 1) * k * n], m, k, n);
+            assert_eq!(&got[t * m * n..(t + 1) * m * n], want.as_slice(), "job {t}");
+        }
+    }
+
+    #[test]
+    fn matmul_batch_handles_k_remainder() {
+        // k not a multiple of the unroll width exercises the tail loop
+        for k in [1usize, 2, 3, 5, 6] {
+            let (m, n) = (3usize, 3usize);
+            let a: Vec<f32> = (0..m * k).map(|i| i as f32 * 0.5 - 1.0).collect();
+            let b: Vec<f32> = (0..k * n).map(|i| 1.0 - i as f32 * 0.25).collect();
+            let got = matmul_batch_ref(&a, &b, 1, m, k, n);
+            assert_eq!(got, matmul_ref(&a, &b, m, k, n), "k={k}");
+        }
+    }
+
+    #[test]
+    fn fft_plan_matches_recursive_ref() {
+        for n in [1usize, 2, 8, 64, 256] {
+            let re: Vec<f32> = (0..n).map(|i| (i as f32 * 0.31).sin()).collect();
+            let im: Vec<f32> = (0..n).map(|i| (i as f32 * 0.17).cos()).collect();
+            let plan = FftPlan::new(n);
+            assert_eq!(plan.points(), n);
+            let (pr, pi) = plan.run(&re, &im);
+            let (rr, ri) = fft_ref(&re, &im);
+            for j in 0..n {
+                assert!((pr[j] - rr[j]).abs() < 1e-4, "n={n} re[{j}]: {} vs {}", pr[j], rr[j]);
+                assert!((pi[j] - ri[j]).abs() < 1e-4, "n={n} im[{j}]: {} vs {}", pi[j], ri[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn fft_plan_impulse() {
+        let plan = FftPlan::new(8);
+        let mut re = vec![0.0f32; 8];
+        re[0] = 1.0;
+        let (or_, oi) = plan.run(&re, &[0.0; 8]);
+        assert!(or_.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+        assert!(oi.iter().all(|&v| v.abs() < 1e-6));
     }
 
     #[test]

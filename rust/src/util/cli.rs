@@ -169,6 +169,13 @@ impl Cli {
         })
     }
 
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self.get(name)?;
+        v.parse().map_err(|_| {
+            CliError::new(format!("--{name} must be a non-negative integer, got {v:?}"))
+        })
+    }
+
     pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
         let v = self.get(name)?;
         v.parse()
@@ -213,6 +220,20 @@ mod tests {
     fn defaults_apply() {
         let cli = Cli::new("t", "").opt("size", "42", "").parse(&[]).unwrap();
         assert_eq!(cli.get_usize("size").unwrap(), 42);
+    }
+
+    #[test]
+    fn u64_values_parse_and_reject() {
+        let cli = Cli::new("t", "")
+            .opt("seed", "1", "")
+            .parse(&argv(&["--seed", "18446744073709551615"]))
+            .unwrap();
+        assert_eq!(cli.get_u64("seed").unwrap(), u64::MAX);
+        let cli = Cli::new("t", "")
+            .opt("seed", "1", "")
+            .parse(&argv(&["--seed", "-3"]))
+            .unwrap();
+        assert!(cli.get_u64("seed").is_err());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Synthetic workload generation: deterministic task streams for the
 //! serving layer and the sweep benches. The paper evaluates fixed-size
 //! batch workloads; real deployments see mixed streams — this module
-//! generates both, seeded and reproducible.
+//! generates both, seeded and reproducible, in closed-loop (submit as
+//! fast as the server accepts) and open-loop (Poisson arrivals at a
+//! target rate, independent of service time) shapes.
 
+use crate::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref};
 use crate::runtime::Tensor;
 use crate::util::rng::Rng;
 
@@ -82,7 +85,8 @@ impl Mix {
         }
     }
 
-    fn pick(&self, rng: &mut Rng) -> TaskKind {
+    /// Sample one task kind from the weighted mix.
+    pub fn pick(&self, rng: &mut Rng) -> TaskKind {
         let total: f64 = self.entries.iter().map(|(_, w)| w).sum();
         let mut x = rng.f64() * total;
         for (k, w) in &self.entries {
@@ -105,6 +109,80 @@ pub fn generate_stream(mix: &Mix, n: usize, seed: u64) -> Vec<(TaskKind, Vec<Ten
             (kind, inputs)
         })
         .collect()
+}
+
+/// One request in an open-loop arrival stream.
+#[derive(Debug)]
+pub struct Arrival {
+    /// Seconds after stream start at which this job arrives.
+    pub at_secs: f64,
+    pub kind: TaskKind,
+    pub inputs: Vec<Tensor>,
+}
+
+/// Generate a deterministic open-loop stream: `n` tasks whose
+/// inter-arrival gaps are exponentially distributed with mean
+/// `1/rate_hz` (a Poisson process). Unlike the closed-loop
+/// [`generate_stream`], arrival times do not depend on how fast the
+/// server drains — driving a server with this stream and `try_submit`
+/// measures saturation behaviour at a controlled offered load.
+pub fn open_loop_stream(mix: &Mix, n: usize, seed: u64, rate_hz: f64) -> Vec<Arrival> {
+    assert!(rate_hz > 0.0, "arrival rate must be positive");
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            // inverse-CDF exponential; 1-u in (0,1] keeps ln finite
+            t += -(1.0 - rng.f64()).ln() / rate_hz;
+            let kind = mix.pick(&mut rng);
+            let inputs = kind.gen_inputs(&mut rng);
+            Arrival { at_secs: t, kind, inputs }
+        })
+        .collect()
+}
+
+/// Reference (oracle) outputs for one task, computed with the
+/// `runtime::tensor::*_ref` kernels — what a correct backend, batched
+/// or not, must return for these inputs. Dimensions come from the
+/// input tensors themselves, so this oracle tracks [`TaskKind::gen_inputs`]
+/// (and the manifest shapes it mirrors) with no duplicated constants.
+pub fn reference_outputs(kind: TaskKind, inputs: &[Tensor]) -> Vec<Tensor> {
+    match kind {
+        TaskKind::MmBlock | TaskKind::MmtChain => {
+            let (m, k) = (inputs[0].shape()[0], inputs[0].shape()[1]);
+            let n = inputs[1].shape()[1];
+            let c = matmul_ref(
+                inputs[0].as_f32().expect("mm inputs are f32"),
+                inputs[1].as_f32().expect("mm inputs are f32"),
+                m,
+                k,
+                n,
+            );
+            vec![Tensor::f32(&[m, n], c)]
+        }
+        TaskKind::FilterBatch => {
+            let tiles = inputs[0].as_i32().expect("filter tiles are i32");
+            let kern = inputs[1].as_i32().expect("filter kernel is i32");
+            let (batch, ih, iw) =
+                (inputs[0].shape()[0], inputs[0].shape()[1], inputs[0].shape()[2]);
+            let taps = inputs[1].shape()[0];
+            let (oh, ow) = (ih - (taps - 1), iw - (taps - 1));
+            let mut out = Vec::with_capacity(batch * oh * ow);
+            for t in 0..batch {
+                let tile = &tiles[t * ih * iw..(t + 1) * ih * iw];
+                out.extend(filter2d_ref(tile, ih, iw, kern, taps));
+            }
+            vec![Tensor::i32(&[batch, oh, ow], out)]
+        }
+        TaskKind::Fft1024 => {
+            let n = inputs[0].shape()[0];
+            let (re, im) = fft_ref(
+                inputs[0].as_f32().expect("fft planes are f32"),
+                inputs[1].as_f32().expect("fft planes are f32"),
+            );
+            vec![Tensor::f32(&[n], re), Tensor::f32(&[n], im)]
+        }
+    }
 }
 
 #[cfg(test)]
@@ -152,5 +230,66 @@ mod tests {
         let s = generate_stream(&mix, 400, 11);
         let mm = s.iter().filter(|(k, _)| *k == TaskKind::MmBlock).count();
         assert!(mm > 180, "mm count {mm} of 400");
+    }
+
+    #[test]
+    fn open_loop_is_deterministic_and_monotone() {
+        let a = open_loop_stream(&Mix::uniform(), 32, 7, 1000.0);
+        let b = open_loop_stream(&Mix::uniform(), 32, 7, 1000.0);
+        assert_eq!(a.len(), 32);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_secs, y.at_secs);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.inputs[0], y.inputs[0]);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].at_secs > w[0].at_secs, "arrival times must increase");
+        }
+        assert!(a[0].at_secs > 0.0);
+    }
+
+    #[test]
+    fn open_loop_hits_the_target_rate() {
+        // 2000 exponential gaps at 500 Hz: the span concentrates near
+        // n/rate = 4 s (std of the sum is rate^-1 * sqrt(n) ~ 0.09 s)
+        let s = open_loop_stream(&Mix::single(TaskKind::Fft1024), 2000, 13, 500.0);
+        let span = s.last().unwrap().at_secs;
+        assert!((3.5..=4.5).contains(&span), "span {span}");
+    }
+
+    #[test]
+    fn reference_outputs_shapes_match_artifacts() {
+        let mut rng = Rng::new(2);
+        for kind in TaskKind::all() {
+            let inputs = kind.gen_inputs(&mut rng);
+            let outs = reference_outputs(kind, &inputs);
+            match kind {
+                TaskKind::MmBlock => assert_eq!(outs[0].shape(), &[128, 128]),
+                TaskKind::FilterBatch => assert_eq!(outs[0].shape(), &[8, 32, 32]),
+                TaskKind::Fft1024 => {
+                    assert_eq!(outs.len(), 2);
+                    assert_eq!(outs[0].shape(), &[1024]);
+                }
+                TaskKind::MmtChain => assert_eq!(outs[0].shape(), &[32, 32]),
+            }
+        }
+    }
+
+    #[test]
+    fn reference_outputs_are_the_identity_oracle() {
+        // A @ I == A through the mm oracle
+        let mut a = vec![0.0f32; 128 * 128];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = (i % 17) as f32 - 8.0;
+        }
+        let mut eye = vec![0.0f32; 128 * 128];
+        for i in 0..128 {
+            eye[i * 128 + i] = 1.0;
+        }
+        let outs = reference_outputs(
+            TaskKind::MmBlock,
+            &[Tensor::f32(&[128, 128], a.clone()), Tensor::f32(&[128, 128], eye)],
+        );
+        assert_eq!(outs[0].as_f32().unwrap(), a.as_slice());
     }
 }

@@ -1,16 +1,18 @@
-//! Integration tests for the serving layer (leader/worker, per-worker
-//! backend instances). The default interpreter backend needs no
-//! artifacts on disk, so these always run.
+//! Integration tests for the serving layer (admission queue,
+//! micro-batching, least-loaded workers, backpressure). The default
+//! interpreter backend needs no artifacts on disk, so these always run.
 
-use ea4rca::coordinator::server::{serve_batch, Server};
+use std::time::Duration;
+
+use ea4rca::coordinator::server::{serve_batch, Server, ServerConfig, SubmitError};
 use ea4rca::runtime::tensor::matmul_ref;
-use ea4rca::runtime::{Manifest, Tensor};
+use ea4rca::runtime::{BackendKind, Manifest, Tensor};
 use ea4rca::util::rng::Rng;
 use ea4rca::workload::{generate_stream, Mix, TaskKind};
 
 #[test]
 fn serves_correct_numerics() {
-    let mut server = Server::start(2, Manifest::default_dir(), &["mm_pu128"]).unwrap();
+    let server = Server::start(2, Manifest::default_dir(), &["mm_pu128"]).unwrap();
     let mut rng = Rng::new(1);
     let a = rng.normal_vec(128 * 128);
     let b = rng.normal_vec(128 * 128);
@@ -34,13 +36,17 @@ fn serves_correct_numerics() {
         .map(|(x, y)| (x - y).abs())
         .fold(0.0f32, f32::max);
     assert!(err < 5e-3, "{err}");
-    assert!(result.latency_secs > 0.0);
+    // the latency split is populated and consistent
+    assert!(result.exec_secs > 0.0);
+    assert!(result.queue_secs >= 0.0);
+    assert!(result.latency_secs() >= result.exec_secs);
+    assert!(result.batch_size >= 1);
     server.shutdown().unwrap();
 }
 
 #[test]
 fn distributes_across_workers() {
-    let mut server = Server::start(3, Manifest::default_dir(), &["fft1024"]).unwrap();
+    let server = Server::start(3, Manifest::default_dir(), &["fft1024"]).unwrap();
     let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(
         &Mix::single(TaskKind::Fft1024),
         30,
@@ -49,22 +55,61 @@ fn distributes_across_workers() {
     .into_iter()
     .map(|(k, i)| (k.artifact().to_string(), i))
     .collect();
-    let (results, latency) = serve_batch(&mut server, jobs).unwrap();
+    let (results, latency) = serve_batch(&server, jobs).unwrap();
     assert_eq!(results.len(), 30);
     assert!(results.iter().all(|r| r.outputs.is_ok()));
     assert!(latency.p95 >= latency.p50);
     let report = server.shutdown().unwrap();
     assert_eq!(report.total_jobs, 30);
-    // round-robin: every worker saw exactly 10
+    // least-loaded dispatch: every job lands exactly once
+    assert_eq!(report.completed_jobs(), 30);
     for w in &report.workers {
-        assert_eq!(w.jobs, 10, "worker {}", w.worker);
-        assert_eq!(w.errors, 0);
+        assert_eq!(w.errors, 0, "worker {}", w.worker);
     }
+    // the whole stream was one artifact; its histogram covers all jobs
+    let hist = report.batch_hist.get("fft1024").expect("fft1024 served");
+    let jobs_in_hist: u64 = hist.iter().map(|(size, count)| *size as u64 * count).sum();
+    assert_eq!(jobs_in_hist, 30);
+    assert!(report.mean_batch_size("fft1024").unwrap() >= 1.0);
+}
+
+#[test]
+fn micro_batches_form_under_burst() {
+    // a queue-stuffed burst of one artifact must coalesce into batches
+    let config = ServerConfig {
+        n_workers: 2,
+        max_batch: 8,
+        max_linger: Duration::from_millis(2),
+        queue_cap: 256,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &["mm_pu128"],
+    )
+    .unwrap();
+    let jobs: Vec<(String, Vec<Tensor>)> =
+        generate_stream(&Mix::single(TaskKind::MmBlock), 48, 5)
+            .into_iter()
+            .map(|(k, i)| (k.artifact().to_string(), i))
+            .collect();
+    let (results, _) = serve_batch(&server, jobs).unwrap();
+    assert!(results.iter().all(|r| r.outputs.is_ok()));
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.completed_jobs(), 48);
+    // strictly fewer dispatches than jobs proves coalescing happened
+    assert!(
+        report.batches < 48,
+        "48 jobs should form fewer than 48 batches, got {}",
+        report.batches
+    );
+    assert!(report.mean_batch_size("mm_pu128").unwrap() > 1.0);
 }
 
 #[test]
 fn bad_artifact_is_an_error_not_a_crash() {
-    let mut server = Server::start(1, Manifest::default_dir(), &[]).unwrap();
+    let server = Server::start(1, Manifest::default_dir(), &[]).unwrap();
     let pending = server.submit("does_not_exist", vec![]).unwrap();
     let result = pending.wait().unwrap();
     assert!(result.outputs.is_err());
@@ -75,7 +120,7 @@ fn bad_artifact_is_an_error_not_a_crash() {
 
 #[test]
 fn mixed_stream_end_to_end() {
-    let mut server = Server::start(
+    let server = Server::start(
         2,
         Manifest::default_dir(),
         &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
@@ -85,7 +130,7 @@ fn mixed_stream_end_to_end() {
         .into_iter()
         .map(|(k, i)| (k.artifact().to_string(), i))
         .collect();
-    let (results, _) = serve_batch(&mut server, jobs).unwrap();
+    let (results, _) = serve_batch(&server, jobs).unwrap();
     assert!(results.iter().all(|r| r.outputs.is_ok()));
     server.shutdown().unwrap();
 }
@@ -93,4 +138,126 @@ fn mixed_stream_end_to_end() {
 #[test]
 fn zero_workers_rejected() {
     assert!(Server::start(0, Manifest::default_dir(), &[]).is_err());
+}
+
+#[test]
+fn degenerate_configs_rejected() {
+    let bad_batch = ServerConfig { max_batch: 0, ..ServerConfig::default() };
+    assert!(Server::start_with_config(
+        BackendKind::Interp,
+        bad_batch,
+        Manifest::default_dir(),
+        &[]
+    )
+    .is_err());
+    let bad_queue = ServerConfig { queue_cap: 0, ..ServerConfig::default() };
+    assert!(Server::start_with_config(
+        BackendKind::Interp,
+        bad_queue,
+        Manifest::default_dir(),
+        &[]
+    )
+    .is_err());
+}
+
+/// Satellite regression: a rejected submission must not count toward
+/// `ServeReport::total_jobs` (the old server bumped its counter before
+/// the send could fail). Saturate a tiny queue, then reconcile counts.
+#[test]
+fn saturated_submissions_are_not_counted() {
+    let config = ServerConfig {
+        n_workers: 1,
+        max_batch: 1,
+        max_linger: Duration::ZERO,
+        queue_cap: 2,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &["mm_pu128"],
+    )
+    .unwrap();
+    let mut rng = Rng::new(3);
+    let mut accepted = Vec::new();
+    let mut saturated = 0u64;
+    // submission is orders of magnitude faster than a 128^3 matmul, so
+    // a 64-job burst against a 2-slot queue must shed load
+    for _ in 0..64 {
+        let inputs = TaskKind::MmBlock.gen_inputs(&mut rng);
+        match server.try_submit("mm_pu128", inputs) {
+            Ok(p) => accepted.push(p),
+            Err(SubmitError::Saturated) => saturated += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(saturated > 0, "64-job burst never saturated a 2-slot queue");
+    assert!(!accepted.is_empty(), "nothing was admitted");
+    // every accepted job still completes (no hang, clean drain)
+    let n_accepted = accepted.len() as u64;
+    for p in accepted {
+        let r = p.wait().unwrap();
+        assert!(r.outputs.is_ok());
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.total_jobs, n_accepted, "rejected submissions were counted");
+    assert_eq!(report.completed_jobs(), n_accepted);
+}
+
+/// try_submit on a full queue returns Saturated immediately instead of
+/// hanging, and submit_timeout gives up after its deadline.
+#[test]
+fn saturation_is_an_error_not_a_hang() {
+    let config = ServerConfig {
+        n_workers: 1,
+        max_batch: 1,
+        max_linger: Duration::ZERO,
+        queue_cap: 1,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &["mm_pu128"],
+    )
+    .unwrap();
+    let mut rng = Rng::new(11);
+    let mut accepted = Vec::new();
+    // stuff the pipeline until admission refuses
+    let mut refused = false;
+    for _ in 0..64 {
+        match server.try_submit("mm_pu128", TaskKind::MmBlock.gen_inputs(&mut rng)) {
+            Ok(p) => accepted.push(p),
+            Err(SubmitError::Saturated) => {
+                refused = true;
+                break;
+            }
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(refused, "queue never saturated");
+    // a bounded wait also surfaces saturation rather than blocking:
+    // keep the queue full by measuring immediately after a refusal
+    let t0 = std::time::Instant::now();
+    let res = server.submit_timeout(
+        "mm_pu128",
+        TaskKind::MmBlock.gen_inputs(&mut rng),
+        Duration::from_millis(1),
+    );
+    match res {
+        // either the wait timed out (still saturated) or space opened
+        // up in time — both are legal; a hang is not
+        Ok(p) => accepted.push(p),
+        Err(SubmitError::Saturated) => {}
+        Err(e) => panic!("unexpected submit error: {e}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "submit_timeout took {:?}",
+        t0.elapsed()
+    );
+    for p in accepted {
+        assert!(p.wait().unwrap().outputs.is_ok());
+    }
+    server.shutdown().unwrap();
 }

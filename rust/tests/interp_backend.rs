@@ -190,6 +190,38 @@ fn warmup_and_stats_work_on_interp() {
 }
 
 #[test]
+fn runtime_execute_batch_counts_and_isolates_jobs() {
+    let rt = interp_runtime();
+    let mut rng = Rng::new(107);
+    let a = rng.normal_vec(1024);
+    let good = vec![
+        Tensor::f32(&[32, 32], a.clone()),
+        Tensor::f32(&[32, 32], vec![1.0; 1024]),
+    ];
+    // middle job has the wrong shape: it must fail alone
+    let jobs = vec![
+        good.clone(),
+        vec![Tensor::f32(&[2, 2], vec![0.0; 4]), Tensor::f32(&[2, 2], vec![0.0; 4])],
+        good,
+    ];
+    let results = rt.execute_batch("mm32", &jobs).unwrap();
+    assert_eq!(results.len(), 3);
+    assert!(results[0].is_ok());
+    let err = results[1].as_ref().unwrap_err().to_string();
+    assert!(err.contains("mm32"), "{err}");
+    assert!(results[2].is_ok());
+    // stats: 2 jobs ran through 1 batched dispatch
+    let stats = rt.stats();
+    assert_eq!(stats["mm32"].executions, 2);
+    assert_eq!(stats["mm32"].batch_calls, 1);
+    // batched output equals the single-execute output bit for bit
+    let single = rt.execute("mm32", &jobs[0]).unwrap();
+    assert_eq!(results[0].as_ref().unwrap()[0], single[0]);
+    // artifact-level failure: unknown name fails the whole dispatch
+    assert!(rt.execute_batch("nope", &jobs).is_err());
+}
+
+#[test]
 fn unknown_artifact_in_manifest_is_a_readable_error() {
     // an on-disk manifest naming an artifact the interpreter has no
     // kernel for: preparing it must fail with the artifact name
@@ -219,7 +251,7 @@ fn unknown_artifact_in_manifest_is_a_readable_error() {
 
 #[test]
 fn serve_smoke_multi_worker_mixed_stream() {
-    let mut server = Server::start_with_backend(
+    let server = Server::start_with_backend(
         BackendKind::Interp,
         3,
         Manifest::default_dir(),
@@ -231,22 +263,29 @@ fn serve_smoke_multi_worker_mixed_stream() {
         .into_iter()
         .map(|(k, i)| (k.artifact().to_string(), i))
         .collect();
-    let (results, latency) = serve_batch(&mut server, jobs).unwrap();
+    let (results, latency) = serve_batch(&server, jobs).unwrap();
     assert_eq!(results.len(), 30);
     assert!(results.iter().all(|r| r.outputs.is_ok()));
     assert!(latency.p95 >= latency.p50);
     let report = server.shutdown().unwrap();
     assert_eq!(report.total_jobs, 30);
-    // round-robin over 3 workers: every worker saw exactly 10
+    // least-loaded dispatch: nothing lost, nothing duplicated
+    assert_eq!(report.completed_jobs(), 30);
     for w in &report.workers {
-        assert_eq!(w.jobs, 10, "worker {}", w.worker);
-        assert_eq!(w.errors, 0);
+        assert_eq!(w.errors, 0, "worker {}", w.worker);
     }
+    // every dispatched micro-batch is accounted for in the histogram
+    let hist_jobs: u64 = report
+        .batch_hist
+        .values()
+        .flat_map(|h| h.iter().map(|(size, count)| *size as u64 * count))
+        .sum();
+    assert_eq!(hist_jobs, 30);
 }
 
 #[test]
 fn served_numerics_match_oracle() {
-    let mut server =
+    let server =
         Server::start_with_backend(BackendKind::Interp, 2, Manifest::default_dir(), &[]).unwrap();
     let mut rng = Rng::new(7);
     let a = rng.normal_vec(128 * 128);

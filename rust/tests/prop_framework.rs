@@ -217,6 +217,122 @@ fn prop_power_monotonic_in_duty() {
     });
 }
 
+// ---------------------------------------------------------------------
+// serving-path properties: micro-batched execution is a pure
+// throughput optimisation — results and reply routing never change
+// ---------------------------------------------------------------------
+
+/// Random inputs matching one artifact's manifest metadata.
+fn arb_inputs(
+    rng: &mut Rng,
+    meta: &ea4rca::runtime::ArtifactMeta,
+) -> Vec<ea4rca::runtime::Tensor> {
+    use ea4rca::runtime::{DType, Tensor};
+    meta.inputs
+        .iter()
+        .map(|tm| match tm.dtype {
+            DType::F32 => Tensor::f32(&tm.shape, rng.normal_vec(tm.elements())),
+            DType::I32 => Tensor::i32(&tm.shape, rng.int_vec_i32(tm.elements(), -64, 64)),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_execute_batch_is_elementwise_equivalent() {
+    use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
+    let rt = Runtime::with_backend(BackendKind::Interp, Manifest::default_dir()).unwrap();
+    // small artifacts from every kernel family the interpreter batches
+    let artifacts = ["mm32", "mm32_acc", "mm32_i8", "filter2d_pu8", "fft1024"];
+    check(Config::default().cases(15), "execute_batch == k * execute", |rng, size| {
+        let name = artifacts[rng.range_usize(0, artifacts.len() - 1)];
+        let meta = rt.manifest().get(name).map_err(|e| format!("{e:#}"))?.clone();
+        let k = 1 + size.min(5);
+        let jobs: Vec<Vec<Tensor>> = (0..k).map(|_| arb_inputs(rng, &meta)).collect();
+        let batched = rt
+            .execute_batch(name, &jobs)
+            .map_err(|e| format!("batch dispatch failed: {e:#}"))?;
+        ensure(batched.len() == k, || format!("{name}: {} results for {k} jobs", batched.len()))?;
+        for (i, (job, got)) in jobs.iter().zip(batched).enumerate() {
+            let got = got.map_err(|e| format!("{name} job {i}: {e:#}"))?;
+            let want = rt.execute(name, job).map_err(|e| format!("{name} job {i}: {e:#}"))?;
+            ensure(got.len() == want.len(), || format!("{name} job {i}: arity"))?;
+            for (g, w) in got.iter().zip(&want) {
+                match g {
+                    Tensor::I32 { .. } => {
+                        ensure(g == w, || format!("{name} job {i}: int outputs differ"))?
+                    }
+                    Tensor::F32 { .. } => {
+                        let d = g.max_abs_diff(w).map_err(|e| format!("{e:#}"))?;
+                        ensure(d <= 1e-6, || {
+                            format!("{name} job {i}: batched vs single max |err| {d}")
+                        })?
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batcher_never_reorders_a_clients_replies() {
+    use ea4rca::coordinator::server::{Server, ServerConfig};
+    use ea4rca::runtime::{BackendKind, Manifest, Tensor};
+    // One client submitting a same-artifact sequence: reply i must
+    // carry job i's result (no cross-wiring through batch formation),
+    // for any batch/linger shape. The marker rides in A[0,0] with B
+    // the identity, so C[0,0] recovers which job produced the output.
+    check(Config::default().cases(8), "per-client reply order", |rng, size| {
+        let config = ServerConfig {
+            n_workers: 1,
+            max_batch: 1 + rng.range_usize(0, 5),
+            max_linger: std::time::Duration::from_micros(rng.range_usize(0, 500) as u64),
+            queue_cap: 64,
+        };
+        let server = Server::start_with_config(
+            BackendKind::Interp,
+            config,
+            Manifest::default_dir(),
+            &["mm32"],
+        )
+        .map_err(|e| format!("start: {e:#}"))?;
+        let k = 2 + size.min(14);
+        let mut eye = vec![0.0f32; 32 * 32];
+        for d in 0..32 {
+            eye[d * 32 + d] = 1.0;
+        }
+        let mut pending = Vec::new();
+        for i in 0..k {
+            let mut a = vec![0.0f32; 32 * 32];
+            a[0] = (i + 1) as f32;
+            let inputs = vec![
+                Tensor::f32(&[32, 32], a),
+                Tensor::f32(&[32, 32], eye.clone()),
+            ];
+            let p = server
+                .submit_timeout(
+                    "mm32",
+                    inputs,
+                    std::time::Duration::from_secs(30),
+                )
+                .map_err(|e| format!("submit {i}: {e}"))?;
+            pending.push(p);
+        }
+        for (i, p) in pending.into_iter().enumerate() {
+            let r = p.wait().map_err(|e| format!("job {i}: {e:#}"))?;
+            let out = r.outputs.map_err(|e| format!("job {i}: {e:#}"))?;
+            let c00 = out[0].as_f32().map_err(|e| format!("{e:#}"))?[0];
+            ensure(c00 == (i + 1) as f32, || {
+                format!("reply {i} carries marker {c00} (expected {})", i + 1)
+            })?;
+        }
+        let report = server.shutdown().map_err(|e| format!("shutdown: {e:#}"))?;
+        ensure(report.total_jobs == k as u64, || {
+            format!("accepted {} of {k}", report.total_jobs)
+        })
+    });
+}
+
 #[test]
 fn prop_stats_summary_bounds() {
     use ea4rca::util::stats::summarize;

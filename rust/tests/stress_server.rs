@@ -1,0 +1,153 @@
+//! Concurrency stress test for the micro-batched serving path: a mixed
+//! stream through 4 workers, with every reply checked against the
+//! `tensor::*_ref` oracles and full conservation accounting (no job
+//! lost, none duplicated, every dispatch in the histogram).
+//!
+//! The full load (500 jobs x seeds 1-5, the ISSUE acceptance sweep)
+//! runs in release — CI has a dedicated `cargo test --release --test
+//! stress_server` job. Debug tier-1 runs a reduced load so `cargo test
+//! -q` stays fast.
+
+use std::time::Duration;
+
+use ea4rca::coordinator::server::{Server, ServerConfig};
+use ea4rca::runtime::{BackendKind, Manifest, Tensor};
+use ea4rca::workload::{generate_stream, reference_outputs, Mix, TaskKind};
+
+/// f32 comparison bound. The batched kernels are built to match the
+/// reference accumulation order exactly, so this is headroom, not a
+/// licence to drift.
+const TOL: f32 = 1e-4;
+
+fn assert_tensors_match(got: &[Tensor], want: &[Tensor], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: output arity");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{what} output {i}: shape");
+        match (g, w) {
+            (Tensor::I32 { .. }, Tensor::I32 { .. }) => {
+                assert_eq!(g, w, "{what} output {i}: int mismatch");
+            }
+            _ => {
+                let d = g.max_abs_diff(w).expect("comparable tensors");
+                assert!(d < TOL as f64, "{what} output {i}: max |err| {d}");
+            }
+        }
+    }
+}
+
+fn stress_one_seed(seed: u64, n_jobs: usize) {
+    let config = ServerConfig {
+        n_workers: 4,
+        max_batch: 8,
+        max_linger: Duration::from_micros(200),
+        queue_cap: 128,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
+    )
+    .expect("server start");
+
+    // oracle first (inputs move into the server on submit)
+    let stream = generate_stream(&Mix::uniform(), n_jobs, seed);
+    let mut pending = Vec::with_capacity(n_jobs);
+    let mut oracles = Vec::with_capacity(n_jobs);
+    for (kind, inputs) in stream {
+        oracles.push((kind, reference_outputs(kind, &inputs)));
+        // submit applies backpressure (bounded wait) rather than
+        // blocking forever; under 4 live workers it never saturates
+        // for 30 s, so unwrap doubles as a liveness assertion
+        pending.push(server.submit(kind.artifact(), inputs).expect("submit"));
+    }
+
+    let mut worker_seen = vec![0u64; 4];
+    for (i, (p, (kind, want))) in pending.into_iter().zip(&oracles).enumerate() {
+        let result = p.wait().expect("worker dropped a job");
+        assert!(result.queue_secs >= 0.0 && result.exec_secs >= 0.0, "job {i}");
+        assert!(result.batch_size >= 1 && result.batch_size <= 8, "job {i}");
+        let outputs = result
+            .outputs
+            .unwrap_or_else(|e| panic!("job {i} ({kind:?}) failed: {e:#}"));
+        // only successful replies carry a real worker index
+        assert!(result.worker < 4, "job {i}: bogus worker id");
+        worker_seen[result.worker] += 1;
+        assert_tensors_match(&outputs, want, &format!("seed {seed} job {i} ({kind:?})"));
+    }
+
+    let report = server.shutdown().expect("shutdown");
+    // conservation: accepted == completed == per-worker sum == histogram
+    assert_eq!(report.total_jobs, n_jobs as u64, "seed {seed}: accepted count");
+    assert_eq!(report.completed_jobs(), n_jobs as u64, "seed {seed}: completed count");
+    let by_worker: u64 = report.workers.iter().map(|w| w.jobs).sum();
+    assert_eq!(by_worker, n_jobs as u64, "seed {seed}: worker sum");
+    // the replies we counted per worker must agree with worker stats
+    for w in &report.workers {
+        assert_eq!(
+            w.jobs, worker_seen[w.worker],
+            "seed {seed}: worker {} reply count",
+            w.worker
+        );
+        assert_eq!(w.errors, 0, "seed {seed}: worker {} errors", w.worker);
+    }
+    let hist_jobs: u64 = report
+        .batch_hist
+        .values()
+        .flat_map(|h| h.iter().map(|(size, count)| *size as u64 * count))
+        .sum();
+    assert_eq!(hist_jobs, n_jobs as u64, "seed {seed}: histogram job count");
+    let hist_batches: u64 = report.batch_hist.values().flat_map(|h| h.values()).sum();
+    assert_eq!(hist_batches, report.batches, "seed {seed}: histogram batch count");
+}
+
+#[test]
+fn stress_mixed_stream_across_seeds() {
+    // release: the full acceptance sweep; debug: a reduced load so the
+    // default tier-1 `cargo test -q` stays quick
+    let (n_jobs, seeds): (usize, &[u64]) = if cfg!(debug_assertions) {
+        (120, &[1, 2])
+    } else {
+        (500, &[1, 2, 3, 4, 5])
+    };
+    for &seed in seeds {
+        stress_one_seed(seed, n_jobs);
+    }
+}
+
+#[test]
+fn stress_single_artifact_burst() {
+    // every job the same artifact: maximal batching pressure, and the
+    // histogram must still conserve jobs
+    let n_jobs = if cfg!(debug_assertions) { 64 } else { 256 };
+    let config = ServerConfig {
+        n_workers: 4,
+        max_batch: 8,
+        max_linger: Duration::from_micros(200),
+        queue_cap: 128,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Interp,
+        config,
+        Manifest::default_dir(),
+        &["mmt_cascade8"],
+    )
+    .expect("server start");
+    let stream = generate_stream(&Mix::single(TaskKind::MmtChain), n_jobs, 31);
+    let mut pending = Vec::new();
+    let mut oracles = Vec::new();
+    for (kind, inputs) in stream {
+        oracles.push(reference_outputs(kind, &inputs));
+        pending.push(server.submit(kind.artifact(), inputs).expect("submit"));
+    }
+    for (i, (p, want)) in pending.into_iter().zip(&oracles).enumerate() {
+        let outputs = p.wait().expect("reply").outputs.expect("job ok");
+        assert_tensors_match(&outputs, want, &format!("burst job {i}"));
+    }
+    let report = server.shutdown().expect("shutdown");
+    assert_eq!(report.completed_jobs(), n_jobs as u64);
+    assert!(
+        report.mean_batch_size("mmt_cascade8").unwrap() > 1.0,
+        "single-artifact burst never batched"
+    );
+}
