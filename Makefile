@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test stress artifacts pytest probe
+.PHONY: build test stress warm-bench artifacts pytest probe
 
 build:
 	cargo build --release
@@ -12,6 +12,10 @@ test:
 # full serving stress suite (500-job mixed streams, seeds 1-5)
 stress:
 	cargo test --release --test stress_server
+
+# prepared-artifact cache: warm-vs-cold per-job cost + build-once check
+warm-bench:
+	cargo bench --bench prepared_cache
 
 # AOT-lower the Layer-1/2 graphs to artifacts/*.hlo.txt + manifest.json
 artifacts:

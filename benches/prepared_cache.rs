@@ -1,0 +1,148 @@
+//! §Perf — the prepared-artifact cache: warm vs cold execution.
+//!
+//! The paper's throughput comes from paying setup once (graph build,
+//! twiddle generation, placement) and then streaming data through a
+//! fixed pipeline. This bench measures that amortization on the
+//! interpreter backend:
+//!
+//! * **cold** — a fresh `Runtime` per job: every execution pays
+//!   prepare (kernel resolve + shape validation + `FftPlan`
+//!   construction, the trig-heavy part) before running.
+//! * **warm** — one `Runtime` across all jobs: the plan is built once
+//!   and every later job is a cache hit.
+//!
+//! The cache-hit counters verify the build-once invariant, and a final
+//! serving section shows the first-job latency outlier that worker
+//! warm-up (`ea4rca serve` without `--no-warm`) removes on an
+//! fft-heavy mix.
+//!
+//! Run: `cargo bench --bench prepared_cache` (or `make warm-bench`)
+
+use std::time::Instant;
+
+use ea4rca::coordinator::server::{Server, ServerConfig};
+use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::util::stats::summarize;
+use ea4rca::util::table::{fmt_f, Table};
+
+const ITERS: usize = 40;
+
+/// Per-job seconds with a fresh runtime every time (cold prepare on
+/// the execution path).
+fn run_cold(name: &str, inputs: &[Tensor]) -> Vec<f64> {
+    (0..ITERS)
+        .map(|_| {
+            let rt = Runtime::with_backend(BackendKind::Interp, Manifest::default_dir())
+                .expect("runtime");
+            let t0 = Instant::now();
+            rt.execute(name, inputs).expect("cold execute");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+/// Per-job seconds against one long-lived, warmed runtime.
+fn run_warm(name: &str, inputs: &[Tensor]) -> Vec<f64> {
+    let rt =
+        Runtime::with_backend(BackendKind::Interp, Manifest::default_dir()).expect("runtime");
+    rt.warmup(&[name]).expect("warmup");
+    let samples = (0..ITERS)
+        .map(|_| {
+            let t0 = Instant::now();
+            rt.execute(name, inputs).expect("warm execute");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    // the build-once invariant, checked where it is measured
+    let cs = rt.cache_stats();
+    assert_eq!(cs.builds, 1, "{name}: prepared state must be built exactly once");
+    assert_eq!(cs.hits, ITERS as u64, "{name}: every job must be a cache hit");
+    let stats = rt.stats();
+    assert_eq!(stats[name].prepare_builds, 1, "{name}");
+    samples
+}
+
+fn fft_inputs(rng: &mut Rng, n: usize) -> Vec<Tensor> {
+    vec![
+        Tensor::f32(&[n], rng.normal_vec(n)),
+        Tensor::f32(&[n], rng.normal_vec(n)),
+    ]
+}
+
+fn main() {
+    let mut rng = Rng::new(31);
+    let mut t = Table::new(
+        "prepared-artifact cache: warm vs cold per-job cost (interp)",
+        &["artifact", "cold mean (ms)", "warm mean (ms)", "warm p50 (ms)", "speedup"],
+    );
+    let mut fft_speedup = 0.0;
+    for (name, n) in [("fft8192", 8192usize), ("fft1024", 1024)] {
+        let inputs = fft_inputs(&mut rng, n);
+        let cold = summarize(&run_cold(name, &inputs));
+        let warm = summarize(&run_warm(name, &inputs));
+        let speedup = cold.mean / warm.mean;
+        if name == "fft8192" {
+            fft_speedup = speedup;
+        }
+        t.row(&[
+            name.to_string(),
+            fmt_f(cold.mean * 1e3, 3),
+            fmt_f(warm.mean * 1e3, 3),
+            fmt_f(warm.p50 * 1e3, 3),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    // mm for scale: prepare is just dims there, so warm ~ cold
+    let mm_inputs = vec![
+        Tensor::f32(&[128, 128], rng.normal_vec(128 * 128)),
+        Tensor::f32(&[128, 128], rng.normal_vec(128 * 128)),
+    ];
+    let cold = summarize(&run_cold("mm_pu128", &mm_inputs));
+    let warm = summarize(&run_warm("mm_pu128", &mm_inputs));
+    t.row(&[
+        "mm_pu128".to_string(),
+        fmt_f(cold.mean * 1e3, 3),
+        fmt_f(warm.mean * 1e3, 3),
+        fmt_f(warm.p50 * 1e3, 3),
+        format!("{:.2}x", cold.mean / warm.mean),
+    ]);
+    t.print();
+    println!(
+        "acceptance (fft8192 warm >= 1.2x cold): {} ({fft_speedup:.2}x)",
+        if fft_speedup >= 1.2 { "PASS" } else { "MISS" }
+    );
+
+    // ---- serving: worker warm-up removes the first-job outlier ----
+    let n_jobs = 48;
+    let mut first_vs_rest = Vec::new();
+    for (label, warmup) in [("warmed", vec!["fft8192"]), ("cold start", vec![])] {
+        let server = Server::start_with_config(
+            BackendKind::Interp,
+            ServerConfig { n_workers: 2, ..ServerConfig::default() },
+            Manifest::default_dir(),
+            &warmup,
+        )
+        .expect("server");
+        let mut pending = Vec::new();
+        for _ in 0..n_jobs {
+            pending.push(
+                server
+                    .submit("fft8192", fft_inputs(&mut rng, 8192))
+                    .expect("submit"),
+            );
+        }
+        let lats: Vec<f64> = pending
+            .into_iter()
+            .map(|p| p.wait().expect("reply").latency_secs())
+            .collect();
+        server.shutdown().expect("shutdown");
+        let s = summarize(&lats);
+        first_vs_rest.push((label, s.p50 * 1e3, s.max * 1e3));
+    }
+    println!("\nfft8192 serving latency, {n_jobs} jobs x 2 workers:");
+    for (label, p50, max) in &first_vs_rest {
+        println!("  {label:<10} p50 {p50:.3} ms | max {max:.3} ms");
+    }
+    println!("(cold-start max carries the per-worker plan build; warmed should not)");
+}

@@ -84,6 +84,10 @@ fn main() {
     let mut speedups: Vec<(String, f64)> = Vec::new();
     for (label, mix) in [
         ("pure mm_pu128".to_string(), Mix::single(TaskKind::MmBlock)),
+        // fft rides the prepared-artifact cache: the plan (bit-reversal
+        // + twiddles) is built once per worker, shared by single-job
+        // and batched dispatches alike
+        ("pure fft1024".to_string(), Mix::single(TaskKind::Fft1024)),
         ("mm-heavy mixed".to_string(), Mix::mm_heavy()),
     ] {
         let unbatched = run_closed(&mix, n_jobs, 17, 1);

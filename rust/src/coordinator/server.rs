@@ -19,9 +19,12 @@
 //! ```
 //!
 //! Each worker thread owns its *own* backend instance (runtime +
-//! executable/kernel cache). Backends are not `Send` in general (the
+//! prepared-artifact cache). Backends are not `Send` in general (the
 //! real PJRT client is thread-bound), and per-worker instances also
 //! mirror the DU-PU pair isolation — workers never share hot state.
+//! Workers warm their cache at startup from the caller's warm-up list
+//! (artifact-load time), so first-job latency is not a compile/plan
+//! outlier, and reuse their batch scratch across dispatches.
 //! Micro-batching mirrors the paper's PS controller organising data
 //! movement around the compute substrate: compatible jobs reach a
 //! worker as one dispatch, so the interpreter's stacked kernels (and a
@@ -550,12 +553,15 @@ fn worker_main(
             return stats;
         }
     };
+    // input-list scratch reused across batch executions: the per-batch
+    // cost is moving Tensors, never reallocating the outer Vec
+    let mut inputs: Vec<Vec<Tensor>> = Vec::new();
     while let Ok(batch) = rx.recv() {
         let mut jobs = batch.jobs;
         let k = jobs.len();
-        let artifact = jobs[0].artifact.clone();
-        let inputs: Vec<Vec<Tensor>> =
-            jobs.iter_mut().map(|j| std::mem::take(&mut j.inputs)).collect();
+        let artifact = std::mem::take(&mut jobs[0].artifact);
+        inputs.clear();
+        inputs.extend(jobs.iter_mut().map(|j| std::mem::take(&mut j.inputs)));
         let t0 = Instant::now();
         let results = rt.execute_batch(&artifact, &inputs);
         let exec = t0.elapsed().as_secs_f64();

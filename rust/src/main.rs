@@ -55,6 +55,7 @@ fn usage() -> String {
      ea4rca exec --app mm --size 256 --seed 7\n\
      ea4rca serve --workers 4 --jobs 256 --mix mm-heavy --batch 8 --linger-us 200\n\
      ea4rca serve --rate 2000 --queue-cap 128     (open-loop arrivals, shed on saturation)\n\
+     ea4rca serve --no-warm                       (cold caches: A/B the prepared-artifact warm-up)\n\
      ea4rca sweep --table 6|7|8|9            (regenerate a paper table)\n\
      ea4rca generate --config configs/mm.json --out generated/mm\n\
      ea4rca fuse --configs configs/fft.json,configs/mm_small.json --out generated/fused\n\
@@ -256,6 +257,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("linger-us", "200", "max microseconds an under-full batch waits for company")
     .opt("queue-cap", "256", "admission queue capacity (backpressure bound)")
     .opt("rate", "0", "open-loop arrival rate in jobs/s (0 = closed loop)")
+    .flag(
+        "no-warm",
+        "skip the per-worker artifact warm-up (first jobs pay prepare; A/B for the prepared-artifact cache)",
+    )
     .parse(args)?;
     let mix = match cli.get("mix")?.as_str() {
         "uniform" => Mix::uniform(),
@@ -281,11 +286,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         max_linger: std::time::Duration::from_micros(cli.get_u64("linger-us")?),
         queue_cap: cli.get_usize("queue-cap")?,
     };
+    // workers warm their prepared-artifact caches at load time unless
+    // --no-warm (the cold A/B: first jobs then pay prepare on-path)
+    let warmup: &[&str] = if cli.has("no-warm") {
+        &[]
+    } else {
+        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"]
+    };
     let server = Server::start_with_config(
         ea4rca::runtime::BackendKind::from_env()?,
         config,
         ea4rca::runtime::Manifest::default_dir(),
-        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"],
+        warmup,
     )?;
 
     let t0 = std::time::Instant::now();

@@ -30,13 +30,31 @@ use anyhow::{bail, Result};
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
 use crate::runtime::tensor::Tensor;
 
+/// Prepared-artifact cache counters (see [`Backend::cache_stats`]).
+///
+/// The paper's whole performance argument is paying setup once (graph
+/// build, twiddle generation, placement) and streaming data through a
+/// fixed pipeline; these counters make that invariant observable:
+/// `builds` should stay at one per artifact per backend instance no
+/// matter how many jobs run.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Prepared artifacts constructed (compiled / planned) — by
+    /// `prepare` or lazily on first use.
+    pub builds: u64,
+    /// Lookups served from the cache without rebuilding anything.
+    pub hits: u64,
+}
+
 /// An execution substrate for AOT artifacts.
 ///
 /// Contract: the runtime calls [`Backend::prepare`] for an artifact
 /// before its first [`Backend::execute`], and validates inputs against
-/// the manifest before either call. Implementations cache whatever
-/// `prepare` builds; both methods take `&self` and must be callable
-/// concurrently.
+/// the manifest before either call. `prepare` builds the artifact's
+/// reusable state (compiled executable, FFT plan, blocking descriptors)
+/// exactly once into a per-backend prepared-artifact cache; the
+/// execute paths only look that state up. All methods take `&self` and
+/// must be callable concurrently.
 pub trait Backend {
     /// Human-readable substrate description (for `ea4rca info`).
     fn platform(&self) -> String;
@@ -44,6 +62,12 @@ pub trait Backend {
     /// Compile/instantiate `meta` (idempotent). `manifest` supplies the
     /// artifact directory for substrates that load files.
     fn prepare(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<()>;
+
+    /// Build/hit counters of the prepared-artifact cache. The default
+    /// (all zeros) is for substrates with nothing to cache.
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats::default()
+    }
 
     /// Execute the artifact on already-validated inputs.
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>>;

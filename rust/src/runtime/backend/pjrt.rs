@@ -12,6 +12,7 @@
 //! real xla-rs crate linked in (README.md "Building with PJRT").
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
@@ -19,20 +20,34 @@ use anyhow::{bail, Context, Result};
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
 use crate::runtime::tensor::Tensor;
 
-use super::Backend;
+use super::{Backend, CacheStats};
 
 /// PJRT substrate: client + executable cache. Not `Send` in general
 /// (the real xla client is thread-bound), which is why the serving
 /// layer builds one backend instance per worker thread.
+///
+/// The executable cache *is* this backend's prepared-artifact layer:
+/// [`Backend::prepare`] is the single compile point (the paper's
+/// `libadf.a` build), and the execute paths only look executables up —
+/// an unprepared artifact is a readable error, never a hidden compile
+/// on the hot path. Build/hit counters surface through
+/// [`Backend::cache_stats`] like the interpreter's.
 pub struct PjrtBackend {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    builds: AtomicU64,
+    hits: AtomicU64,
 }
 
 impl PjrtBackend {
     pub fn new() -> Result<PjrtBackend> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(PjrtBackend { client, cache: Mutex::new(HashMap::new()) })
+        Ok(PjrtBackend {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            builds: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        })
     }
 }
 
@@ -44,6 +59,7 @@ impl Backend for PjrtBackend {
     fn prepare(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<()> {
         let mut cache = self.cache.lock().unwrap();
         if cache.contains_key(&meta.name) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(());
         }
         let path = manifest.hlo_path(&meta.name)?;
@@ -56,8 +72,16 @@ impl Backend for PjrtBackend {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling artifact {}", meta.name))?;
+        self.builds.fetch_add(1, Ordering::Relaxed);
         cache.insert(meta.name.clone(), exe);
         Ok(())
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            builds: self.builds.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+        }
     }
 
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -65,6 +89,7 @@ impl Backend for PjrtBackend {
         let Some(exe) = cache.get(&meta.name) else {
             bail!("artifact {} was not prepared before execute", meta.name);
         };
+        self.hits.fetch_add(1, Ordering::Relaxed);
         run_one(exe, meta, inputs)
     }
 
@@ -76,6 +101,7 @@ impl Backend for PjrtBackend {
         let Some(exe) = cache.get(&meta.name) else {
             bail!("artifact {} was not prepared before execute", meta.name);
         };
+        self.hits.fetch_add(1, Ordering::Relaxed);
         jobs.iter().map(|inputs| run_one(exe, meta, inputs)).collect()
     }
 }

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::backend::{Backend, BackendKind};
+use crate::runtime::backend::{Backend, BackendKind, CacheStats};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 
@@ -25,6 +25,12 @@ pub struct ExecStats {
     /// How many backend calls were micro-batched `execute_batch`
     /// dispatches (each covering one or more of `executions`).
     pub batch_calls: u64,
+    /// Times the runtime built this artifact's prepared state (the
+    /// paper's one-time setup). Stays 1 for the life of a runtime.
+    pub prepare_builds: u64,
+    /// Times the prepared-artifact guard was consulted and the artifact
+    /// was already built — the hot path never re-resolving metadata.
+    pub prepare_hits: u64,
 }
 
 /// The execution runtime. Thread-safe: preparation happens under a
@@ -79,29 +85,41 @@ impl Runtime {
         self.backend.platform()
     }
 
-    /// Prepare (compile) the artifact if this runtime has not yet.
-    fn prepare(&self, meta: &crate::runtime::manifest::ArtifactMeta) -> Result<()> {
+    /// Prepare (compile) the artifact if this runtime has not yet: the
+    /// single point where per-artifact setup happens. Returns `true`
+    /// when the artifact was already prepared (a guard-set hit) so the
+    /// caller can fold the hit count into a stats lock it takes anyway
+    /// — the hot path pays one set lookup here, no extra lock and no
+    /// String clone.
+    fn prepare(&self, meta: &crate::runtime::manifest::ArtifactMeta) -> Result<bool> {
         let mut prepared = self.prepared.lock().unwrap();
         if prepared.contains(&meta.name) {
-            return Ok(());
+            return Ok(true);
         }
         let t0 = Instant::now();
         self.backend.prepare(&self.manifest, meta)?;
         let dt = t0.elapsed().as_secs_f64();
         prepared.insert(meta.name.clone());
-        self.stats
-            .lock()
-            .unwrap()
-            .entry(meta.name.clone())
-            .or_default()
-            .compile_secs += dt;
-        Ok(())
+        let mut stats = self.stats.lock().unwrap();
+        let s = stats.entry(meta.name.clone()).or_default();
+        s.compile_secs += dt;
+        s.prepare_builds += 1;
+        Ok(false)
     }
 
     /// Pre-compile a set of artifacts (startup warm-up).
     pub fn warmup(&self, names: &[&str]) -> Result<()> {
         for n in names {
-            self.prepare(self.manifest.get(n)?)?;
+            let meta = self.manifest.get(n)?;
+            if self.prepare(meta)? {
+                // not hot: account the redundant warm-up as a hit here
+                self.stats
+                    .lock()
+                    .unwrap()
+                    .entry(meta.name.clone())
+                    .or_default()
+                    .prepare_hits += 1;
+            }
         }
         Ok(())
     }
@@ -116,7 +134,7 @@ impl Runtime {
         // one manifest lookup, no meta clone: this is the serving hot path
         let meta = self.manifest.get(name)?;
         validate_inputs(meta, inputs)?;
-        self.prepare(meta)?;
+        let prepared_hit = self.prepare(meta)?;
 
         let t0 = Instant::now();
         let outputs = self.backend.execute(meta, inputs)?;
@@ -126,6 +144,7 @@ impl Runtime {
             let s = stats.entry(name.to_string()).or_default();
             s.executions += 1;
             s.total_exec_secs += dt;
+            s.prepare_hits += prepared_hit as u64;
         }
 
         if outputs.len() != meta.outputs.len() {
@@ -152,7 +171,7 @@ impl Runtime {
         jobs: &[Vec<Tensor>],
     ) -> Result<Vec<Result<Vec<Tensor>>>> {
         let meta = self.manifest.get(name)?;
-        self.prepare(meta)?;
+        let prepared_hit = self.prepare(meta)?;
 
         // validation sweep: remember which jobs are runnable
         let verdicts: Vec<Option<anyhow::Error>> = jobs
@@ -163,16 +182,17 @@ impl Runtime {
             (0..jobs.len()).filter(|&i| verdicts[i].is_none()).collect();
 
         let t0 = Instant::now();
-        let outputs = if valid.len() == jobs.len() {
-            self.backend.execute_batch(meta, jobs)?
+        let outputs: Vec<Result<Vec<Tensor>>> = if valid.len() == jobs.len() {
+            // batched fast path: a failure here is artifact-level
+            // (every job rode the same dispatch), so the outer ? is
+            // the honest signal
+            self.backend.execute_batch(meta, jobs)?.into_iter().map(Ok).collect()
         } else {
             // rare path: batch with malformed members — run the valid
             // ones per job rather than deep-copying tensors into a
-            // dense sub-batch
-            valid
-                .iter()
-                .map(|&i| self.backend.execute(meta, &jobs[i]))
-                .collect::<Result<Vec<_>>>()?
+            // dense sub-batch; a job's own backend error stays that
+            // job's result instead of failing the whole batch
+            valid.iter().map(|&i| self.backend.execute(meta, &jobs[i])).collect()
         };
         let dt = t0.elapsed().as_secs_f64();
         if outputs.len() != valid.len() {
@@ -183,11 +203,16 @@ impl Runtime {
             );
         }
         {
+            // count only jobs that actually produced outputs (on the
+            // fallback path a job's backend error is its own result,
+            // not an execution)
+            let ok_jobs = outputs.iter().filter(|r| r.is_ok()).count() as u64;
             let mut stats = self.stats.lock().unwrap();
             let s = stats.entry(name.to_string()).or_default();
-            s.executions += valid.len() as u64;
+            s.executions += ok_jobs;
             s.total_exec_secs += dt;
             s.batch_calls += 1;
+            s.prepare_hits += prepared_hit as u64;
         }
 
         // stitch per-job results back into submission order (valid
@@ -197,21 +222,27 @@ impl Runtime {
             .map(|v| Err(v.unwrap_or_else(|| anyhow::anyhow!("unreached"))))
             .collect();
         for (&i, outs) in valid.iter().zip(outputs) {
-            if outs.len() != meta.outputs.len() {
-                results[i] = Err(anyhow::anyhow!(
+            results[i] = match outs {
+                Err(e) => Err(e),
+                Ok(outs) if outs.len() != meta.outputs.len() => Err(anyhow::anyhow!(
                     "artifact {name}: manifest says {} outputs, backend returned {}",
                     meta.outputs.len(),
                     outs.len()
-                ));
-            } else {
-                results[i] = Ok(outs);
-            }
+                )),
+                Ok(outs) => Ok(outs),
+            };
         }
         Ok(results)
     }
 
     pub fn stats(&self) -> HashMap<String, ExecStats> {
         self.stats.lock().unwrap().clone()
+    }
+
+    /// Backend-level prepared-artifact cache counters (builds should
+    /// equal the number of distinct artifacts this runtime has run).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.backend.cache_stats()
     }
 
     /// Mean execution seconds for an artifact, if it has run.

@@ -16,7 +16,7 @@ pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
-pub use backend::{Backend, BackendKind};
+pub use backend::{Backend, BackendKind, CacheStats};
 pub use engine::Runtime;
 pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
 pub use tensor::{DType, Tensor};

@@ -181,9 +181,28 @@ pub fn matmul_batch_ref(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    let mut c = Vec::new();
+    matmul_batch_into(a, b, batch, m, k, n, &mut c);
+    c
+}
+
+/// [`matmul_batch_ref`] writing into a caller-owned buffer (cleared and
+/// resized), so the serving hot path can reuse one allocation across
+/// micro-batch dispatches instead of allocating `batch*m*n` floats per
+/// batch. Numerics are identical — this is purely an allocation seam.
+pub fn matmul_batch_into(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut Vec<f32>,
+) {
     assert_eq!(a.len(), batch * m * k, "stacked A shape mismatch");
     assert_eq!(b.len(), batch * k * n, "stacked B shape mismatch");
-    let mut c = vec![0.0f32; batch * m * n];
+    c.clear();
+    c.resize(batch * m * n, 0.0f32);
     for t in 0..batch {
         let a = &a[t * m * k..(t + 1) * m * k];
         let b = &b[t * k * n..(t + 1) * k * n];
@@ -218,17 +237,19 @@ pub fn matmul_batch_ref(
             }
         }
     }
-    c
 }
 
 /// Precomputed radix-2 FFT plan: bit-reversal permutation plus the
-/// twiddle factors of every stage, computed once and shared by all the
-/// transforms in a micro-batch (the trig calls dominate [`fft_ref`]'s
-/// cost; the recursive oracle also reallocates at every level).
+/// twiddle factors of every stage, computed once per artifact and
+/// shared by every transform — the interpreter's prepared-artifact
+/// cache holds one plan per fft size, used by the single-job *and*
+/// micro-batch paths (the trig calls dominate [`fft_ref`]'s cost; the
+/// recursive oracle also reallocates at every level).
 ///
 /// [`FftPlan::run`] evaluates the same butterfly dataflow as
 /// [`fft_ref`] — identical twiddle angles, identical f64 arithmetic per
-/// output — so batched FFT results match the recursive oracle.
+/// output — so planned FFT results match the recursive oracle, and any
+/// two paths through the plan match each other bitwise.
 pub struct FftPlan {
     n: usize,
     /// Bit-reversal permutation of the input indices.
@@ -434,6 +455,20 @@ mod tests {
             let got = matmul_batch_ref(&a, &b, 1, m, k, n);
             assert_eq!(got, matmul_ref(&a, &b, m, k, n), "k={k}");
         }
+    }
+
+    #[test]
+    fn matmul_batch_into_reuses_and_resizes_the_buffer() {
+        let a = vec![1.0f32, 2.0, 3.0, 4.0];
+        let eye = vec![1.0f32, 0.0, 0.0, 1.0];
+        // start with a dirty, oversized buffer: must be fully overwritten
+        let mut c = vec![9.0f32; 64];
+        matmul_batch_into(&a, &eye, 1, 2, 2, 2, &mut c);
+        assert_eq!(c, a);
+        // and grow a too-small one
+        let mut c = Vec::new();
+        matmul_batch_into(&a, &eye, 1, 2, 2, 2, &mut c);
+        assert_eq!(c, matmul_ref(&a, &eye, 2, 2, 2));
     }
 
     #[test]

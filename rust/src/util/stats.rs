@@ -23,7 +23,17 @@ pub fn summarize(samples: &[f64]) -> Summary {
         0.0
     };
     let mut sorted = samples.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // A NaN sample (e.g. a poisoned latency) must not panic the sort
+    // (the old partial_cmp().unwrap()) or poison the low-end stats:
+    // canonicalize to positive NaN first — runtime arithmetic can
+    // produce -NaN, which total_cmp would order *before* every real
+    // number — so every NaN sorts to the end, past max.
+    for v in &mut sorted {
+        if v.is_nan() {
+            *v = f64::NAN;
+        }
+    }
+    sorted.sort_by(f64::total_cmp);
     Summary {
         n,
         mean,
@@ -39,6 +49,12 @@ pub fn summarize(samples: &[f64]) -> Summary {
 pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty());
     assert!((0.0..=100.0).contains(&p));
+    debug_assert!(
+        sorted
+            .windows(2)
+            .all(|w| w[0].total_cmp(&w[1]) != std::cmp::Ordering::Greater),
+        "percentile input must be sorted (total order)"
+    );
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -96,6 +112,34 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 0.0);
         assert_eq!(percentile(&v, 100.0), 10.0);
         assert_eq!(percentile(&v, 50.0), 5.0);
+    }
+
+    #[test]
+    fn summarize_survives_nan_samples() {
+        // regression: partial_cmp().unwrap() used to panic the sort on
+        // any NaN sample; total_cmp sends NaN to the end instead
+        let s = summarize(&[2.0, f64::NAN, 1.0]);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0); // sorted: [1, 2, NaN]
+        assert!(s.max.is_nan());
+        assert!(s.mean.is_nan());
+        // negative-sign NaN (what 0.0/0.0 actually produces on x86)
+        // must also land at the end, not poison min/p50
+        let s = summarize(&[2.0, -f64::NAN, 1.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.p50, 2.0);
+        assert!(s.max.is_nan());
+        // all-NaN is also survivable
+        let s = summarize(&[f64::NAN, f64::NAN]);
+        assert!(s.min.is_nan() && s.max.is_nan());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "must be sorted")]
+    fn percentile_rejects_unsorted_input_in_debug() {
+        percentile(&[3.0, 1.0, 2.0], 50.0);
     }
 
     #[test]

@@ -190,6 +190,49 @@ fn warmup_and_stats_work_on_interp() {
 }
 
 #[test]
+fn prepare_runs_once_per_artifact_across_n_jobs() {
+    // the prepared-artifact contract: setup (kernel resolve, shape
+    // validation, fft plan build) is paid once per artifact per
+    // runtime, no matter how many jobs run — every later job is a
+    // cache hit
+    let rt = interp_runtime();
+    let mut rng = Rng::new(109);
+    let fft_job = || {
+        vec![
+            Tensor::f32(&[1024], vec![1.0; 1024]),
+            Tensor::f32(&[1024], vec![0.0; 1024]),
+        ]
+    };
+    let mm_job = vec![
+        Tensor::f32(&[32, 32], rng.normal_vec(1024)),
+        Tensor::f32(&[32, 32], rng.normal_vec(1024)),
+    ];
+    for _ in 0..5 {
+        rt.execute("fft1024", &fft_job()).unwrap();
+    }
+    let batch: Vec<Vec<Tensor>> = (0..3).map(|_| fft_job()).collect();
+    rt.execute_batch("fft1024", &batch).unwrap();
+    rt.execute("mm32", &mm_job).unwrap();
+
+    let stats = rt.stats();
+    assert_eq!(stats["fft1024"].prepare_builds, 1, "one plan build, ever");
+    // 5 single executes + 1 batch dispatch consulted the guard after
+    // the first build
+    assert_eq!(stats["fft1024"].prepare_hits, 5);
+    assert_eq!(stats["fft1024"].executions, 8);
+    assert_eq!(stats["mm32"].prepare_builds, 1);
+
+    // backend-level: two artifacts built, everything else cache hits
+    let cs = rt.cache_stats();
+    assert_eq!(cs.builds, 2, "fft1024 + mm32");
+    assert!(cs.hits >= 6, "execute-path lookups must hit, got {cs:?}");
+
+    // warming an already-run artifact builds nothing new
+    rt.warmup(&["fft1024", "mm32"]).unwrap();
+    assert_eq!(rt.cache_stats().builds, 2);
+}
+
+#[test]
 fn runtime_execute_batch_counts_and_isolates_jobs() {
     let rt = interp_runtime();
     let mut rng = Rng::new(107);
