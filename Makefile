@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test stress warm-bench artifacts pytest probe
+.PHONY: build test stress warm-bench sim-serve cost-bench artifacts pytest probe
 
 build:
 	cargo build --release
@@ -16,6 +16,16 @@ stress:
 # prepared-artifact cache: warm-vs-cold per-job cost + build-once check
 warm-bench:
 	cargo bench --bench prepared_cache
+
+# end-to-end smoke of the unified pipeline: serve a mixed stream on the
+# sim backend (predicted latency/energy on every result, cost-aware
+# placement, predicted-vs-measured report)
+sim-serve:
+	cargo run --release -- serve --backend sim --workers 2 --jobs 96 --mix mm-heavy
+
+# survey the AIE cost model's predictions (and check determinism)
+cost-bench:
+	cargo bench --bench cost_model
 
 # AOT-lower the Layer-1/2 graphs to artifacts/*.hlo.txt + manifest.json
 artifacts:

@@ -15,8 +15,8 @@ fn main() {
 
     // place the 6 MM PUs as the first-fit placer does
     let mut arr = AieArray::new(&p);
-    let regions: Vec<_> = (0..6).map(|_| arr.place(64).unwrap()).collect();
-    let centres: Vec<_> = regions.iter().map(region_centre).collect();
+    let placements: Vec<_> = (0..6).map(|_| arr.place(64).unwrap()).collect();
+    let centres: Vec<_> = placements.iter().map(|p| region_centre(p.primary())).collect();
 
     // Scenario A: ring of neighbour circuits (adjacent PUs exchange
     // halo/accumulator data) — the EA4RCA-recommended pattern.

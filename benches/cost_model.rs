@@ -1,0 +1,60 @@
+//! The sim backend's cost model, surveyed: predicted latency / power /
+//! energy / phase breakdown for every serving artifact across batch
+//! sizes, plus a determinism check (two independent runtimes must agree
+//! to the bit — the dispatcher's placement weights depend on it).
+//!
+//! Run: `cargo bench --bench cost_model`
+
+use ea4rca::runtime::{BackendKind, Manifest, Runtime};
+use ea4rca::util::table::{fmt_f, Table};
+
+fn main() {
+    let rt = Runtime::with_backend(BackendKind::Sim, Manifest::default_dir())
+        .expect("sim runtime");
+    let twin = Runtime::with_backend(BackendKind::Sim, Manifest::default_dir())
+        .expect("twin runtime");
+
+    let mut t = Table::new(
+        "AIE cost model — predicted dispatch cost per artifact",
+        &["Artifact", "Batch", "Latency (us)", "us/job", "Power (W)", "Energy (uJ)",
+          "Compute (us)", "Comm (us)", "Fetch (us)", "Stall (us)"],
+    );
+    for artifact in ["mm_pu128", "filter2d_pu8", "fft1024", "fft4096", "mmt_cascade8"] {
+        for batch in [1usize, 4, 8] {
+            let p = rt
+                .predict(artifact, batch)
+                .unwrap_or_else(|| panic!("{artifact}: no prediction"));
+            // determinism: an independent runtime predicts the same bits
+            let q = twin.predict(artifact, batch).expect("twin prediction");
+            assert_eq!(
+                p.latency_secs.to_bits(),
+                q.latency_secs.to_bits(),
+                "{artifact} x{batch}: cost model not deterministic"
+            );
+            t.row(&[
+                artifact.to_string(),
+                batch.to_string(),
+                fmt_f(p.latency_secs * 1e6, 2),
+                fmt_f(p.per_job_secs() * 1e6, 2),
+                fmt_f(p.power_w, 2),
+                fmt_f(p.energy_j * 1e6, 2),
+                fmt_f(p.compute_secs * 1e6, 2),
+                fmt_f(p.comm_secs * 1e6, 2),
+                fmt_f(p.fetch_secs * 1e6, 2),
+                fmt_f(p.stall_secs * 1e6, 2),
+            ]);
+        }
+        // batching must amortize the fixed dispatch overhead
+        let p1 = rt.predict(artifact, 1).unwrap();
+        let p8 = rt.predict(artifact, 8).unwrap();
+        assert!(
+            p8.per_job_secs() <= p1.per_job_secs() * 1.001,
+            "{artifact}: batch of 8 costs more per job than singles"
+        );
+    }
+    t.print();
+    println!(
+        "\npredictions are deterministic across runtimes and amortize with batch \
+         size — these are the weights the serving dispatcher places batches by."
+    );
+}

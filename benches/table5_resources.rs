@@ -31,16 +31,12 @@ fn main() {
         [("MM", 6, 64), ("Filter2D", 44, 8), ("FFT", 8, 10), ("MM-T", 50, 8)]
     {
         let mut arr = AieArray::new(&p);
-        // FFT PUs are 10 cores = 1 column + 2; place as 8 + 2.
+        // the placer handles non-tiling PUs directly (the FFT PU's 10
+        // cores land as 1 full column + a 2-core trailing column)
         let mut placed = 0;
         for _ in 0..pus {
-            if cores_per_pu % 8 == 0 {
-                arr.place(cores_per_pu).unwrap();
-            } else {
-                arr.place(8).unwrap();
-                arr.place(cores_per_pu - 8).unwrap();
-            }
-            placed += cores_per_pu;
+            let pl = arr.place(cores_per_pu).unwrap();
+            placed += pl.cores();
         }
         println!(
             "  {app:<9} {placed:>3} cores placed, array utilisation {:.0}%",

@@ -30,9 +30,11 @@ use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
 use crate::sim::core::KernelClass;
 use crate::util::json::Json;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct PuConfig {
     pub name: String,
+    /// Artifact / AIE kernel source name — the key that ties this
+    /// configuration to a runtime artifact in the unified pipeline.
     pub kernel: String,
     pub copies: usize,
     pub pu: ProcessingUnit,

@@ -10,9 +10,10 @@
 
 use crate::engine::compute::pu::ProcessingUnit;
 use crate::engine::data::du::DataUnit;
-use crate::engine::data::tpc::TpcMode;
+use crate::engine::data::ssc::SscMode;
+use crate::engine::data::tpc::{TaskBlock, TpcMode};
 use crate::sim::comm::TransferMethod;
-use crate::sim::ddr::Ddr;
+use crate::sim::ddr::{AmcMode, Ddr};
 use crate::sim::params::HwParams;
 use crate::sim::trace::{Phase, Trace};
 
@@ -53,6 +54,40 @@ impl GroupSpec {
     pub fn with_mode(mut self, mode: ExecMode) -> GroupSpec {
         self.mode = mode;
         self
+    }
+
+    /// One *serving lane*: a streaming DU (THR TPC — per-iteration
+    /// operand fetch from DDR, per-iteration result write-back) serving
+    /// `copies` deployed PU copies in parallel (PHD service). This is
+    /// the GroupSpec shape the sim backend's cost model runs: every PU
+    /// copy solves one serving job per engine iteration, so a dispatch
+    /// of `k` jobs on a `copies`-wide deployment is
+    /// `ceil(k / copies)` iterations of the lane.
+    pub fn serving_lane(
+        name: impl Into<String>,
+        pu: ProcessingUnit,
+        iters: u64,
+        copies: usize,
+    ) -> GroupSpec {
+        let copies = copies.max(1);
+        // every copy writes its result back each iteration
+        let out_bytes = pu.out_bytes_per_iter * copies;
+        GroupSpec {
+            name: name.into(),
+            du: DataUnit {
+                name: "serve-DU".into(),
+                amc_read: Some(AmcMode::Csb),
+                amc_write: Some(AmcMode::Csb),
+                tpc: TpcMode::Thr,
+                ssc_send: SscMode::Phd,
+                ssc_recv: SscMode::Phd,
+                tb: TaskBlock::new(0, 0, out_bytes),
+                pus: copies,
+            },
+            pu,
+            engine_iters: iters.max(1),
+            mode: ExecMode::Regular,
+        }
     }
 }
 
@@ -446,6 +481,25 @@ mod tests {
         let render = r.trace.render(60, 0, r.trace.horizon_ps());
         assert!(render.contains("G0.DU"));
         assert!(render.contains("G0.PU0"));
+    }
+
+    #[test]
+    fn serving_lane_is_valid_deterministic_and_monotone() {
+        let pu = mm_group(1, 1).pu;
+        let lane = GroupSpec::serving_lane("mm_pu128", pu.clone(), 4, 1);
+        assert!(lane.validate().is_ok());
+        assert_eq!(lane.cores(), 64);
+        let engine = SimEngine::new(HwParams::vck5000());
+        let a = engine.run(&[GroupSpec::serving_lane("mm_pu128", pu.clone(), 4, 1)]);
+        let b = engine.run(&[GroupSpec::serving_lane("mm_pu128", pu.clone(), 4, 1)]);
+        assert_eq!(a.makespan_secs.to_bits(), b.makespan_secs.to_bits());
+        // more iterations in the dispatch -> longer lane makespan
+        let k8 = engine.run(&[GroupSpec::serving_lane("mm_pu128", pu.clone(), 8, 1)]);
+        assert!(k8.makespan_secs > a.makespan_secs);
+        // a copies-wide deployment is a valid multi-PU group
+        let wide = GroupSpec::serving_lane("mm_pu128", pu, 2, 6);
+        assert!(wide.validate().is_ok());
+        assert_eq!(wide.cores(), 6 * 64);
     }
 
     #[test]

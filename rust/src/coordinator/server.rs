@@ -3,19 +3,25 @@
 //! receiving tasks "from the upper level", §3.1, running as a
 //! long-lived service).
 //!
-//! The serving path is micro-batched and backpressure-aware:
+//! The serving path is micro-batched, backpressure-aware, and
+//! cost-model-aware:
 //!
 //! ```text
 //! clients --submit/try_submit--> admission queue (bounded; Saturated
 //!             when full)              |
 //!                                dispatcher thread: coalesce same-
 //!                                artifact jobs into micro-batches
-//!                                (max_batch / max_linger), pick the
-//!                                least-loaded worker
+//!                                (max_batch / max_linger), place each
+//!                                batch on the least-loaded worker by
+//!                                *predicted execution cost* (queue
+//!                                depth weighted by the cost book, not
+//!                                raw job count)
 //!                                     |
 //!                        worker threads (own Runtime + backend each)
 //!                        execute_batch --> per-job replies with a
-//!                        queue-vs-exec latency split
+//!                        queue-vs-exec latency split + the batch's
+//!                        CostPrediction when the backend carries a
+//!                        cost model (the sim backend)
 //! ```
 //!
 //! Each worker thread owns its *own* backend instance (runtime +
@@ -32,15 +38,15 @@
 //! aggregated leader-side, including per-artifact batch-size
 //! histograms.
 
-use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{BackendKind, Runtime, Tensor};
+use crate::runtime::{BackendKind, CostPrediction, Runtime, Tensor};
 use crate::util::stats::{summarize, Summary};
 
 /// How long [`Server::submit`] waits for queue space before giving up
@@ -119,6 +125,12 @@ pub struct JobResult {
     /// Index of the worker that executed the job (`usize::MAX` for
     /// jobs that failed before reaching any worker).
     pub worker: usize,
+    /// Predicted AIE cost of the micro-batch this job rode in (latency,
+    /// energy, phase breakdown), when the backend carries a cost model
+    /// (the sim backend); `None` on measuring-only backends. The
+    /// prediction covers the whole dispatch — use
+    /// [`CostPrediction::per_job_secs`] for this job's amortized share.
+    pub predicted: Option<CostPrediction>,
 }
 
 impl JobResult {
@@ -160,9 +172,101 @@ struct Shared {
     cap: usize,
 }
 
-/// A coalesced same-artifact dispatch.
+/// A coalesced same-artifact dispatch, carrying the placement weight
+/// the dispatcher charged so the worker can release exactly that much.
 struct Batch {
     jobs: Vec<Job>,
+    weight: u64,
+}
+
+/// Per-artifact per-job execution-cost estimates (microseconds), shared
+/// between the dispatcher (which weights queue depth by predicted cost
+/// instead of raw job count) and the workers (which publish cost-model
+/// predictions, or measured costs on backends without a model).
+struct CostBook {
+    per_job_us: Mutex<HashMap<String, f64>>,
+}
+
+impl CostBook {
+    fn new() -> CostBook {
+        CostBook { per_job_us: Mutex::new(HashMap::new()) }
+    }
+
+    /// Placement weight of a `k`-job batch: per-job cost in whole
+    /// microseconds. An artifact the book has not seen borrows the
+    /// book's median per-job cost so its weight is commensurate with
+    /// the known entries; with an empty book everything weighs 1 per
+    /// job, which is the old job-count balancing.
+    fn batch_weight(&self, artifact: &str, k: usize) -> u64 {
+        let book = self.per_job_us.lock().unwrap();
+        let per_job = book.get(artifact).copied().or_else(|| {
+            let mut costs: Vec<f64> = book.values().copied().collect();
+            if costs.is_empty() {
+                return None;
+            }
+            costs.sort_by(f64::total_cmp);
+            Some(costs[costs.len() / 2])
+        });
+        match per_job {
+            Some(us) => ((us * k as f64).round() as u64).max(1),
+            None => k.max(1) as u64,
+        }
+    }
+
+    /// Publish a cost-model prediction (authoritative: overwrites).
+    fn record_predicted(&self, artifact: &str, per_job_secs: f64) {
+        self.per_job_us
+            .lock()
+            .unwrap()
+            .insert(artifact.to_string(), per_job_secs * 1e6);
+    }
+
+    /// Publish a measurement. Smoothed (EWMA, alpha 0.3) so one noisy
+    /// batch does not whipsaw placement.
+    fn record_measured(&self, artifact: &str, per_job_secs: f64) {
+        let mut book = self.per_job_us.lock().unwrap();
+        let us = per_job_secs * 1e6;
+        book.entry(artifact.to_string())
+            .and_modify(|old| *old += 0.3 * (us - *old))
+            .or_insert(us);
+    }
+}
+
+/// One artifact's predicted-vs-measured ledger (a worker's view; the
+/// [`ServeReport`] merges them leader-side).
+#[derive(Debug, Default, Clone)]
+pub struct ArtifactServeStats {
+    pub jobs: u64,
+    pub batches: u64,
+    /// Sum of measured batch execution walls (secs).
+    pub measured_exec_secs: f64,
+    /// Sum of predicted batch latencies (secs) over predicted batches.
+    pub predicted_exec_secs: f64,
+    /// Sum of predicted batch energies (J) over predicted batches.
+    pub predicted_energy_j: f64,
+    /// Batches that carried a cost-model prediction.
+    pub predicted_batches: u64,
+}
+
+impl ArtifactServeStats {
+    fn merge(&mut self, other: &ArtifactServeStats) {
+        self.jobs += other.jobs;
+        self.batches += other.batches;
+        self.measured_exec_secs += other.measured_exec_secs;
+        self.predicted_exec_secs += other.predicted_exec_secs;
+        self.predicted_energy_j += other.predicted_energy_j;
+        self.predicted_batches += other.predicted_batches;
+    }
+
+    /// Predicted/measured mean-batch-latency ratio, when both exist.
+    pub fn ratio(&self) -> Option<f64> {
+        if self.predicted_batches == 0 || self.measured_exec_secs <= 0.0 {
+            return None;
+        }
+        let meas = self.measured_exec_secs / self.batches.max(1) as f64;
+        let pred = self.predicted_exec_secs / self.predicted_batches as f64;
+        Some(pred / meas)
+    }
 }
 
 /// Per-worker accounting returned at shutdown.
@@ -173,6 +277,8 @@ pub struct WorkerStats {
     pub batches: u64,
     pub exec_secs: f64,
     pub errors: u64,
+    /// Per-artifact predicted-vs-measured ledger.
+    pub lanes: BTreeMap<String, ArtifactServeStats>,
 }
 
 /// Dispatcher-side accounting (batch shapes).
@@ -211,6 +317,17 @@ impl ServeReport {
             batches += count;
         }
         (batches > 0).then(|| jobs as f64 / batches as f64)
+    }
+
+    /// Per-artifact predicted-vs-measured ledger, merged across workers.
+    pub fn predicted_vs_measured(&self) -> BTreeMap<String, ArtifactServeStats> {
+        let mut merged: BTreeMap<String, ArtifactServeStats> = BTreeMap::new();
+        for w in &self.workers {
+            for (artifact, lane) in &w.lanes {
+                merged.entry(artifact.clone()).or_default().merge(lane);
+            }
+        }
+        merged
     }
 }
 
@@ -268,20 +385,24 @@ impl Server {
         let mut senders = Vec::new();
         let mut handles = Vec::new();
         let mut loads = Vec::new();
+        // the shared cost book: workers publish predicted (or measured)
+        // per-job costs, the dispatcher weights placement with them
+        let costs = Arc::new(CostBook::new());
         // readiness barrier: workers report once their runtime is up
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         for w in 0..config.n_workers {
             // a couple of batches of runway per worker keeps the
             // dispatcher ahead without hiding queueing from the metric
             let (tx, rx) = mpsc::sync_channel::<Batch>(2);
-            let load = Arc::new(AtomicUsize::new(0));
+            let load = Arc::new(AtomicU64::new(0));
             let dir = dir.clone();
             let warm = warm.clone();
             let ready = ready_tx.clone();
             let wload = Arc::clone(&load);
+            let wcosts = Arc::clone(&costs);
             let handle = std::thread::Builder::new()
                 .name(format!("ea4rca-worker-{w}"))
-                .spawn(move || worker_main(w, kind, dir, warm, rx, ready, wload))
+                .spawn(move || worker_main(w, kind, dir, warm, rx, ready, wload, wcosts))
                 .context("spawning worker")?;
             senders.push(tx);
             handles.push(handle);
@@ -302,10 +423,13 @@ impl Server {
             cap: config.queue_cap,
         });
         let dshared = Arc::clone(&shared);
+        let dcosts = Arc::clone(&costs);
         let (max_batch, max_linger) = (config.max_batch, config.max_linger);
         let dispatcher = std::thread::Builder::new()
             .name("ea4rca-dispatch".to_string())
-            .spawn(move || dispatcher_main(dshared, senders, loads, max_batch, max_linger))
+            .spawn(move || {
+                dispatcher_main(dshared, senders, loads, dcosts, max_batch, max_linger)
+            })
             .context("spawning dispatcher")?;
         Ok(Server { shared, dispatcher: Some(dispatcher), handles })
     }
@@ -447,7 +571,8 @@ fn take_same_artifact(
 fn dispatcher_main(
     shared: Arc<Shared>,
     senders: Vec<mpsc::SyncSender<Batch>>,
-    loads: Vec<Arc<AtomicUsize>>,
+    loads: Vec<Arc<AtomicU64>>,
+    costs: Arc<CostBook>,
     max_batch: usize,
     max_linger: Duration,
 ) -> DispatchStats {
@@ -487,16 +612,21 @@ fn dispatcher_main(
         shared.not_full.notify_all();
 
         stats.batches += 1;
+        // cost-model-aware placement weight: the batch's predicted
+        // execution cost (per-job cost book x batch size), falling back
+        // to raw job count for artifacts the book has not seen
+        let weight = costs.batch_weight(&artifact, jobs.len());
         *stats
             .batch_hist
             .entry(artifact)
             .or_default()
             .entry(jobs.len())
             .or_insert(0) += 1;
-        // least-loaded placement by in-flight job count (ties -> lowest
-        // id); a dead worker is marked and the batch re-dispatched to a
-        // survivor, so one crash costs capacity, not correctness
-        let mut batch = Batch { jobs };
+        // least-loaded placement by in-flight predicted cost (ties ->
+        // lowest id); a dead worker is marked and the batch
+        // re-dispatched to a survivor, so one crash costs capacity, not
+        // correctness
+        let mut batch = Batch { jobs, weight };
         loop {
             let Some(w) = (0..senders.len())
                 .filter(|&i| alive[i])
@@ -512,16 +642,17 @@ fn dispatcher_main(
                         exec_secs: 0.0,
                         batch_size: k,
                         worker: usize::MAX,
+                        predicted: None,
                     });
                 }
                 break;
             };
-            loads[w].fetch_add(batch.jobs.len(), Ordering::SeqCst);
+            loads[w].fetch_add(batch.weight, Ordering::SeqCst);
             match senders[w].send(batch) {
                 Ok(()) => break,
                 Err(send_err) => {
                     batch = send_err.0;
-                    loads[w].fetch_sub(batch.jobs.len(), Ordering::SeqCst);
+                    loads[w].fetch_sub(batch.weight, Ordering::SeqCst);
                     alive[w] = false;
                 }
             }
@@ -529,6 +660,7 @@ fn dispatcher_main(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_main(
     id: usize,
     kind: BackendKind,
@@ -536,7 +668,8 @@ fn worker_main(
     warmup: Vec<String>,
     rx: mpsc::Receiver<Batch>,
     ready: mpsc::Sender<Result<()>>,
-    load: Arc<AtomicUsize>,
+    load: Arc<AtomicU64>,
+    costs: Arc<CostBook>,
 ) -> WorkerStats {
     let mut stats = WorkerStats { worker: id, ..Default::default() };
     let rt = match Runtime::with_backend(kind, dir).and_then(|rt| {
@@ -553,11 +686,18 @@ fn worker_main(
             return stats;
         }
     };
+    // seed the cost book from the cost model at artifact-load time, so
+    // the dispatcher places cost-aware from the very first batch
+    for name in &warmup {
+        if let Some(p) = rt.predict(name, 1) {
+            costs.record_predicted(name, p.per_job_secs());
+        }
+    }
     // input-list scratch reused across batch executions: the per-batch
     // cost is moving Tensors, never reallocating the outer Vec
     let mut inputs: Vec<Vec<Tensor>> = Vec::new();
     while let Ok(batch) = rx.recv() {
-        let mut jobs = batch.jobs;
+        let Batch { mut jobs, weight } = batch;
         let k = jobs.len();
         let artifact = std::mem::take(&mut jobs[0].artifact);
         inputs.clear();
@@ -565,10 +705,33 @@ fn worker_main(
         let t0 = Instant::now();
         let results = rt.execute_batch(&artifact, &inputs);
         let exec = t0.elapsed().as_secs_f64();
-        load.fetch_sub(k, Ordering::SeqCst);
+        load.fetch_sub(weight, Ordering::SeqCst);
         stats.jobs += k as u64;
         stats.batches += 1;
         stats.exec_secs += exec;
+        // attach the cost model's view of this dispatch (memoized per
+        // batch size, so the steady state is a table lookup) and keep
+        // the shared cost book current for the dispatcher. Only batches
+        // that actually executed feed the book and the ledger — an
+        // artifact-level failure completes in microseconds and would
+        // otherwise poison placement weights and the predicted-vs-
+        // measured report with near-zero "costs".
+        let predicted = rt.predict(&artifact, k);
+        if results.is_ok() {
+            match &predicted {
+                Some(p) => costs.record_predicted(&artifact, p.per_job_secs()),
+                None => costs.record_measured(&artifact, exec / k.max(1) as f64),
+            }
+            let lane = stats.lanes.entry(artifact.clone()).or_default();
+            lane.jobs += k as u64;
+            lane.batches += 1;
+            lane.measured_exec_secs += exec;
+            if let Some(p) = &predicted {
+                lane.predicted_exec_secs += p.latency_secs;
+                lane.predicted_energy_j += p.energy_j;
+                lane.predicted_batches += 1;
+            }
+        }
         let reply_one = |job: Job, outputs: Result<Vec<Tensor>>, errors: &mut u64| {
             if outputs.is_err() {
                 *errors += 1;
@@ -581,6 +744,7 @@ fn worker_main(
                 exec_secs: exec,
                 batch_size: k,
                 worker: id,
+                predicted,
             }); // client may have gone away
         };
         match results {
@@ -650,4 +814,66 @@ pub fn serve_open_loop(
         results.push(p.wait()?);
     }
     Ok((results, shed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_book_weights_batches() {
+        let book = CostBook::new();
+        // empty book: weight degrades to the job count
+        assert_eq!(book.batch_weight("mm", 4), 4);
+        assert_eq!(book.batch_weight("mm", 0), 1);
+        // a prediction takes over: 250 us/job -> a 4-job batch is 1000
+        book.record_predicted("mm", 250e-6);
+        assert_eq!(book.batch_weight("mm", 4), 1000);
+        // predictions are authoritative (overwrite, no smoothing)
+        book.record_predicted("mm", 100e-6);
+        assert_eq!(book.batch_weight("mm", 1), 100);
+        // sub-microsecond jobs still cost at least 1
+        book.record_predicted("tiny", 1e-9);
+        assert_eq!(book.batch_weight("tiny", 2), 1);
+        // unseen artifacts borrow the book median (sorted [~0, 100],
+        // upper middle 100 us/job) so their weights stay commensurate
+        assert_eq!(book.batch_weight("unseen", 2), 200);
+    }
+
+    #[test]
+    fn cost_book_smooths_measurements() {
+        let book = CostBook::new();
+        book.record_measured("fft", 100e-6);
+        assert_eq!(book.batch_weight("fft", 1), 100);
+        // EWMA alpha 0.3: 100 + 0.3*(200-100) = 130
+        book.record_measured("fft", 200e-6);
+        assert_eq!(book.batch_weight("fft", 1), 130);
+    }
+
+    #[test]
+    fn lane_ledger_merges_and_ratios() {
+        let mut a = ArtifactServeStats {
+            jobs: 4,
+            batches: 2,
+            measured_exec_secs: 2.0,
+            predicted_exec_secs: 1.0,
+            predicted_energy_j: 0.5,
+            predicted_batches: 2,
+        };
+        let b = ArtifactServeStats {
+            jobs: 2,
+            batches: 2,
+            measured_exec_secs: 2.0,
+            predicted_exec_secs: 3.0,
+            predicted_energy_j: 0.5,
+            predicted_batches: 2,
+        };
+        a.merge(&b);
+        assert_eq!(a.jobs, 6);
+        assert_eq!(a.batches, 4);
+        // measured mean 1.0 s/batch, predicted mean 1.0 s/batch
+        assert!((a.ratio().unwrap() - 1.0).abs() < 1e-12);
+        let empty = ArtifactServeStats::default();
+        assert!(empty.ratio().is_none());
+    }
 }

@@ -13,8 +13,11 @@
 //!   ([`codegen`]), the four accelerators ([`apps`]) and the SOTA
 //!   baselines ([`baselines`]) — running over a calibrated VCK5000
 //!   simulator ([`sim`]) with real numerics executed through a pluggable
-//!   [`runtime::Backend`]: the pure-Rust interpreter (default, hermetic)
-//!   or the PJRT CPU client (`--features pjrt`).
+//!   [`runtime::Backend`]: the pure-Rust interpreter (default, hermetic),
+//!   the sim backend (interpreter numerics + the event-driven AIE cost
+//!   model, unifying the two stacks behind one artifact pipeline — see
+//!   DESIGN.md "One artifact pipeline"), or the PJRT CPU client
+//!   (`--features pjrt`).
 //!
 //! See DESIGN.md for the substitution table (what the paper ran on silicon
 //! vs what this repo provides) and EXPERIMENTS.md for how to run the

@@ -8,9 +8,12 @@
 //!   resources — print the Table 5 resource-utilisation table
 //!   info      — backend platform + artifact inventory
 //!
-//! The execution backend is selected with `EA4RCA_BACKEND=interp|pjrt`
-//! (default: the pure-Rust interpreter, which needs no artifacts on
-//! disk and no native libraries).
+//! The execution backend is selected with `--backend interp|sim|pjrt`
+//! on `run`/`serve` (or `EA4RCA_BACKEND` for every command; the flag
+//! wins). Default: the pure-Rust interpreter, which needs no artifacts
+//! on disk and no native libraries. `sim` runs the same numerics plus
+//! the event-driven AIE cost model, attaching predicted latency/energy
+//! to every result.
 //!
 //! Exit codes: 0 success, 1 runtime error, 2 usage error.
 
@@ -19,7 +22,7 @@ use anyhow::{bail, Result};
 use ea4rca::apps::{fft, filter2d, mm, mmt, table5_usage};
 use ea4rca::codegen::{config::PuConfig, generator};
 use ea4rca::report;
-use ea4rca::runtime::{Runtime, Tensor};
+use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
 use ea4rca::sim::params::HwParams;
 use ea4rca::util::cli::{Cli, CliError};
 use ea4rca::util::rng::Rng;
@@ -48,20 +51,40 @@ fn main() {
 fn usage() -> String {
     "ea4rca <run|exec|serve|generate|resources|info> [options]\n\
      \n\
-     ea4rca run --app mm --size 768 --pus 6 [--trace]\n\
+     ea4rca run --app mm --size 768 --pus 6 [--trace] [--backend interp|sim|pjrt]\n\
      ea4rca run --app filter2d --height 3480 --width 2160 --pus 44\n\
      ea4rca run --app fft --size 1024 --pus 8 --tasks 4096\n\
      ea4rca run --app mmt --iters 20000\n\
      ea4rca exec --app mm --size 256 --seed 7\n\
      ea4rca serve --workers 4 --jobs 256 --mix mm-heavy --batch 8 --linger-us 200\n\
+     ea4rca serve --backend sim                   (cost-model-aware serving: predicted latency/energy per result)\n\
      ea4rca serve --rate 2000 --queue-cap 128     (open-loop arrivals, shed on saturation)\n\
      ea4rca serve --no-warm                       (cold caches: A/B the prepared-artifact warm-up)\n\
      ea4rca sweep --table 6|7|8|9            (regenerate a paper table)\n\
      ea4rca generate --config configs/mm.json --out generated/mm\n\
      ea4rca fuse --configs configs/fft.json,configs/mm_small.json --out generated/fused\n\
      ea4rca resources\n\
-     ea4rca info\n"
+     ea4rca info\n\
+     \n\
+     backend precedence: --backend flag > EA4RCA_BACKEND env > interp (default)\n"
         .to_string()
+}
+
+/// Resolve the execution backend for a command: the `--backend` flag
+/// when given, else `$EA4RCA_BACKEND`, else the interpreter.
+fn backend_from(cli: &Cli) -> Result<BackendKind> {
+    let v = cli.get("backend")?;
+    if v.is_empty() {
+        return BackendKind::from_env();
+    }
+    match BackendKind::parse(&v) {
+        Ok(kind) => Ok(kind),
+        Err(_) => Err(CliError {
+            msg: format!("--backend must be interp | sim | pjrt, got {v:?}"),
+            help: false,
+        }
+        .into()),
+    }
 }
 
 fn real_main() -> Result<()> {
@@ -101,11 +124,20 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("pus", "6", "active PU quantity")
         .opt("tasks", "4096", "FFT batch size")
         .opt("iters", "20000", "MM-T chain iterations")
+        .opt(
+            "backend",
+            "",
+            "numeric cross-check backend: interp | sim | pjrt \
+             (flag wins over EA4RCA_BACKEND; default interp)",
+        )
         .flag("trace", "record + print the phase timeline")
         .parse(args)?;
 
     let p = HwParams::vck5000();
     let trace = cli.has("trace");
+    // validate the backend choice up front: a typo'd --backend must be a
+    // usage error before the simulation runs, not after
+    let backend = backend_from(&cli)?;
     let app = cli.get("app")?;
     let report = match app.as_str() {
         "mm" => mm::run(&p, cli.get_usize("size")?, cli.get_usize("pus")?, trace)?,
@@ -160,7 +192,46 @@ fn cmd_run(args: &[String]) -> Result<()> {
         let horizon = report.sim.trace.horizon_ps().min(HwParams::ps(1e-3));
         println!("\n{}", report.sim.trace.render(100, 0, horizon.max(1)));
     }
+
+    // Unified-pipeline cross-check: push one representative serving job
+    // of this app through the runtime on the selected backend and line
+    // its measured per-job cost up against the AIE cost model (when the
+    // backend carries one). Timing-model and numerics paths, one command.
+    let artifact = match app.as_str() {
+        "mm" => "mm_pu128".to_string(),
+        "filter2d" => "filter2d_pu8".to_string(),
+        "fft" => format!("fft{}", cli.get_usize("size")?),
+        _ => "mmt_cascade8".to_string(),
+    };
+    match cross_check(backend, &artifact) {
+        Ok(line) => println!("{line}"),
+        Err(e) => println!("  x-check     : skipped ({e:#})"),
+    }
     Ok(())
+}
+
+/// Execute one seeded job of `artifact` on `kind`, reporting measured
+/// (and, on a cost-model backend, predicted) per-job cost.
+fn cross_check(kind: BackendKind, artifact: &str) -> Result<String> {
+    let rt = Runtime::with_backend(kind, Manifest::default_dir())?;
+    let meta = rt.manifest().get(artifact)?;
+    let inputs = ea4rca::workload::seeded_inputs(meta, &mut Rng::new(7));
+    let t0 = std::time::Instant::now();
+    rt.execute(artifact, &inputs)?;
+    let measured = t0.elapsed().as_secs_f64();
+    let mut line = format!(
+        "  x-check     : {artifact} via {} backend — measured {:.3} ms/job",
+        rt.backend_kind().name(),
+        measured * 1e3
+    );
+    if let Some(p) = rt.predict(artifact, 1) {
+        line.push_str(&format!(
+            " | predicted {:.3} ms, {:.3} mJ on the AIE (cost model)",
+            p.latency_secs * 1e3,
+            p.energy_j * 1e3
+        ));
+    }
+    Ok(line)
 }
 
 fn cmd_exec(args: &[String]) -> Result<()> {
@@ -257,6 +328,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     .opt("linger-us", "200", "max microseconds an under-full batch waits for company")
     .opt("queue-cap", "256", "admission queue capacity (backpressure bound)")
     .opt("rate", "0", "open-loop arrival rate in jobs/s (0 = closed loop)")
+    .opt(
+        "backend",
+        "",
+        "worker backend: interp | sim | pjrt (sim attaches predicted latency/energy \
+         to every result; flag wins over EA4RCA_BACKEND)",
+    )
     .flag(
         "no-warm",
         "skip the per-worker artifact warm-up (first jobs pay prepare; A/B for the prepared-artifact cache)",
@@ -293,12 +370,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     } else {
         &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"]
     };
-    let server = Server::start_with_config(
-        ea4rca::runtime::BackendKind::from_env()?,
-        config,
-        ea4rca::runtime::Manifest::default_dir(),
-        warmup,
-    )?;
+    let kind = backend_from(&cli)?;
+    println!("backend: {}", kind.name());
+    let server = Server::start_with_config(kind, config, Manifest::default_dir(), warmup)?;
 
     let t0 = std::time::Instant::now();
     let (results, shed) = if rate > 0.0 {
@@ -353,6 +427,15 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             w.worker, w.jobs, w.batches, w.exec_secs * 1e3
         );
     }
+    // the cost model's view of the run, against what actually happened
+    let pvm = report.predicted_vs_measured();
+    if pvm.values().any(|s| s.predicted_batches > 0) {
+        let mut t = ea4rca::report::cost_table("predicted vs measured (AIE cost model)");
+        for (artifact, lane) in &pvm {
+            ea4rca::report::cost_row(&mut t, artifact, lane);
+        }
+        t.print();
+    }
     Ok(())
 }
 
@@ -370,7 +453,7 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         let dir = std::path::PathBuf::from(cli.get("out")?);
         proj.write_to(&dir)?;
         println!(
-            "generated {}/graph.h (+.cpp, Makefile): PU '{}', {} cores, {} PLIOs, {} copies",
+            "generated {}/graph.h (+.cpp, Makefile, pu_config.json): PU '{}', {} cores, {} PLIOs, {} copies",
             dir.display(),
             cfg.name,
             cfg.pu.cores(),

@@ -3,6 +3,7 @@
 //! rows (Tables 6-10) with consistent units.
 
 use crate::coordinator::controller::RunReport;
+use crate::coordinator::server::ArtifactServeStats;
 use crate::util::table::{fmt_f, fmt_sci, Table};
 
 /// A Table 6/7-style performance table (GOPS-class apps).
@@ -70,6 +71,40 @@ pub fn tasks_sci(tps: f64) -> String {
     fmt_sci(tps)
 }
 
+/// The serving layer's predicted-vs-measured table (cost-model
+/// calibration view: what the sim backend predicted for each dispatch
+/// against what the substrate measured).
+pub fn cost_table(title: &str) -> Table {
+    Table::new(
+        title,
+        &["Artifact", "Jobs", "Batches", "Measured ms/b", "Predicted ms/b",
+          "Pred/Meas", "Energy (mJ/b)"],
+    )
+}
+
+/// Append one artifact's predicted-vs-measured ledger as a row.
+pub fn cost_row(t: &mut Table, artifact: &str, s: &ArtifactServeStats) {
+    let measured_ms = s.measured_exec_secs / s.batches.max(1) as f64 * 1e3;
+    let (predicted, energy, ratio) = if s.predicted_batches > 0 {
+        (
+            fmt_f(s.predicted_exec_secs / s.predicted_batches as f64 * 1e3, 3),
+            fmt_f(s.predicted_energy_j / s.predicted_batches as f64 * 1e3, 3),
+            s.ratio().map(|r| format!("{r:.2}x")).unwrap_or_else(|| "n/a".into()),
+        )
+    } else {
+        ("n/a".into(), "n/a".into(), "n/a".into())
+    };
+    t.row(&[
+        artifact.to_string(),
+        s.jobs.to_string(),
+        s.batches.to_string(),
+        fmt_f(measured_ms, 3),
+        predicted,
+        ratio,
+        energy,
+    ]);
+}
+
 /// Paper-vs-measured comparison row for EXPERIMENTS.md-style output.
 pub fn compare_line(metric: &str, paper: f64, measured: f64) -> String {
     let ratio = measured / paper;
@@ -92,5 +127,32 @@ mod tests {
         let mut t = fft_table("t");
         fft_row(&mut t, 8192, "2(25%)", None);
         assert!(t.render().contains("N/A"));
+    }
+
+    #[test]
+    fn cost_rows_render_with_and_without_predictions() {
+        let mut t = cost_table("predicted vs measured");
+        cost_row(
+            &mut t,
+            "mm_pu128",
+            &ArtifactServeStats {
+                jobs: 8,
+                batches: 2,
+                measured_exec_secs: 4e-3,
+                predicted_exec_secs: 3e-3,
+                predicted_energy_j: 2e-4,
+                predicted_batches: 2,
+            },
+        );
+        cost_row(&mut t, "fft1024", &ArtifactServeStats {
+            jobs: 3,
+            batches: 3,
+            measured_exec_secs: 3e-3,
+            ..Default::default()
+        });
+        let r = t.render();
+        assert!(r.contains("mm_pu128"));
+        assert!(r.contains("0.75x"), "{r}");
+        assert!(r.contains("n/a"), "{r}");
     }
 }

@@ -413,6 +413,7 @@ mod tests {
             file: "weird_thing.hlo.txt".into(),
             inputs: vec![],
             outputs: vec![],
+            topology: None,
         };
         let err = kernel_for(&meta).unwrap_err().to_string();
         assert!(err.contains("weird_thing"), "{err}");

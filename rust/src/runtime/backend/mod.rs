@@ -11,6 +11,11 @@
 //!   executes the artifact semantics via the reference kernels mirrored
 //!   from `python/compile/kernels/ref.py` (mm, filter2d, fft). Zero
 //!   native dependencies; runs from the built-in manifest alone.
+//! * [`sim::SimBackend`] — the unified pipeline: interpreter numerics
+//!   (bitwise identical outputs) with the event-driven AIE model from
+//!   `sim`/`coordinator::scheduler` run per dispatch as a *cost model*,
+//!   attaching predicted latency, energy and phase breakdown to every
+//!   result (see [`Backend::predict`]).
 //! * [`pjrt::PjrtBackend`] (`--features pjrt`) — the original
 //!   `xla::PjRtClient` path: parse the AOT HLO text, compile once per
 //!   process, execute literals. Needs the native XLA extension at link
@@ -18,12 +23,13 @@
 //!
 //! Backend selection: explicit via
 //! [`Runtime::with_backend`](crate::runtime::Runtime::with_backend), or
-//! `EA4RCA_BACKEND=interp|pjrt` for the CLI entry points (default
-//! `interp`).
+//! `EA4RCA_BACKEND=interp|sim|pjrt` for the CLI entry points (default
+//! `interp`; the `--backend` flag wins over the environment).
 
 pub mod interp;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod sim;
 
 use anyhow::{bail, Result};
 
@@ -44,6 +50,41 @@ pub struct CacheStats {
     pub builds: u64,
     /// Lookups served from the cache without rebuilding anything.
     pub hits: u64,
+}
+
+/// Predicted execution cost of one dispatch (a single job or a
+/// micro-batch) on the modelled AIE substrate, produced by a backend
+/// that carries a cost model (see [`Backend::predict`]).
+///
+/// Predictions come from the same event-driven DU-PU simulation that
+/// reproduces the paper's tables, run over the artifact's PU topology;
+/// they are deterministic for a given (artifact, batch) pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostPrediction {
+    /// Jobs in the dispatch this prediction covers.
+    pub batch: usize,
+    /// Predicted wall-clock of the whole dispatch on the AIE substrate
+    /// (the sim makespan: dispatch + comm/compute phases + write-back).
+    pub latency_secs: f64,
+    /// Predicted average power draw of the lane (W).
+    pub power_w: f64,
+    /// Predicted energy for the dispatch (J) = power x latency.
+    pub energy_j: f64,
+    /// Phase breakdown: AIE compute busy seconds (per-PU lockstep time).
+    pub compute_secs: f64,
+    /// PLIO communication phase seconds.
+    pub comm_secs: f64,
+    /// DDR fetch seconds (operand streaming).
+    pub fetch_secs: f64,
+    /// Dependency-stall seconds.
+    pub stall_secs: f64,
+}
+
+impl CostPrediction {
+    /// Amortized per-job latency share of the dispatch.
+    pub fn per_job_secs(&self) -> f64 {
+        self.latency_secs / self.batch.max(1) as f64
+    }
 }
 
 /// An execution substrate for AOT artifacts.
@@ -67,6 +108,13 @@ pub trait Backend {
     /// (all zeros) is for substrates with nothing to cache.
     fn cache_stats(&self) -> CacheStats {
         CacheStats::default()
+    }
+
+    /// Predicted cost of dispatching `batch` jobs of this artifact, for
+    /// substrates that carry a cost model (the sim backend). The default
+    /// `None` is for substrates that only measure.
+    fn predict(&self, _meta: &ArtifactMeta, _batch: usize) -> Option<CostPrediction> {
+        None
     }
 
     /// Execute the artifact on already-validated inputs.
@@ -95,23 +143,43 @@ pub trait Backend {
 pub enum BackendKind {
     /// Pure-Rust reference-kernel interpreter (always available).
     Interp,
+    /// Interpreter numerics + event-driven AIE cost model (always
+    /// available; every result gains a [`CostPrediction`]).
+    Sim,
     /// PJRT over AOT HLO artifacts (requires the `pjrt` feature).
     Pjrt,
 }
 
 impl BackendKind {
-    /// Parse `$EA4RCA_BACKEND` (unset -> the default interpreter).
+    /// Parse a backend name (`interp | sim | pjrt`) — the shared parser
+    /// behind the `--backend` flag and `$EA4RCA_BACKEND`.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "interp" => Ok(BackendKind::Interp),
+            "sim" => Ok(BackendKind::Sim),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            other => bail!("unknown backend {other:?} (expected interp | sim | pjrt)"),
+        }
+    }
+
+    /// Parse `$EA4RCA_BACKEND` (unset -> the default interpreter). The
+    /// CLI `--backend` flag, when given, wins over this.
     pub fn from_env() -> Result<BackendKind> {
         match std::env::var("EA4RCA_BACKEND").ok().as_deref() {
-            None | Some("") | Some("interp") => Ok(BackendKind::Interp),
-            Some("pjrt") => Ok(BackendKind::Pjrt),
-            Some(other) => bail!("unknown EA4RCA_BACKEND {other:?} (expected interp | pjrt)"),
+            None | Some("") => Ok(BackendKind::Interp),
+            Some(s) => match BackendKind::parse(s) {
+                Ok(kind) => Ok(kind),
+                Err(_) => {
+                    bail!("unknown EA4RCA_BACKEND {s:?} (expected interp | sim | pjrt)")
+                }
+            },
         }
     }
 
     pub fn name(self) -> &'static str {
         match self {
             BackendKind::Interp => "interp",
+            BackendKind::Sim => "sim",
             BackendKind::Pjrt => "pjrt",
         }
     }
@@ -120,6 +188,7 @@ impl BackendKind {
     pub fn create(self) -> Result<Box<dyn Backend>> {
         match self {
             BackendKind::Interp => Ok(Box::new(interp::InterpBackend::new())),
+            BackendKind::Sim => Ok(Box::new(sim::SimBackend::new())),
             BackendKind::Pjrt => {
                 #[cfg(feature = "pjrt")]
                 {
@@ -158,6 +227,36 @@ mod tests {
     #[test]
     fn kind_names() {
         assert_eq!(BackendKind::Interp.name(), "interp");
+        assert_eq!(BackendKind::Sim.name(), "sim");
         assert_eq!(BackendKind::Pjrt.name(), "pjrt");
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(BackendKind::parse("interp").unwrap(), BackendKind::Interp);
+        assert_eq!(BackendKind::parse("sim").unwrap(), BackendKind::Sim);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert!(BackendKind::parse("waffle").is_err());
+    }
+
+    #[test]
+    fn sim_is_always_available() {
+        let b = BackendKind::Sim.create().unwrap();
+        assert!(b.platform().contains("sim"), "{}", b.platform());
+    }
+
+    #[test]
+    fn per_job_share() {
+        let p = CostPrediction {
+            batch: 4,
+            latency_secs: 8e-6,
+            power_w: 10.0,
+            energy_j: 8e-5,
+            compute_secs: 4e-6,
+            comm_secs: 2e-6,
+            fetch_secs: 1e-6,
+            stall_secs: 0.0,
+        };
+        assert!((p.per_job_secs() - 2e-6).abs() < 1e-18);
     }
 }

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::runtime::backend::{Backend, BackendKind, CacheStats};
+use crate::runtime::backend::{Backend, BackendKind, CacheStats, CostPrediction};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 
@@ -243,6 +243,15 @@ impl Runtime {
     /// equal the number of distinct artifacts this runtime has run).
     pub fn cache_stats(&self) -> CacheStats {
         self.backend.cache_stats()
+    }
+
+    /// Predicted cost of dispatching `batch` jobs of artifact `name`,
+    /// when the backend carries a cost model (the sim backend runs the
+    /// event-driven AIE lane simulation, memoized per batch size).
+    /// `None` on measuring-only substrates or unknown artifacts.
+    pub fn predict(&self, name: &str, batch: usize) -> Option<CostPrediction> {
+        let meta = self.manifest.get(name).ok()?;
+        self.backend.predict(meta, batch)
     }
 
     /// Mean execution seconds for an artifact, if it has run.

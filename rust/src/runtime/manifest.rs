@@ -14,6 +14,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::codegen::config::PuConfig;
+use crate::engine::compute::pu::ProcessingUnit;
 use crate::runtime::tensor::DType;
 use crate::util::json::Json;
 
@@ -33,12 +35,43 @@ impl TensorMeta {
     }
 }
 
+/// The PU topology behind an artifact — the Graph Configuration facts a
+/// cost model needs: the DAC/CC/DCC structure (whose modes *are* the
+/// transfer methods), core count, per-iteration op/byte counts, and how
+/// many copies the design deploys. Carried by [`ArtifactMeta`] when the
+/// manifest (or the codegen pipeline) supplies it; backends with a cost
+/// model derive a default for catalogue artifacts that lack one.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PuTopology {
+    /// Full PU structure: PSTs (DACs, CC, DCCs), kernel class,
+    /// per-iteration ops and wire bytes.
+    pub pu: ProcessingUnit,
+    /// PU copies the design deploys (the config file's `copies`).
+    pub copies: usize,
+}
+
+impl PuTopology {
+    /// The config → artifact handoff: an artifact generated from a Graph
+    /// Configuration File carries that configuration's PU topology.
+    pub fn from_config(cfg: &PuConfig) -> PuTopology {
+        PuTopology { pu: cfg.pu.clone(), copies: cfg.copies.max(1) }
+    }
+
+    /// AIE cores of one PU copy.
+    pub fn cores(&self) -> usize {
+        self.pu.cores()
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {
     pub name: String,
     pub file: String,
     pub inputs: Vec<TensorMeta>,
     pub outputs: Vec<TensorMeta>,
+    /// PU topology, when the artifact carries one (manifest `pu_config`
+    /// entries, or attached programmatically from a `codegen::PuConfig`).
+    pub topology: Option<PuTopology>,
 }
 
 #[derive(Debug, Clone)]
@@ -105,8 +138,21 @@ impl Manifest {
                 .iter()
                 .map(tensor_meta)
                 .collect::<Result<Vec<_>>>()?;
+            // optional: the artifact's Graph Configuration (the codegen
+            // pipeline's config → artifact handoff), inlined verbatim in
+            // the config-file schema
+            let topology = match e.get("pu_config") {
+                Some(pj) => Some(PuTopology::from_config(
+                    &PuConfig::from_json(pj)
+                        .with_context(|| format!("artifact {name}: invalid pu_config"))?,
+                )),
+                None => None,
+            };
             if artifacts
-                .insert(name.clone(), ArtifactMeta { name: name.clone(), file, inputs, outputs })
+                .insert(
+                    name.clone(),
+                    ArtifactMeta { name: name.clone(), file, inputs, outputs, topology },
+                )
                 .is_some()
             {
                 bail!("duplicate artifact name {name:?}");
@@ -157,6 +203,9 @@ impl Manifest {
                     file: format!("{name}.hlo.txt"),
                     inputs,
                     outputs,
+                    // catalogue artifacts carry no explicit topology; a
+                    // cost-model backend derives the paper's structures
+                    topology: None,
                 },
             );
         };
@@ -284,6 +333,46 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), "not json").unwrap();
         assert!(Manifest::load_or_builtin(&dir).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn artifact_can_carry_a_pu_topology() {
+        // the manifest inlines the Graph Configuration File schema under
+        // "pu_config" — the config → artifact handoff of the pipeline
+        let text = r#"{"artifacts": [
+            {"name": "mm_custom", "file": "mm_custom.hlo.txt",
+             "inputs": [{"shape": [128, 128], "dtype": "f32"},
+                        {"shape": [128, 128], "dtype": "f32"}],
+             "outputs": [{"shape": [128, 128], "dtype": "f32"}],
+             "pu_config": {
+                "name": "mm", "kernel": "mm32", "class": "f32mac", "copies": 6,
+                "psts": [{
+                    "dacs": [{"modes": ["SWH", "BDC"], "plios": 8, "serves": 64}],
+                    "cc": "Parallel<16>*Cascade<4>",
+                    "dccs": [{"mode": "SWH", "plios": 4, "serves": 64}]
+                }],
+                "ops_per_iter": 4194304, "in_bytes": 131072, "out_bytes": 65536
+             }}
+        ]}"#;
+        let m = Manifest::parse(text, PathBuf::from(".")).unwrap();
+        let meta = m.get("mm_custom").unwrap();
+        let topo = meta.topology.as_ref().expect("topology carried");
+        assert_eq!(topo.cores(), 64);
+        assert_eq!(topo.copies, 6);
+        assert_eq!(topo.pu.total_plios(), 12);
+        // plain entries still parse with no topology
+        let plain = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        assert!(plain.get("mm32").unwrap().topology.is_none());
+    }
+
+    #[test]
+    fn malformed_pu_config_is_an_error() {
+        let text = r#"{"artifacts": [
+            {"name": "a", "file": "a", "inputs": [], "outputs": [],
+             "pu_config": {"name": "x"}}
+        ]}"#;
+        let err = Manifest::parse(text, PathBuf::from(".")).unwrap_err();
+        assert!(format!("{err:#}").contains("pu_config"), "{err:#}");
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Runtime — loads the AOT artifact manifest and executes artifacts on
 //! a pluggable [`Backend`]: the pure-Rust interpreter (default, zero
-//! native dependencies) or the PJRT CPU client (`--features pjrt`).
+//! native dependencies), the sim backend (interpreter numerics + the
+//! event-driven AIE cost model attaching a [`CostPrediction`] to every
+//! dispatch), or the PJRT CPU client (`--features pjrt`).
 //! The rest of the coordinator sees [`Tensor`]s and artifact names; no
 //! other module touches a substrate API.
 //!
@@ -16,7 +18,7 @@ pub mod engine;
 pub mod manifest;
 pub mod tensor;
 
-pub use backend::{Backend, BackendKind, CacheStats};
+pub use backend::{Backend, BackendKind, CacheStats, CostPrediction};
 pub use engine::Runtime;
-pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+pub use manifest::{ArtifactMeta, Manifest, PuTopology, TensorMeta};
 pub use tensor::{DType, Tensor};

@@ -6,6 +6,11 @@
 //! utilisation numbers of Table 5. The placer is a simple column-major
 //! first-fit over whole columns, which matches how the paper packs
 //! 64-core PUs (8 rows x 8 columns per PU, 6 PUs = 48 of 50 columns).
+//!
+//! A PU whose core count is `k*rows + rem` (full columns plus a partial
+//! trailing column — the FFT PU's 10 cores, for example) is placed as
+//! the full-height block and an adjacent partial column, so the cascade
+//! region stays contiguous; see [`AieArray::place`].
 
 use anyhow::{bail, Result};
 
@@ -23,6 +28,31 @@ pub struct Region {
 impl Region {
     pub fn cores(&self) -> usize {
         self.cols * self.rows
+    }
+}
+
+/// One placed PU: a contiguous span of columns, made of a full-height
+/// column block and/or a partial trailing column. Cascade chains run
+/// along rows, and the regions share a column boundary, so the wiring
+/// invariant (every core reachable from the slice leader without
+/// crossing foreign cores) holds for the whole placement.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Placement {
+    /// One region (rectangular PU) or two (full block + partial column).
+    pub regions: Vec<Region>,
+}
+
+impl Placement {
+    pub fn cores(&self) -> usize {
+        self.regions.iter().map(Region::cores).sum()
+    }
+
+    /// The main (largest) region — what NoC routing anchors on.
+    pub fn primary(&self) -> &Region {
+        self.regions
+            .iter()
+            .max_by_key(|r| r.cores())
+            .expect("placement has at least one region")
     }
 }
 
@@ -67,38 +97,80 @@ impl AieArray {
         }
     }
 
-    /// Place `cores` as a full-height column block (first fit). The paper
-    /// packs PUs column-wise so cascade rows stay contiguous.
-    pub fn place(&mut self, cores: usize) -> Result<Region> {
+    /// First free row offset that fits `rows` consecutive free cells in
+    /// one column, if any.
+    fn fit_in_column(&self, col: usize, rows: usize) -> Option<usize> {
+        (0..=self.rows - rows).find(|&row0| {
+            self.region_free(&Region { col0: col, row0, cols: 1, rows })
+        })
+    }
+
+    /// Place `cores` as a column-major block (first fit): full-height
+    /// columns first, plus — when the count does not tile the array
+    /// height — a partial column immediately after the block, so the
+    /// whole PU stays a contiguous column span (the cascade invariant).
+    /// Fails with a readable error only when no column span fits.
+    pub fn place(&mut self, cores: usize) -> Result<Placement> {
         if cores == 0 {
             bail!("cannot place an empty PU");
         }
-        // Prefer full-height column blocks; fall back to a partial column.
         let full_cols = cores / self.rows;
         let rem = cores % self.rows;
-        if full_cols > 0 && rem != 0 {
-            bail!(
-                "PU of {cores} cores does not tile the {}-row array; \
-                 pad the CC to a multiple of {} or use fewer cores",
-                self.rows,
-                self.rows
-            );
-        }
-        let (want_cols, want_rows) = if full_cols > 0 { (full_cols, self.rows) } else { (1, rem) };
-        for col0 in 0..=self.cols.saturating_sub(want_cols) {
-            for row0 in 0..=self.rows - want_rows {
-                let r = Region { col0, row0, cols: want_cols, rows: want_rows };
-                if self.region_free(&r) {
+
+        // Purely partial PU (< one column): first fit anywhere.
+        if full_cols == 0 {
+            for col0 in 0..self.cols {
+                if let Some(row0) = self.fit_in_column(col0, rem) {
+                    let r = Region { col0, row0, cols: 1, rows: rem };
                     self.mark(&r, true);
-                    return Ok(r);
+                    return Ok(Placement { regions: vec![r] });
                 }
             }
+            bail!(
+                "no room for a {cores}-core PU (used {}/{})",
+                self.used(),
+                self.total()
+            );
         }
-        bail!("no room for a {cores}-core PU (used {}/{})", self.used(), self.total());
+
+        let span = full_cols + usize::from(rem > 0);
+        if span > self.cols {
+            bail!(
+                "a {cores}-core PU needs {span} contiguous columns but the array \
+                 is only {} columns wide",
+                self.cols
+            );
+        }
+        for col0 in 0..=self.cols - span {
+            let block = Region { col0, row0: 0, cols: full_cols, rows: self.rows };
+            if !self.region_free(&block) {
+                continue;
+            }
+            if rem == 0 {
+                self.mark(&block, true);
+                return Ok(Placement { regions: vec![block] });
+            }
+            // the trailing partial column must touch the block
+            if let Some(row0) = self.fit_in_column(col0 + full_cols, rem) {
+                let tail = Region { col0: col0 + full_cols, row0, cols: 1, rows: rem };
+                self.mark(&block, true);
+                self.mark(&tail, true);
+                return Ok(Placement { regions: vec![block, tail] });
+            }
+        }
+        bail!(
+            "no room for a {cores}-core PU ({full_cols} full columns + {rem} cores; \
+             used {}/{})",
+            self.used(),
+            self.total()
+        );
     }
 
-    pub fn free(&mut self, r: &Region) {
-        self.mark(r, false);
+    /// Release a placement (all of its regions).
+    pub fn free(&mut self, p: &Placement) {
+        for r in &p.regions {
+            self.mark(r, false);
+        }
     }
 
     pub fn used(&self) -> usize {
@@ -122,9 +194,9 @@ mod tests {
     fn six_mm_pus_fit_like_the_paper() {
         let p = HwParams::vck5000();
         let mut arr = AieArray::new(&p);
-        let mut regions = Vec::new();
+        let mut placements = Vec::new();
         for _ in 0..6 {
-            regions.push(arr.place(64).unwrap()); // 8x8 each
+            placements.push(arr.place(64).unwrap()); // 8x8 each
         }
         assert_eq!(arr.used(), 384);
         assert!((arr.utilization() - 0.96).abs() < 1e-9);
@@ -132,8 +204,9 @@ mod tests {
         assert!(arr.place(64).is_err());
         // but a small partial-column PU still does
         assert!(arr.place(8).is_ok());
-        for r in &regions {
-            assert_eq!(r.cores(), 64);
+        for pl in &placements {
+            assert_eq!(pl.cores(), 64);
+            assert_eq!(pl.regions.len(), 1);
         }
     }
 
@@ -141,19 +214,125 @@ mod tests {
     fn free_releases_space() {
         let p = HwParams::vck5000();
         let mut arr = AieArray::new(&p);
-        let r = arr.place(400).unwrap();
+        let pl = arr.place(400).unwrap();
         assert_eq!(arr.used(), 400);
-        arr.free(&r);
+        arr.free(&pl);
         assert_eq!(arr.used(), 0);
         assert!(arr.place(64).is_ok());
     }
 
     #[test]
-    fn rejects_non_tiling_pu() {
+    fn mixed_full_plus_partial_pu_places_contiguously() {
+        // 12 = 1.5 columns of 8: one full column + a 4-core tail in the
+        // next column — previously a bail, now the golden shape.
         let p = HwParams::vck5000();
         let mut arr = AieArray::new(&p);
-        assert!(arr.place(12).is_err()); // 12 = 1.5 columns of 8
-        assert!(arr.place(6).is_ok()); // partial single column is fine
+        let pl = arr.place(12).unwrap();
+        assert_eq!(pl.cores(), 12);
+        assert_eq!(
+            pl.regions,
+            vec![
+                Region { col0: 0, row0: 0, cols: 1, rows: 8 },
+                Region { col0: 1, row0: 0, cols: 1, rows: 4 },
+            ]
+        );
+        assert_eq!(pl.primary().cores(), 8);
+        assert_eq!(arr.used(), 12);
+        // partial single column is still fine
+        assert!(arr.place(6).is_ok());
+    }
+
+    #[test]
+    fn fft_pus_place_directly() {
+        // The FFT PU is 10 cores (Butterfly[4] + Parallel<2>*Cascade<3>):
+        // 1 full column + 2 cores. Eight of them fit in 16 columns.
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        let pls: Vec<_> = (0..8).map(|_| arr.place(10).unwrap()).collect();
+        assert_eq!(arr.used(), 80);
+        for (i, pl) in pls.iter().enumerate() {
+            assert_eq!(pl.cores(), 10);
+            assert_eq!(pl.regions.len(), 2);
+            // contiguous column span: tail column is block column + 1
+            assert_eq!(pl.regions[1].col0, pl.regions[0].col0 + pl.regions[0].cols);
+            assert_eq!(pl.regions[0].col0, i * 2, "first-fit packs left to right");
+        }
+    }
+
+    #[test]
+    fn truly_full_array_is_a_readable_error() {
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        arr.place(400).unwrap(); // the whole 8x50 array
+        let err = arr.place(12).unwrap_err().to_string();
+        assert!(err.contains("no room"), "{err}");
+        assert!(err.contains("400/400"), "{err}");
+    }
+
+    #[test]
+    fn oversized_pu_is_a_readable_error_not_a_panic() {
+        // wider than the array: 401 cores = 50 full columns + 1, i.e. a
+        // 51-column span on a 50-column array — must bail, not index
+        // out of bounds
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        for cores in [401usize, 409, 500, 10_000] {
+            let err = arr.place(cores).unwrap_err().to_string();
+            assert!(err.contains("columns"), "{cores}: {err}");
+        }
+        assert_eq!(arr.used(), 0, "failed placements must not mark cells");
+        // exactly the full array still fits
+        assert_eq!(arr.place(400).unwrap().cores(), 400);
+    }
+
+    #[test]
+    fn place_free_replace_reuses_freed_regions() {
+        // Lifecycle churn: free a placement in the middle of the array
+        // and the next same-shape PU lands exactly in the hole.
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        let a = arr.place(64).unwrap();
+        let b = arr.place(64).unwrap();
+        let c = arr.place(64).unwrap();
+        assert_eq!(arr.used(), 192);
+        arr.free(&b);
+        assert_eq!(arr.used(), 128);
+        let b2 = arr.place(64).unwrap();
+        assert_eq!(b2, b, "first fit reuses the freed region");
+        assert_eq!(arr.used(), 192);
+        arr.free(&a);
+        arr.free(&b2);
+        arr.free(&c);
+        assert_eq!(arr.used(), 0);
+        assert!((arr.utilization() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_consistent_across_mixed_churn() {
+        let p = HwParams::vck5000();
+        let mut arr = AieArray::new(&p);
+        let mut live = Vec::new();
+        let mut expect = 0usize;
+        for (i, cores) in [10usize, 64, 6, 12, 8, 26].iter().enumerate() {
+            let pl = arr.place(*cores).unwrap();
+            assert_eq!(pl.cores(), *cores);
+            expect += cores;
+            assert_eq!(arr.used(), expect, "after place #{i}");
+            live.push(pl);
+        }
+        // free every other placement, then re-place the same shapes
+        for pl in live.iter().step_by(2) {
+            arr.free(pl);
+            expect -= pl.cores();
+        }
+        assert_eq!(arr.used(), expect);
+        for pl in live.iter().step_by(2) {
+            let again = arr.place(pl.cores()).unwrap();
+            assert_eq!(again.cores(), pl.cores());
+            expect += pl.cores();
+        }
+        assert_eq!(arr.used(), expect);
+        assert!((arr.utilization() - expect as f64 / 400.0).abs() < 1e-12);
     }
 
     #[test]

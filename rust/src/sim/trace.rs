@@ -84,6 +84,17 @@ impl Trace {
         m
     }
 
+    /// Total busy picoseconds per phase aggregated across all lanes — the
+    /// whole-run phase breakdown (what the sim backend's cost predictions
+    /// report as fetch/comm/compute shares).
+    pub fn phase_totals_ps(&self) -> BTreeMap<&'static str, u64> {
+        let mut m = BTreeMap::new();
+        for s in &self.spans {
+            *m.entry(s.phase.name()).or_insert(0) += s.end_ps - s.start_ps;
+        }
+        m
+    }
+
     /// Fraction of `[0, horizon]` a lane spends in `phase`.
     pub fn duty(&self, lane: &str, phase: Phase, horizon_ps: u64) -> f64 {
         if horizon_ps == 0 {
@@ -215,5 +226,17 @@ mod tests {
         t.record("DU0", Phase::Fetch, 20, 40);
         let m = t.busy_ps();
         assert_eq!(m[&("DU0".to_string(), "fetch")], 30);
+    }
+
+    #[test]
+    fn phase_totals_aggregate_across_lanes() {
+        let mut t = Trace::new(true);
+        t.record("DU0", Phase::Fetch, 0, 10);
+        t.record("DU1", Phase::Fetch, 5, 25);
+        t.record("PU0", Phase::Compute, 10, 40);
+        let m = t.phase_totals_ps();
+        assert_eq!(m["fetch"], 30);
+        assert_eq!(m["compute"], 30);
+        assert!(!m.contains_key("stall"));
     }
 }

@@ -6,7 +6,7 @@
 //! target rate, independent of service time) shapes.
 
 use crate::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref};
-use crate::runtime::Tensor;
+use crate::runtime::{ArtifactMeta, DType, Tensor};
 use crate::util::rng::Rng;
 
 /// The task kinds the serving layer accepts (one per accelerator).
@@ -97,6 +97,20 @@ impl Mix {
         }
         self.entries.last().expect("non-empty mix").0
     }
+}
+
+/// Seeded random inputs for one job of an arbitrary artifact, driven
+/// entirely by its manifest metadata (shapes + dtypes) — the one place
+/// meta-driven input generation lives, shared by the `run` cross-check
+/// and the backend-equivalence tests.
+pub fn seeded_inputs(meta: &ArtifactMeta, rng: &mut Rng) -> Vec<Tensor> {
+    meta.inputs
+        .iter()
+        .map(|tm| match tm.dtype {
+            DType::F32 => Tensor::f32(&tm.shape, rng.normal_vec(tm.elements())),
+            DType::I32 => Tensor::i32(&tm.shape, rng.int_vec_i32(tm.elements(), -16, 16)),
+        })
+        .collect()
 }
 
 /// Generate a deterministic stream of `n` tasks from a mix.
@@ -221,6 +235,22 @@ mod tests {
             let inputs = kind.gen_inputs(&mut rng);
             assert!(!inputs.is_empty(), "{kind:?}");
             assert!(!inputs[0].is_empty());
+        }
+    }
+
+    #[test]
+    fn seeded_inputs_follow_the_manifest_and_are_deterministic() {
+        let m = crate::runtime::Manifest::builtin("artifacts");
+        for name in ["mm_pu128", "mm32_i8", "filter2d_pu8", "fft1024"] {
+            let meta = m.get(name).unwrap();
+            let a = seeded_inputs(meta, &mut Rng::new(9));
+            let b = seeded_inputs(meta, &mut Rng::new(9));
+            assert_eq!(a.len(), meta.inputs.len(), "{name}");
+            for (t, tm) in a.iter().zip(&meta.inputs) {
+                assert_eq!(t.shape(), tm.shape.as_slice(), "{name}");
+                assert_eq!(t.dtype(), tm.dtype, "{name}");
+            }
+            assert_eq!(a, b, "{name}: same seed must give identical inputs");
         }
     }
 

@@ -1,0 +1,259 @@
+//! The unified artifact pipeline, end to end: the sim backend must be
+//! numerically invisible (bitwise identical to the interpreter, single
+//! job and micro-batch) while attaching deterministic AIE cost
+//! predictions to every dispatch, and `serve`-shaped runs over it must
+//! carry predicted latency/energy on every `JobResult` with a
+//! predicted-vs-measured ledger in the `ServeReport`.
+
+use std::time::Duration;
+
+use ea4rca::coordinator::server::{serve_batch, Server, ServerConfig};
+use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::workload::{generate_stream, reference_outputs, seeded_inputs, Mix, TaskKind};
+
+fn runtimes() -> (Runtime, Runtime) {
+    (
+        Runtime::with_backend(BackendKind::Sim, Manifest::default_dir()).unwrap(),
+        Runtime::with_backend(BackendKind::Interp, Manifest::default_dir()).unwrap(),
+    )
+}
+
+fn seeded_jobs(artifact: &str, n: usize, seed: u64) -> Vec<Vec<Tensor>> {
+    let rt = Runtime::with_backend(BackendKind::Interp, Manifest::default_dir()).unwrap();
+    let meta = rt.manifest().get(artifact).unwrap().clone();
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| seeded_inputs(&meta, &mut rng)).collect()
+}
+
+/// Satellite: SimBackend numerics are bitwise identical to InterpBackend
+/// for the mm/filter2d/fft families, single-job and micro-batched.
+#[test]
+fn sim_matches_interp_bitwise() {
+    let (sim, interp) = runtimes();
+    for artifact in ["mm_pu128", "mm32", "filter2d_pu8", "fft1024", "fft2048"] {
+        let jobs = seeded_jobs(artifact, 4, 0xEA4);
+        // single job
+        for (j, job) in jobs.iter().enumerate() {
+            let a = sim.execute(artifact, job).unwrap();
+            let b = interp.execute(artifact, job).unwrap();
+            assert_eq!(a, b, "{artifact} job {j}: sim != interp");
+        }
+        // micro-batch on both backends, and batch == sequential on sim
+        let batched_sim: Vec<_> = sim
+            .execute_batch(artifact, &jobs)
+            .unwrap()
+            .into_iter()
+            .map(Result::unwrap)
+            .collect();
+        let batched_interp: Vec<_> = interp
+            .execute_batch(artifact, &jobs)
+            .unwrap()
+            .into_iter()
+            .map(Result::unwrap)
+            .collect();
+        assert_eq!(batched_sim, batched_interp, "{artifact}: batched sim != interp");
+        for (j, job) in jobs.iter().enumerate() {
+            assert_eq!(
+                batched_sim[j],
+                sim.execute(artifact, job).unwrap(),
+                "{artifact} job {j}: batch != sequential under sim"
+            );
+        }
+    }
+}
+
+/// Satellite: predictions exist for every serving artifact, are
+/// deterministic across repeated queries AND across fresh runtimes, and
+/// grow with batch size.
+#[test]
+fn predictions_deterministic_across_runs() {
+    let (sim, interp) = runtimes();
+    for artifact in ["mm_pu128", "filter2d_pu8", "fft1024", "mmt_cascade8"] {
+        let p = sim.predict(artifact, 1).unwrap_or_else(|| panic!("{artifact}: no prediction"));
+        assert!(p.latency_secs > 0.0, "{artifact}");
+        assert!(p.energy_j > 0.0, "{artifact}");
+        assert!(p.power_w > 0.0, "{artifact}");
+        // repeated query: identical to the bit
+        let again = sim.predict(artifact, 1).unwrap();
+        assert_eq!(p, again, "{artifact}: prediction not stable");
+        // a fresh runtime rebuilds the cost model to the same numbers
+        let fresh = Runtime::with_backend(BackendKind::Sim, Manifest::default_dir())
+            .unwrap()
+            .predict(artifact, 1)
+            .unwrap();
+        assert_eq!(
+            p.latency_secs.to_bits(),
+            fresh.latency_secs.to_bits(),
+            "{artifact}: prediction differs across runtimes"
+        );
+        assert_eq!(p.energy_j.to_bits(), fresh.energy_j.to_bits(), "{artifact}");
+        // batches take longer than single jobs, but amortize per job
+        let p8 = sim.predict(artifact, 8).unwrap();
+        assert!(p8.latency_secs > p.latency_secs, "{artifact}");
+        assert!(
+            p8.per_job_secs() <= p.per_job_secs() * 1.001,
+            "{artifact}: batching must not cost more per job"
+        );
+        // the measuring-only backend predicts nothing
+        assert!(interp.predict(artifact, 1).is_none(), "{artifact}");
+    }
+}
+
+/// Oracle comparison with the stress suite's discipline: int tensors
+/// exact, f32 within 1e-4 (the oracle `fft_ref` is a different — equally
+/// valid — evaluation order from the serving `FftPlan`; bitwise
+/// batch==sequential is asserted separately in
+/// [`sim_matches_interp_bitwise`]).
+fn assert_matches_oracle(got: &[Tensor], want: &[Tensor], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: output arity");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{what} output {i}: shape");
+        match (g, w) {
+            (Tensor::I32 { .. }, Tensor::I32 { .. }) => {
+                assert_eq!(g, w, "{what} output {i}: int mismatch");
+            }
+            _ => {
+                let d = g.max_abs_diff(w).expect("comparable tensors");
+                assert!(d < 1e-4, "{what} output {i}: max |err| {d}");
+            }
+        }
+    }
+}
+
+/// Acceptance: a mixed mm/filter2d/fft stream served on `--backend sim`
+/// completes with every JobResult carrying predicted latency/energy,
+/// numerics matching the reference oracle, and the ServeReport carrying
+/// a predicted-vs-measured ledger for every artifact.
+#[test]
+fn serve_sim_backend_end_to_end() {
+    let config = ServerConfig {
+        n_workers: 2,
+        max_batch: 4,
+        max_linger: Duration::from_micros(200),
+        queue_cap: 256,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Sim,
+        config,
+        Manifest::default_dir(),
+        &["mm_pu128", "fft1024", "filter2d_pu8"],
+    )
+    .unwrap();
+    // a mixed mm/fft/filter2d stream with guaranteed per-kind coverage:
+    // 16 of each, interleaved
+    let mut stream = Vec::new();
+    for (i, kind) in [TaskKind::MmBlock, TaskKind::Fft1024, TaskKind::FilterBatch]
+        .into_iter()
+        .enumerate()
+    {
+        stream.extend(generate_stream(&Mix::single(kind), 16, 21 + i as u64));
+    }
+    // interleave kinds so micro-batches form across a genuinely mixed queue
+    let mut mixed = Vec::with_capacity(48);
+    for j in 0..16 {
+        for k in 0..3 {
+            mixed.push(std::mem::replace(
+                &mut stream[k * 16 + j],
+                (TaskKind::MmBlock, Vec::new()),
+            ));
+        }
+    }
+    let oracle: Vec<(TaskKind, Vec<Tensor>)> = mixed
+        .iter()
+        .map(|(k, inputs)| (*k, reference_outputs(*k, inputs)))
+        .collect();
+    let jobs: Vec<(String, Vec<Tensor>)> = mixed
+        .into_iter()
+        .map(|(k, i)| (k.artifact().to_string(), i))
+        .collect();
+    let (results, _) = serve_batch(&server, jobs).unwrap();
+    assert_eq!(results.len(), 48);
+    for (i, r) in results.iter().enumerate() {
+        let outs = r.outputs.as_ref().unwrap();
+        assert_matches_oracle(outs, &oracle[i].1, &format!("job {i} ({:?})", oracle[i].0));
+        // every result carries the cost model's view of its dispatch
+        let p = r.predicted.as_ref().unwrap_or_else(|| panic!("job {i}: no prediction"));
+        assert!(p.latency_secs > 0.0, "job {i}");
+        assert!(p.energy_j > 0.0, "job {i}");
+        assert_eq!(p.batch, r.batch_size, "job {i}: prediction covers its batch");
+    }
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.completed_jobs(), 48);
+    let pvm = report.predicted_vs_measured();
+    for artifact in ["mm_pu128", "fft1024", "filter2d_pu8"] {
+        let lane = pvm.get(artifact).unwrap_or_else(|| panic!("{artifact} missing"));
+        assert_eq!(lane.predicted_batches, lane.batches, "{artifact}: every batch predicted");
+        assert!(lane.predicted_exec_secs > 0.0, "{artifact}");
+        assert!(lane.measured_exec_secs > 0.0, "{artifact}");
+        assert!(lane.ratio().is_some(), "{artifact}");
+    }
+    // conservation: the ledger's job mass equals the served jobs
+    let ledger_jobs: u64 = pvm.values().map(|s| s.jobs).sum();
+    assert_eq!(ledger_jobs, 48);
+}
+
+/// The interpreter serving path is unchanged: no predictions, but the
+/// ledger still carries measured costs.
+#[test]
+fn serve_interp_backend_predicts_nothing() {
+    let server = Server::start_with_backend(
+        BackendKind::Interp,
+        2,
+        Manifest::default_dir(),
+        &["fft1024"],
+    )
+    .unwrap();
+    let jobs: Vec<(String, Vec<Tensor>)> =
+        generate_stream(&Mix::single(TaskKind::Fft1024), 12, 3)
+            .into_iter()
+            .map(|(k, i)| (k.artifact().to_string(), i))
+            .collect();
+    let (results, _) = serve_batch(&server, jobs).unwrap();
+    assert!(results.iter().all(|r| r.outputs.is_ok()));
+    assert!(results.iter().all(|r| r.predicted.is_none()));
+    let report = server.shutdown().unwrap();
+    let pvm = report.predicted_vs_measured();
+    let lane = pvm.get("fft1024").unwrap();
+    assert_eq!(lane.predicted_batches, 0);
+    assert_eq!(lane.jobs, 12);
+    assert!(lane.measured_exec_secs > 0.0);
+    assert!(lane.ratio().is_none());
+}
+
+/// Cost-model-aware dispatch conserves work: a stream with wildly
+/// different per-job costs (mm blocks vs tiny ffts) still lands every
+/// job exactly once across the workers.
+#[test]
+fn cost_weighted_placement_conserves_jobs() {
+    let config = ServerConfig {
+        n_workers: 3,
+        max_batch: 4,
+        max_linger: Duration::from_micros(100),
+        queue_cap: 256,
+    };
+    let server = Server::start_with_config(
+        BackendKind::Sim,
+        config,
+        Manifest::default_dir(),
+        &["mm_pu128", "fft1024"],
+    )
+    .unwrap();
+    let jobs: Vec<(String, Vec<Tensor>)> = generate_stream(&Mix::mm_heavy(), 60, 17)
+        .into_iter()
+        .map(|(k, i)| (k.artifact().to_string(), i))
+        .collect();
+    let (results, _) = serve_batch(&server, jobs).unwrap();
+    assert!(results.iter().all(|r| r.outputs.is_ok()));
+    let report = server.shutdown().unwrap();
+    assert_eq!(report.total_jobs, 60);
+    assert_eq!(report.completed_jobs(), 60);
+    let worker_jobs: u64 = report.workers.iter().map(|w| w.jobs).sum();
+    assert_eq!(worker_jobs, 60);
+    let hist_jobs: u64 = report
+        .batch_hist
+        .values()
+        .flat_map(|h| h.iter().map(|(size, count)| *size as u64 * count))
+        .sum();
+    assert_eq!(hist_jobs, 60);
+}
