@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test stress warm-bench sim-serve cost-bench artifacts pytest probe
+.PHONY: build test stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
 
 build:
 	cargo build --release
@@ -26,6 +26,12 @@ sim-serve:
 # survey the AIE cost model's predictions (and check determinism)
 cost-bench:
 	cargo bench --bench cost_model
+
+# the design-entry facade end to end: config round-trips, builder/JSON/
+# apps parity, predict-without-a-runtime, and Design::deploy smoke on
+# the interp + sim backends
+api-smoke:
+	cargo test --release --test api_facade
 
 # AOT-lower the Layer-1/2 graphs to artifacts/*.hlo.txt + manifest.json
 artifacts:

@@ -4,8 +4,7 @@
 //!
 //! Run: `cargo bench --bench fig7_pu_structures`
 
-use ea4rca::codegen::config::PuConfig;
-use ea4rca::codegen::generator;
+use ea4rca::api::Design;
 use ea4rca::util::table::Table;
 
 fn main() {
@@ -15,9 +14,9 @@ fn main() {
         &["APP", "PST", "DAC", "CC", "DCC", "cores", "PLIO in", "PLIO out"],
     );
     for name in ["mm", "filter2d", "fft", "mmt"] {
-        let text = std::fs::read_to_string(format!("configs/{name}.json"))
+        let design = Design::from_path(format!("configs/{name}.json"))
             .expect("run from the repo root");
-        let cfg = PuConfig::from_json_text(&text).expect("valid config");
+        let cfg = design.config();
         for (i, pst) in cfg.pu.psts.iter().enumerate() {
             let dac = pst
                 .dacs
@@ -47,18 +46,17 @@ fn main() {
 
     println!("\ngenerated graph summaries (the Fig 7 wiring):");
     for name in ["mm", "filter2d", "fft", "mmt"] {
-        let text = std::fs::read_to_string(format!("configs/{name}.json")).unwrap();
-        let cfg = PuConfig::from_json_text(&text).unwrap();
-        let proj = generator::generate(&cfg).unwrap();
+        let design = Design::from_path(format!("configs/{name}.json")).unwrap();
+        let proj = design.generate().unwrap();
         let cascades = proj.graph_h.matches("connect<cascade>").count();
         let streams = proj.graph_h.matches("connect<stream>").count();
         println!(
             "  {:<9} {:>3} cores | {} cascade connect blocks | {} stream connects | x{} copies",
-            cfg.name,
-            cfg.pu.cores(),
+            design.name(),
+            design.cores(),
             cascades,
             streams,
-            cfg.copies
+            design.copies()
         );
     }
 }

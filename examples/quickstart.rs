@@ -5,17 +5,34 @@
 //! Run: `cargo run --release --example quickstart`
 //! (needs `make artifacts` once beforehand for the PJRT part).
 
+use ea4rca::api::designs;
 use ea4rca::apps::mm;
 use ea4rca::runtime::tensor::matmul_ref;
-use ea4rca::runtime::Runtime;
 use ea4rca::sim::params::HwParams;
 use ea4rca::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let p = HwParams::vck5000();
 
-    // --- 1. simulate the paper's configuration -------------------------
+    // --- 0. the design, described once ---------------------------------
     println!("== EA4RCA quickstart ==\n");
+    let design = designs::mm();
+    println!(
+        "design '{}': kernel {}, {} cores/PU x{} copies -> artifact {}",
+        design.name(),
+        design.kernel(),
+        design.cores(),
+        design.copies(),
+        design.artifact()
+    );
+    let pred = design.predict(1);
+    println!(
+        "cost model (no runtime needed): one PU dispatch predicted at {:.1} us, {:.1} W\n",
+        pred.latency_secs * 1e6,
+        pred.power_w
+    );
+
+    // --- 1. simulate the paper's configuration -------------------------
     println!("simulating 768^3 float MM on the 6-PU / 384-core design:");
     let r = mm::run(&p, 768, 6, false)?;
     println!(
@@ -31,7 +48,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- 2. real numerics through the AOT artifacts --------------------
     println!("executing a real 256^3 MM through the mm_pu128 artifact (PJRT):");
-    let rt = Runtime::new()?;
+    let rt = design.runtime()?;
     let mut rng = Rng::new(42);
     let n = 256;
     let a = rng.normal_vec(n * n);

@@ -6,33 +6,39 @@
 //!
 //! Run: `cargo run --release --example serve_mixed`
 
-use ea4rca::coordinator::server::{serve_batch, Server};
+use ea4rca::api::{designs, DeployOptions, Deployment};
 use ea4rca::util::stats::summarize;
 use ea4rca::workload::{generate_stream, Mix};
 
 fn main() -> anyhow::Result<()> {
     println!("== EA4RCA serving: mixed request stream ==\n");
-    let workers = 4;
     let n_jobs = 256;
-    let server = Server::start(
-        workers,
-        ea4rca::runtime::Manifest::default_dir(),
-        &["mm_pu128", "fft1024", "filter2d_pu8"],
+    // the design catalogue deploys as one fleet: per-worker runtimes,
+    // every design's artifact warmed, micro-batching on
+    let deployment = Deployment::start(
+        &designs::catalogue(),
+        &DeployOptions { workers: 4, ..DeployOptions::default() },
     )?;
     println!(
-        "{} workers up (per-worker runtimes, warm executables), micro-batching on",
-        server.workers()
+        "{} workers up serving {} (per-worker runtimes, warm executables)",
+        deployment.workers(),
+        deployment.artifacts().join(", ")
     );
 
     let stream = generate_stream(&Mix::mm_heavy(), n_jobs, 0x5E12);
-    let jobs: Vec<(String, Vec<_>)> = stream
-        .into_iter()
-        .map(|(k, inputs)| (k.artifact().to_string(), inputs))
-        .collect();
 
     let t0 = std::time::Instant::now();
-    let (results, latency) = serve_batch(&server, jobs)?;
+    let mut pending = Vec::with_capacity(n_jobs);
+    for (kind, inputs) in stream {
+        pending.push(deployment.submit_to(kind.artifact(), inputs)?);
+    }
+    let results = pending
+        .into_iter()
+        .map(|p| p.wait())
+        .collect::<anyhow::Result<Vec<_>>>()?;
     let wall = t0.elapsed().as_secs_f64();
+    let latency =
+        summarize(&results.iter().map(|r| r.latency_secs()).collect::<Vec<_>>());
 
     let errors = results.iter().filter(|r| r.outputs.is_err()).count();
     println!(
@@ -57,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         exec.p95 * 1e3
     );
 
-    let report = server.shutdown()?;
+    let report = deployment.shutdown()?;
     println!("\nmicro-batches ({} dispatched):", report.batches);
     for (artifact, hist) in &report.batch_hist {
         let sizes: Vec<String> =

@@ -1,0 +1,329 @@
+//! The fluent, typed design builder — the programmatic frontend of the
+//! design-entry API.
+//!
+//! A [`DesignBuilder`] assembles the same facts a Graph Configuration
+//! File carries (kernel, arithmetic class, PSTs, per-iteration ops and
+//! wire bytes, deployed copies), but with the component vocabulary
+//! typed: DAC/DCC modes are enums, the CC is the paper's `Parallel<n>*
+//! Cascade<k>` notation parsed and validated at [`DesignBuilder::build`].
+//! Errors accumulate so a chain reads fluently and reports every
+//! problem at once instead of panicking mid-chain.
+
+use anyhow::{bail, Result};
+
+use crate::codegen::config::PuConfig;
+use crate::engine::compute::cc::{parse_cc_validated, CcMode};
+use crate::engine::compute::dac::{Dac, DacMode};
+use crate::engine::compute::dcc::{Dcc, DccMode};
+use crate::engine::compute::pu::{ProcessingStructure, ProcessingUnit};
+use crate::sim::core::KernelClass;
+
+use super::design::Design;
+
+/// Builder for one Processing Structure (a DAC set, a Component
+/// Connector, a DCC set — paper §3.3, Fig 3). Obtained inside
+/// [`DesignBuilder::pst`]'s closure.
+pub struct PstBuilder {
+    dacs: Vec<Dac>,
+    cc: Option<CcMode>,
+    dccs: Vec<Dcc>,
+    errors: Vec<String>,
+}
+
+impl PstBuilder {
+    fn new() -> PstBuilder {
+        PstBuilder { dacs: Vec::new(), cc: None, dccs: Vec::new(), errors: Vec::new() }
+    }
+
+    /// Add a Data Allocation Component: its (stacked) modes, the PLIO
+    /// ports it owns, and how many CC cores it serves.
+    pub fn dac(mut self, modes: &[DacMode], plios: usize, serves: usize) -> Self {
+        self.dacs.push(Dac::new(modes.to_vec(), plios, serves));
+        self
+    }
+
+    /// Set the Component Connector from the paper's notation
+    /// (`Single`, `Cascade<4>`, `Parallel<16>*Cascade<4>`,
+    /// `Butterfly[4]`). A malformed spec becomes a build error.
+    pub fn cc(mut self, spec: &str) -> Self {
+        match parse_cc_validated(spec) {
+            Ok(cc) => self.cc = Some(cc),
+            Err(e) => self.errors.push(format!("cc {spec:?}: {e}")),
+        }
+        self
+    }
+
+    /// Add a Data Collection Component.
+    pub fn dcc(mut self, mode: DccMode, plios: usize, serves: usize) -> Self {
+        self.dccs.push(Dcc::new(mode, plios, serves));
+        self
+    }
+
+    fn finish(self) -> Result<ProcessingStructure, Vec<String>> {
+        let PstBuilder { dacs, cc, dccs, mut errors } = self;
+        let Some(cc) = cc else {
+            errors.push("pst needs a .cc(\"...\") component connector".into());
+            return Err(errors);
+        };
+        if !errors.is_empty() {
+            return Err(errors);
+        }
+        Ok(ProcessingStructure { dacs, cc, dccs })
+    }
+}
+
+/// The fluent design entry point — see [`Design::for_algorithm`].
+pub struct DesignBuilder {
+    name: String,
+    kernel: Option<String>,
+    class: Option<KernelClass>,
+    copies: usize,
+    psts: Vec<ProcessingStructure>,
+    /// `.pst(...)` invocations (not successful pushes): error labels
+    /// must point at the PST the caller wrote, even after an earlier
+    /// one failed.
+    pst_calls: usize,
+    ops_per_iter: Option<f64>,
+    wire: Option<(usize, usize)>,
+    serial_comm: bool,
+    handoff_bytes: usize,
+    artifact: Option<String>,
+    errors: Vec<String>,
+}
+
+impl DesignBuilder {
+    pub(crate) fn new(name: impl Into<String>) -> DesignBuilder {
+        DesignBuilder {
+            name: name.into(),
+            kernel: None,
+            class: None,
+            copies: 1,
+            psts: Vec::new(),
+            pst_calls: 0,
+            ops_per_iter: None,
+            wire: None,
+            serial_comm: false,
+            handoff_bytes: 0,
+            artifact: None,
+            errors: Vec::new(),
+        }
+    }
+
+    /// AIE kernel source this design's cores run. Must exist in the
+    /// Kernel Manager ([`crate::codegen::repository::kernel_catalogue`]);
+    /// unknown kernels are a build error.
+    pub fn kernel(mut self, name: impl Into<String>) -> Self {
+        self.kernel = Some(name.into());
+        self
+    }
+
+    /// Arithmetic class of the kernel (checked against the Kernel
+    /// Manager's record at build time).
+    pub fn class(mut self, class: KernelClass) -> Self {
+        self.class = Some(class);
+        self
+    }
+
+    /// Add one Processing Structure via its own fluent builder.
+    pub fn pst(mut self, f: impl FnOnce(PstBuilder) -> PstBuilder) -> Self {
+        self.pst_calls += 1;
+        let idx = self.pst_calls;
+        match f(PstBuilder::new()).finish() {
+            Ok(pst) => self.psts.push(pst),
+            Err(errs) => self
+                .errors
+                .extend(errs.into_iter().map(|e| format!("pst#{idx}: {e}"))),
+        }
+        self
+    }
+
+    /// PU copies the design deploys (default 1).
+    pub fn copies(mut self, copies: usize) -> Self {
+        self.copies = copies;
+        self
+    }
+
+    /// Total arithmetic ops one PU performs per engine iteration.
+    pub fn ops_per_iter(mut self, ops: f64) -> Self {
+        self.ops_per_iter = Some(ops);
+        self
+    }
+
+    /// Unique bytes entering / leaving one PU per iteration over PLIO.
+    pub fn wire_bytes(mut self, in_bytes: usize, out_bytes: usize) -> Self {
+        self.wire = Some((in_bytes, out_bytes));
+        self
+    }
+
+    /// Serialize input and output in the communication phase
+    /// (single-duplex wiring such as the FFT PU's DIR ports).
+    pub fn serial_comm(mut self, on: bool) -> Self {
+        self.serial_comm = on;
+        self
+    }
+
+    /// Bytes handed between PSTs over the core stream fabric per
+    /// iteration (multi-PST PUs).
+    pub fn handoff_bytes(mut self, bytes: usize) -> Self {
+        self.handoff_bytes = bytes;
+        self
+    }
+
+    /// Override the runtime artifact this design executes as. Without
+    /// it the Kernel Manager's kernel → artifact mapping applies; the
+    /// override exists for PU-level graphs whose artifact differs from
+    /// the kernel default (e.g. the MM-T cascade runs `mmt_cascade8`
+    /// although its per-core kernel is `mm32`).
+    pub fn artifact(mut self, artifact: impl Into<String>) -> Self {
+        self.artifact = Some(artifact.into());
+        self
+    }
+
+    /// Validate everything and produce the [`Design`]. All accumulated
+    /// problems are reported together in the error.
+    pub fn build(self) -> Result<Design> {
+        let DesignBuilder {
+            name,
+            kernel,
+            class,
+            copies,
+            psts,
+            pst_calls: _,
+            ops_per_iter,
+            wire,
+            serial_comm,
+            handoff_bytes,
+            artifact,
+            mut errors,
+        } = self;
+        if kernel.is_none() {
+            errors.push("missing .kernel(...)".into());
+        }
+        if class.is_none() {
+            errors.push("missing .class(...)".into());
+        }
+        if ops_per_iter.is_none() {
+            errors.push("missing .ops_per_iter(...)".into());
+        }
+        if wire.is_none() {
+            errors.push("missing .wire_bytes(in, out)".into());
+        }
+        if psts.is_empty() {
+            errors.push("needs at least one .pst(...)".into());
+        }
+        if copies == 0 {
+            errors.push(".copies(...) must be >= 1".into());
+        }
+        if !errors.is_empty() {
+            bail!("design {name:?} is not buildable: {}", errors.join("; "));
+        }
+        let (in_bytes, out_bytes) = wire.expect("checked above");
+        let mut pu = ProcessingUnit::simple(
+            &name,
+            psts,
+            class.expect("checked above"),
+            ops_per_iter.expect("checked above"),
+            in_bytes,
+            out_bytes,
+        );
+        pu.serial_comm = serial_comm;
+        pu.handoff_bytes = handoff_bytes;
+        let config = PuConfig { name, kernel: kernel.expect("checked above"), copies, pu };
+        Design::with_artifact(config, artifact)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mm_chain() -> DesignBuilder {
+        Design::for_algorithm("mm")
+            .kernel("mm32")
+            .class(KernelClass::F32Mac)
+            .pst(|p| {
+                p.dac(&[DacMode::Swh, DacMode::Bdc], 8, 64)
+                    .cc("Parallel<16>*Cascade<4>")
+                    .dcc(DccMode::Swh, 4, 64)
+            })
+            .ops_per_iter(2.0 * 128.0 * 128.0 * 128.0)
+            .wire_bytes(2 * 128 * 128 * 4, 128 * 128 * 4)
+            .copies(6)
+    }
+
+    #[test]
+    fn builds_the_paper_mm_design() {
+        let d = mm_chain().build().unwrap();
+        assert_eq!(d.name(), "mm");
+        assert_eq!(d.copies(), 6);
+        assert_eq!(d.cores(), 64);
+        assert_eq!(d.total_plios(), 12);
+        assert_eq!(d.artifact(), "mm_pu128");
+    }
+
+    #[test]
+    fn missing_pieces_are_reported_together() {
+        let err = Design::for_algorithm("empty").build().unwrap_err().to_string();
+        for needle in [".kernel", ".class", ".ops_per_iter", ".wire_bytes", ".pst"] {
+            assert!(err.contains(needle), "{err}");
+        }
+    }
+
+    #[test]
+    fn bad_cc_is_a_build_error_not_a_panic() {
+        let err = mm_chain()
+            .pst(|p| p.dac(&[DacMode::Swh], 1, 8).cc("Waffle<9>").dcc(DccMode::Swh, 1, 8))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("Waffle"), "{err}");
+    }
+
+    #[test]
+    fn pst_errors_are_numbered_by_invocation() {
+        // an earlier failed PST must not shift later labels: both bad
+        // PSTs report under their own number
+        let err = Design::for_algorithm("two-bad")
+            .kernel("mm32")
+            .class(KernelClass::F32Mac)
+            .pst(|p| p.dac(&[DacMode::Swh], 1, 8).cc("Bad<1>").dcc(DccMode::Swh, 1, 8))
+            .pst(|p| p.dac(&[DacMode::Swh], 1, 8).cc("AlsoBad").dcc(DccMode::Swh, 1, 8))
+            .ops_per_iter(1e6)
+            .wire_bytes(64, 64)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pst#1") && err.contains("pst#2"), "{err}");
+    }
+
+    #[test]
+    fn pst_without_cc_is_a_build_error() {
+        let err = Design::for_algorithm("nocc")
+            .kernel("mm32")
+            .class(KernelClass::F32Mac)
+            .pst(|p| p.dac(&[DacMode::Swh], 1, 8).dcc(DccMode::Swh, 1, 8))
+            .ops_per_iter(1e6)
+            .wire_bytes(64, 64)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("component connector"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kernel_and_class_mismatch_rejected() {
+        let err = mm_chain().kernel("nope").build().unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        let err = mm_chain()
+            .class(KernelClass::I32Mac)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("class"), "{err}");
+    }
+
+    #[test]
+    fn zero_copies_rejected() {
+        assert!(mm_chain().copies(0).build().is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! [`Deployment`] — the serving stage of the design-entry API: a
+//! running leader/worker server (micro-batching, backpressure,
+//! cost-model-aware placement) wrapped in a typed handle that knows
+//! which designs it carries.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::server::{
+    serve_open_loop, JobResult, Pending, Server, ServeReport, ServerConfig,
+};
+use crate::runtime::{BackendKind, Manifest, Tensor};
+
+use super::design::Design;
+
+/// Deployment knobs: the worker substrate plus the serving-path tuning
+/// of [`ServerConfig`]. `warm: true` (default) pre-builds every
+/// deployed artifact's prepared state in every worker at load time.
+#[derive(Debug, Clone)]
+pub struct DeployOptions {
+    pub backend: BackendKind,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_linger: Duration,
+    pub queue_cap: usize,
+    pub artifact_dir: PathBuf,
+    pub warm: bool,
+}
+
+impl Default for DeployOptions {
+    /// Defaults mirror the CLI's precedence below the `--backend` flag:
+    /// a valid `$EA4RCA_BACKEND` selects the backend, otherwise the
+    /// interpreter (a malformed value falls back rather than panicking
+    /// inside `Default` — set `backend` explicitly to get an error).
+    fn default() -> Self {
+        let sc = ServerConfig::default();
+        DeployOptions {
+            backend: BackendKind::from_env().unwrap_or(BackendKind::Interp),
+            workers: sc.n_workers,
+            max_batch: sc.max_batch,
+            max_linger: sc.max_linger,
+            queue_cap: sc.queue_cap,
+            artifact_dir: Manifest::default_dir(),
+            warm: true,
+        }
+    }
+}
+
+/// A running deployment of one or more [`Design`]s. Submissions are
+/// typed against the deployed artifact set — a job for an artifact this
+/// deployment does not carry is an immediate readable error, not a
+/// worker-side failure. [`Deployment::shutdown`] drains every accepted
+/// job and returns the [`ServeReport`].
+pub struct Deployment {
+    server: Server,
+    artifacts: Vec<String>,
+}
+
+impl Deployment {
+    /// Deploy `designs` as one serving fleet: per-worker runtimes on
+    /// `opts.backend`, every design's artifact warmed (unless
+    /// `opts.warm` is off), micro-batch dispatch across workers.
+    pub fn start(designs: &[Design], opts: &DeployOptions) -> Result<Deployment> {
+        if designs.is_empty() {
+            bail!("deployment needs at least one design");
+        }
+        let mut artifacts: Vec<String> = Vec::new();
+        for d in designs {
+            if !artifacts.iter().any(|a| a == d.artifact()) {
+                artifacts.push(d.artifact().to_string());
+            }
+        }
+        let config = ServerConfig {
+            n_workers: opts.workers,
+            max_batch: opts.max_batch,
+            max_linger: opts.max_linger,
+            queue_cap: opts.queue_cap,
+        };
+        let warm: Vec<&str> = if opts.warm {
+            artifacts.iter().map(String::as_str).collect()
+        } else {
+            Vec::new()
+        };
+        let server =
+            Server::start_with_config(opts.backend, config, opts.artifact_dir.clone(), &warm)?;
+        Ok(Deployment { server, artifacts })
+    }
+
+    /// The deployed artifact set (primary design first).
+    pub fn artifacts(&self) -> &[String] {
+        &self.artifacts
+    }
+
+    pub fn workers(&self) -> usize {
+        self.server.workers()
+    }
+
+    fn ensure_deployed(&self, artifact: &str) -> Result<()> {
+        if self.artifacts.iter().any(|a| a == artifact) {
+            return Ok(());
+        }
+        bail!(
+            "artifact {artifact:?} is not part of this deployment (deployed: {})",
+            self.artifacts.join(", ")
+        )
+    }
+
+    /// Submit one job to the primary (first-deployed) design.
+    pub fn submit(&self, inputs: Vec<Tensor>) -> Result<Pending> {
+        let artifact = self.artifacts[0].clone();
+        Ok(self.server.submit(&artifact, inputs)?)
+    }
+
+    /// Submit one job to a specific deployed artifact. Backpressure
+    /// applies: a saturated admission queue surfaces as an error after
+    /// the bounded wait instead of blocking forever.
+    pub fn submit_to(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending> {
+        self.ensure_deployed(artifact)?;
+        Ok(self.server.submit(artifact, inputs)?)
+    }
+
+    /// Synchronous one-job round trip on the primary design: submit,
+    /// wait, unwrap the outputs (exec-style validation and smoke tests).
+    pub fn execute(&self, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        self.submit(inputs)?.wait()?.outputs
+    }
+
+    /// Drive an open-loop arrival stream against the deployment; a
+    /// saturated queue sheds the job (second return value) instead of
+    /// stalling the arrival clock. Every arrival's artifact is checked
+    /// against the deployed set up front — same typed guarantee as
+    /// [`Deployment::submit_to`] — before the clock starts.
+    pub fn open_loop(
+        &self,
+        arrivals: impl IntoIterator<Item = (f64, &'static str, Vec<Tensor>)>,
+    ) -> Result<(Vec<JobResult>, u64)> {
+        let arrivals: Vec<_> = arrivals.into_iter().collect();
+        for (_, artifact, _) in &arrivals {
+            self.ensure_deployed(artifact)?;
+        }
+        serve_open_loop(&self.server, arrivals)
+    }
+
+    /// Close admission, drain every accepted job, join the workers, and
+    /// return the run's [`ServeReport`].
+    pub fn shutdown(self) -> Result<ServeReport> {
+        self.server.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::designs;
+
+    #[test]
+    fn empty_deployment_rejected() {
+        assert!(Deployment::start(&[], &DeployOptions::default()).is_err());
+    }
+
+    #[test]
+    fn undeployed_artifact_is_a_typed_error() {
+        let opts = DeployOptions { workers: 1, ..DeployOptions::default() };
+        let dep = designs::mm().deploy(&opts).unwrap();
+        assert_eq!(dep.artifacts(), &["mm_pu128".to_string()]);
+        let err = dep.submit_to("fft1024", Vec::new()).unwrap_err().to_string();
+        assert!(err.contains("fft1024") && err.contains("mm_pu128"), "{err}");
+        // the open-loop path enforces the same contract up front
+        let err = dep
+            .open_loop([(0.0, "fft1024", Vec::new())])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fft1024"), "{err}");
+        dep.shutdown().unwrap();
+    }
+
+    #[test]
+    fn duplicate_designs_deploy_one_artifact_lane() {
+        let opts = DeployOptions { workers: 1, ..DeployOptions::default() };
+        let dep =
+            Deployment::start(&[designs::mm(), designs::mm()], &opts).unwrap();
+        assert_eq!(dep.artifacts().len(), 1);
+        dep.shutdown().unwrap();
+    }
+}

@@ -1,0 +1,333 @@
+//! [`Design`] — a validated accelerator design and the single object
+//! the rest of the framework hangs off: graph generation, cost
+//! prediction, simulation reports, runtimes, and deployments.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::codegen::config::PuConfig;
+use crate::codegen::generator::{self, GeneratedProject};
+use crate::codegen::repository::{self, FusedProject};
+use crate::coordinator::controller::{Controller, RunReport};
+use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::engine::data::du::DataUnit;
+use crate::runtime::backend::sim::predict_lane;
+use crate::runtime::manifest::PuTopology;
+use crate::runtime::{BackendKind, CostPrediction, Manifest, Runtime};
+use crate::sim::memory::ResourceUsage;
+use crate::sim::params::HwParams;
+use crate::util::json::Json;
+
+use super::builder::DesignBuilder;
+use super::deploy::{DeployOptions, Deployment};
+
+/// A validated top-down design: the Graph Configuration (PU structure,
+/// kernel, copies) plus the derived artifact topology. Built fluently
+/// with [`Design::for_algorithm`] or parsed from the JSON frontend with
+/// [`Design::from_path`] / [`Design::from_json_text`]; both frontends
+/// land in the same validation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Design {
+    config: PuConfig,
+    topology: PuTopology,
+    /// Runtime artifact this design executes as (Kernel Manager mapping
+    /// unless overridden by the builder).
+    artifact: String,
+}
+
+/// One DU-PU lane of a simulated workload: the data unit serving this
+/// design's PU and how many engine iterations it runs.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    pub du: DataUnit,
+    pub engine_iters: u64,
+}
+
+/// Workload facts for [`Design::report`] — everything a Table 6/7/8/9
+/// row needs beyond the design itself.
+#[derive(Debug, Clone)]
+pub struct ReportParams {
+    pub label: String,
+    /// The deployed DU-PU lanes (homogeneous apps use one; FFT deploys
+    /// 8 identical pairs; Filter2D mixes full and partial DUs).
+    pub lanes: Vec<Lane>,
+    /// User-level tasks the workload completes (app-defined).
+    pub tasks: f64,
+    /// Useful arithmetic ops across the workload (padding is waste).
+    pub total_ops: f64,
+    /// Whole-card resource footprint to validate and feed the power model.
+    pub usage: ResourceUsage,
+    /// Execution discipline (Regular unless modelling a non-RCA app).
+    pub mode: ExecMode,
+    pub trace: bool,
+}
+
+impl Design {
+    /// Start a fluent design for `algorithm` (the PU/config name).
+    ///
+    /// ```
+    /// use ea4rca::api::Design;
+    /// use ea4rca::engine::compute::dac::DacMode;
+    /// use ea4rca::engine::compute::dcc::DccMode;
+    /// use ea4rca::sim::core::KernelClass;
+    ///
+    /// let design = Design::for_algorithm("mm")
+    ///     .kernel("mm32")
+    ///     .class(KernelClass::F32Mac)
+    ///     .pst(|p| {
+    ///         p.dac(&[DacMode::Swh, DacMode::Bdc], 8, 64)
+    ///             .cc("Parallel<16>*Cascade<4>")
+    ///             .dcc(DccMode::Swh, 4, 64)
+    ///     })
+    ///     .ops_per_iter(2.0 * 128.0 * 128.0 * 128.0)
+    ///     .wire_bytes(2 * 128 * 128 * 4, 128 * 128 * 4)
+    ///     .copies(6)
+    ///     .build()?;
+    /// assert_eq!(design.cores(), 64);
+    /// assert_eq!(design.artifact(), "mm_pu128");
+    /// // the JSON frontend is the same design
+    /// let back = Design::from_json_text(&design.to_json_text())?;
+    /// assert_eq!(back, design);
+    /// # Ok::<(), anyhow::Error>(())
+    /// ```
+    pub fn for_algorithm(algorithm: impl Into<String>) -> DesignBuilder {
+        DesignBuilder::new(algorithm)
+    }
+
+    /// Wrap an already-parsed Graph Configuration. Validation is the
+    /// same as the builder's: PU structure, positive copies, and the
+    /// kernel checked against the Kernel Manager.
+    pub fn from_config(config: PuConfig) -> Result<Design> {
+        Design::with_artifact(config, None)
+    }
+
+    pub(crate) fn with_artifact(config: PuConfig, artifact: Option<String>) -> Result<Design> {
+        config.pu.validate().map_err(anyhow::Error::msg)?;
+        if config.copies == 0 {
+            bail!("design {:?}: copies must be >= 1", config.name);
+        }
+        let info = repository::validate_kernel(&config)?;
+        let artifact = artifact.unwrap_or_else(|| info.artifact.to_string());
+        let topology = PuTopology::from_config(&config);
+        Ok(Design { config, topology, artifact })
+    }
+
+    /// The JSON frontend: parse a Graph Configuration File's text. An
+    /// optional top-level `"artifact"` key carries a runtime-artifact
+    /// override (what the builder's `.artifact(...)` sets); without it
+    /// the Kernel Manager's kernel → artifact mapping applies.
+    pub fn from_json_text(text: &str) -> Result<Design> {
+        let root = Json::parse(text)
+            .map_err(|e| anyhow::anyhow!("configuration is not valid JSON: {e}"))?;
+        let artifact = root.get("artifact").and_then(Json::as_str).map(String::from);
+        Design::with_artifact(PuConfig::from_json(&root)?, artifact)
+    }
+
+    /// The JSON frontend: parse a Graph Configuration File on disk.
+    pub fn from_path(path: impl AsRef<Path>) -> Result<Design> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Design::from_json_text(&text)
+            .map_err(|e| e.context(format!("parsing {}", path.display())))
+    }
+
+    /// Serialize back to the configuration-file JSON (round-trips:
+    /// `Design::from_json_text(&d.to_json_text())` equals `d`). The
+    /// `"artifact"` key is emitted only when this design overrides the
+    /// Kernel Manager's default, so shipped configs serialize byte-
+    /// compatibly with what they parse from.
+    pub fn to_json(&self) -> Json {
+        let mut root = self.config.to_json();
+        let default = repository::validate_kernel(&self.config)
+            .map(|info| info.artifact.to_string())
+            .ok();
+        if default.as_deref() != Some(self.artifact.as_str()) {
+            if let Json::Obj(map) = &mut root {
+                map.insert("artifact".to_string(), Json::str(&self.artifact));
+            }
+        }
+        root
+    }
+
+    pub fn to_json_text(&self) -> String {
+        self.to_json().to_string_pretty()
+    }
+
+    // -- accessors ---------------------------------------------------------
+
+    pub fn name(&self) -> &str {
+        &self.config.name
+    }
+
+    pub fn kernel(&self) -> &str {
+        &self.config.kernel
+    }
+
+    /// Runtime artifact this design executes as.
+    pub fn artifact(&self) -> &str {
+        &self.artifact
+    }
+
+    pub fn copies(&self) -> usize {
+        self.config.copies
+    }
+
+    /// AIE cores of one PU copy.
+    pub fn cores(&self) -> usize {
+        self.config.pu.cores()
+    }
+
+    pub fn total_plios(&self) -> usize {
+        self.config.pu.total_plios()
+    }
+
+    /// The validated Graph Configuration this design owns.
+    pub fn config(&self) -> &PuConfig {
+        &self.config
+    }
+
+    /// The artifact topology (PU structure + deployed copies) the cost
+    /// model runs.
+    pub fn topology(&self) -> &PuTopology {
+        &self.topology
+    }
+
+    // -- pipeline stages ---------------------------------------------------
+
+    /// Run the AIE Graph Code Generator: the compilable graph project
+    /// plus the `pu_config.json` topology handoff.
+    pub fn generate(&self) -> Result<GeneratedProject> {
+        generator::generate(&self.config)
+    }
+
+    /// [`Design::generate`] and write the project tree into `dir`.
+    pub fn generate_into(&self, dir: impl AsRef<Path>) -> Result<GeneratedProject> {
+        let proj = self.generate()?;
+        proj.write_to(dir.as_ref())?;
+        Ok(proj)
+    }
+
+    /// Predicted cost of dispatching `batch` serving jobs on this
+    /// design's deployed topology (VCK5000 parameters) — the event-
+    /// driven AIE cost model, no runtime or artifacts needed.
+    /// Deterministic for a given (design, batch).
+    pub fn predict(&self, batch: usize) -> CostPrediction {
+        self.predict_on(&HwParams::vck5000(), batch)
+    }
+
+    /// [`Design::predict`] against explicit hardware parameters.
+    pub fn predict_on(&self, p: &HwParams, batch: usize) -> CostPrediction {
+        predict_lane(p, &self.artifact, &self.topology, batch)
+    }
+
+    /// Simulate a workload on this design and produce the Controller's
+    /// [`RunReport`] row (deploy-validate, event-driven simulation,
+    /// power model) — the `run`/`sweep` path of the pipeline.
+    pub fn report(&self, p: &HwParams, w: &ReportParams) -> Result<RunReport> {
+        if w.lanes.is_empty() {
+            bail!("design {:?}: report needs at least one lane", self.config.name);
+        }
+        let groups: Vec<GroupSpec> = w
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, lane)| GroupSpec {
+                name: format!("{}-L{i}", self.config.name),
+                du: lane.du.clone(),
+                pu: self.config.pu.clone(),
+                engine_iters: lane.engine_iters,
+                mode: w.mode,
+            })
+            .collect();
+        Controller::new(p.clone(), w.usage, self.config.pu.class)
+            .with_trace(w.trace)
+            .run(&w.label, &groups, w.tasks, w.total_ops)
+    }
+
+    /// A runtime for this design's numerics: backend from
+    /// `$EA4RCA_BACKEND`, default artifact directory, the design's
+    /// artifact warmed when the manifest carries it.
+    pub fn runtime(&self) -> Result<Runtime> {
+        self.runtime_with(BackendKind::from_env()?, Manifest::default_dir())
+    }
+
+    /// [`Design::runtime`] with an explicit backend and artifact dir.
+    pub fn runtime_with(
+        &self,
+        kind: BackendKind,
+        dir: impl Into<PathBuf>,
+    ) -> Result<Runtime> {
+        let rt = Runtime::with_backend(kind, dir)?;
+        // warm the design's artifact when it exists; a design whose
+        // artifact is absent still gets a runtime (the execute path
+        // reports the missing artifact readably)
+        if rt.manifest().get(&self.artifact).is_ok() {
+            rt.warmup(&[self.artifact.as_str()])?;
+        }
+        Ok(rt)
+    }
+
+    /// Deploy this design as a serving [`Deployment`] (leader/worker
+    /// server, micro-batching, cost-aware placement, warm caches).
+    pub fn deploy(&self, opts: &DeployOptions) -> Result<Deployment> {
+        Deployment::start(std::slice::from_ref(self), opts)
+    }
+}
+
+/// Graph Fusion through the facade: combine several designs into one
+/// deployable project, checked against the card.
+pub fn fuse(p: &HwParams, designs: &[Design]) -> Result<FusedProject> {
+    let configs: Vec<PuConfig> = designs.iter().map(|d| d.config().clone()).collect();
+    repository::fuse(p, &configs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::designs;
+
+    #[test]
+    fn json_frontend_roundtrips() {
+        let d = designs::mm();
+        let text = d.to_json_text();
+        let back = Design::from_json_text(&text).unwrap();
+        assert_eq!(back, d);
+        assert_eq!(back.artifact(), "mm_pu128");
+    }
+
+    #[test]
+    fn report_requires_a_lane() {
+        let d = designs::mm();
+        let w = ReportParams {
+            label: "empty".into(),
+            lanes: Vec::new(),
+            tasks: 1.0,
+            total_ops: 1.0,
+            usage: ResourceUsage::default(),
+            mode: ExecMode::Regular,
+            trace: false,
+        };
+        assert!(d.report(&HwParams::vck5000(), &w).is_err());
+    }
+
+    #[test]
+    fn predict_is_deterministic() {
+        let d = designs::fft(1024).unwrap();
+        let a = d.predict(4);
+        let b = d.predict(4);
+        assert_eq!(a.latency_secs.to_bits(), b.latency_secs.to_bits());
+        assert!(a.latency_secs > 0.0 && a.power_w > 0.0 && a.energy_j > 0.0);
+    }
+
+    #[test]
+    fn fuse_checks_the_card_through_the_facade() {
+        let p = HwParams::vck5000();
+        // MM (384 cores) + FFT (80) overflow the 400-core card
+        let err = fuse(&p, &[designs::mm(), designs::fft(1024).unwrap()]).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds the card"), "{err:#}");
+        let f = fuse(&p, &[designs::mm()]).unwrap();
+        assert_eq!(f.total_aie, 384);
+    }
+}

@@ -1,0 +1,139 @@
+//! The shipped accelerator catalogue as ~15-line builder calls — the
+//! paper's four evaluation designs (Table 4 / Fig 7) expressed through
+//! the design-entry API, one [`Design`] each. These are the same PU
+//! structures `apps::*` simulate and `configs/*.json` serialize (a
+//! facade test pins all three representations together); they are what
+//! `ea4rca serve` deploys.
+
+use anyhow::{bail, Result};
+
+use crate::engine::compute::dac::DacMode;
+use crate::engine::compute::dcc::DccMode;
+use crate::sim::core::{fft_ops, filter_ops, KernelClass};
+
+use super::design::Design;
+
+/// The MM accelerator (Fig 7a): Parallel<16>*Cascade<4> PUs, SWH+BDC
+/// in, SWH out, 6 copies at 96% of the array.
+pub fn mm() -> Design {
+    Design::for_algorithm("mm")
+        .kernel("mm32")
+        .class(KernelClass::F32Mac)
+        .pst(|p| {
+            p.dac(&[DacMode::Swh, DacMode::Bdc], 8, 64)
+                .cc("Parallel<16>*Cascade<4>")
+                .dcc(DccMode::Swh, 4, 64)
+        })
+        .ops_per_iter(2.0 * 128.0 * 128.0 * 128.0)
+        .wire_bytes(2 * 128 * 128 * 4, 128 * 128 * 4)
+        .copies(6)
+        .build()
+        .expect("the paper's MM design always builds")
+}
+
+/// The Filter2D accelerator (Fig 7b): Parallel<8> PUs filtering one
+/// 32x32 tile (+2px halo) per core, 44 copies.
+pub fn filter2d() -> Design {
+    Design::for_algorithm("filter2d")
+        .kernel("filter2d")
+        .class(KernelClass::I32Mac)
+        .pst(|p| {
+            p.dac(&[DacMode::Swh], 1, 8)
+                .cc("Parallel<8>*Single")
+                .dcc(DccMode::Swh, 1, 8)
+        })
+        .ops_per_iter(8.0 * filter_ops(32 * 32, 5))
+        .wire_bytes(8 * 36 * 36, 8 * 32 * 32)
+        .copies(44)
+        .build()
+        .expect("the paper's Filter2D design always builds")
+}
+
+/// The FFT accelerator (Fig 7c) for `n`-point tasks: Butterfly[4] stage
+/// group handing off to Parallel<2>*Cascade<3> over the stream fabric,
+/// DIR ports serializing input and output, 8 copies. Errors on a
+/// non-power-of-two size.
+pub fn fft(n: usize) -> Result<Design> {
+    if !n.is_power_of_two() || n < 2 {
+        bail!("FFT size must be a power of two >= 2, got {n}");
+    }
+    Design::for_algorithm("fft")
+        .kernel("fft")
+        .class(KernelClass::Cint16Butterfly)
+        .pst(|p| p.dac(&[DacMode::Bdc], 1, 4).cc("Butterfly[4]").dcc(DccMode::Dir, 1, 1))
+        .pst(|p| {
+            p.dac(&[DacMode::Dir], 1, 1)
+                .cc("Parallel<2>*Cascade<3>")
+                .dcc(DccMode::Dir, 1, 1)
+        })
+        .ops_per_iter(fft_ops(n))
+        .wire_bytes(n * 4, n * 4)
+        .serial_comm(true)
+        .handoff_bytes(n * 4)
+        .artifact(format!("fft{n}"))
+        .copies(8)
+        .build()
+}
+
+/// MM-T (Table 9): 50 Cascade<8> chains saturating the array, data
+/// resident (nothing on the wire per iteration). Its per-core kernel is
+/// `mm32`; the PU-level artifact is the chained `mmt_cascade8`.
+pub fn mmt() -> Design {
+    Design::for_algorithm("mmt")
+        .kernel("mm32")
+        .class(KernelClass::F32Mac)
+        .pst(|p| p.dac(&[DacMode::Dir], 1, 1).cc("Cascade<8>").dcc(DccMode::Dir, 1, 1))
+        .ops_per_iter(8.0 * 2.0 * 32.0 * 32.0 * 32.0)
+        .wire_bytes(0, 0)
+        .artifact("mmt_cascade8")
+        .copies(50)
+        .build()
+        .expect("the paper's MM-T design always builds")
+}
+
+/// Every serving design `ea4rca serve` deploys (the workload mixes'
+/// artifact vocabulary: mm_pu128, filter2d_pu8, fft1024, mmt_cascade8).
+pub fn catalogue() -> Vec<Design> {
+    vec![mm(), filter2d(), fft(1024).expect("1024 is a power of two"), mmt()]
+}
+
+/// CLI-facing lookup: the design behind an `--app` name — the single
+/// place the app vocabulary maps to designs, shared by `run`'s
+/// cross-check and `exec`. Only the FFT design depends on a size
+/// (`fft_points`); the others ignore it.
+pub fn for_app(app: &str, fft_points: usize) -> Result<Design> {
+    Ok(match app {
+        "mm" => mm(),
+        "filter2d" => filter2d(),
+        "fft" => fft(fft_points)?,
+        "mmt" => mmt(),
+        other => bail!("unknown app {other:?} (known: mm, filter2d, fft, mmt)"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalogue_covers_the_serving_artifacts() {
+        let arts: Vec<&str> = vec!["mm_pu128", "filter2d_pu8", "fft1024", "mmt_cascade8"];
+        let designs = catalogue();
+        assert_eq!(designs.len(), arts.len());
+        for (d, a) in designs.iter().zip(arts) {
+            assert_eq!(d.artifact(), a);
+        }
+    }
+
+    #[test]
+    fn fft_rejects_ragged_sizes() {
+        assert!(fft(1000).is_err());
+        assert!(fft(0).is_err());
+        assert_eq!(fft(4096).unwrap().artifact(), "fft4096");
+    }
+
+    // NOTE: parity with the apps' PU constructors and the shipped
+    // configs/*.json is pinned by the integration suite
+    // (rust/tests/api_facade.rs::builder_json_and_apps_agree), which
+    // exercises all three representations in one place.
+}

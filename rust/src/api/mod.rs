@@ -1,0 +1,56 @@
+//! The top-down design-entry API — one typed pipeline from "describe
+//! the RCA algorithm" to "serve traffic", the paper's customized design
+//! framework (§3) as a programmable facade.
+//!
+//! ```text
+//! DesignBuilder ──build()──> Design ──┬── generate()  AIE graph project + pu_config.json
+//!   (fluent, typed)   ^               ├── predict()   AIE cost model (no runtime needed)
+//!                     │               ├── report()    Controller RunReport row (sim + power)
+//!  JSON frontend ─────┘               ├── runtime()   warmed numerics runtime
+//!  (from_path / from_json_text,       └── deploy() ─> Deployment (leader/worker serving,
+//!   to_json round-trip)                               typed submit, shutdown -> ServeReport)
+//! ```
+//!
+//! A design is described once — kernel, arithmetic class, the DAC/CC/DCC
+//! processing structures, per-iteration op/byte facts, deployed copies —
+//! and every downstream stage (code generation, performance prediction,
+//! table-style simulation reports, serving) hangs off the resulting
+//! [`Design`]. Graph Configuration Files are just the other frontend of
+//! the same object: [`Design::from_path`] parses them,
+//! [`Design::to_json`] writes them back, and both frontends share one
+//! validation (PU structure, Kernel Manager membership, class match).
+//!
+//! The shipped accelerators live in [`designs`] as builder calls; a new
+//! workload is one more ~20-line builder chain, not a JSON file plus
+//! hand-wired glue:
+//!
+//! ```
+//! use ea4rca::api::{designs, DeployOptions};
+//!
+//! // predict before deploying: the event-driven AIE cost model needs
+//! // no runtime, no artifacts, no server
+//! let fft = designs::fft(1024)?;
+//! let one = fft.predict(1);
+//! let eight = fft.predict(8);
+//! assert!(eight.per_job_secs() <= one.per_job_secs());
+//!
+//! // deploy and serve through the same object
+//! let dep = fft.deploy(&DeployOptions { workers: 1, ..Default::default() })?;
+//! let mut rng = ea4rca::util::rng::Rng::new(7);
+//! let inputs = ea4rca::workload::TaskKind::Fft1024.gen_inputs(&mut rng);
+//! let outputs = dep.execute(inputs)?;
+//! assert_eq!(outputs[0].shape(), &[1024]);
+//! let report = dep.shutdown()?;
+//! assert_eq!(report.completed_jobs(), 1);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod builder;
+pub mod deploy;
+pub mod designs;
+
+mod design;
+
+pub use builder::{DesignBuilder, PstBuilder};
+pub use deploy::{DeployOptions, Deployment};
+pub use design::{fuse, Design, Lane, ReportParams};

@@ -17,8 +17,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::controller::{Controller, RunReport};
-use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::api::{designs, Lane, ReportParams};
+use crate::coordinator::controller::RunReport;
+use crate::coordinator::scheduler::ExecMode;
 use crate::engine::compute::cc::CcMode;
 use crate::engine::compute::dac::{Dac, DacMode};
 use crate::engine::compute::dcc::{Dcc, DccMode};
@@ -103,23 +104,22 @@ pub fn run(
         return Ok(None);
     }
     let per_pu = tasks.div_ceil(pus as u64);
-    let groups: Vec<GroupSpec> = (0..pus)
-        .map(|i| GroupSpec {
-            name: format!("FFT-G{i}"),
-            du: fft_du(n, per_pu),
-            pu: fft_pu(n),
-            engine_iters: per_pu,
-mode: ExecMode::Regular,
-        })
+    // 8 (or fewer) identical DU-PU pairs, one lane each
+    let lanes: Vec<Lane> = (0..pus)
+        .map(|_| Lane { du: fft_du(n, per_pu), engine_iters: per_pu })
         .collect();
-    let ctl = Controller::new(p.clone(), super::table5_usage("FFT")?, KernelClass::Cint16Butterfly)
-        .with_trace(trace);
     let total_ops = fft_ops(n) * (per_pu * pus as u64) as f64;
-    let report = ctl.run(
-        &format!("{n}-pt cint16 {pus}PU"),
-        &groups,
-        (per_pu * pus as u64) as f64,
-        total_ops,
+    let report = designs::fft(n)?.report(
+        p,
+        &ReportParams {
+            label: format!("{n}-pt cint16 {pus}PU"),
+            lanes,
+            tasks: (per_pu * pus as u64) as f64,
+            total_ops,
+            usage: super::table5_usage("FFT")?,
+            mode: ExecMode::Regular,
+            trace,
+        },
     )?;
     Ok(Some(report))
 }

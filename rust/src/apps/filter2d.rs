@@ -13,8 +13,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::controller::{Controller, RunReport};
-use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::api::{designs, Lane, ReportParams};
+use crate::coordinator::controller::RunReport;
+use crate::coordinator::scheduler::ExecMode;
 use crate::engine::compute::cc::CcMode;
 use crate::engine::compute::dac::{Dac, DacMode};
 use crate::engine::compute::dcc::{Dcc, DccMode};
@@ -82,10 +83,10 @@ pub fn tiles(h: usize, w: usize) -> u64 {
     (h.div_ceil(TILE) * w.div_ceil(TILE)) as u64
 }
 
-/// Build the group set for `pus` active PUs (whole DUs first, then a
-/// partial group — the paper's 20-PU config is 5 DUs x 4).
-fn groups_for(pus: usize, total_tiles: u64) -> Vec<GroupSpec> {
-    let mut groups = Vec::new();
+/// Build the DU-PU lane set for `pus` active PUs (whole DUs first, then
+/// a partial group — the paper's 20-PU config is 5 DUs x 4).
+fn lanes_for(pus: usize, total_tiles: u64) -> Vec<Lane> {
+    let mut lanes = Vec::new();
     let full = pus / PUS_PER_DU;
     let rem = pus % PUS_PER_DU;
     let n_groups = full + usize::from(rem > 0);
@@ -98,15 +99,12 @@ fn groups_for(pus: usize, total_tiles: u64) -> Vec<GroupSpec> {
         let share = share.min(remaining);
         remaining -= share;
         let per_iter = (g_pus * CORES_PER_PU) as u64;
-        groups.push(GroupSpec {
-            name: format!("F2D-G{gi}"),
+        lanes.push(Lane {
             du: filter2d_du(g_pus),
-            pu: filter2d_pu(),
             engine_iters: share.div_ceil(per_iter),
-mode: ExecMode::Regular,
         });
     }
-    groups
+    lanes
 }
 
 /// Simulate one H x W frame with a 5x5 kernel on `pus` active PUs.
@@ -117,11 +115,18 @@ pub fn run(p: &HwParams, h: usize, w: usize, pus: usize, trace: bool) -> Result<
     let total_tiles = tiles(h, w);
     // Tiny frames cannot occupy every PU (the paper's 128x128 rows).
     let usable = pus.min((total_tiles as usize).div_ceil(CORES_PER_PU).max(1));
-    let groups = groups_for(usable, total_tiles);
-    let ctl = Controller::new(p.clone(), super::table5_usage("Filter2D")?, KernelClass::I32Mac)
-        .with_trace(trace);
-    let total_ops = filter_ops(h * w, TAPS);
-    ctl.run(&format!("{h}x{w} 5x5 {pus}PU"), &groups, 1.0, total_ops)
+    designs::filter2d().report(
+        p,
+        &ReportParams {
+            label: format!("{h}x{w} 5x5 {pus}PU"),
+            lanes: lanes_for(usable, total_tiles),
+            tasks: 1.0,
+            total_ops: filter_ops(h * w, TAPS),
+            usage: super::table5_usage("Filter2D")?,
+            mode: ExecMode::Regular,
+            trace,
+        },
+    )
 }
 
 // ---------------------------------------------------------------------------
@@ -214,12 +219,12 @@ mod tests {
 
     #[test]
     fn group_split_matches_pu_counts() {
-        let g = groups_for(44, 129_600);
+        let g = lanes_for(44, 129_600);
         assert_eq!(g.len(), 11);
         assert!(g.iter().all(|x| x.du.pus == 4));
-        let g = groups_for(20, 10_000);
+        let g = lanes_for(20, 10_000);
         assert_eq!(g.len(), 5);
-        let g = groups_for(6, 10_000);
+        let g = lanes_for(6, 10_000);
         assert_eq!(g.len(), 2);
         assert_eq!(g[1].du.pus, 2);
     }

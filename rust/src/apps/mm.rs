@@ -13,8 +13,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::controller::{Controller, RunReport};
-use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::api::{designs, Lane, ReportParams};
+use crate::coordinator::controller::RunReport;
+use crate::coordinator::scheduler::ExecMode;
 use crate::engine::compute::cc::CcMode;
 use crate::engine::compute::dac::{Dac, DacMode};
 use crate::engine::compute::dcc::{Dcc, DccMode};
@@ -105,15 +106,6 @@ pub fn run_rect(
     if m == 0 || k == 0 || n == 0 {
         bail!("MM dimensions must be positive");
     }
-    let groups = vec![GroupSpec {
-        name: format!("MM-{pus}pu"),
-        du: mm_du(pus, k.div_ceil(TILE) as u64),
-        pu: mm_pu(),
-        engine_iters: iter_computing_engine(m, k, n, pus),
-        mode: ExecMode::Regular,
-    }];
-    let ctl = Controller::new(p.clone(), super::table5_usage("MM")?, KernelClass::F32Mac)
-        .with_trace(trace);
     // GOPS counts useful arithmetic only (padding work is waste — this
     // is the honest adaptive-scale accounting for ragged sizes).
     let total_ops = 2.0 * m as f64 * k as f64 * n as f64;
@@ -122,7 +114,21 @@ pub fn run_rect(
     } else {
         format!("{m}x{k}x{n} float {pus}PU")
     };
-    ctl.run(&label, &groups, 1.0, total_ops)
+    designs::mm().report(
+        p,
+        &ReportParams {
+            label,
+            lanes: vec![Lane {
+                du: mm_du(pus, k.div_ceil(TILE) as u64),
+                engine_iters: iter_computing_engine(m, k, n, pus),
+            }],
+            tasks: 1.0,
+            total_ops,
+            usage: super::table5_usage("MM")?,
+            mode: ExecMode::Regular,
+            trace,
+        },
+    )
 }
 
 // ---------------------------------------------------------------------------

@@ -12,8 +12,9 @@
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::controller::{Controller, RunReport};
-use crate::coordinator::scheduler::{ExecMode, GroupSpec};
+use crate::api::{designs, Lane, ReportParams};
+use crate::coordinator::controller::RunReport;
+use crate::coordinator::scheduler::ExecMode;
 use crate::engine::compute::cc::CcMode;
 use crate::engine::compute::dac::{Dac, DacMode};
 use crate::engine::compute::dcc::{Dcc, DccMode};
@@ -68,20 +69,23 @@ pub fn run(p: &HwParams, iters: u64, trace: bool) -> Result<RunReport> {
     if iters == 0 {
         bail!("need at least one iteration");
     }
-    let groups: Vec<GroupSpec> = (0..CHAINS)
-        .map(|i| GroupSpec {
-            name: format!("MMT-{i}"),
-            du: mmt_du(),
-            pu: mmt_pu(),
-            engine_iters: iters,
-mode: ExecMode::Regular,
-        })
+    let lanes: Vec<Lane> = (0..CHAINS)
+        .map(|_| Lane { du: mmt_du(), engine_iters: iters })
         .collect();
-    let ctl = Controller::new(p.clone(), super::table5_usage("MM-T")?, KernelClass::F32Mac)
-        .with_trace(trace);
     let tasks = (iters as usize * CHAINS * CASCADE) as f64;
     let total_ops = tasks * TASK_OPS;
-    ctl.run(&format!("MM-T x{iters}"), &groups, tasks, total_ops)
+    designs::mmt().report(
+        p,
+        &ReportParams {
+            label: format!("MM-T x{iters}"),
+            lanes,
+            tasks,
+            total_ops,
+            usage: super::table5_usage("MM-T")?,
+            mode: ExecMode::Regular,
+            trace,
+        },
+    )
 }
 
 // ---------------------------------------------------------------------------

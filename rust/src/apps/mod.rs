@@ -7,11 +7,14 @@
 //! | FFT      | Butterfly + P<2>*Casc<3> | BDC/DIR | DIR | CSB  | CUP | PHD |
 //! | MM-T     | Cascade<8>               | DIR     | DIR | Null | CHL | THR |
 //!
-//! Each app module provides a `design` (the deployed configuration:
-//! groups + resource usage), a `run` that simulates a workload and
-//! returns a [`RunReport`](crate::coordinator::RunReport) row, and an
-//! `execute_real` path that routes actual task data through the PJRT
-//! runtime for numerical validation.
+//! Each app module provides the paper's PU/DU constructors, a `run`
+//! that simulates a workload and returns a
+//! [`RunReport`](crate::coordinator::RunReport) row — routed through
+//! the design facade ([`crate::api::designs`] +
+//! [`Design::report`](crate::api::Design::report), so the apps are
+//! workload frontends, not hand-wired Controller glue) — and a
+//! `*_via_pu(s)` path that routes actual task data through the runtime
+//! for numerical validation.
 
 pub mod fft;
 pub mod filter2d;

@@ -20,6 +20,10 @@
 //!   "copies": 6                    // PUs deployed
 //! }
 //! ```
+//!
+//! A top-level `"artifact"` key may additionally override the runtime
+//! artifact; it belongs to the design facade (`api::Design`) and is
+//! ignored by this parser.
 
 use anyhow::{bail, Context, Result};
 

@@ -113,6 +113,10 @@ impl GraphManager {
         PuConfig::from_file(&self.dir.join(format!("{name}.json")))
     }
 
+    /// Stored-graph names, sorted. `read_dir` yields filesystem order,
+    /// which differs across platforms (and across runs on some
+    /// filesystems) — the sort is what makes `info`-style listings and
+    /// tests deterministic everywhere.
     pub fn list(&self) -> Result<Vec<String>> {
         let mut names = Vec::new();
         if !self.dir.exists() {
@@ -126,7 +130,7 @@ impl GraphManager {
                 }
             }
         }
-        names.sort();
+        names.sort_unstable();
         Ok(names)
     }
 }
@@ -250,6 +254,25 @@ mod tests {
         assert_eq!(gm.list().unwrap(), vec!["mm".to_string()]);
         let back = gm.load("mm").unwrap();
         assert_eq!(back.pu, cfg.pu);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn list_is_sorted_not_filesystem_order() {
+        // files created in deliberately scrambled order; whatever order
+        // the filesystem returns them in, list() must be sorted
+        let dir = std::env::temp_dir().join("ea4rca_graphs_order_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for name in ["zeta", "alpha", "mid", "beta"] {
+            std::fs::write(dir.join(format!("{name}.json")), "{}").unwrap();
+        }
+        std::fs::write(dir.join("notes.txt"), "ignored").unwrap();
+        let gm = GraphManager::new(&dir);
+        assert_eq!(
+            gm.list().unwrap(),
+            vec!["alpha".to_string(), "beta".into(), "mid".into(), "zeta".into()]
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -40,7 +40,7 @@
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -48,6 +48,20 @@ use anyhow::{bail, Context, Result};
 
 use crate::runtime::{BackendKind, CostPrediction, Runtime, Tensor};
 use crate::util::stats::{summarize, Summary};
+
+/// Poison-recovering lock. A thread that panics while holding one of
+/// the serving locks (admission state, cost book) poisons the mutex;
+/// with bare `.lock().unwrap()` that one crash cascades — submitters,
+/// the dispatcher, and finally `shutdown()` all panic in turn. Every
+/// critical section here leaves the protected state consistent at each
+/// unlock point (plain queue/map mutations, no multi-step invariants
+/// spanning an unwind), so recovering the guard is safe and keeps the
+/// server serving. All lock sites in this module go through this
+/// helper or the matching `unwrap_or_else(PoisonError::into_inner)` on
+/// condvar waits.
+fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// How long [`Server::submit`] waits for queue space before giving up
 /// with [`SubmitError::Saturated`] (blocking forever would hide
@@ -198,7 +212,7 @@ impl CostBook {
     /// the known entries; with an empty book everything weighs 1 per
     /// job, which is the old job-count balancing.
     fn batch_weight(&self, artifact: &str, k: usize) -> u64 {
-        let book = self.per_job_us.lock().unwrap();
+        let book = lock_clean(&self.per_job_us);
         let per_job = book.get(artifact).copied().or_else(|| {
             let mut costs: Vec<f64> = book.values().copied().collect();
             if costs.is_empty() {
@@ -215,16 +229,13 @@ impl CostBook {
 
     /// Publish a cost-model prediction (authoritative: overwrites).
     fn record_predicted(&self, artifact: &str, per_job_secs: f64) {
-        self.per_job_us
-            .lock()
-            .unwrap()
-            .insert(artifact.to_string(), per_job_secs * 1e6);
+        lock_clean(&self.per_job_us).insert(artifact.to_string(), per_job_secs * 1e6);
     }
 
     /// Publish a measurement. Smoothed (EWMA, alpha 0.3) so one noisy
     /// batch does not whipsaw placement.
     fn record_measured(&self, artifact: &str, per_job_secs: f64) {
-        let mut book = self.per_job_us.lock().unwrap();
+        let mut book = lock_clean(&self.per_job_us);
         let us = per_job_secs * 1e6;
         book.entry(artifact.to_string())
             .and_modify(|old| *old += 0.3 * (us - *old))
@@ -467,7 +478,7 @@ impl Server {
         inputs: Vec<Tensor>,
         wait: Option<Duration>,
     ) -> Result<Pending, SubmitError> {
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_clean(&self.shared.state);
         if st.closed {
             return Err(SubmitError::Closed);
         }
@@ -488,7 +499,7 @@ impl Server {
                     .shared
                     .not_full
                     .wait_timeout(st, deadline - now)
-                    .unwrap();
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = guard;
             }
             if st.closed {
@@ -517,7 +528,7 @@ impl Server {
     /// is produced.
     pub fn shutdown(mut self) -> Result<ServeReport> {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_clean(&self.shared.state);
             st.closed = true;
         }
         self.shared.not_empty.notify_all();
@@ -528,12 +539,19 @@ impl Server {
             .expect("dispatcher joined once")
             .join()
             .map_err(|_| anyhow::anyhow!("dispatcher panicked"))?;
-        // dispatcher return drops the worker senders -> workers drain
+        // dispatcher return drops the worker senders -> workers drain.
+        // A panicked worker must not cost the caller the whole report:
+        // its stats are lost (a default row marks the gap) but every
+        // other worker's accounting — and the run's reply guarantees,
+        // upheld by the dispatcher's dead-worker rerouting — survive.
         let mut workers = Vec::new();
-        for h in std::mem::take(&mut self.handles) {
-            workers.push(h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?);
+        for (i, h) in std::mem::take(&mut self.handles).into_iter().enumerate() {
+            workers.push(
+                h.join()
+                    .unwrap_or_else(|_| WorkerStats { worker: i, ..Default::default() }),
+            );
         }
-        let total_jobs = self.shared.state.lock().unwrap().accepted;
+        let total_jobs = lock_clean(&self.shared.state).accepted;
         Ok(ServeReport {
             workers,
             total_jobs,
@@ -580,7 +598,7 @@ fn dispatcher_main(
     // a worker whose channel closed is dead: never route to it again
     let mut alive = vec![true; senders.len()];
     loop {
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_clean(&shared.state);
         loop {
             if !st.queue.is_empty() {
                 break;
@@ -588,7 +606,10 @@ fn dispatcher_main(
             if st.closed {
                 return stats;
             }
-            st = shared.not_empty.wait(st).unwrap();
+            st = shared
+                .not_empty
+                .wait(st)
+                .unwrap_or_else(PoisonError::into_inner);
         }
         let first = st.queue.pop_front().expect("queue non-empty");
         let artifact = first.artifact.clone();
@@ -603,7 +624,10 @@ fn dispatcher_main(
                 if now >= deadline {
                     break;
                 }
-                let (guard, _) = shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+                let (guard, _) = shared
+                    .not_empty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(PoisonError::into_inner);
                 st = guard;
                 take_same_artifact(&mut st.queue, &artifact, max_batch - jobs.len(), &mut jobs);
             }
@@ -848,6 +872,53 @@ mod tests {
         // EWMA alpha 0.3: 100 + 0.3*(200-100) = 130
         book.record_measured("fft", 200e-6);
         assert_eq!(book.batch_weight("fft", 1), 130);
+    }
+
+    #[test]
+    fn cost_book_recovers_from_a_poisoning_panic() {
+        // a worker that dies while holding the book must not take the
+        // dispatcher (batch_weight) or surviving workers (record_*)
+        // down with it
+        let book = Arc::new(CostBook::new());
+        let poisoner = Arc::clone(&book);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.per_job_us.lock().unwrap();
+            panic!("injected: worker died holding the cost book");
+        })
+        .join();
+        assert!(book.per_job_us.is_poisoned());
+        book.record_predicted("mm", 250e-6);
+        assert_eq!(book.batch_weight("mm", 4), 1000);
+        book.record_measured("fft", 100e-6);
+        assert_eq!(book.batch_weight("fft", 1), 100);
+    }
+
+    #[test]
+    fn panicked_thread_holding_the_admission_lock_still_lets_shutdown_report() {
+        // the regression: a panic while a shared lock is held used to
+        // cascade — submit panicked, then the dispatcher, then
+        // shutdown()'s joins. With poison recovery the server keeps
+        // serving and shutdown still produces the report.
+        let server =
+            Server::start_with_backend(BackendKind::Interp, 1, "artifacts", &[]).unwrap();
+        let shared = Arc::clone(&server.shared);
+        let _ = std::thread::spawn(move || {
+            let _guard = shared.state.lock().unwrap();
+            panic!("injected: worker died holding the admission lock");
+        })
+        .join();
+        assert!(server.shared.state.is_poisoned());
+
+        let inputs = vec![
+            Tensor::f32(&[32, 32], vec![0.5; 32 * 32]),
+            Tensor::f32(&[32, 32], vec![0.25; 32 * 32]),
+        ];
+        let result = server.submit("mm32", inputs).unwrap().wait().unwrap();
+        assert!(result.outputs.is_ok(), "{:?}", result.outputs);
+
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.total_jobs, 1);
+        assert_eq!(report.completed_jobs(), 1);
     }
 
     #[test]

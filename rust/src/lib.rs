@@ -7,7 +7,10 @@
 //! * **Layer 1/2** (build-time Python, `python/compile/`): Pallas kernels
 //!   for each accelerator's per-core subtask and JAX graphs for each PU,
 //!   AOT-lowered once to `artifacts/*.hlo.txt`.
-//! * **Layer 3** (this crate): the EA4RCA framework itself — computing
+//! * **Layer 3** (this crate): the EA4RCA framework itself — entered
+//!   through the typed design facade ([`api`]: `DesignBuilder` →
+//!   [`Design`] → [`Deployment`], with JSON configs as a second
+//!   frontend of the same object) over the computing
 //!   engine ([`engine::compute`]), data engine ([`engine::data`]),
 //!   controller/scheduler ([`coordinator`]), the AIE Graph code generator
 //!   ([`codegen`]), the four accelerators ([`apps`]) and the SOTA
@@ -24,6 +27,7 @@
 //! tier-1 tests and regenerate the paper tables; README.md covers
 //! building with and without the `pjrt` feature.
 
+pub mod api;
 pub mod apps;
 pub mod baselines;
 pub mod codegen;
@@ -34,6 +38,14 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 pub mod workload;
+
+pub use api::{DeployOptions, Deployment, Design, DesignBuilder};
+
+/// Compiles the README's code examples as doctests, so the quick-start
+/// builder chain cannot drift from the real API.
+#[doc = include_str!("../../README.md")]
+#[cfg(doctest)]
+pub struct ReadmeDoctests;
 
 /// Crate version, exposed for the CLI.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,5 +1,12 @@
 //! `ea4rca` — the leader binary: CLI over the framework.
 //!
+//! Every subcommand routes through the design-entry facade
+//! (`ea4rca::api`): configs parse into a `Design` (the JSON frontend),
+//! `run`/`sweep` report through `Design::report`, `generate`/`fuse`
+//! drive the code generator off the same object, `exec` takes the
+//! design's warmed runtime, and `serve` deploys the design catalogue as
+//! a `Deployment`.
+//!
 //! Subcommands:
 //!   run       — simulate an accelerator configuration and print its row
 //!   exec      — route real task data through the runtime (numerics)
@@ -19,8 +26,8 @@
 
 use anyhow::{bail, Result};
 
+use ea4rca::api::{self, designs, DeployOptions, Deployment, Design};
 use ea4rca::apps::{fft, filter2d, mm, mmt, table5_usage};
-use ea4rca::codegen::{config::PuConfig, generator};
 use ea4rca::report;
 use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
 use ea4rca::sim::params::HwParams;
@@ -139,6 +146,9 @@ fn cmd_run(args: &[String]) -> Result<()> {
     // usage error before the simulation runs, not after
     let backend = backend_from(&cli)?;
     let app = cli.get("app")?;
+    // every app routes through the design facade: the `run` paths call
+    // Design::report under the hood, and the cross-check below reuses
+    // the same catalogue design for its runtime + artifact
     let report = match app.as_str() {
         "mm" => mm::run(&p, cli.get_usize("size")?, cli.get_usize("pus")?, trace)?,
         "filter2d" => filter2d::run(
@@ -176,6 +186,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             .into())
         }
     };
+    let design = designs::for_app(&app, cli.get_usize("size")?)?;
 
     println!("{}", report.label);
     println!("  time        : {:.3} ms", report.time_secs * 1e3);
@@ -194,26 +205,22 @@ fn cmd_run(args: &[String]) -> Result<()> {
     }
 
     // Unified-pipeline cross-check: push one representative serving job
-    // of this app through the runtime on the selected backend and line
-    // its measured per-job cost up against the AIE cost model (when the
-    // backend carries one). Timing-model and numerics paths, one command.
-    let artifact = match app.as_str() {
-        "mm" => "mm_pu128".to_string(),
-        "filter2d" => "filter2d_pu8".to_string(),
-        "fft" => format!("fft{}", cli.get_usize("size")?),
-        _ => "mmt_cascade8".to_string(),
-    };
-    match cross_check(backend, &artifact) {
+    // of this design through the runtime on the selected backend and
+    // line its measured per-job cost up against the AIE cost model
+    // (when the backend carries one). Timing-model and numerics paths,
+    // one command, one Design.
+    match cross_check(backend, &design) {
         Ok(line) => println!("{line}"),
         Err(e) => println!("  x-check     : skipped ({e:#})"),
     }
     Ok(())
 }
 
-/// Execute one seeded job of `artifact` on `kind`, reporting measured
-/// (and, on a cost-model backend, predicted) per-job cost.
-fn cross_check(kind: BackendKind, artifact: &str) -> Result<String> {
-    let rt = Runtime::with_backend(kind, Manifest::default_dir())?;
+/// Execute one seeded job of `design`'s artifact on `kind`, reporting
+/// measured (and, on a cost-model backend, predicted) per-job cost.
+fn cross_check(kind: BackendKind, design: &Design) -> Result<String> {
+    let rt = design.runtime_with(kind, Manifest::default_dir())?;
+    let artifact = design.artifact();
     let meta = rt.manifest().get(artifact)?;
     let inputs = ea4rca::workload::seeded_inputs(meta, &mut Rng::new(7));
     let t0 = std::time::Instant::now();
@@ -240,10 +247,17 @@ fn cmd_exec(args: &[String]) -> Result<()> {
         .opt("size", "256", "MM edge (multiple of 128) / FFT points")
         .opt("seed", "7", "workload RNG seed")
         .parse(args)?;
-    let rt = Runtime::new()?;
+    let app = cli.get("app")?;
+    // the facade hands out the runtime: the app's Design knows its
+    // artifact and warms it (backend from $EA4RCA_BACKEND as before).
+    // An unknown app or a bad FFT size stays a usage error (exit 2).
+    let design = designs::for_app(&app, cli.get_usize("size")?).map_err(|e| CliError {
+        msg: format!("{e:#}\n\n{}", usage()),
+        help: false,
+    })?;
+    let rt = design.runtime()?;
     println!("backend: {}", rt.platform());
     let mut rng = Rng::new(cli.get_u64("seed")?);
-    let app = cli.get("app")?;
     match app.as_str() {
         "mm" => {
             let n = cli.get_usize("size")?;
@@ -313,9 +327,9 @@ fn cmd_exec(args: &[String]) -> Result<()> {
 }
 
 fn cmd_serve(args: &[String]) -> Result<()> {
-    use ea4rca::coordinator::server::{serve_open_loop, JobResult, Server, ServerConfig};
+    use ea4rca::coordinator::server::JobResult;
     use ea4rca::util::stats::summarize;
-    use ea4rca::workload::{generate_stream, open_loop_stream, Mix, TaskKind};
+    use ea4rca::workload::{generate_stream, open_loop_stream, Mix};
     let cli = Cli::new(
         "ea4rca serve",
         "micro-batched leader/worker request serving over the runtime",
@@ -339,40 +353,29 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "skip the per-worker artifact warm-up (first jobs pay prepare; A/B for the prepared-artifact cache)",
     )
     .parse(args)?;
-    let mix = match cli.get("mix")?.as_str() {
-        "uniform" => Mix::uniform(),
-        "mm-heavy" => Mix::mm_heavy(),
-        "mm" => Mix::single(TaskKind::MmBlock),
-        "fft" => Mix::single(TaskKind::Fft1024),
-        "filter2d" => Mix::single(TaskKind::FilterBatch),
-        "mmt" => Mix::single(TaskKind::MmtChain),
-        other => {
-            return Err(CliError {
-                msg: format!("unknown mix {other:?} (use uniform | mm-heavy | mm | fft | filter2d | mmt)"),
-                help: false,
-            }
-            .into())
-        }
-    };
+    // the one mix parser: a typo'd --mix is a usage error listing the
+    // valid vocabulary
+    let mix = Mix::parse(&cli.get("mix")?).map_err(|e| CliError {
+        msg: format!("{e:#}"),
+        help: false,
+    })?;
     let n_jobs = cli.get_usize("jobs")?;
     let seed = cli.get_u64("seed")?;
     let rate = cli.get_f64("rate")?;
-    let config = ServerConfig {
-        n_workers: cli.get_usize("workers")?,
+    // deploy the whole serving catalogue through the facade: the
+    // designs carry their artifacts, the deployment warms them (unless
+    // --no-warm, the cold A/B where first jobs pay prepare on-path)
+    let opts = DeployOptions {
+        backend: backend_from(&cli)?,
+        workers: cli.get_usize("workers")?,
         max_batch: cli.get_usize("batch")?,
         max_linger: std::time::Duration::from_micros(cli.get_u64("linger-us")?),
         queue_cap: cli.get_usize("queue-cap")?,
+        artifact_dir: Manifest::default_dir(),
+        warm: !cli.has("no-warm"),
     };
-    // workers warm their prepared-artifact caches at load time unless
-    // --no-warm (the cold A/B: first jobs then pay prepare on-path)
-    let warmup: &[&str] = if cli.has("no-warm") {
-        &[]
-    } else {
-        &["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"]
-    };
-    let kind = backend_from(&cli)?;
-    println!("backend: {}", kind.name());
-    let server = Server::start_with_config(kind, config, Manifest::default_dir(), warmup)?;
+    println!("backend: {}", opts.backend.name());
+    let deployment = Deployment::start(&designs::catalogue(), &opts)?;
 
     let t0 = std::time::Instant::now();
     let (results, shed) = if rate > 0.0 {
@@ -381,12 +384,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let arrivals = open_loop_stream(&mix, n_jobs, seed, rate)
             .into_iter()
             .map(|a| (a.at_secs, a.kind.artifact(), a.inputs));
-        serve_open_loop(&server, arrivals)?
+        deployment.open_loop(arrivals)?
     } else {
         // closed loop: submit everything, let backpressure pace us
         let mut pending = Vec::with_capacity(n_jobs);
         for (kind, inputs) in generate_stream(&mix, n_jobs, seed) {
-            pending.push(server.submit(kind.artifact(), inputs)?);
+            pending.push(deployment.submit_to(kind.artifact(), inputs)?);
         }
         let results: Vec<JobResult> =
             pending.into_iter().map(|p| p.wait()).collect::<Result<_>>()?;
@@ -413,7 +416,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             queue.mean * 1e3, queue.p95 * 1e3, exec.mean * 1e3, exec.p95 * 1e3
         );
     }
-    let report = server.shutdown()?;
+    let report = deployment.shutdown()?;
     println!("micro-batches: {} dispatched", report.batches);
     for (artifact, hist) in &report.batch_hist {
         let sizes: Vec<String> =
@@ -445,20 +448,21 @@ fn cmd_generate(args: &[String]) -> Result<()> {
         .opt("out", "generated", "output directory")
         .flag("print", "print graph.h to stdout instead of writing")
         .parse(args)?;
-    let cfg = PuConfig::from_file(std::path::Path::new(&cli.get("config")?))?;
-    let proj = generator::generate(&cfg)?;
+    // the JSON frontend of the facade: parse + validate once, then the
+    // Design drives the generator
+    let design = Design::from_path(std::path::Path::new(&cli.get("config")?))?;
     if cli.has("print") {
-        println!("{}", proj.graph_h);
+        println!("{}", design.generate()?.graph_h);
     } else {
         let dir = std::path::PathBuf::from(cli.get("out")?);
-        proj.write_to(&dir)?;
+        design.generate_into(&dir)?;
         println!(
             "generated {}/graph.h (+.cpp, Makefile, pu_config.json): PU '{}', {} cores, {} PLIOs, {} copies",
             dir.display(),
-            cfg.name,
-            cfg.pu.cores(),
-            cfg.pu.total_plios(),
-            cfg.copies
+            design.name(),
+            design.cores(),
+            design.total_plios(),
+            design.copies()
         );
     }
     Ok(())
@@ -525,18 +529,17 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
 }
 
 fn cmd_fuse(args: &[String]) -> Result<()> {
-    use ea4rca::codegen::repository;
     let cli = Cli::new("ea4rca fuse", "Graph Fusion: combine stored graphs into one design")
         .opt("configs", "configs/fft.json,configs/mm_small.json", "comma-separated config files")
         .opt("out", "generated/fused", "output directory")
         .parse(args)?;
     let p = HwParams::vck5000();
-    let configs: Vec<PuConfig> = cli
+    let fusees: Vec<Design> = cli
         .get("configs")?
         .split(',')
-        .map(|f| PuConfig::from_file(std::path::Path::new(f.trim())))
+        .map(|f| Design::from_path(std::path::Path::new(f.trim())))
         .collect::<Result<_>>()?;
-    let fused = repository::fuse(&p, &configs)?;
+    let fused = api::fuse(&p, &fusees)?;
     let out = std::path::PathBuf::from(cli.get("out")?);
     fused.write_to(&out)?;
     println!(

@@ -137,64 +137,69 @@ pub fn derive_topology(meta: &ArtifactMeta) -> Result<PuTopology> {
     Ok(PuTopology { pu, copies: 1 })
 }
 
+/// Predict the cost of a `batch`-job dispatch on `topo` deployed as a
+/// serving lane: the jobs spread across the deployed PU copies (every
+/// copy solves one job per engine iteration), so a carried `copies: 6`
+/// topology predicts genuinely different latency/power than a single
+/// copy. Pure and deterministic — shared by this backend's memoized
+/// cost model and the design facade's `Design::predict`, which runs it
+/// straight off a built design with no runtime in sight.
+pub fn predict_lane(
+    p: &HwParams,
+    name: &str,
+    topo: &PuTopology,
+    batch: usize,
+) -> CostPrediction {
+    let copies = topo.copies.max(1);
+    let usage = ResourceUsage {
+        aie: topo.pu.cores() * copies,
+        plio: topo.pu.total_plios() * copies,
+        ..Default::default()
+    };
+    let iters = (batch.max(1) as u64).div_ceil(copies as u64);
+    let lane = GroupSpec::serving_lane(name, topo.pu.clone(), iters, copies);
+    let report = SimEngine::new(p.clone()).with_trace(true).run(&[lane]);
+    let g = &report.groups[0];
+    let fetch_ps = report
+        .trace
+        .phase_totals_ps()
+        .get("fetch")
+        .copied()
+        .unwrap_or(0);
+    let power = estimate(
+        p,
+        &PowerBreakdownInput {
+            usage,
+            active_aie: topo.pu.cores() * copies,
+            compute_duty: report.compute_duty,
+            class: topo.pu.class,
+            ddr_gbps: report.ddr_gbps,
+            active_plio: topo.pu.total_plios() * copies,
+        },
+    )
+    .total();
+    CostPrediction {
+        batch: batch.max(1),
+        latency_secs: report.makespan_secs,
+        power_w: power,
+        energy_j: power * report.makespan_secs,
+        compute_secs: HwParams::secs(g.compute_busy_ps),
+        comm_secs: HwParams::secs(g.comm_busy_ps),
+        fetch_secs: HwParams::secs(fetch_ps),
+        stall_secs: HwParams::secs(g.stall_ps),
+    }
+}
+
 /// One artifact's cost model: its serving-lane topology plus a memo of
 /// deterministic per-batch-size predictions.
 struct CostModel {
     topo: PuTopology,
-    usage: ResourceUsage,
     memo: HashMap<usize, CostPrediction>,
 }
 
 impl CostModel {
     fn build(meta: &ArtifactMeta) -> Result<CostModel> {
-        let topo = derive_topology(meta)?;
-        let copies = topo.copies.max(1);
-        let usage = ResourceUsage {
-            aie: topo.pu.cores() * copies,
-            plio: topo.pu.total_plios() * copies,
-            ..Default::default()
-        };
-        Ok(CostModel { topo, usage, memo: HashMap::new() })
-    }
-
-    /// Run the event-driven lane simulation for a `batch`-job dispatch:
-    /// the jobs spread across the deployed PU copies (every copy solves
-    /// one job per engine iteration), so a carried `copies: 6` topology
-    /// predicts genuinely different latency/power than a single copy.
-    fn simulate(&self, p: &HwParams, name: &str, batch: usize) -> CostPrediction {
-        let copies = self.topo.copies.max(1);
-        let iters = (batch.max(1) as u64).div_ceil(copies as u64);
-        let lane = GroupSpec::serving_lane(name, self.topo.pu.clone(), iters, copies);
-        let report = SimEngine::new(p.clone()).with_trace(true).run(&[lane]);
-        let g = &report.groups[0];
-        let fetch_ps = report
-            .trace
-            .phase_totals_ps()
-            .get("fetch")
-            .copied()
-            .unwrap_or(0);
-        let power = estimate(
-            p,
-            &PowerBreakdownInput {
-                usage: self.usage,
-                active_aie: self.topo.pu.cores() * copies,
-                compute_duty: report.compute_duty,
-                class: self.topo.pu.class,
-                ddr_gbps: report.ddr_gbps,
-                active_plio: self.topo.pu.total_plios() * copies,
-            },
-        )
-        .total();
-        CostPrediction {
-            batch: batch.max(1),
-            latency_secs: report.makespan_secs,
-            power_w: power,
-            energy_j: power * report.makespan_secs,
-            compute_secs: HwParams::secs(g.compute_busy_ps),
-            comm_secs: HwParams::secs(g.comm_busy_ps),
-            fetch_secs: HwParams::secs(fetch_ps),
-            stall_secs: HwParams::secs(g.stall_ps),
-        }
+        Ok(CostModel { topo: derive_topology(meta)?, memo: HashMap::new() })
     }
 }
 
@@ -225,7 +230,7 @@ impl SimBackend {
         if let Some(p) = model.memo.get(&batch) {
             return Ok(*p);
         }
-        let pred = model.simulate(&self.params, &meta.name, batch);
+        let pred = predict_lane(&self.params, &meta.name, &model.topo, batch);
         model.memo.insert(batch, pred);
         Ok(pred)
     }

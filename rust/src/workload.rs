@@ -5,6 +5,8 @@
 //! fast as the server accepts) and open-loop (Poisson arrivals at a
 //! target rate, independent of service time) shapes.
 
+use anyhow::{bail, Result};
+
 use crate::runtime::tensor::{fft_ref, filter2d_ref, matmul_ref};
 use crate::runtime::{ArtifactMeta, DType, Tensor};
 use crate::util::rng::Rng;
@@ -66,6 +68,28 @@ pub struct Mix {
 }
 
 impl Mix {
+    /// Every name [`Mix::parse`] accepts — the CLI's `--mix` vocabulary.
+    pub const NAMES: [&'static str; 6] =
+        ["uniform", "mm-heavy", "mm", "fft", "filter2d", "mmt"];
+
+    /// Parse a mix name (the one place the `--mix` vocabulary is
+    /// matched). A typo'd name gets an error that lists every valid
+    /// mix, so the CLI is self-documenting.
+    pub fn parse(s: &str) -> Result<Mix> {
+        Ok(match s {
+            "uniform" => Mix::uniform(),
+            "mm-heavy" => Mix::mm_heavy(),
+            "mm" => Mix::single(TaskKind::MmBlock),
+            "fft" => Mix::single(TaskKind::Fft1024),
+            "filter2d" => Mix::single(TaskKind::FilterBatch),
+            "mmt" => Mix::single(TaskKind::MmtChain),
+            other => bail!(
+                "unknown mix {other:?} (valid mixes: {})",
+                Mix::NAMES.join(" | ")
+            ),
+        })
+    }
+
     pub fn uniform() -> Mix {
         Mix { entries: TaskKind::all().iter().map(|k| (*k, 1.0)).collect() }
     }
@@ -220,6 +244,26 @@ mod tests {
         let a = generate_stream(&Mix::single(TaskKind::Fft1024), 4, 1);
         let b = generate_stream(&Mix::single(TaskKind::Fft1024), 4, 2);
         assert_ne!(a[0].1[0], b[0].1[0]);
+    }
+
+    #[test]
+    fn mix_parse_covers_the_vocabulary() {
+        for name in Mix::NAMES {
+            let mix = Mix::parse(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!mix.entries.is_empty(), "{name}");
+        }
+        // the single-kind names map to their artifact's task kind
+        assert_eq!(Mix::parse("fft").unwrap().entries[0].0, TaskKind::Fft1024);
+        assert_eq!(Mix::parse("mmt").unwrap().entries[0].0, TaskKind::MmtChain);
+    }
+
+    #[test]
+    fn mix_parse_error_lists_every_valid_mix() {
+        let err = Mix::parse("waffle").unwrap_err().to_string();
+        assert!(err.contains("waffle"), "{err}");
+        for name in Mix::NAMES {
+            assert!(err.contains(name), "error must list {name:?}: {err}");
+        }
     }
 
     #[test]

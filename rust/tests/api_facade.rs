@@ -1,0 +1,198 @@
+//! The design-entry facade end to end: JSON round-trips for every
+//! shipped config, builder/JSON/apps parity, cost prediction without a
+//! runtime, and `Design::deploy` smoke tests (typed submit → result →
+//! shutdown report) on the interp and sim backends.
+
+use std::path::Path;
+
+use ea4rca::api::{designs, DeployOptions, Deployment, Design};
+use ea4rca::codegen::config::PuConfig;
+use ea4rca::runtime::{BackendKind, Tensor};
+use ea4rca::util::rng::Rng;
+use ea4rca::workload::{reference_outputs, TaskKind};
+
+/// f32 comparison bound (same contract as the serving stress suite:
+/// the batched kernels match the reference accumulation order, so this
+/// is headroom, not licence to drift).
+const TOL: f64 = 1e-4;
+
+fn assert_tensors_match(got: &[Tensor], want: &[Tensor], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: output arity");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{what} output {i}: shape");
+        match (g, w) {
+            (Tensor::I32 { .. }, Tensor::I32 { .. }) => {
+                assert_eq!(g, w, "{what} output {i}: int mismatch");
+            }
+            _ => {
+                let d = g.max_abs_diff(w).expect("comparable tensors");
+                assert!(d < TOL, "{what} output {i}: max |err| {d}");
+            }
+        }
+    }
+}
+
+fn configs_dir() -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("configs")
+}
+
+/// Back-compat acceptance: every JSON file in configs/ parses through
+/// `Design::from_path` and round-trips `to_json` → `from_json_text`
+/// back to the exact original `PuConfig`.
+#[test]
+fn every_shipped_config_roundtrips_through_the_facade() {
+    let mut seen = 0;
+    for entry in std::fs::read_dir(configs_dir()).expect("configs/ exists") {
+        let path = entry.unwrap().path();
+        if path.extension().map(|e| e == "json").unwrap_or(false) {
+            seen += 1;
+            let text = std::fs::read_to_string(&path).unwrap();
+            let original = PuConfig::from_json_text(&text)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            let design = Design::from_path(&path)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+            assert_eq!(design.config(), &original, "{}", path.display());
+            let back = Design::from_json_text(&design.to_json_text())
+                .unwrap_or_else(|e| panic!("{}: re-parse: {e:#}", path.display()));
+            assert_eq!(back.config(), &original, "{}: round-trip", path.display());
+        }
+    }
+    assert!(seen >= 5, "expected the shipped configs, found {seen}");
+}
+
+/// The builder catalogue, the JSON configs, and the apps' hand-built
+/// PUs are three views of the same designs.
+#[test]
+fn builder_json_and_apps_agree() {
+    for (design, file) in [
+        (designs::mm(), "mm.json"),
+        (designs::filter2d(), "filter2d.json"),
+        (designs::fft(1024).unwrap(), "fft.json"),
+        (designs::mmt(), "mmt.json"),
+    ] {
+        let json = Design::from_path(configs_dir().join(file)).unwrap();
+        assert_eq!(design.config(), json.config(), "{file}");
+        // the runtime artifact too: mmt.json carries the explicit
+        // "artifact" override, the rest resolve via the Kernel Manager
+        assert_eq!(design.artifact(), json.artifact(), "{file}");
+    }
+    let pairs = [
+        (designs::mm(), ea4rca::apps::mm::mm_pu()),
+        (designs::filter2d(), ea4rca::apps::filter2d::filter2d_pu()),
+        (designs::fft(1024).unwrap(), ea4rca::apps::fft::fft_pu(1024)),
+        (designs::mmt(), ea4rca::apps::mmt::mmt_pu()),
+    ];
+    for (design, mut reference) in pairs {
+        reference.name = design.config().pu.name.clone();
+        assert_eq!(design.config().pu, reference, "{}", design.name());
+    }
+}
+
+/// `Design::predict` needs no runtime, is deterministic, and batching
+/// amortizes the fixed dispatch overhead.
+#[test]
+fn predict_without_a_runtime() {
+    for design in designs::catalogue() {
+        let p1 = design.predict(1);
+        let p1_again = design.predict(1);
+        assert_eq!(
+            p1.latency_secs.to_bits(),
+            p1_again.latency_secs.to_bits(),
+            "{}: prediction must be deterministic",
+            design.name()
+        );
+        assert!(p1.latency_secs > 0.0, "{}", design.name());
+        assert!(p1.power_w > 0.0 && p1.energy_j > 0.0, "{}", design.name());
+        let p16 = design.predict(16);
+        assert!(p16.latency_secs >= p1.latency_secs, "{}", design.name());
+        assert!(
+            p16.per_job_secs() <= p1.per_job_secs() * 1.001,
+            "{}: batching must amortize dispatch",
+            design.name()
+        );
+    }
+}
+
+/// End-to-end `Design::deploy` smoke on both always-available backends:
+/// typed submit, oracle-checked result, predictions on sim, typed error
+/// for an undeployed artifact, and a conserving shutdown report.
+#[test]
+fn deploy_smoke_on_interp_and_sim() {
+    for kind in [BackendKind::Interp, BackendKind::Sim] {
+        let opts = DeployOptions { backend: kind, workers: 2, ..DeployOptions::default() };
+        let deployment = Deployment::start(&designs::catalogue(), &opts)
+            .unwrap_or_else(|e| panic!("{}: start: {e:#}", kind.name()));
+        assert_eq!(deployment.workers(), 2);
+
+        let mut rng = Rng::new(11);
+        let mut submitted = 0u64;
+        for task in [TaskKind::MmBlock, TaskKind::Fft1024, TaskKind::FilterBatch] {
+            let inputs = task.gen_inputs(&mut rng);
+            let want = reference_outputs(task, &inputs);
+            let result = deployment
+                .submit_to(task.artifact(), inputs)
+                .unwrap_or_else(|e| panic!("{}: submit {task:?}: {e:#}", kind.name()))
+                .wait()
+                .unwrap();
+            submitted += 1;
+            let outputs = result
+                .outputs
+                .as_ref()
+                .unwrap_or_else(|e| panic!("{}: {task:?}: {e:#}", kind.name()));
+            assert_tensors_match(outputs, &want, &format!("{} {task:?}", kind.name()));
+            if kind == BackendKind::Sim {
+                let p = result.predicted.expect("sim results carry a cost prediction");
+                assert!(p.latency_secs > 0.0 && p.energy_j > 0.0);
+            }
+        }
+
+        // typed submit: an artifact outside the deployment is an
+        // immediate readable error, not a worker-side failure
+        let err = deployment
+            .submit_to("not_deployed", Vec::new())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not_deployed"), "{err}");
+
+        let report = deployment.shutdown().unwrap();
+        assert_eq!(report.total_jobs, submitted, "{}", kind.name());
+        assert_eq!(report.completed_jobs(), submitted, "{}", kind.name());
+    }
+}
+
+/// Single-design deployment: `Design::deploy` + the synchronous
+/// `execute` round trip.
+#[test]
+fn single_design_deploy_executes() {
+    let design = designs::fft(1024).unwrap();
+    let deployment = design
+        .deploy(&DeployOptions { workers: 1, ..DeployOptions::default() })
+        .unwrap();
+    assert_eq!(deployment.artifacts(), &["fft1024".to_string()]);
+    let mut rng = Rng::new(3);
+    let inputs = TaskKind::Fft1024.gen_inputs(&mut rng);
+    let want = reference_outputs(TaskKind::Fft1024, &inputs);
+    let outputs = deployment.execute(inputs).unwrap();
+    assert_tensors_match(&outputs, &want, "fft1024 execute");
+    let report = deployment.shutdown().unwrap();
+    assert_eq!(report.completed_jobs(), 1);
+}
+
+/// Designs whose runtime artifact overrides the Kernel Manager default
+/// (mmt → mmt_cascade8, fft(n≠1024) → fft{n}) keep that override
+/// through the JSON frontend: `to_json` emits an `"artifact"` key and
+/// `from_json_text` reads it back, so the round trip is the identity
+/// on the whole Design, not just its PuConfig.
+#[test]
+fn artifact_override_survives_the_json_roundtrip() {
+    for design in [designs::mmt(), designs::fft(4096).unwrap()] {
+        let text = design.to_json_text();
+        assert!(text.contains("\"artifact\""), "{}: {text}", design.name());
+        let back = Design::from_json_text(&text).unwrap();
+        assert_eq!(back, design, "{}", design.name());
+        assert_eq!(back.artifact(), design.artifact());
+    }
+    // no override -> no artifact key, byte-compatible with the shipped
+    // config schema
+    assert!(!designs::mm().to_json_text().contains("\"artifact\""));
+}
