@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
+.PHONY: build test stress cluster-stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
 
 build:
 	cargo build --release
@@ -12,6 +12,13 @@ test:
 # full serving stress suite (500-job mixed streams, seeds 1-5)
 stress:
 	cargo test --release --test stress_server
+
+# shard/router cluster suite (router smoke across shard counts,
+# cross-shard conservation, drain-under-load, placement rejection,
+# N=1 parity) plus a 2-shard CLI smoke
+cluster-stress:
+	cargo test --release --test cluster_server
+	cargo run --release -- serve --shards 2 --workers 2 --jobs 96 --mix mm-heavy
 
 # prepared-artifact cache: warm-vs-cold per-job cost + build-once check
 warm-bench:

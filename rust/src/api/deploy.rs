@@ -1,26 +1,32 @@
 //! [`Deployment`] — the serving stage of the design-entry API: a
-//! running leader/worker server (micro-batching, backpressure,
-//! cost-model-aware placement) wrapped in a typed handle that knows
-//! which designs it carries.
+//! running shard cluster (micro-batching, backpressure, cost-model-
+//! aware placement across N array shards) wrapped in a typed handle
+//! that knows which designs it carries.
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::server::{
-    serve_open_loop, JobResult, Pending, Server, ServeReport, ServerConfig,
-};
+use crate::coordinator::router::{route_open_loop, ClusterConfig, Router};
+use crate::coordinator::server::{JobResult, Pending, ServeReport, ServerConfig};
+use crate::coordinator::shard::ShardReport;
 use crate::runtime::{BackendKind, Manifest, Tensor};
 
 use super::design::Design;
 
-/// Deployment knobs: the worker substrate plus the serving-path tuning
-/// of [`ServerConfig`]. `warm: true` (default) pre-builds every
+/// Deployment knobs: the cluster shape (`shards` array shards, each
+/// with `workers` worker threads) plus the per-shard serving-path
+/// tuning of [`ServerConfig`]. `warm: true` (default) pre-builds every
 /// deployed artifact's prepared state in every worker at load time.
 #[derive(Debug, Clone)]
 pub struct DeployOptions {
     pub backend: BackendKind,
+    /// Array shards — independent serving units with their own worker
+    /// pools, caches, and cost books. 1 (default) is the classic
+    /// single-array deployment.
+    pub shards: usize,
+    /// Worker threads per shard.
     pub workers: usize,
     pub max_batch: usize,
     pub max_linger: Duration,
@@ -38,6 +44,7 @@ impl Default for DeployOptions {
         let sc = ServerConfig::default();
         DeployOptions {
             backend: BackendKind::from_env().unwrap_or(BackendKind::Interp),
+            shards: 1,
             workers: sc.n_workers,
             max_batch: sc.max_batch,
             max_linger: sc.max_linger,
@@ -48,20 +55,24 @@ impl Default for DeployOptions {
     }
 }
 
-/// A running deployment of one or more [`Design`]s. Submissions are
-/// typed against the deployed artifact set — a job for an artifact this
-/// deployment does not carry is an immediate readable error, not a
-/// worker-side failure. [`Deployment::shutdown`] drains every accepted
-/// job and returns the [`ServeReport`].
+/// A running deployment of one or more [`Design`]s over a shard
+/// cluster. Submissions are typed against the deployed artifact set —
+/// a job for an artifact this deployment does not carry is an
+/// immediate readable error, not a worker-side failure — and placed on
+/// the shard with the cheapest predicted backlog.
+/// [`Deployment::shutdown`] drains every shard and returns the merged
+/// cluster [`ServeReport`].
 pub struct Deployment {
-    server: Server,
+    router: Router,
     artifacts: Vec<String>,
 }
 
 impl Deployment {
-    /// Deploy `designs` as one serving fleet: per-worker runtimes on
-    /// `opts.backend`, every design's artifact warmed (unless
-    /// `opts.warm` is off), micro-batch dispatch across workers.
+    /// Deploy `designs` as one serving fleet: `opts.shards` shards,
+    /// each with per-worker runtimes on `opts.backend` and the full
+    /// artifact catalogue deployed (replicated placement — every shard
+    /// can serve every design, the router balances by predicted cost),
+    /// every artifact warmed per shard unless `opts.warm` is off.
     pub fn start(designs: &[Design], opts: &DeployOptions) -> Result<Deployment> {
         if designs.is_empty() {
             bail!("deployment needs at least one design");
@@ -72,20 +83,24 @@ impl Deployment {
                 artifacts.push(d.artifact().to_string());
             }
         }
-        let config = ServerConfig {
-            n_workers: opts.workers,
-            max_batch: opts.max_batch,
-            max_linger: opts.max_linger,
-            queue_cap: opts.queue_cap,
+        let cluster = ClusterConfig {
+            shards: opts.shards,
+            shard: ServerConfig {
+                n_workers: opts.workers,
+                max_batch: opts.max_batch,
+                max_linger: opts.max_linger,
+                queue_cap: opts.queue_cap,
+            },
         };
-        let warm: Vec<&str> = if opts.warm {
-            artifacts.iter().map(String::as_str).collect()
-        } else {
-            Vec::new()
-        };
-        let server =
-            Server::start_with_config(opts.backend, config, opts.artifact_dir.clone(), &warm)?;
-        Ok(Deployment { server, artifacts })
+        let placement = vec![artifacts.clone(); opts.shards];
+        let router = Router::start_with_placement(
+            opts.backend,
+            cluster,
+            opts.artifact_dir.clone(),
+            placement,
+            opts.warm,
+        )?;
+        Ok(Deployment { router, artifacts })
     }
 
     /// The deployed artifact set (primary design first).
@@ -93,8 +108,15 @@ impl Deployment {
         &self.artifacts
     }
 
+    /// Worker threads across all live shards.
     pub fn workers(&self) -> usize {
-        self.server.workers()
+        self.router.workers()
+    }
+
+    /// Array shards in the cluster (drained shards included — ids are
+    /// stable for the deployment's lifetime).
+    pub fn shards(&self) -> usize {
+        self.router.shards()
     }
 
     fn ensure_deployed(&self, artifact: &str) -> Result<()> {
@@ -110,7 +132,7 @@ impl Deployment {
     /// Submit one job to the primary (first-deployed) design.
     pub fn submit(&self, inputs: Vec<Tensor>) -> Result<Pending> {
         let artifact = self.artifacts[0].clone();
-        Ok(self.server.submit(&artifact, inputs)?)
+        Ok(self.router.submit(&artifact, inputs)?)
     }
 
     /// Submit one job to a specific deployed artifact. Backpressure
@@ -118,7 +140,19 @@ impl Deployment {
     /// the bounded wait instead of blocking forever.
     pub fn submit_to(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending> {
         self.ensure_deployed(artifact)?;
-        Ok(self.server.submit(artifact, inputs)?)
+        Ok(self.router.submit(artifact, inputs)?)
+    }
+
+    /// [`Deployment::submit_to`] with a stream/tenant tag, carried into
+    /// the [`JobResult`] and the report's per-stream attribution.
+    pub fn submit_stream_to(
+        &self,
+        artifact: &str,
+        stream: u64,
+        inputs: Vec<Tensor>,
+    ) -> Result<Pending> {
+        self.ensure_deployed(artifact)?;
+        Ok(self.router.submit_stream(artifact, stream, inputs)?)
     }
 
     /// Synchronous one-job round trip on the primary design: submit,
@@ -128,7 +162,7 @@ impl Deployment {
     }
 
     /// Drive an open-loop arrival stream against the deployment; a
-    /// saturated queue sheds the job (second return value) instead of
+    /// saturated cluster sheds the job (second return value) instead of
     /// stalling the arrival clock. Every arrival's artifact is checked
     /// against the deployed set up front — same typed guarantee as
     /// [`Deployment::submit_to`] — before the clock starts.
@@ -136,17 +170,38 @@ impl Deployment {
         &self,
         arrivals: impl IntoIterator<Item = (f64, &'static str, Vec<Tensor>)>,
     ) -> Result<(Vec<JobResult>, u64)> {
-        let arrivals: Vec<_> = arrivals.into_iter().collect();
-        for (_, artifact, _) in &arrivals {
-            self.ensure_deployed(artifact)?;
-        }
-        serve_open_loop(&self.server, arrivals)
+        self.open_loop_streams(
+            arrivals.into_iter().map(|(at, artifact, inputs)| (at, artifact.to_string(), 0, inputs)),
+        )
     }
 
-    /// Close admission, drain every accepted job, join the workers, and
-    /// return the run's [`ServeReport`].
+    /// [`Deployment::open_loop`] with stream/tenant tags: arrivals are
+    /// `(at_secs, artifact, stream, inputs)` — the shape
+    /// `workload::open_loop_stream` produces — so the merged report can
+    /// attribute jobs per stream.
+    pub fn open_loop_streams(
+        &self,
+        arrivals: impl IntoIterator<Item = (f64, String, u64, Vec<Tensor>)>,
+    ) -> Result<(Vec<JobResult>, u64)> {
+        let arrivals: Vec<_> = arrivals.into_iter().collect();
+        for (_, artifact, _, _) in &arrivals {
+            self.ensure_deployed(artifact)?;
+        }
+        route_open_loop(&self.router, arrivals)
+    }
+
+    /// Gracefully retire one shard: stop admitting on it, flush its
+    /// queue (every already-admitted job keeps its reply), join its
+    /// threads, and fold its ledger into the final cluster report. The
+    /// remaining shards keep serving.
+    pub fn drain_shard(&mut self, shard: usize) -> Result<ShardReport> {
+        self.router.drain(shard)
+    }
+
+    /// Close admission, drain every shard, join the workers, and
+    /// return the run's merged cluster [`ServeReport`].
     pub fn shutdown(self) -> Result<ServeReport> {
-        self.server.shutdown()
+        self.router.shutdown()
     }
 }
 
@@ -158,6 +213,12 @@ mod tests {
     #[test]
     fn empty_deployment_rejected() {
         assert!(Deployment::start(&[], &DeployOptions::default()).is_err());
+    }
+
+    #[test]
+    fn zero_shards_rejected() {
+        let opts = DeployOptions { shards: 0, ..DeployOptions::default() };
+        assert!(Deployment::start(&[designs::mm()], &opts).is_err());
     }
 
     #[test]

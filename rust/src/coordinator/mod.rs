@@ -7,13 +7,21 @@
 //! * [`controller`] — ties a deployed design + workload to the scheduler
 //!   and the power model, and (optionally) routes real task data through
 //!   the PJRT runtime for numerical validation.
-//! * [`server`] — the deployment shape: micro-batched, backpressure-
-//!   aware leader/worker serving over per-worker runtimes.
+//! * [`shard`] — one logical AIE array's serving unit: micro-batched,
+//!   backpressure-aware leader/worker serving over per-worker runtimes.
+//! * [`router`] — the cluster tier: N shards, cost-model-aware global
+//!   placement, per-shard deployment maps, drain/join, merged reports.
+//! * [`server`] — the one-shard compatibility facade (`Server` is the
+//!   N=1 case of the cluster layer).
 
 pub mod controller;
+pub mod router;
 pub mod scheduler;
 pub mod server;
+pub mod shard;
 
 pub use controller::{Controller, RunReport};
+pub use router::{route_open_loop, ClusterConfig, RouteError, Router, ServeReport, ShardSummary};
 pub use scheduler::{ExecMode, GroupSpec, SimEngine, SimReport};
-pub use server::{Server, ServeReport, ServerConfig, SubmitError};
+pub use server::{Server, ServerConfig, SubmitError};
+pub use shard::{Shard, ShardConfig, ShardReport};

@@ -1,0 +1,624 @@
+//! [`Router`] — the cluster tier over N [`Shard`]s: global, cost-model-
+//! aware placement of traffic across array shards, per-shard artifact
+//! deployment maps, graceful shard drain/join, and a cluster-wide
+//! [`ServeReport`] that merges per-shard ledgers with conservation
+//! preserved.
+//!
+//! One shard is one logical AIE array with its own worker pool,
+//! prepared-artifact caches, and cost book. The router is the serving-
+//! layer analogue of WideSA-style whole-fabric mapping: instead of one
+//! hand-placed region (one monolithic `Server`), work is placed across
+//! every shard the target artifact is deployed on, weighted by each
+//! shard's *predicted* backlog — queued admission weights plus in-
+//! flight dispatch weights, both in cost-book microseconds (the same
+//! `Backend::predict`-fed book the shard dispatcher uses for worker
+//! placement; the router reuses it one level up).
+//!
+//! ```text
+//! clients ──submit(artifact, …)──► Router
+//!     │  placement: eligible shards = deployment map [artifact]
+//!     │  (or every live shard on an open cluster); pick the shard
+//!     │  minimizing backlog_weight + cost_hint(artifact); on
+//!     │  saturation, spill to the next-cheapest eligible shard
+//!     ▼
+//!   Shard 0        Shard 1        …        Shard N-1
+//!  (queue +       (queue +                (queue +
+//!   dispatcher +   dispatcher +            dispatcher +
+//!   workers)       workers)                workers)
+//!     │
+//!     ▼  drain(i): stop admitting on shard i, flush its queue,
+//!        join its workers, fold its ShardReport into the cluster
+//!        ledger — already-admitted jobs keep their replies
+//!     ▼
+//!  shutdown() ──► ServeReport: per-shard reports merged in shard-id
+//!                 order (deterministic), conservation preserved
+//! ```
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{BackendKind, Tensor};
+
+use super::shard::{
+    ArtifactServeStats, JobResult, Pending, Shard, ShardConfig, ShardReport, SubmitError,
+    WorkerStats, DEFAULT_SUBMIT_WAIT,
+};
+
+/// Cluster shape: how many array shards, and the per-shard serving
+/// configuration (worker pool, batching, admission bound).
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of array shards (each its own worker pool + caches).
+    pub shards: usize,
+    /// Per-shard serving knobs.
+    pub shard: ShardConfig,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig { shards: 1, shard: ShardConfig::default() }
+    }
+}
+
+/// Why the router did not accept a submission.
+#[derive(Debug)]
+pub enum RouteError {
+    /// The artifact is deployed on no shard — a placement-map miss, not
+    /// a capacity problem. The message lists what *is* deployed so the
+    /// rejection is actionable.
+    Undeployed {
+        artifact: String,
+        /// Artifacts the cluster does carry (sorted, deduplicated).
+        deployed: Vec<String>,
+    },
+    /// Every eligible shard refused admission (saturated or closed).
+    Submit(SubmitError),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::Undeployed { artifact, deployed } => write!(
+                f,
+                "artifact {artifact:?} is deployed on no shard (deployed: {})",
+                if deployed.is_empty() { "none".to_string() } else { deployed.join(", ") }
+            ),
+            RouteError::Submit(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+impl From<SubmitError> for RouteError {
+    fn from(e: SubmitError) -> RouteError {
+        RouteError::Submit(e)
+    }
+}
+
+/// One shard's totals inside the cluster [`ServeReport`].
+#[derive(Debug, Clone)]
+pub struct ShardSummary {
+    pub shard: usize,
+    /// Submissions this shard accepted.
+    pub jobs: u64,
+    /// Jobs its workers completed (== `jobs` after a drain).
+    pub completed: u64,
+    /// Micro-batches its dispatcher formed.
+    pub batches: u64,
+    pub workers: usize,
+}
+
+/// Whole-cluster report produced by [`Router::shutdown`] (and, via the
+/// one-shard facade, by `Server::shutdown`): the per-shard
+/// [`ShardReport`]s merged in shard-id order, so the merge is
+/// deterministic regardless of drain order. Counting fields are sums —
+/// conservation (accepted == completed == per-worker sums == histogram
+/// mass) survives the merge because nothing is re-derived.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Every shard's workers, in (shard, worker) order, each stamped
+    /// with its shard id.
+    pub workers: Vec<WorkerStats>,
+    /// Per-shard totals, in shard-id order.
+    pub shards: Vec<ShardSummary>,
+    /// Accepted submissions across the cluster (== jobs that received
+    /// or will receive a reply; rejected submissions are not counted).
+    pub total_jobs: u64,
+    /// Micro-batches dispatched across the cluster.
+    pub batches: u64,
+    /// Per-artifact batch-size histogram, merged across shards:
+    /// artifact -> (size -> count).
+    pub batch_hist: BTreeMap<String, BTreeMap<usize, u64>>,
+}
+
+impl ServeReport {
+    /// Merge per-shard reports into the cluster view. Input order does
+    /// not matter: shards are sorted by id first, so the merged report
+    /// (and its [`Display`](std::fmt::Display) rendering) is
+    /// deterministic — the property the golden-report tests pin.
+    pub fn from_shards(mut reports: Vec<ShardReport>) -> ServeReport {
+        reports.sort_by_key(|r| r.shard);
+        let mut workers = Vec::new();
+        let mut shards = Vec::new();
+        let mut total_jobs = 0u64;
+        let mut batches = 0u64;
+        let mut batch_hist: BTreeMap<String, BTreeMap<usize, u64>> = BTreeMap::new();
+        for r in reports {
+            shards.push(ShardSummary {
+                shard: r.shard,
+                jobs: r.total_jobs,
+                completed: r.completed_jobs(),
+                batches: r.batches,
+                workers: r.workers.len(),
+            });
+            total_jobs += r.total_jobs;
+            batches += r.batches;
+            for (artifact, hist) in r.batch_hist {
+                let merged = batch_hist.entry(artifact).or_default();
+                for (size, count) in hist {
+                    *merged.entry(size).or_insert(0) += count;
+                }
+            }
+            workers.extend(r.workers);
+        }
+        ServeReport { workers, shards, total_jobs, batches, batch_hist }
+    }
+
+    /// Jobs that completed on workers, cluster-wide (== total_jobs
+    /// after a full drain).
+    pub fn completed_jobs(&self) -> u64 {
+        self.workers.iter().map(|w| w.jobs).sum()
+    }
+
+    /// Mean micro-batch size for one artifact, if it was served.
+    pub fn mean_batch_size(&self, artifact: &str) -> Option<f64> {
+        let hist = self.batch_hist.get(artifact)?;
+        let (mut jobs, mut batches) = (0u64, 0u64);
+        for (&size, &count) in hist {
+            jobs += size as u64 * count;
+            batches += count;
+        }
+        (batches > 0).then(|| jobs as f64 / batches as f64)
+    }
+
+    /// Per-artifact predicted-vs-measured ledger, merged across every
+    /// shard's workers (artifact-name order — BTreeMap).
+    pub fn predicted_vs_measured(&self) -> BTreeMap<String, ArtifactServeStats> {
+        let mut merged: BTreeMap<String, ArtifactServeStats> = BTreeMap::new();
+        for w in &self.workers {
+            for (artifact, lane) in &w.lanes {
+                merged.entry(artifact.clone()).or_default().merge(lane);
+            }
+        }
+        merged
+    }
+
+    /// Jobs completed per stream/tenant id, merged across the cluster
+    /// (stream 0 collects untagged submissions). The multi-shard
+    /// attribution that used to be positional.
+    pub fn jobs_per_stream(&self) -> BTreeMap<u64, u64> {
+        let mut merged: BTreeMap<u64, u64> = BTreeMap::new();
+        for w in &self.workers {
+            for (stream, jobs) in &w.streams {
+                *merged.entry(*stream).or_insert(0) += jobs;
+            }
+        }
+        merged
+    }
+}
+
+/// Deterministic, counts-only rendering: artifacts in name order
+/// (BTreeMap), shards in id order, workers in (shard, worker) order,
+/// streams in id order. No wall-clock values, so a fully-drained
+/// deterministic run renders byte-identically and can serve as a test
+/// golden.
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "cluster: {} jobs in {} micro-batches over {} shard(s)",
+            self.total_jobs,
+            self.batches,
+            self.shards.len()
+        )?;
+        for (artifact, hist) in &self.batch_hist {
+            let sizes: Vec<String> =
+                hist.iter().map(|(size, count)| format!("{size}x{count}")).collect();
+            let mean = self.mean_batch_size(artifact).unwrap_or(0.0);
+            writeln!(f, "  {artifact:<16} mean batch {mean:.2} [{}]", sizes.join(" "))?;
+        }
+        for s in &self.shards {
+            writeln!(
+                f,
+                "  shard {}: {} jobs accepted, {} completed, {} batches, {} workers",
+                s.shard, s.jobs, s.completed, s.batches, s.workers
+            )?;
+        }
+        for w in &self.workers {
+            writeln!(
+                f,
+                "    shard {} worker {}: {} jobs in {} batches, {} errors",
+                w.shard, w.worker, w.jobs, w.batches, w.errors
+            )?;
+        }
+        let streams = self.jobs_per_stream();
+        // an all-untagged run has nothing to attribute
+        if streams.keys().any(|&s| s != 0) {
+            for (stream, jobs) in &streams {
+                writeln!(f, "  stream {stream}: {jobs} jobs")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+struct ShardSlot {
+    shard: Shard,
+    /// Artifacts deployed on this shard (empty on an open cluster:
+    /// any artifact may be routed here).
+    deployed: Vec<String>,
+}
+
+/// The cluster router: owns N shards and places every submission.
+pub struct Router {
+    /// `None` marks a drained (retired) shard; indices are stable shard
+    /// ids for the life of the cluster.
+    slots: Vec<Option<ShardSlot>>,
+    /// Whether placement is enforced (`start_with_placement`) or open
+    /// (`start`: any artifact on any live shard).
+    enforce_placement: bool,
+    /// Reports of shards drained before shutdown, folded into the final
+    /// cluster report.
+    retired: Vec<ShardReport>,
+}
+
+impl Router {
+    /// Start an *open* cluster: `cluster.shards` shards, each warming
+    /// the same `warmup` list, any artifact routable to any shard. The
+    /// one-shard `Server` facade is exactly `Router::start` with
+    /// `shards: 1`.
+    pub fn start(
+        kind: BackendKind,
+        cluster: ClusterConfig,
+        artifact_dir: impl Into<std::path::PathBuf>,
+        warmup: &[&str],
+    ) -> Result<Router> {
+        let dir: std::path::PathBuf = artifact_dir.into();
+        let placement: Vec<Vec<String>> =
+            vec![warmup.iter().map(|s| s.to_string()).collect(); cluster.shards];
+        Router::start_inner(kind, cluster, dir, placement, true, false)
+    }
+
+    /// Start a cluster with explicit per-shard deployment maps: shard
+    /// `i` warms and serves exactly `placement[i]`. A submission for an
+    /// artifact on no shard's map is rejected with a readable
+    /// [`RouteError::Undeployed`] instead of failing worker-side.
+    /// `warm: false` keeps the maps but skips the cache warm-up (the
+    /// `--no-warm` cold A/B).
+    pub fn start_with_placement(
+        kind: BackendKind,
+        cluster: ClusterConfig,
+        artifact_dir: impl Into<std::path::PathBuf>,
+        placement: Vec<Vec<String>>,
+        warm: bool,
+    ) -> Result<Router> {
+        let dir: std::path::PathBuf = artifact_dir.into();
+        Router::start_inner(kind, cluster, dir, placement, warm, true)
+    }
+
+    fn start_inner(
+        kind: BackendKind,
+        cluster: ClusterConfig,
+        dir: std::path::PathBuf,
+        placement: Vec<Vec<String>>,
+        warm: bool,
+        enforce_placement: bool,
+    ) -> Result<Router> {
+        if cluster.shards == 0 {
+            bail!("need at least one shard");
+        }
+        if placement.len() != cluster.shards {
+            bail!(
+                "placement maps {} shard(s) but the cluster has {}",
+                placement.len(),
+                cluster.shards
+            );
+        }
+        let mut slots = Vec::with_capacity(cluster.shards);
+        for (id, deployed) in placement.into_iter().enumerate() {
+            let warmup: Vec<&str> =
+                if warm { deployed.iter().map(String::as_str).collect() } else { Vec::new() };
+            let shard = Shard::start(id, kind, cluster.shard.clone(), dir.clone(), &warmup)
+                .with_context(|| format!("starting shard {id}"))?;
+            slots.push(Some(ShardSlot { shard, deployed }));
+        }
+        Ok(Router { slots, enforce_placement, retired: Vec::new() })
+    }
+
+    /// Total shards ever started (drained ones included — ids are
+    /// stable).
+    pub fn shards(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Shards still admitting work.
+    pub fn live_shards(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Worker threads across live shards.
+    pub fn workers(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| s.shard.workers())
+            .sum()
+    }
+
+    /// Every artifact deployed on at least one live shard (sorted,
+    /// deduplicated). Empty on an open cluster with no warm lists.
+    pub fn deployed_artifacts(&self) -> Vec<String> {
+        let mut all: Vec<String> = self
+            .slots
+            .iter()
+            .flatten()
+            .flat_map(|s| s.deployed.iter().cloned())
+            .collect();
+        all.sort();
+        all.dedup();
+        all
+    }
+
+    /// Live shard ids eligible for `artifact`, cheapest placement
+    /// first: predicted backlog (queued + in-flight cost-book weight)
+    /// plus the shard's per-job cost hint for this artifact; ties break
+    /// to the lowest shard id for determinism.
+    fn placement_order(&self, artifact: &str) -> Result<Vec<usize>, RouteError> {
+        let mut eligible: Vec<(u64, usize)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(id, slot)| slot.as_ref().map(|s| (id, s)))
+            .filter(|(_, s)| {
+                !self.enforce_placement || s.deployed.iter().any(|a| a == artifact)
+            })
+            .map(|(id, s)| (s.shard.backlog_weight() + s.shard.cost_hint(artifact), id))
+            .collect();
+        if eligible.is_empty() {
+            if self.live_shards() == 0 {
+                return Err(RouteError::Submit(SubmitError::Closed));
+            }
+            return Err(RouteError::Undeployed {
+                artifact: artifact.to_string(),
+                deployed: self.deployed_artifacts(),
+            });
+        }
+        eligible.sort();
+        Ok(eligible.into_iter().map(|(_, id)| id).collect())
+    }
+
+    fn slot(&self, id: usize) -> &ShardSlot {
+        self.slots[id].as_ref().expect("placement_order only yields live shards")
+    }
+
+    /// Non-blocking submit with spillover: try every eligible shard in
+    /// placement order; shed ([`SubmitError::Saturated`]) only when the
+    /// whole eligible set is saturated.
+    pub fn try_submit(
+        &self,
+        artifact: &str,
+        inputs: Vec<Tensor>,
+    ) -> Result<Pending, RouteError> {
+        self.try_submit_stream(artifact, 0, inputs)
+    }
+
+    /// [`Router::try_submit`] with a stream/tenant tag.
+    pub fn try_submit_stream(
+        &self,
+        artifact: &str,
+        stream: u64,
+        inputs: Vec<Tensor>,
+    ) -> Result<Pending, RouteError> {
+        let order = self.placement_order(artifact)?;
+        let mut inputs = inputs;
+        let mut last = SubmitError::Saturated;
+        for id in order {
+            // rejection hands the tensors back, so a saturated shard
+            // costs nothing and the next-cheapest eligible shard gets
+            // the same job (spillover before shedding)
+            match self.slot(id).shard.submit_stream_reclaim(artifact, stream, inputs, None) {
+                Ok(p) => return Ok(p),
+                Err((e, reclaimed)) => {
+                    last = e;
+                    inputs = reclaimed;
+                }
+            }
+        }
+        Err(RouteError::Submit(last))
+    }
+
+    /// Blocking submit (bounded by [`DEFAULT_SUBMIT_WAIT`]).
+    pub fn submit(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending, RouteError> {
+        self.submit_timeout_stream(artifact, 0, inputs, DEFAULT_SUBMIT_WAIT)
+    }
+
+    /// Blocking submit with a stream/tenant tag.
+    pub fn submit_stream(
+        &self,
+        artifact: &str,
+        stream: u64,
+        inputs: Vec<Tensor>,
+    ) -> Result<Pending, RouteError> {
+        self.submit_timeout_stream(artifact, stream, inputs, DEFAULT_SUBMIT_WAIT)
+    }
+
+    /// Submit, waiting at most `wait` for queue space on the chosen
+    /// shard. Placement happens once, up front (waiting re-places
+    /// nothing: the cheapest shard at decision time gets the job, the
+    /// bounded wait is its admission backpressure).
+    pub fn submit_timeout_stream(
+        &self,
+        artifact: &str,
+        stream: u64,
+        inputs: Vec<Tensor>,
+        wait: Duration,
+    ) -> Result<Pending, RouteError> {
+        let order = self.placement_order(artifact)?;
+        Ok(self
+            .slot(order[0])
+            .shard
+            .submit_stream(artifact, stream, inputs, Some(wait))?)
+    }
+
+    /// Gracefully drain one shard: stop admitting on it, flush its
+    /// queue through its workers (every already-admitted job keeps its
+    /// reply), join its threads, and fold its [`ShardReport`] into the
+    /// cluster ledger. The shard's id stays retired; remaining shards
+    /// keep serving.
+    pub fn drain(&mut self, shard: usize) -> Result<ShardReport> {
+        let slot = self
+            .slots
+            .get_mut(shard)
+            .and_then(Option::take)
+            .ok_or_else(|| anyhow::anyhow!("shard {shard} is not live (already drained?)"))?;
+        let report = slot.shard.drain().with_context(|| format!("draining shard {shard}"))?;
+        self.retired.push(report.clone());
+        Ok(report)
+    }
+
+    /// Drain every remaining shard (in id order) and merge all per-
+    /// shard reports — retired and live — into the cluster-wide
+    /// [`ServeReport`].
+    pub fn shutdown(mut self) -> Result<ServeReport> {
+        let live: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(id, s)| s.as_ref().map(|_| id))
+            .collect();
+        for id in live {
+            self.drain(id)?;
+        }
+        Ok(ServeReport::from_shards(std::mem::take(&mut self.retired)))
+    }
+}
+
+/// Drive an open-loop arrival stream against the cluster. Each arrival
+/// is `(at_secs, artifact, stream, inputs)` with `at_secs` relative to
+/// the first call; the driver sleeps until each arrival is due and
+/// submits with [`Router::try_submit_stream`], so a saturated cluster
+/// *sheds* the job (counted in the second return value) instead of
+/// stalling the arrival clock — offered load stays honest under
+/// overload. An undeployed artifact is an error up front, not a shed.
+pub fn route_open_loop(
+    router: &Router,
+    arrivals: impl IntoIterator<Item = (f64, String, u64, Vec<Tensor>)>,
+) -> Result<(Vec<JobResult>, u64)> {
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::new();
+    let mut shed = 0u64;
+    for (at_secs, artifact, stream, inputs) in arrivals {
+        let due = t0 + Duration::from_secs_f64(at_secs);
+        if let Some(wait) = due.checked_duration_since(std::time::Instant::now()) {
+            std::thread::sleep(wait);
+        }
+        match router.try_submit_stream(&artifact, stream, inputs) {
+            Ok(p) => pending.push(p),
+            Err(RouteError::Submit(SubmitError::Saturated)) => shed += 1,
+            Err(e) => bail!("open-loop submit failed: {e}"),
+        }
+    }
+    let mut results = Vec::with_capacity(pending.len());
+    for p in pending {
+        results.push(p.wait()?);
+    }
+    Ok((results, shed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard_report(shard: usize, artifact: &str, jobs: u64) -> ShardReport {
+        let mut batch_hist: BTreeMap<String, BTreeMap<usize, u64>> = BTreeMap::new();
+        batch_hist.entry(artifact.to_string()).or_default().insert(2, jobs / 2);
+        let mut streams = BTreeMap::new();
+        streams.insert(shard as u64 + 1, jobs);
+        ShardReport {
+            shard,
+            workers: vec![WorkerStats {
+                shard,
+                worker: 0,
+                jobs,
+                batches: jobs / 2,
+                streams,
+                ..Default::default()
+            }],
+            total_jobs: jobs,
+            batches: jobs / 2,
+            batch_hist,
+        }
+    }
+
+    #[test]
+    fn merge_is_deterministic_regardless_of_drain_order() {
+        // the same per-shard reports, presented in two different drain
+        // orders, must merge to byte-identical cluster reports — the
+        // golden-report property
+        let make = || {
+            vec![
+                shard_report(2, "mm_pu128", 8),
+                shard_report(0, "fft1024", 4),
+                shard_report(1, "mm_pu128", 6),
+            ]
+        };
+        let mut scrambled = make();
+        scrambled.rotate_left(2);
+        let a = ServeReport::from_shards(make());
+        let b = ServeReport::from_shards(scrambled);
+        assert_eq!(a.to_string(), b.to_string());
+        // shards sorted by id, workers stamped and ordered
+        assert_eq!(a.shards.iter().map(|s| s.shard).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(a.workers.iter().map(|w| w.shard).collect::<Vec<_>>(), vec![0, 1, 2]);
+        // conservation survives the merge: sums, never re-derived
+        assert_eq!(a.total_jobs, 18);
+        assert_eq!(a.completed_jobs(), 18);
+        // the histogram merged across shards, keyed by artifact name
+        assert_eq!(a.batch_hist["mm_pu128"][&2], 7);
+        assert_eq!(a.batch_hist["fft1024"][&2], 2);
+        // per-stream attribution merged across shards
+        let streams = a.jobs_per_stream();
+        assert_eq!(streams[&1], 4);
+        assert_eq!(streams[&2], 6);
+        assert_eq!(streams[&3], 8);
+    }
+
+    #[test]
+    fn display_orders_artifacts_by_name() {
+        let report = ServeReport::from_shards(vec![
+            shard_report(0, "zz_last", 4),
+            shard_report(1, "aa_first", 4),
+        ]);
+        let text = report.to_string();
+        let aa = text.find("aa_first").expect("aa_first rendered");
+        let zz = text.find("zz_last").expect("zz_last rendered");
+        assert!(aa < zz, "artifact sections must sort by name:\n{text}");
+        // counts-only: no wall-clock values to destabilize goldens
+        assert!(!text.contains("ms"), "{text}");
+    }
+
+    #[test]
+    fn undeployed_error_is_readable() {
+        let e = RouteError::Undeployed {
+            artifact: "fft1024".to_string(),
+            deployed: vec!["mm_pu128".to_string(), "mmt_cascade8".to_string()],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("fft1024"), "{msg}");
+        assert!(msg.contains("no shard"), "{msg}");
+        assert!(msg.contains("mm_pu128"), "{msg}");
+    }
+}

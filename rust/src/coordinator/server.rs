@@ -1,352 +1,40 @@
-//! The serving layer: a leader/worker request server over the runtime
-//! — the deployment shape of the coordinator (the paper's PS controller
-//! receiving tasks "from the upper level", §3.1, running as a
-//! long-lived service).
+//! `Server` — the one-shard compatibility facade over the cluster
+//! layer.
 //!
-//! The serving path is micro-batched, backpressure-aware, and
-//! cost-model-aware:
-//!
-//! ```text
-//! clients --submit/try_submit--> admission queue (bounded; Saturated
-//!             when full)              |
-//!                                dispatcher thread: coalesce same-
-//!                                artifact jobs into micro-batches
-//!                                (max_batch / max_linger), place each
-//!                                batch on the least-loaded worker by
-//!                                *predicted execution cost* (queue
-//!                                depth weighted by the cost book, not
-//!                                raw job count)
-//!                                     |
-//!                        worker threads (own Runtime + backend each)
-//!                        execute_batch --> per-job replies with a
-//!                        queue-vs-exec latency split + the batch's
-//!                        CostPrediction when the backend carries a
-//!                        cost model (the sim backend)
-//! ```
-//!
-//! Each worker thread owns its *own* backend instance (runtime +
-//! prepared-artifact cache). Backends are not `Send` in general (the
-//! real PJRT client is thread-bound), and per-worker instances also
-//! mirror the DU-PU pair isolation — workers never share hot state.
-//! Workers warm their cache at startup from the caller's warm-up list
-//! (artifact-load time), so first-job latency is not a compile/plan
-//! outlier, and reuse their batch scratch across dispatches.
-//! Micro-batching mirrors the paper's PS controller organising data
-//! movement around the compute substrate: compatible jobs reach a
-//! worker as one dispatch, so the interpreter's stacked kernels (and a
-//! real array's DMA bursts) amortize per-task overhead. Metrics are
-//! aggregated leader-side, including per-artifact batch-size
-//! histograms.
+//! The serving machinery that used to live here (admission queue,
+//! dispatcher, worker pool, cost book) is now
+//! [`super::shard::Shard`] — one logical AIE array — with
+//! [`super::router::Router`] placing traffic across N of them. This
+//! module keeps the original single-`Server` API as the exact N=1
+//! case: a `Server` is one `Shard`, its `shutdown()` report is the
+//! cluster merge of that one shard's ledger, and every legacy name
+//! (`ServerConfig`, `SubmitError`, `JobResult`, `Pending`,
+//! `ServeReport`, `ArtifactServeStats`, `WorkerStats`, `serve_batch`,
+//! `serve_open_loop`) re-exports from the new layers so existing
+//! callers compile unchanged.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::runtime::{BackendKind, CostPrediction, Runtime, Tensor};
+use crate::runtime::{BackendKind, Tensor};
 use crate::util::stats::{summarize, Summary};
 
-/// Poison-recovering lock. A thread that panics while holding one of
-/// the serving locks (admission state, cost book) poisons the mutex;
-/// with bare `.lock().unwrap()` that one crash cascades — submitters,
-/// the dispatcher, and finally `shutdown()` all panic in turn. Every
-/// critical section here leaves the protected state consistent at each
-/// unlock point (plain queue/map mutations, no multi-step invariants
-/// spanning an unwind), so recovering the guard is safe and keeps the
-/// server serving. All lock sites in this module go through this
-/// helper or the matching `unwrap_or_else(PoisonError::into_inner)` on
-/// condvar waits.
-fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
+use super::shard::Shard;
 
-/// How long [`Server::submit`] waits for queue space before giving up
-/// with [`SubmitError::Saturated`] (blocking forever would hide
-/// overload from the caller — the bug this layer is designed to avoid).
-pub const DEFAULT_SUBMIT_WAIT: Duration = Duration::from_secs(30);
+// The per-shard knobs ARE the legacy server knobs — `ServerConfig` is
+// an alias, so struct literals like
+// `ServerConfig { n_workers: 4, ..ServerConfig::default() }` still
+// work everywhere.
+pub use super::router::ServeReport;
+pub use super::shard::{
+    ArtifactServeStats, JobResult, Pending, ShardConfig as ServerConfig, SubmitError,
+    WorkerStats, DEFAULT_SUBMIT_WAIT,
+};
 
-/// Serving-path tuning knobs.
-#[derive(Debug, Clone)]
-pub struct ServerConfig {
-    /// Worker thread count (each owns a backend instance).
-    pub n_workers: usize,
-    /// Most jobs coalesced into one dispatch. 1 disables batching.
-    pub max_batch: usize,
-    /// How long the dispatcher holds an under-full batch open waiting
-    /// for more same-artifact arrivals. Zero dispatches immediately.
-    pub max_linger: Duration,
-    /// Admission-queue capacity; beyond it submissions saturate.
-    pub queue_cap: usize,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            n_workers: 4,
-            max_batch: 8,
-            max_linger: Duration::from_micros(200),
-            queue_cap: 256,
-        }
-    }
-}
-
-/// Why a submission was not accepted.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum SubmitError {
-    /// The bounded admission queue is full — shed load or retry later.
-    Saturated,
-    /// The server is shutting down.
-    Closed,
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::Saturated => write!(f, "admission queue saturated"),
-            SubmitError::Closed => write!(f, "server closed"),
-        }
-    }
-}
-
-impl std::error::Error for SubmitError {}
-
-/// One inference/compute request.
-struct Job {
-    artifact: String,
-    inputs: Vec<Tensor>,
-    reply: mpsc::Sender<JobResult>,
-    submitted: Instant,
-}
-
-/// The completed job, with the end-to-end latency split into its queue
-/// and execution components.
-#[derive(Debug)]
-pub struct JobResult {
-    pub outputs: Result<Vec<Tensor>>,
-    /// Seconds from submit until the worker started executing the
-    /// micro-batch this job rode in (admission + dispatch + linger).
-    pub queue_secs: f64,
-    /// Wall-clock seconds this job's micro-batch spent executing. The
-    /// client waits for the whole batch, so this is the job's real
-    /// execution wait; divide by `batch_size` for the amortized per-job
-    /// compute share.
-    pub exec_secs: f64,
-    /// How many jobs shared the dispatch that produced this result.
-    pub batch_size: usize,
-    /// Index of the worker that executed the job (`usize::MAX` for
-    /// jobs that failed before reaching any worker).
-    pub worker: usize,
-    /// Predicted AIE cost of the micro-batch this job rode in (latency,
-    /// energy, phase breakdown), when the backend carries a cost model
-    /// (the sim backend); `None` on measuring-only backends. The
-    /// prediction covers the whole dispatch — use
-    /// [`CostPrediction::per_job_secs`] for this job's amortized share.
-    pub predicted: Option<CostPrediction>,
-}
-
-impl JobResult {
-    /// End-to-end seconds from submit to completion (what the client
-    /// actually waited: queue + full batch execution).
-    pub fn latency_secs(&self) -> f64 {
-        self.queue_secs + self.exec_secs
-    }
-}
-
-/// A pending reply handle.
-pub struct Pending {
-    rx: mpsc::Receiver<JobResult>,
-}
-
-impl Pending {
-    /// Block until the job completes.
-    pub fn wait(self) -> Result<JobResult> {
-        self.rx.recv().context("worker dropped the job")
-    }
-}
-
-/// Admission queue shared between clients and the dispatcher.
-struct AdmissionState {
-    queue: VecDeque<Job>,
-    closed: bool,
-    /// Successful submissions only — a rejected or failed enqueue must
-    /// never inflate [`ServeReport::total_jobs`].
-    accepted: u64,
-}
-
-struct Shared {
-    state: Mutex<AdmissionState>,
-    /// Signalled on enqueue (wakes the dispatcher).
-    not_empty: Condvar,
-    /// Signalled when the dispatcher frees queue space (wakes blocked
-    /// submitters).
-    not_full: Condvar,
-    cap: usize,
-}
-
-/// A coalesced same-artifact dispatch, carrying the placement weight
-/// the dispatcher charged so the worker can release exactly that much.
-struct Batch {
-    jobs: Vec<Job>,
-    weight: u64,
-}
-
-/// Per-artifact per-job execution-cost estimates (microseconds), shared
-/// between the dispatcher (which weights queue depth by predicted cost
-/// instead of raw job count) and the workers (which publish cost-model
-/// predictions, or measured costs on backends without a model).
-struct CostBook {
-    per_job_us: Mutex<HashMap<String, f64>>,
-}
-
-impl CostBook {
-    fn new() -> CostBook {
-        CostBook { per_job_us: Mutex::new(HashMap::new()) }
-    }
-
-    /// Placement weight of a `k`-job batch: per-job cost in whole
-    /// microseconds. An artifact the book has not seen borrows the
-    /// book's median per-job cost so its weight is commensurate with
-    /// the known entries; with an empty book everything weighs 1 per
-    /// job, which is the old job-count balancing.
-    fn batch_weight(&self, artifact: &str, k: usize) -> u64 {
-        let book = lock_clean(&self.per_job_us);
-        let per_job = book.get(artifact).copied().or_else(|| {
-            let mut costs: Vec<f64> = book.values().copied().collect();
-            if costs.is_empty() {
-                return None;
-            }
-            costs.sort_by(f64::total_cmp);
-            Some(costs[costs.len() / 2])
-        });
-        match per_job {
-            Some(us) => ((us * k as f64).round() as u64).max(1),
-            None => k.max(1) as u64,
-        }
-    }
-
-    /// Publish a cost-model prediction (authoritative: overwrites).
-    fn record_predicted(&self, artifact: &str, per_job_secs: f64) {
-        lock_clean(&self.per_job_us).insert(artifact.to_string(), per_job_secs * 1e6);
-    }
-
-    /// Publish a measurement. Smoothed (EWMA, alpha 0.3) so one noisy
-    /// batch does not whipsaw placement.
-    fn record_measured(&self, artifact: &str, per_job_secs: f64) {
-        let mut book = lock_clean(&self.per_job_us);
-        let us = per_job_secs * 1e6;
-        book.entry(artifact.to_string())
-            .and_modify(|old| *old += 0.3 * (us - *old))
-            .or_insert(us);
-    }
-}
-
-/// One artifact's predicted-vs-measured ledger (a worker's view; the
-/// [`ServeReport`] merges them leader-side).
-#[derive(Debug, Default, Clone)]
-pub struct ArtifactServeStats {
-    pub jobs: u64,
-    pub batches: u64,
-    /// Sum of measured batch execution walls (secs).
-    pub measured_exec_secs: f64,
-    /// Sum of predicted batch latencies (secs) over predicted batches.
-    pub predicted_exec_secs: f64,
-    /// Sum of predicted batch energies (J) over predicted batches.
-    pub predicted_energy_j: f64,
-    /// Batches that carried a cost-model prediction.
-    pub predicted_batches: u64,
-}
-
-impl ArtifactServeStats {
-    fn merge(&mut self, other: &ArtifactServeStats) {
-        self.jobs += other.jobs;
-        self.batches += other.batches;
-        self.measured_exec_secs += other.measured_exec_secs;
-        self.predicted_exec_secs += other.predicted_exec_secs;
-        self.predicted_energy_j += other.predicted_energy_j;
-        self.predicted_batches += other.predicted_batches;
-    }
-
-    /// Predicted/measured mean-batch-latency ratio, when both exist.
-    pub fn ratio(&self) -> Option<f64> {
-        if self.predicted_batches == 0 || self.measured_exec_secs <= 0.0 {
-            return None;
-        }
-        let meas = self.measured_exec_secs / self.batches.max(1) as f64;
-        let pred = self.predicted_exec_secs / self.predicted_batches as f64;
-        Some(pred / meas)
-    }
-}
-
-/// Per-worker accounting returned at shutdown.
-#[derive(Debug, Default, Clone)]
-pub struct WorkerStats {
-    pub worker: usize,
-    pub jobs: u64,
-    pub batches: u64,
-    pub exec_secs: f64,
-    pub errors: u64,
-    /// Per-artifact predicted-vs-measured ledger.
-    pub lanes: BTreeMap<String, ArtifactServeStats>,
-}
-
-/// Dispatcher-side accounting (batch shapes).
-#[derive(Default)]
-struct DispatchStats {
-    batches: u64,
-    /// artifact -> (batch size -> how many batches of that size)
-    batch_hist: BTreeMap<String, BTreeMap<usize, u64>>,
-}
-
-/// Whole-run report produced by [`Server::shutdown`].
-#[derive(Debug)]
-pub struct ServeReport {
-    pub workers: Vec<WorkerStats>,
-    /// Accepted submissions (== jobs that received or will receive a
-    /// reply; rejected submissions are not counted).
-    pub total_jobs: u64,
-    /// Micro-batches dispatched.
-    pub batches: u64,
-    /// Per-artifact batch-size histogram: artifact -> (size -> count).
-    pub batch_hist: BTreeMap<String, BTreeMap<usize, u64>>,
-}
-
-impl ServeReport {
-    /// Jobs that completed on workers (== total_jobs after a drain).
-    pub fn completed_jobs(&self) -> u64 {
-        self.workers.iter().map(|w| w.jobs).sum()
-    }
-
-    /// Mean micro-batch size for one artifact, if it was served.
-    pub fn mean_batch_size(&self, artifact: &str) -> Option<f64> {
-        let hist = self.batch_hist.get(artifact)?;
-        let (mut jobs, mut batches) = (0u64, 0u64);
-        for (&size, &count) in hist {
-            jobs += size as u64 * count;
-            batches += count;
-        }
-        (batches > 0).then(|| jobs as f64 / batches as f64)
-    }
-
-    /// Per-artifact predicted-vs-measured ledger, merged across workers.
-    pub fn predicted_vs_measured(&self) -> BTreeMap<String, ArtifactServeStats> {
-        let mut merged: BTreeMap<String, ArtifactServeStats> = BTreeMap::new();
-        for w in &self.workers {
-            for (artifact, lane) in &w.lanes {
-                merged.entry(artifact.clone()).or_default().merge(lane);
-            }
-        }
-        merged
-    }
-}
-
-/// The running server.
+/// The running one-shard server: shard 0 of a cluster of one.
 pub struct Server {
-    shared: Arc<Shared>,
-    dispatcher: Option<JoinHandle<DispatchStats>>,
-    handles: Vec<JoinHandle<WorkerStats>>,
+    shard: Shard,
 }
 
 impl Server {
@@ -373,83 +61,24 @@ impl Server {
         Server::start_with_config(kind, config, artifact_dir, warmup)
     }
 
-    /// Full-control constructor. Every worker thread instantiates its
-    /// own backend (no shared substrate state); a dispatcher thread
-    /// owns micro-batch formation and least-loaded placement.
+    /// Full-control constructor: one shard with this exact
+    /// configuration. Placement is open (any artifact may be
+    /// submitted; the warm-up list only pre-builds caches), matching
+    /// the pre-cluster behaviour.
     pub fn start_with_config(
         kind: BackendKind,
         config: ServerConfig,
         artifact_dir: impl Into<std::path::PathBuf>,
         warmup: &[&str],
     ) -> Result<Server> {
-        if config.n_workers == 0 {
-            bail!("need at least one worker");
-        }
-        if config.max_batch == 0 {
-            bail!("max_batch must be at least 1");
-        }
-        if config.queue_cap == 0 {
-            bail!("queue_cap must be at least 1");
-        }
-        let dir: std::path::PathBuf = artifact_dir.into();
-        let warm: Vec<String> = warmup.iter().map(|s| s.to_string()).collect();
-        let mut senders = Vec::new();
-        let mut handles = Vec::new();
-        let mut loads = Vec::new();
-        // the shared cost book: workers publish predicted (or measured)
-        // per-job costs, the dispatcher weights placement with them
-        let costs = Arc::new(CostBook::new());
-        // readiness barrier: workers report once their runtime is up
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        for w in 0..config.n_workers {
-            // a couple of batches of runway per worker keeps the
-            // dispatcher ahead without hiding queueing from the metric
-            let (tx, rx) = mpsc::sync_channel::<Batch>(2);
-            let load = Arc::new(AtomicU64::new(0));
-            let dir = dir.clone();
-            let warm = warm.clone();
-            let ready = ready_tx.clone();
-            let wload = Arc::clone(&load);
-            let wcosts = Arc::clone(&costs);
-            let handle = std::thread::Builder::new()
-                .name(format!("ea4rca-worker-{w}"))
-                .spawn(move || worker_main(w, kind, dir, warm, rx, ready, wload, wcosts))
-                .context("spawning worker")?;
-            senders.push(tx);
-            handles.push(handle);
-            loads.push(load);
-        }
-        drop(ready_tx);
-        for _ in 0..config.n_workers {
-            ready_rx.recv().context("worker died during startup")??;
-        }
-        let shared = Arc::new(Shared {
-            state: Mutex::new(AdmissionState {
-                queue: VecDeque::with_capacity(config.queue_cap),
-                closed: false,
-                accepted: 0,
-            }),
-            not_empty: Condvar::new(),
-            not_full: Condvar::new(),
-            cap: config.queue_cap,
-        });
-        let dshared = Arc::clone(&shared);
-        let dcosts = Arc::clone(&costs);
-        let (max_batch, max_linger) = (config.max_batch, config.max_linger);
-        let dispatcher = std::thread::Builder::new()
-            .name("ea4rca-dispatch".to_string())
-            .spawn(move || {
-                dispatcher_main(dshared, senders, loads, dcosts, max_batch, max_linger)
-            })
-            .context("spawning dispatcher")?;
-        Ok(Server { shared, dispatcher: Some(dispatcher), handles })
+        Ok(Server { shard: Shard::start(0, kind, config, artifact_dir, warmup)? })
     }
 
     /// Submit a job, waiting up to [`DEFAULT_SUBMIT_WAIT`] for queue
     /// space; returns a reply handle, or [`SubmitError::Saturated`]
     /// when the server stays overloaded for that long.
     pub fn submit(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Pending, SubmitError> {
-        self.enqueue(artifact, inputs, Some(DEFAULT_SUBMIT_WAIT))
+        self.shard.submit(artifact, inputs)
     }
 
     /// Non-blocking submit: [`SubmitError::Saturated`] immediately when
@@ -459,7 +88,7 @@ impl Server {
         artifact: &str,
         inputs: Vec<Tensor>,
     ) -> Result<Pending, SubmitError> {
-        self.enqueue(artifact, inputs, None)
+        self.shard.try_submit(artifact, inputs)
     }
 
     /// Submit, waiting at most `wait` for queue space.
@@ -469,325 +98,31 @@ impl Server {
         inputs: Vec<Tensor>,
         wait: Duration,
     ) -> Result<Pending, SubmitError> {
-        self.enqueue(artifact, inputs, Some(wait))
+        self.shard.submit_timeout(artifact, inputs, wait)
     }
 
-    fn enqueue(
+    /// Submit with a stream/tenant tag carried through to the
+    /// [`JobResult`] and the per-stream report ledger.
+    pub fn submit_stream(
         &self,
         artifact: &str,
+        stream: u64,
         inputs: Vec<Tensor>,
-        wait: Option<Duration>,
     ) -> Result<Pending, SubmitError> {
-        let mut st = lock_clean(&self.shared.state);
-        if st.closed {
-            return Err(SubmitError::Closed);
-        }
-        if st.queue.len() >= self.shared.cap {
-            let Some(wait) = wait else {
-                return Err(SubmitError::Saturated);
-            };
-            let deadline = Instant::now() + wait;
-            while st.queue.len() >= self.shared.cap {
-                if st.closed {
-                    return Err(SubmitError::Closed);
-                }
-                let now = Instant::now();
-                if now >= deadline {
-                    return Err(SubmitError::Saturated);
-                }
-                let (guard, _) = self
-                    .shared
-                    .not_full
-                    .wait_timeout(st, deadline - now)
-                    .unwrap_or_else(PoisonError::into_inner);
-                st = guard;
-            }
-            if st.closed {
-                return Err(SubmitError::Closed);
-            }
-        }
-        let (reply, rx) = mpsc::channel();
-        st.queue.push_back(Job {
-            artifact: artifact.to_string(),
-            inputs,
-            reply,
-            submitted: Instant::now(),
-        });
-        st.accepted += 1;
-        drop(st);
-        self.shared.not_empty.notify_one();
-        Ok(Pending { rx })
+        self.shard.submit_stream(artifact, stream, inputs, Some(DEFAULT_SUBMIT_WAIT))
     }
 
     pub fn workers(&self) -> usize {
-        self.handles.len()
+        self.shard.workers()
     }
 
     /// Close admission, drain the queue through the workers, and join
     /// everything. Every accepted job gets its reply before the report
-    /// is produced.
-    pub fn shutdown(mut self) -> Result<ServeReport> {
-        {
-            let mut st = lock_clean(&self.shared.state);
-            st.closed = true;
-        }
-        self.shared.not_empty.notify_all();
-        self.shared.not_full.notify_all();
-        let dstats = self
-            .dispatcher
-            .take()
-            .expect("dispatcher joined once")
-            .join()
-            .map_err(|_| anyhow::anyhow!("dispatcher panicked"))?;
-        // dispatcher return drops the worker senders -> workers drain.
-        // A panicked worker must not cost the caller the whole report:
-        // its stats are lost (a default row marks the gap) but every
-        // other worker's accounting — and the run's reply guarantees,
-        // upheld by the dispatcher's dead-worker rerouting — survive.
-        let mut workers = Vec::new();
-        for (i, h) in std::mem::take(&mut self.handles).into_iter().enumerate() {
-            workers.push(
-                h.join()
-                    .unwrap_or_else(|_| WorkerStats { worker: i, ..Default::default() }),
-            );
-        }
-        let total_jobs = lock_clean(&self.shared.state).accepted;
-        Ok(ServeReport {
-            workers,
-            total_jobs,
-            batches: dstats.batches,
-            batch_hist: dstats.batch_hist,
-        })
+    /// is produced. The report is the cluster merge of this one
+    /// shard's ledger.
+    pub fn shutdown(self) -> Result<ServeReport> {
+        Ok(ServeReport::from_shards(vec![self.shard.drain()?]))
     }
-}
-
-/// Pull up to `want` jobs for `artifact` out of the queue (front to
-/// back, preserving both per-artifact FIFO order and the relative order
-/// of everything left behind).
-fn take_same_artifact(
-    queue: &mut VecDeque<Job>,
-    artifact: &str,
-    want: usize,
-    batch: &mut Vec<Job>,
-) {
-    if want == 0 {
-        return;
-    }
-    let mut taken = 0;
-    let mut i = 0;
-    while i < queue.len() && taken < want {
-        if queue[i].artifact == artifact {
-            // remove(i) preserves the order of the remaining jobs
-            batch.push(queue.remove(i).expect("index in bounds"));
-            taken += 1;
-        } else {
-            i += 1;
-        }
-    }
-}
-
-fn dispatcher_main(
-    shared: Arc<Shared>,
-    senders: Vec<mpsc::SyncSender<Batch>>,
-    loads: Vec<Arc<AtomicU64>>,
-    costs: Arc<CostBook>,
-    max_batch: usize,
-    max_linger: Duration,
-) -> DispatchStats {
-    let mut stats = DispatchStats::default();
-    // a worker whose channel closed is dead: never route to it again
-    let mut alive = vec![true; senders.len()];
-    loop {
-        let mut st = lock_clean(&shared.state);
-        loop {
-            if !st.queue.is_empty() {
-                break;
-            }
-            if st.closed {
-                return stats;
-            }
-            st = shared
-                .not_empty
-                .wait(st)
-                .unwrap_or_else(PoisonError::into_inner);
-        }
-        let first = st.queue.pop_front().expect("queue non-empty");
-        let artifact = first.artifact.clone();
-        let mut jobs = vec![first];
-        take_same_artifact(&mut st.queue, &artifact, max_batch - jobs.len(), &mut jobs);
-        // linger: hold an under-full batch open briefly for more
-        // same-artifact arrivals (skipped during drain)
-        if jobs.len() < max_batch && !st.closed && !max_linger.is_zero() {
-            let deadline = Instant::now() + max_linger;
-            while jobs.len() < max_batch && !st.closed {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (guard, _) = shared
-                    .not_empty
-                    .wait_timeout(st, deadline - now)
-                    .unwrap_or_else(PoisonError::into_inner);
-                st = guard;
-                take_same_artifact(&mut st.queue, &artifact, max_batch - jobs.len(), &mut jobs);
-            }
-        }
-        drop(st);
-        shared.not_full.notify_all();
-
-        stats.batches += 1;
-        // cost-model-aware placement weight: the batch's predicted
-        // execution cost (per-job cost book x batch size), falling back
-        // to raw job count for artifacts the book has not seen
-        let weight = costs.batch_weight(&artifact, jobs.len());
-        *stats
-            .batch_hist
-            .entry(artifact)
-            .or_default()
-            .entry(jobs.len())
-            .or_insert(0) += 1;
-        // least-loaded placement by in-flight predicted cost (ties ->
-        // lowest id); a dead worker is marked and the batch
-        // re-dispatched to a survivor, so one crash costs capacity, not
-        // correctness
-        let mut batch = Batch { jobs, weight };
-        loop {
-            let Some(w) = (0..senders.len())
-                .filter(|&i| alive[i])
-                .min_by_key(|&i| loads[i].load(Ordering::SeqCst))
-            else {
-                // every worker is gone: fail the batch so clients
-                // unblock with an error instead of hanging
-                let k = batch.jobs.len();
-                for job in batch.jobs {
-                    let _ = job.reply.send(JobResult {
-                        outputs: Err(anyhow::anyhow!("all workers gone")),
-                        queue_secs: job.submitted.elapsed().as_secs_f64(),
-                        exec_secs: 0.0,
-                        batch_size: k,
-                        worker: usize::MAX,
-                        predicted: None,
-                    });
-                }
-                break;
-            };
-            loads[w].fetch_add(batch.weight, Ordering::SeqCst);
-            match senders[w].send(batch) {
-                Ok(()) => break,
-                Err(send_err) => {
-                    batch = send_err.0;
-                    loads[w].fetch_sub(batch.weight, Ordering::SeqCst);
-                    alive[w] = false;
-                }
-            }
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn worker_main(
-    id: usize,
-    kind: BackendKind,
-    dir: std::path::PathBuf,
-    warmup: Vec<String>,
-    rx: mpsc::Receiver<Batch>,
-    ready: mpsc::Sender<Result<()>>,
-    load: Arc<AtomicU64>,
-    costs: Arc<CostBook>,
-) -> WorkerStats {
-    let mut stats = WorkerStats { worker: id, ..Default::default() };
-    let rt = match Runtime::with_backend(kind, dir).and_then(|rt| {
-        let names: Vec<&str> = warmup.iter().map(String::as_str).collect();
-        rt.warmup(&names)?;
-        Ok(rt)
-    }) {
-        Ok(rt) => {
-            let _ = ready.send(Ok(()));
-            rt
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return stats;
-        }
-    };
-    // seed the cost book from the cost model at artifact-load time, so
-    // the dispatcher places cost-aware from the very first batch
-    for name in &warmup {
-        if let Some(p) = rt.predict(name, 1) {
-            costs.record_predicted(name, p.per_job_secs());
-        }
-    }
-    // input-list scratch reused across batch executions: the per-batch
-    // cost is moving Tensors, never reallocating the outer Vec
-    let mut inputs: Vec<Vec<Tensor>> = Vec::new();
-    while let Ok(batch) = rx.recv() {
-        let Batch { mut jobs, weight } = batch;
-        let k = jobs.len();
-        let artifact = std::mem::take(&mut jobs[0].artifact);
-        inputs.clear();
-        inputs.extend(jobs.iter_mut().map(|j| std::mem::take(&mut j.inputs)));
-        let t0 = Instant::now();
-        let results = rt.execute_batch(&artifact, &inputs);
-        let exec = t0.elapsed().as_secs_f64();
-        load.fetch_sub(weight, Ordering::SeqCst);
-        stats.jobs += k as u64;
-        stats.batches += 1;
-        stats.exec_secs += exec;
-        // attach the cost model's view of this dispatch (memoized per
-        // batch size, so the steady state is a table lookup) and keep
-        // the shared cost book current for the dispatcher. Only batches
-        // that actually executed feed the book and the ledger — an
-        // artifact-level failure completes in microseconds and would
-        // otherwise poison placement weights and the predicted-vs-
-        // measured report with near-zero "costs".
-        let predicted = rt.predict(&artifact, k);
-        if results.is_ok() {
-            match &predicted {
-                Some(p) => costs.record_predicted(&artifact, p.per_job_secs()),
-                None => costs.record_measured(&artifact, exec / k.max(1) as f64),
-            }
-            let lane = stats.lanes.entry(artifact.clone()).or_default();
-            lane.jobs += k as u64;
-            lane.batches += 1;
-            lane.measured_exec_secs += exec;
-            if let Some(p) = &predicted {
-                lane.predicted_exec_secs += p.latency_secs;
-                lane.predicted_energy_j += p.energy_j;
-                lane.predicted_batches += 1;
-            }
-        }
-        let reply_one = |job: Job, outputs: Result<Vec<Tensor>>, errors: &mut u64| {
-            if outputs.is_err() {
-                *errors += 1;
-            }
-            let queue_secs = t0.saturating_duration_since(job.submitted).as_secs_f64();
-            let _ = job.reply.send(JobResult {
-                outputs,
-                queue_secs,
-                // the whole batch's wall time: what this client waited
-                exec_secs: exec,
-                batch_size: k,
-                worker: id,
-                predicted,
-            }); // client may have gone away
-        };
-        match results {
-            Ok(per_job) => {
-                for (job, outputs) in jobs.into_iter().zip(per_job) {
-                    reply_one(job, outputs, &mut stats.errors);
-                }
-            }
-            Err(e) => {
-                // artifact-level failure: every job in the batch gets
-                // the same story
-                let msg = format!("{e:#}");
-                for job in jobs {
-                    reply_one(job, Err(anyhow::anyhow!("{msg}")), &mut stats.errors);
-                }
-            }
-        }
-    }
-    stats
 }
 
 /// Convenience: serve a closed-loop batch and return latency stats.
@@ -819,12 +154,12 @@ pub fn serve_open_loop(
     server: &Server,
     arrivals: impl IntoIterator<Item = (f64, &'static str, Vec<Tensor>)>,
 ) -> Result<(Vec<JobResult>, u64)> {
-    let t0 = Instant::now();
+    let t0 = std::time::Instant::now();
     let mut pending = Vec::new();
     let mut shed = 0u64;
     for (at_secs, artifact, inputs) in arrivals {
         let due = t0 + Duration::from_secs_f64(at_secs);
-        if let Some(wait) = due.checked_duration_since(Instant::now()) {
+        if let Some(wait) = due.checked_duration_since(std::time::Instant::now()) {
             std::thread::sleep(wait);
         }
         match server.try_submit(artifact, inputs) {
@@ -845,106 +180,31 @@ mod tests {
     use super::*;
 
     #[test]
-    fn cost_book_weights_batches() {
-        let book = CostBook::new();
-        // empty book: weight degrades to the job count
-        assert_eq!(book.batch_weight("mm", 4), 4);
-        assert_eq!(book.batch_weight("mm", 0), 1);
-        // a prediction takes over: 250 us/job -> a 4-job batch is 1000
-        book.record_predicted("mm", 250e-6);
-        assert_eq!(book.batch_weight("mm", 4), 1000);
-        // predictions are authoritative (overwrite, no smoothing)
-        book.record_predicted("mm", 100e-6);
-        assert_eq!(book.batch_weight("mm", 1), 100);
-        // sub-microsecond jobs still cost at least 1
-        book.record_predicted("tiny", 1e-9);
-        assert_eq!(book.batch_weight("tiny", 2), 1);
-        // unseen artifacts borrow the book median (sorted [~0, 100],
-        // upper middle 100 us/job) so their weights stay commensurate
-        assert_eq!(book.batch_weight("unseen", 2), 200);
-    }
-
-    #[test]
-    fn cost_book_smooths_measurements() {
-        let book = CostBook::new();
-        book.record_measured("fft", 100e-6);
-        assert_eq!(book.batch_weight("fft", 1), 100);
-        // EWMA alpha 0.3: 100 + 0.3*(200-100) = 130
-        book.record_measured("fft", 200e-6);
-        assert_eq!(book.batch_weight("fft", 1), 130);
-    }
-
-    #[test]
-    fn cost_book_recovers_from_a_poisoning_panic() {
-        // a worker that dies while holding the book must not take the
-        // dispatcher (batch_weight) or surviving workers (record_*)
-        // down with it
-        let book = Arc::new(CostBook::new());
-        let poisoner = Arc::clone(&book);
-        let _ = std::thread::spawn(move || {
-            let _guard = poisoner.per_job_us.lock().unwrap();
-            panic!("injected: worker died holding the cost book");
-        })
-        .join();
-        assert!(book.per_job_us.is_poisoned());
-        book.record_predicted("mm", 250e-6);
-        assert_eq!(book.batch_weight("mm", 4), 1000);
-        book.record_measured("fft", 100e-6);
-        assert_eq!(book.batch_weight("fft", 1), 100);
-    }
-
-    #[test]
-    fn panicked_thread_holding_the_admission_lock_still_lets_shutdown_report() {
-        // the regression: a panic while a shared lock is held used to
-        // cascade — submit panicked, then the dispatcher, then
-        // shutdown()'s joins. With poison recovery the server keeps
-        // serving and shutdown still produces the report.
+    fn facade_is_the_one_shard_cluster() {
         let server =
             Server::start_with_backend(BackendKind::Interp, 1, "artifacts", &[]).unwrap();
-        let shared = Arc::clone(&server.shared);
-        let _ = std::thread::spawn(move || {
-            let _guard = shared.state.lock().unwrap();
-            panic!("injected: worker died holding the admission lock");
-        })
-        .join();
-        assert!(server.shared.state.is_poisoned());
-
+        assert_eq!(server.workers(), 1);
         let inputs = vec![
             Tensor::f32(&[32, 32], vec![0.5; 32 * 32]),
             Tensor::f32(&[32, 32], vec![0.25; 32 * 32]),
         ];
         let result = server.submit("mm32", inputs).unwrap().wait().unwrap();
         assert!(result.outputs.is_ok(), "{:?}", result.outputs);
-
+        // the facade is shard 0 of a cluster of one, and its report is
+        // the one-shard cluster merge
+        assert_eq!(result.shard, 0);
         let report = server.shutdown().unwrap();
         assert_eq!(report.total_jobs, 1);
         assert_eq!(report.completed_jobs(), 1);
+        assert_eq!(report.shards.len(), 1);
+        assert_eq!(report.shards[0].shard, 0);
+        assert_eq!(report.shards[0].completed, 1);
     }
 
     #[test]
-    fn lane_ledger_merges_and_ratios() {
-        let mut a = ArtifactServeStats {
-            jobs: 4,
-            batches: 2,
-            measured_exec_secs: 2.0,
-            predicted_exec_secs: 1.0,
-            predicted_energy_j: 0.5,
-            predicted_batches: 2,
-        };
-        let b = ArtifactServeStats {
-            jobs: 2,
-            batches: 2,
-            measured_exec_secs: 2.0,
-            predicted_exec_secs: 3.0,
-            predicted_energy_j: 0.5,
-            predicted_batches: 2,
-        };
-        a.merge(&b);
-        assert_eq!(a.jobs, 6);
-        assert_eq!(a.batches, 4);
-        // measured mean 1.0 s/batch, predicted mean 1.0 s/batch
-        assert!((a.ratio().unwrap() - 1.0).abs() < 1e-12);
-        let empty = ArtifactServeStats::default();
-        assert!(empty.ratio().is_none());
+    fn bad_configs_still_rejected_through_the_facade() {
+        assert!(Server::start_with_backend(BackendKind::Interp, 0, "artifacts", &[]).is_err());
+        let bad = ServerConfig { max_batch: 0, ..ServerConfig::default() };
+        assert!(Server::start_with_config(BackendKind::Interp, bad, "artifacts", &[]).is_err());
     }
 }

@@ -67,6 +67,7 @@ fn usage() -> String {
      ea4rca serve --backend sim                   (cost-model-aware serving: predicted latency/energy per result)\n\
      ea4rca serve --rate 2000 --queue-cap 128     (open-loop arrivals, shed on saturation)\n\
      ea4rca serve --no-warm                       (cold caches: A/B the prepared-artifact warm-up)\n\
+     ea4rca serve --shards 2 --workers 2          (shard cluster: cost-weighted placement across arrays)\n\
      ea4rca sweep --table 6|7|8|9            (regenerate a paper table)\n\
      ea4rca generate --config configs/mm.json --out generated/mm\n\
      ea4rca fuse --configs configs/fft.json,configs/mm_small.json --out generated/fused\n\
@@ -334,7 +335,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "ea4rca serve",
         "micro-batched leader/worker request serving over the runtime",
     )
-    .opt("workers", "4", "worker thread count")
+    .opt("shards", "1", "array shards (independent serving units; router places by predicted cost)")
+    .opt("workers", "4", "worker thread count per shard")
     .opt("jobs", "256", "total jobs in the stream")
     .opt("mix", "mm-heavy", "uniform | mm-heavy | mm | fft | filter2d | mmt")
     .opt("seed", "1", "workload seed")
@@ -367,6 +369,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     // --no-warm, the cold A/B where first jobs pay prepare on-path)
     let opts = DeployOptions {
         backend: backend_from(&cli)?,
+        shards: cli.get_usize("shards")?,
         workers: cli.get_usize("workers")?,
         max_batch: cli.get_usize("batch")?,
         max_linger: std::time::Duration::from_micros(cli.get_u64("linger-us")?),
@@ -376,6 +379,13 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
     println!("backend: {}", opts.backend.name());
     let deployment = Deployment::start(&designs::catalogue(), &opts)?;
+    if deployment.shards() > 1 {
+        println!(
+            "cluster: {} shards x {} workers (cost-weighted placement)",
+            deployment.shards(),
+            opts.workers
+        );
+    }
 
     let t0 = std::time::Instant::now();
     let (results, shed) = if rate > 0.0 {
@@ -383,8 +393,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         // sheds the job instead of blocking the arrival clock
         let arrivals = open_loop_stream(&mix, n_jobs, seed, rate)
             .into_iter()
-            .map(|a| (a.at_secs, a.kind.artifact(), a.inputs));
-        deployment.open_loop(arrivals)?
+            .map(|a| (a.at_secs, a.kind.artifact().to_string(), a.stream, a.inputs));
+        deployment.open_loop_streams(arrivals)?
     } else {
         // closed loop: submit everything, let backpressure pace us
         let mut pending = Vec::with_capacity(n_jobs);
@@ -424,10 +434,18 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         let mean = report.mean_batch_size(artifact).unwrap_or(0.0);
         println!("  {artifact:<16} mean batch {mean:.2} [{}]", sizes.join(" "));
     }
+    if report.shards.len() > 1 {
+        for s in &report.shards {
+            println!(
+                "  shard {}: {} jobs accepted, {} completed, {} batches",
+                s.shard, s.jobs, s.completed, s.batches
+            );
+        }
+    }
     for w in &report.workers {
         println!(
-            "  worker {}: {} jobs in {} batches, {:.1} ms busy",
-            w.worker, w.jobs, w.batches, w.exec_secs * 1e3
+            "  shard {} worker {}: {} jobs in {} batches, {:.1} ms busy",
+            w.shard, w.worker, w.jobs, w.batches, w.exec_secs * 1e3
         );
     }
     // the cost model's view of the run, against what actually happened

@@ -155,6 +155,12 @@ pub struct Arrival {
     /// Seconds after stream start at which this job arrives.
     pub at_secs: f64,
     pub kind: TaskKind,
+    /// Stable stream/tenant id: the generating stream's seed, the same
+    /// for every arrival of one `open_loop_stream` call. Carried
+    /// through submission into `JobResult` and the per-stream report
+    /// ledger, so merged multi-shard reports can attribute jobs per
+    /// stream instead of positionally.
+    pub stream: u64,
     pub inputs: Vec<Tensor>,
 }
 
@@ -174,7 +180,7 @@ pub fn open_loop_stream(mix: &Mix, n: usize, seed: u64, rate_hz: f64) -> Vec<Arr
             t += -(1.0 - rng.f64()).ln() / rate_hz;
             let kind = mix.pick(&mut rng);
             let inputs = kind.gen_inputs(&mut rng);
-            Arrival { at_secs: t, kind, inputs }
+            Arrival { at_secs: t, kind, stream: seed, inputs }
         })
         .collect()
 }
@@ -315,6 +321,9 @@ mod tests {
             assert_eq!(x.at_secs, y.at_secs);
             assert_eq!(x.kind, y.kind);
             assert_eq!(x.inputs[0], y.inputs[0]);
+            // the stream/tenant id is the generating seed, stable
+            // across every arrival of the stream
+            assert_eq!(x.stream, 7);
         }
         for w in a.windows(2) {
             assert!(w[1].at_secs > w[0].at_secs, "arrival times must increase");

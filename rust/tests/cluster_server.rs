@@ -1,0 +1,362 @@
+//! The cluster layer end to end: router smoke across shard counts with
+//! every reply oracle-checked, cross-shard conservation accounting
+//! (submitted == completed + shed, summed over shards), graceful drain
+//! under load, readable undeployed-artifact rejection, and N=1 parity
+//! with the legacy single-`Server` path.
+
+use std::time::Duration;
+
+use ea4rca::coordinator::router::{route_open_loop, ClusterConfig, RouteError, Router};
+use ea4rca::coordinator::server::{Server, ServerConfig, SubmitError};
+use ea4rca::runtime::{BackendKind, Manifest, Tensor};
+use ea4rca::workload::{generate_stream, open_loop_stream, reference_outputs, Mix, TaskKind};
+
+/// f32 comparison bound — same contract as the single-shard stress
+/// suite: batched kernels match the reference accumulation order.
+const TOL: f32 = 1e-4;
+
+const ALL_ARTIFACTS: [&str; 4] = ["mm_pu128", "fft1024", "filter2d_pu8", "mmt_cascade8"];
+
+fn assert_tensors_match(got: &[Tensor], want: &[Tensor], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: output arity");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.shape(), w.shape(), "{what} output {i}: shape");
+        match (g, w) {
+            (Tensor::I32 { .. }, Tensor::I32 { .. }) => {
+                assert_eq!(g, w, "{what} output {i}: int mismatch");
+            }
+            _ => {
+                let d = g.max_abs_diff(w).expect("comparable tensors");
+                assert!(d < TOL as f64, "{what} output {i}: max |err| {d}");
+            }
+        }
+    }
+}
+
+fn cluster_config(shards: usize, workers: usize, queue_cap: usize) -> ClusterConfig {
+    ClusterConfig {
+        shards,
+        shard: ServerConfig {
+            n_workers: workers,
+            max_batch: 8,
+            max_linger: Duration::from_micros(200),
+            queue_cap,
+        },
+    }
+}
+
+/// Router smoke at N=2 and N=4: a mixed stream, every reply matched
+/// against the `tensor::*_ref` oracles, and full conservation in the
+/// merged cluster report.
+#[test]
+fn router_smoke_mixed_stream_oracle_match() {
+    let n_jobs = if cfg!(debug_assertions) { 120 } else { 400 };
+    for shards in [2usize, 4] {
+        let router = Router::start(
+            BackendKind::Interp,
+            cluster_config(shards, 2, 128),
+            Manifest::default_dir(),
+            &ALL_ARTIFACTS,
+        )
+        .expect("router start");
+        assert_eq!(router.shards(), shards);
+        assert_eq!(router.live_shards(), shards);
+        assert_eq!(router.workers(), shards * 2);
+
+        let stream = generate_stream(&Mix::uniform(), n_jobs, 17);
+        let mut pending = Vec::with_capacity(n_jobs);
+        let mut oracles = Vec::with_capacity(n_jobs);
+        for (kind, inputs) in stream {
+            oracles.push((kind, reference_outputs(kind, &inputs)));
+            pending.push(router.submit(kind.artifact(), inputs).expect("submit"));
+        }
+
+        let mut shard_seen = vec![0u64; shards];
+        for (i, (p, (kind, want))) in pending.into_iter().zip(&oracles).enumerate() {
+            let result = p.wait().expect("reply");
+            assert!(result.shard < shards, "job {i}: bogus shard id {}", result.shard);
+            shard_seen[result.shard] += 1;
+            let outputs = result
+                .outputs
+                .unwrap_or_else(|e| panic!("{shards}-shard job {i} ({kind:?}) failed: {e:#}"));
+            assert_tensors_match(&outputs, want, &format!("{shards}-shard job {i} ({kind:?})"));
+        }
+        // a burst this size must overflow one shard's cheap slot: the
+        // cost-weighted placement has to spread it
+        assert!(
+            shard_seen.iter().filter(|&&n| n > 0).count() >= 2,
+            "{shards}-shard burst never left shard 0: {shard_seen:?}"
+        );
+
+        let report = router.shutdown().expect("shutdown");
+        // conservation, cluster-wide and per shard
+        assert_eq!(report.total_jobs, n_jobs as u64, "{shards} shards: accepted");
+        assert_eq!(report.completed_jobs(), n_jobs as u64, "{shards} shards: completed");
+        assert_eq!(report.shards.len(), shards);
+        for (s, seen) in report.shards.iter().zip(&shard_seen) {
+            assert_eq!(s.jobs, *seen, "shard {}: accepted vs replies seen", s.shard);
+            assert_eq!(s.completed, *seen, "shard {}: completed vs replies seen", s.shard);
+        }
+        let by_shard: u64 = report.shards.iter().map(|s| s.jobs).sum();
+        assert_eq!(by_shard, n_jobs as u64, "{shards} shards: per-shard sum");
+        let hist_jobs: u64 = report
+            .batch_hist
+            .values()
+            .flat_map(|h| h.iter().map(|(size, count)| *size as u64 * count))
+            .sum();
+        assert_eq!(hist_jobs, n_jobs as u64, "{shards} shards: histogram mass");
+    }
+}
+
+/// Open-loop overload across 2 shards: offered == completed + shed,
+/// summed over shards, and the stream id rides through to the report.
+#[test]
+fn cross_shard_conservation_under_shedding() {
+    let n_jobs = if cfg!(debug_assertions) { 200 } else { 400 };
+    let router = Router::start(
+        BackendKind::Interp,
+        cluster_config(2, 1, 4),
+        Manifest::default_dir(),
+        &["mmt_cascade8"],
+    )
+    .expect("router start");
+
+    // a burst far beyond 2x1 workers with queue_cap 4: the cluster must
+    // shed rather than stall the arrival clock
+    let seed = 23u64;
+    let arrivals = open_loop_stream(&Mix::single(TaskKind::MmtChain), n_jobs, seed, 50_000.0)
+        .into_iter()
+        .map(|a| (a.at_secs, a.kind.artifact().to_string(), a.stream, a.inputs));
+    let (results, shed) = route_open_loop(&router, arrivals).expect("open loop");
+
+    assert_eq!(results.len() as u64 + shed, n_jobs as u64, "offered = completed + shed");
+    assert!(shed > 0, "a {n_jobs}-job burst against 2 queues of 4 must shed");
+    for r in &results {
+        assert!(r.shard < 2);
+        assert_eq!(r.stream, seed, "stream id must ride through to the result");
+        assert!(r.outputs.is_ok());
+    }
+
+    let report = router.shutdown().expect("shutdown");
+    // shed jobs never entered any shard: accepted == completed == the
+    // replies we hold, summed over shards
+    assert_eq!(report.total_jobs, results.len() as u64);
+    assert_eq!(report.completed_jobs(), results.len() as u64);
+    let by_shard: u64 = report.shards.iter().map(|s| s.jobs).sum();
+    assert_eq!(by_shard, results.len() as u64);
+    // per-stream attribution survives the cross-shard merge
+    assert_eq!(report.jobs_per_stream()[&seed], results.len() as u64);
+}
+
+/// Draining one shard under load keeps every already-admitted job's
+/// reply, while the rest of the cluster keeps serving; the drained
+/// ledger folds into the final merged report.
+#[test]
+fn drain_under_load_keeps_admitted_results() {
+    let n_before = if cfg!(debug_assertions) { 60 } else { 160 };
+    let mut router = Router::start(
+        BackendKind::Interp,
+        cluster_config(2, 1, 256),
+        Manifest::default_dir(),
+        &ALL_ARTIFACTS,
+    )
+    .expect("router start");
+
+    let mut pending = Vec::new();
+    let mut oracles = Vec::new();
+    for (kind, inputs) in generate_stream(&Mix::uniform(), n_before, 41) {
+        oracles.push((kind, reference_outputs(kind, &inputs)));
+        pending.push(router.submit(kind.artifact(), inputs).expect("submit"));
+    }
+
+    // drain shard 0 mid-burst: stop admitting there, flush its queue,
+    // join its threads — jobs it admitted keep their replies
+    let drained = router.drain(0).expect("drain shard 0");
+    assert_eq!(drained.shard, 0);
+    assert_eq!(drained.completed_jobs(), drained.total_jobs, "drained shard flushed");
+    assert_eq!(router.live_shards(), 1);
+    // a second drain of the same shard is a readable error, not a hang
+    let err = router.drain(0).unwrap_err().to_string();
+    assert!(err.contains("shard 0"), "{err}");
+
+    // the cluster keeps serving on the surviving shard
+    let mut rng = ea4rca::util::rng::Rng::new(5);
+    let inputs = TaskKind::MmBlock.gen_inputs(&mut rng);
+    let want = reference_outputs(TaskKind::MmBlock, &inputs);
+    let after = router.submit("mm_pu128", inputs).expect("post-drain submit");
+    let r = after.wait().expect("post-drain reply");
+    assert_eq!(r.shard, 1, "post-drain work must land on the live shard");
+    assert_tensors_match(&r.outputs.expect("post-drain job ok"), &want, "post-drain mm");
+
+    // every pre-drain job still gets its oracle-matched reply
+    let mut completed = 0u64;
+    for (i, (p, (kind, want))) in pending.into_iter().zip(&oracles).enumerate() {
+        let result = p.wait().expect("pre-drain reply");
+        completed += 1;
+        let outputs = result
+            .outputs
+            .unwrap_or_else(|e| panic!("pre-drain job {i} ({kind:?}) failed: {e:#}"));
+        assert_tensors_match(&outputs, want, &format!("pre-drain job {i} ({kind:?})"));
+    }
+    assert_eq!(completed, n_before as u64);
+
+    // the merged report folds the retired shard's ledger back in
+    let report = router.shutdown().expect("shutdown");
+    assert_eq!(report.shards.len(), 2, "retired shard 0 must appear in the merge");
+    assert_eq!(report.shards[0].shard, 0);
+    assert_eq!(report.shards[0].jobs, drained.total_jobs);
+    assert_eq!(report.total_jobs, n_before as u64 + 1);
+    assert_eq!(report.completed_jobs(), n_before as u64 + 1);
+}
+
+/// Placement maps are enforced: an artifact deployed on no shard is a
+/// readable rejection up front, and deployed artifacts route only to
+/// their shards.
+#[test]
+fn undeployed_artifact_is_rejected_readably() {
+    let router = Router::start_with_placement(
+        BackendKind::Interp,
+        cluster_config(2, 1, 64),
+        Manifest::default_dir(),
+        vec![vec!["mm_pu128".to_string()], vec!["fft1024".to_string()]],
+        true,
+    )
+    .expect("router start");
+
+    // deployed nowhere: rejected before any worker sees it
+    let err = router.submit("filter2d_pu8", Vec::new()).unwrap_err();
+    assert!(matches!(err, RouteError::Undeployed { .. }), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("filter2d_pu8"), "{msg}");
+    assert!(msg.contains("no shard"), "{msg}");
+    assert!(msg.contains("mm_pu128") && msg.contains("fft1024"), "{msg}");
+
+    // deployed artifacts land exactly on their shard
+    let mut rng = ea4rca::util::rng::Rng::new(9);
+    let mm = TaskKind::MmBlock.gen_inputs(&mut rng);
+    let fft = TaskKind::Fft1024.gen_inputs(&mut rng);
+    let r = router.submit("mm_pu128", mm).unwrap().wait().unwrap();
+    assert_eq!(r.shard, 0, "mm_pu128 is deployed only on shard 0");
+    assert!(r.outputs.is_ok());
+    let r = router.submit("fft1024", fft).unwrap().wait().unwrap();
+    assert_eq!(r.shard, 1, "fft1024 is deployed only on shard 1");
+    assert!(r.outputs.is_ok());
+
+    let report = router.shutdown().unwrap();
+    assert_eq!(report.total_jobs, 2, "the rejected submit never counted");
+    assert_eq!(report.shards[0].jobs, 1);
+    assert_eq!(report.shards[1].jobs, 1);
+}
+
+/// The legacy `Server` and an N=1 `Router` are the same machine: same
+/// stream, same config, same accounting, oracle-matched on both paths.
+#[test]
+fn n1_router_matches_legacy_server() {
+    let n_jobs = if cfg!(debug_assertions) { 80 } else { 240 };
+    let config = ServerConfig {
+        n_workers: 2,
+        max_batch: 8,
+        max_linger: Duration::from_micros(200),
+        queue_cap: 128,
+    };
+
+    let run_router = || -> (u64, u64) {
+        let router = Router::start(
+            BackendKind::Interp,
+            ClusterConfig { shards: 1, shard: config.clone() },
+            Manifest::default_dir(),
+            &ALL_ARTIFACTS,
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        let mut oracles = Vec::new();
+        for (kind, inputs) in generate_stream(&Mix::uniform(), n_jobs, 3) {
+            oracles.push((kind, reference_outputs(kind, &inputs)));
+            pending.push(router.submit(kind.artifact(), inputs).unwrap());
+        }
+        for (p, (kind, want)) in pending.into_iter().zip(&oracles) {
+            let r = p.wait().unwrap();
+            assert_eq!(r.shard, 0, "an N=1 cluster has only shard 0");
+            assert_tensors_match(&r.outputs.unwrap(), want, &format!("router {kind:?}"));
+        }
+        let report = router.shutdown().unwrap();
+        (report.total_jobs, report.completed_jobs())
+    };
+
+    let run_server = || -> (u64, u64) {
+        let server = Server::start_with_config(
+            BackendKind::Interp,
+            config.clone(),
+            Manifest::default_dir(),
+            &ALL_ARTIFACTS,
+        )
+        .unwrap();
+        let mut pending = Vec::new();
+        let mut oracles = Vec::new();
+        for (kind, inputs) in generate_stream(&Mix::uniform(), n_jobs, 3) {
+            oracles.push((kind, reference_outputs(kind, &inputs)));
+            pending.push(server.submit(kind.artifact(), inputs).unwrap());
+        }
+        for (p, (kind, want)) in pending.into_iter().zip(&oracles) {
+            let r = p.wait().unwrap();
+            assert_tensors_match(&r.outputs.unwrap(), want, &format!("server {kind:?}"));
+        }
+        let report = server.shutdown().unwrap();
+        assert_eq!(report.shards.len(), 1, "the facade is the one-shard cluster");
+        (report.total_jobs, report.completed_jobs())
+    };
+
+    let (router_accepted, router_completed) = run_router();
+    let (server_accepted, server_completed) = run_server();
+    assert_eq!(
+        (router_accepted, router_completed),
+        (server_accepted, server_completed),
+        "N=1 router and legacy Server accounting"
+    );
+    assert_eq!(router_accepted, n_jobs as u64);
+}
+
+/// Saturation spillover: when the cheapest shard's queue is full, a
+/// non-blocking submit lands on the next eligible shard instead of
+/// shedding — and a closed cluster reports `Closed`, not `Saturated`.
+#[test]
+fn try_submit_spills_before_shedding() {
+    let router = Router::start(
+        BackendKind::Interp,
+        cluster_config(2, 1, 2),
+        Manifest::default_dir(),
+        &["mmt_cascade8"],
+    )
+    .expect("router start");
+    let mut rng = ea4rca::util::rng::Rng::new(7);
+    // far more than one queue (cap 2) holds: with spillover both shards
+    // must end up carrying work before anything sheds
+    let mut accepted = 0u64;
+    let mut shed = 0u64;
+    let mut pending = Vec::new();
+    for _ in 0..64 {
+        let inputs = TaskKind::MmtChain.gen_inputs(&mut rng);
+        match router.try_submit("mmt_cascade8", inputs) {
+            Ok(p) => {
+                accepted += 1;
+                pending.push(p);
+            }
+            Err(RouteError::Submit(SubmitError::Saturated)) => shed += 1,
+            Err(e) => panic!("unexpected route error: {e}"),
+        }
+    }
+    assert_eq!(accepted + shed, 64);
+    for p in pending {
+        assert!(p.wait().unwrap().outputs.is_ok());
+    }
+    let report = router.shutdown().unwrap();
+    assert_eq!(report.total_jobs, accepted);
+    if shed > 0 {
+        // both queues had to fill before the first shed
+        assert!(
+            report.shards.iter().all(|s| s.jobs > 0),
+            "shed with an idle shard: {:?}",
+            report.shards
+        );
+    }
+}
