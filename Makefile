@@ -1,13 +1,38 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test stress cluster-stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
+.PHONY: build test verify static-gate bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
 
 build:
 	cargo build --release
 
 test:
 	cargo build --release && cargo test -q
+
+# The full verification gate in one command — what CI runs, locally:
+# static structural gate, fmt, clippy -D warnings, tier-1 build+tests,
+# doctests, and the release stress/cluster suites.
+verify: static-gate
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings
+	cargo build --release
+	cargo test -q
+	cargo test --doc
+	cargo test --release --test stress_server --test cluster_server
+
+# Toolchain-free structural checks (runs anywhere python3 exists):
+# balanced delimiters, mod-tree vs filesystem, Cargo target
+# registration, crate-root import resolution, feature-gate names.
+static-gate:
+	python3 tools/verify.py
+
+# Refresh the committed BENCH_*.json baselines (release mode only —
+# a debug-mode file is marked "build_mode": "debug" and must not be
+# committed as a baseline).
+bench-baseline:
+	cargo bench --bench serve_throughput
+	cargo bench --bench prepared_cache
+	cargo bench --bench cost_model
 
 # full serving stress suite (500-job mixed streams, seeds 1-5)
 stress:

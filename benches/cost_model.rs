@@ -6,6 +6,7 @@
 //! Run: `cargo bench --bench cost_model`
 
 use ea4rca::runtime::{BackendKind, Manifest, Runtime};
+use ea4rca::util::bench::BenchRecorder;
 use ea4rca::util::table::{fmt_f, Table};
 
 fn main() {
@@ -13,6 +14,9 @@ fn main() {
         .expect("sim runtime");
     let twin = Runtime::with_backend(BackendKind::Sim, Manifest::default_dir())
         .expect("twin runtime");
+    let mut rec = BenchRecorder::new("cost_model");
+    rec.note("backend", "sim")
+        .note("workload", "predicted dispatch cost per artifact across batch sizes");
 
     let mut t = Table::new(
         "AIE cost model — predicted dispatch cost per artifact",
@@ -43,6 +47,10 @@ fn main() {
                 fmt_f(p.fetch_secs * 1e6, 2),
                 fmt_f(p.stall_secs * 1e6, 2),
             ]);
+            rec.metric(&format!("{artifact}.x{batch}.latency_us"), p.latency_secs * 1e6, "us")
+                .metric(&format!("{artifact}.x{batch}.us_per_job"), p.per_job_secs() * 1e6, "us")
+                .metric(&format!("{artifact}.x{batch}.power_w"), p.power_w, "W")
+                .metric(&format!("{artifact}.x{batch}.energy_uj"), p.energy_j * 1e6, "uJ");
         }
         // batching must amortize the fixed dispatch overhead
         let p1 = rt.predict(artifact, 1).unwrap();
@@ -57,4 +65,5 @@ fn main() {
         "\npredictions are deterministic across runtimes and amortize with batch \
          size — these are the weights the serving dispatcher places batches by."
     );
+    rec.write();
 }

@@ -22,6 +22,7 @@ use std::time::Instant;
 
 use ea4rca::coordinator::server::{Server, ServerConfig};
 use ea4rca::runtime::{BackendKind, Manifest, Runtime, Tensor};
+use ea4rca::util::bench::BenchRecorder;
 use ea4rca::util::rng::Rng;
 use ea4rca::util::stats::summarize;
 use ea4rca::util::table::{fmt_f, Table};
@@ -72,6 +73,10 @@ fn fft_inputs(rng: &mut Rng, n: usize) -> Vec<Tensor> {
 
 fn main() {
     let mut rng = Rng::new(31);
+    let mut rec = BenchRecorder::new("prepared_cache");
+    rec.note("iters", ITERS)
+        .note("backend", "interp")
+        .note("workload", "warm vs cold per-job cost; serving first-job outlier");
     let mut t = Table::new(
         "prepared-artifact cache: warm vs cold per-job cost (interp)",
         &["artifact", "cold mean (ms)", "warm mean (ms)", "warm p50 (ms)", "speedup"],
@@ -92,6 +97,9 @@ fn main() {
             fmt_f(warm.p50 * 1e3, 3),
             format!("{speedup:.2}x"),
         ]);
+        rec.metric(&format!("{name}.cold_mean_ms"), cold.mean * 1e3, "ms")
+            .metric(&format!("{name}.warm_mean_ms"), warm.mean * 1e3, "ms")
+            .metric(&format!("{name}.warm_speedup"), speedup, "x");
     }
     // mm for scale: prepare is just dims there, so warm ~ cold
     let mm_inputs = vec![
@@ -107,6 +115,9 @@ fn main() {
         fmt_f(warm.p50 * 1e3, 3),
         format!("{:.2}x", cold.mean / warm.mean),
     ]);
+    rec.metric("mm_pu128.cold_mean_ms", cold.mean * 1e3, "ms")
+        .metric("mm_pu128.warm_mean_ms", warm.mean * 1e3, "ms")
+        .metric("mm_pu128.warm_speedup", cold.mean / warm.mean, "x");
     t.print();
     println!(
         "acceptance (fft8192 warm >= 1.2x cold): {} ({fft_speedup:.2}x)",
@@ -143,6 +154,10 @@ fn main() {
     println!("\nfft8192 serving latency, {n_jobs} jobs x 2 workers:");
     for (label, p50, max) in &first_vs_rest {
         println!("  {label:<10} p50 {p50:.3} ms | max {max:.3} ms");
+        let key = if *label == "warmed" { "serving_warmed" } else { "serving_cold_start" };
+        rec.metric(&format!("{key}.p50_ms"), *p50, "ms")
+            .metric(&format!("{key}.max_ms"), *max, "ms");
     }
     println!("(cold-start max carries the per-worker plan build; warmed should not)");
+    rec.write();
 }

@@ -20,6 +20,7 @@ use std::time::{Duration, Instant};
 use ea4rca::coordinator::router::{ClusterConfig, Router};
 use ea4rca::coordinator::server::{serve_open_loop, JobResult, Server, ServerConfig};
 use ea4rca::runtime::{BackendKind, Manifest, Tensor};
+use ea4rca::util::bench::BenchRecorder;
 use ea4rca::util::stats::summarize;
 use ea4rca::util::table::{fmt_f, Table};
 use ea4rca::workload::{generate_stream, open_loop_stream, Mix, TaskKind};
@@ -109,23 +110,31 @@ fn run_cluster(mix: &Mix, n_jobs: usize, seed: u64, shards: usize, workers_each:
 
 fn main() {
     let n_jobs = 256;
+    let mut rec = BenchRecorder::new("serve_throughput");
+    rec.note("workers", WORKERS)
+        .note("n_jobs", n_jobs)
+        .note("backend", "interp")
+        .note("workload", "closed loop batched-vs-unbatched; open loop at 1.2x capacity; shard shapes");
 
     let mut t = Table::new(
         "serving throughput: micro-batched vs unbatched (interp, 4 workers)",
         &["stream", "mode", "jobs/s", "mean batch", "exec mean (ms)", "queue p95 (ms)"],
     );
     let mut speedups: Vec<(String, f64)> = Vec::new();
-    for (label, mix) in [
-        ("pure mm_pu128".to_string(), Mix::single(TaskKind::MmBlock)),
+    for (key, label, mix) in [
+        ("pure_mm", "pure mm_pu128".to_string(), Mix::single(TaskKind::MmBlock)),
         // fft rides the prepared-artifact cache: the plan (bit-reversal
         // + twiddles) is built once per worker, shared by single-job
         // and batched dispatches alike
-        ("pure fft1024".to_string(), Mix::single(TaskKind::Fft1024)),
-        ("mm-heavy mixed".to_string(), Mix::mm_heavy()),
+        ("pure_fft", "pure fft1024".to_string(), Mix::single(TaskKind::Fft1024)),
+        ("mm_heavy_mixed", "mm-heavy mixed".to_string(), Mix::mm_heavy()),
     ] {
         let unbatched = run_closed(&mix, n_jobs, 17, 1);
         let batched = run_closed(&mix, n_jobs, 17, 8);
-        for (mode, s) in [("unbatched", &unbatched), ("batched x8", &batched)] {
+        for ((mode, s), mode_key) in [("unbatched", &unbatched), ("batched x8", &batched)]
+            .into_iter()
+            .zip(["unbatched", "batched"])
+        {
             t.row(&[
                 label.clone(),
                 mode.to_string(),
@@ -134,7 +143,16 @@ fn main() {
                 fmt_f(s.exec_ms_mean, 3),
                 fmt_f(s.queue_ms_p95, 2),
             ]);
+            rec.metric(&format!("{key}.{mode_key}.jobs_per_sec"), s.jobs_per_sec, "jobs/s")
+                .metric(&format!("{key}.{mode_key}.mean_batch"), s.mean_batch, "jobs/batch")
+                .metric(&format!("{key}.{mode_key}.exec_ms_mean"), s.exec_ms_mean, "ms")
+                .metric(&format!("{key}.{mode_key}.queue_ms_p95"), s.queue_ms_p95, "ms");
         }
+        rec.metric(
+            &format!("{key}.batched_speedup"),
+            batched.jobs_per_sec / unbatched.jobs_per_sec,
+            "x",
+        );
         speedups.push((label, batched.jobs_per_sec / unbatched.jobs_per_sec));
     }
     t.print();
@@ -176,6 +194,9 @@ fn main() {
          shed {shed}, {:.0} jobs/s goodput",
         served as f64 / wall
     );
+    rec.metric("open_loop.offered_rate", rate, "jobs/s")
+        .metric("open_loop.goodput", served as f64 / wall, "jobs/s")
+        .metric("open_loop.shed", shed as f64, "jobs");
     if !results.is_empty() {
         let queue = summarize(&results.iter().map(|r| r.queue_secs).collect::<Vec<_>>());
         let exec = summarize(&results.iter().map(|r| r.exec_secs).collect::<Vec<_>>());
@@ -209,6 +230,8 @@ fn main() {
             fmt_f(jps, 0),
             format!("{:.2}x", jps / baseline.max(1e-9)),
         ]);
+        rec.metric(&format!("cluster.{shards}x{each}.jobs_per_sec"), jps, "jobs/s");
     }
     t.print();
+    rec.write();
 }

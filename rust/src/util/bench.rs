@@ -1,0 +1,157 @@
+//! `BENCH_*.json` emission for the bench harnesses.
+//!
+//! Each measuring bench (`serve_throughput`, `prepared_cache`,
+//! `cost_model`) records its headline numbers through a
+//! [`BenchRecorder`] and writes `BENCH_<name>.json` at the repository
+//! root on exit. The committed files are the measured perf trajectory
+//! future PRs diff against, so the format is deliberately boring and
+//! deterministic:
+//!
+//! * object keys are sorted ([`Json`] uses a `BTreeMap`), so re-running
+//!   a bench produces a byte-stable file apart from the values that
+//!   actually changed;
+//! * every metric carries its unit next to its value — a reader (or a
+//!   CI diff) never has to guess whether `1.86` is seconds or a ratio;
+//! * the environment block records what the numbers mean: build mode
+//!   (a debug-mode run is marked `debug` and must never be committed as
+//!   a baseline), os/arch, and the parallelism the machine offered.
+//!
+//! Writing is best-effort: a read-only checkout still runs the bench
+//! and prints its tables; only the JSON side-channel is skipped (with a
+//! note on stderr).
+
+use std::path::PathBuf;
+
+use super::json::Json;
+
+/// Collects metrics for one bench run and writes `BENCH_<name>.json`.
+#[derive(Debug)]
+pub struct BenchRecorder {
+    name: String,
+    metrics: Vec<(String, f64, String)>,
+    notes: Vec<(String, String)>,
+}
+
+impl BenchRecorder {
+    pub fn new(name: &str) -> BenchRecorder {
+        BenchRecorder { name: name.to_string(), metrics: Vec::new(), notes: Vec::new() }
+    }
+
+    /// Record one measurement. `key` is dotted-path style
+    /// (`"pure_mm.batched.jobs_per_sec"`); `unit` is human-readable
+    /// (`"jobs/s"`, `"ms"`, `"x"`).
+    pub fn metric(&mut self, key: &str, value: f64, unit: &str) -> &mut Self {
+        self.metrics.push((key.to_string(), value, unit.to_string()));
+        self
+    }
+
+    /// Record a free-form context note (workload shape, knob settings).
+    pub fn note(&mut self, key: &str, value: impl std::fmt::Display) -> &mut Self {
+        self.notes.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// The build mode this binary was compiled with. Committed
+    /// baselines must say `release`; a `debug` file is a local
+    /// experiment, not a trajectory point.
+    pub fn build_mode() -> &'static str {
+        if cfg!(debug_assertions) {
+            "debug"
+        } else {
+            "release"
+        }
+    }
+
+    /// Assemble the JSON document (separated from [`Self::write`] so
+    /// tests can pin the format without touching the filesystem).
+    pub fn to_json(&self) -> Json {
+        let metrics = Json::Obj(
+            self.metrics
+                .iter()
+                .map(|(k, v, unit)| {
+                    (
+                        k.clone(),
+                        Json::obj(vec![("value", Json::num(*v)), ("unit", Json::str(unit))]),
+                    )
+                })
+                .collect(),
+        );
+        let notes =
+            Json::Obj(self.notes.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect());
+        let parallelism = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0);
+        Json::obj(vec![
+            ("bench", Json::str(&self.name)),
+            ("status", Json::str("measured")),
+            (
+                "environment",
+                Json::obj(vec![
+                    ("build_mode", Json::str(Self::build_mode())),
+                    ("os", Json::str(std::env::consts::OS)),
+                    ("arch", Json::str(std::env::consts::ARCH)),
+                    ("available_parallelism", Json::num(parallelism as f64)),
+                ]),
+            ),
+            ("notes", notes),
+            ("metrics", metrics),
+        ])
+    }
+
+    /// Where the file goes: `$EA4RCA_BENCH_DIR` if set, else the crate
+    /// root (where the committed baselines live).
+    pub fn output_path(&self) -> PathBuf {
+        let dir = std::env::var_os("EA4RCA_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+        dir.join(format!("BENCH_{}.json", self.name))
+    }
+
+    /// Write `BENCH_<name>.json`. Best-effort: failure is a note on
+    /// stderr, never a bench abort.
+    pub fn write(&self) {
+        let path = self.output_path();
+        let text = self.to_json().to_string_pretty() + "\n";
+        match std::fs::write(&path, text) {
+            Ok(()) => println!("wrote {}", path.display()),
+            Err(e) => eprintln!("note: could not write {}: {e}", path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_is_deterministic_and_typed() {
+        let mut r = BenchRecorder::new("example");
+        r.metric("b.second", 2.5, "ms").metric("a.first", 1.0, "jobs/s").note("workers", 4);
+        let a = r.to_json().to_string_pretty();
+        let b = r.to_json().to_string_pretty();
+        assert_eq!(a, b, "same recorder must render byte-identically");
+        let parsed = Json::parse(&a).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("example"));
+        assert_eq!(parsed.get("status").unwrap().as_str(), Some("measured"));
+        let metrics = parsed.get("metrics").unwrap().as_obj().unwrap();
+        // BTreeMap: keys come out sorted regardless of insertion order
+        let keys: Vec<&str> = metrics.keys().map(String::as_str).collect();
+        assert_eq!(keys, vec!["a.first", "b.second"]);
+        let m = metrics["b.second"].as_obj().unwrap();
+        assert_eq!(m["value"].as_f64(), Some(2.5));
+        assert_eq!(m["unit"].as_str(), Some("ms"));
+        let env = parsed.get("environment").unwrap();
+        assert!(matches!(env.get("build_mode").unwrap().as_str(), Some("debug" | "release")));
+        assert_eq!(
+            parsed.get("notes").unwrap().get("workers").unwrap().as_str(),
+            Some("4")
+        );
+    }
+
+    #[test]
+    fn output_path_honours_env_override() {
+        // (env vars are process-global; keep the assertion scoped to the
+        // default path so parallel tests cannot race on the override)
+        let r = BenchRecorder::new("example");
+        let p = r.output_path();
+        assert!(p.ends_with("BENCH_example.json"), "{}", p.display());
+    }
+}

@@ -9,7 +9,9 @@
 //! * [`table`] — aligned ASCII table printer for the bench harnesses.
 //! * [`stats`] — mean/stddev/percentile helpers for measurements.
 //! * [`cli`]   — tiny flag/option parser (replaces `clap`).
+//! * [`bench`] — `BENCH_*.json` emission for the measuring benches.
 
+pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod prop;

@@ -133,11 +133,24 @@ fn stress_single_artifact_burst() {
         &["mmt_cascade8"],
     )
     .expect("server start");
-    let stream = generate_stream(&Mix::single(TaskKind::MmtChain), n_jobs, 31);
+    // Compute every oracle BEFORE the first submit. With the reference
+    // computation inside the submit loop, arrivals are throttled to the
+    // service rate and the queue can drain between submits — on a fast
+    // machine every dispatch is then a singleton and the mean-batch
+    // assertion below races. A tight submit loop (queue pushes only)
+    // outruns the workers by construction, so batches must form.
+    let stream: Vec<(TaskKind, Vec<Tensor>, Vec<Tensor>)> =
+        generate_stream(&Mix::single(TaskKind::MmtChain), n_jobs, 31)
+            .into_iter()
+            .map(|(kind, inputs)| {
+                let want = reference_outputs(kind, &inputs);
+                (kind, inputs, want)
+            })
+            .collect();
     let mut pending = Vec::new();
     let mut oracles = Vec::new();
-    for (kind, inputs) in stream {
-        oracles.push(reference_outputs(kind, &inputs));
+    for (kind, inputs, want) in stream {
+        oracles.push(want);
         pending.push(server.submit(kind.artifact(), inputs).expect("submit"));
     }
     for (i, (p, want)) in pending.into_iter().zip(&oracles).enumerate() {

@@ -1,0 +1,515 @@
+#!/usr/bin/env python3
+"""Static verification gate for the EA4RCA Rust workspace.
+
+The full gate is `cargo build --release && cargo test -q` plus clippy,
+fmt, doc tests and the release suites (see `make verify`). Authoring
+containers do not always ship a Rust toolchain, so this script is the
+subset of the gate that is runnable anywhere with a Python interpreter:
+a lexical / structural checker over every Rust source in the workspace.
+
+It is NOT a compiler and passing it is necessary, not sufficient. It
+catches the mechanical breakage class that desk-checking misses:
+
+  1. unbalanced delimiters (paren/bracket/brace) after stripping
+     comments, strings, char literals and raw strings;
+  2. `mod foo;` declarations pointing at files that do not exist, and
+     orphan .rs files not reachable from any mod declaration;
+  3. Cargo.toml targets whose `path` does not exist, and test/bench/
+     example files on disk that are not registered (autodiscovery is
+     off, so an unregistered file silently never builds);
+  4. `use crate::...` first-segment resolution against the real module
+     tree and the crate root's public items/re-exports;
+  5. duplicate top-level item definitions in one module;
+  6. `#[cfg(feature = "...")]` gates naming features Cargo.toml does
+     not declare (clippy/rustc would reject unexpected cfgs);
+  7. leftover `todo!` / `unimplemented!` / `dbg!` in non-test code.
+
+Exit status: 0 clean, 1 findings. `--warn-only` downgrades to 0.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# ---------------------------------------------------------------- lexer
+
+
+def strip_tokens(src, path):
+    """Remove comments, string/char literals from Rust source.
+
+    Returns (stripped_text, errors). Stripped text preserves newlines so
+    line numbers survive; removed spans are blanked with spaces.
+    """
+    out = []
+    errors = []
+    i, n = 0, len(src)
+    line = 1
+
+    def err(msg):
+        errors.append("%s:%d: %s" % (path, line, msg))
+
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            line += 1
+            out.append(c)
+            i += 1
+        elif c == "/" and nxt == "/":
+            while i < n and src[i] != "\n":
+                i += 1
+        elif c == "/" and nxt == "*":
+            depth, start_line = 1, line
+            i += 2
+            while i < n and depth:
+                if src[i] == "\n":
+                    line += 1
+                if src.startswith("/*", i):
+                    depth += 1
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            if depth:
+                errors.append(
+                    "%s:%d: unterminated block comment" % (path, start_line)
+                )
+            out.append(" ")
+        elif c in "rb" and _raw_string_at(src, i):
+            hashes, j = _raw_string_at(src, i)
+            close = '"' + "#" * hashes
+            end = src.find(close, j)
+            if end == -1:
+                err("unterminated raw string")
+                i = n
+            else:
+                line += src.count("\n", i, end)
+                i = end + len(close)
+            out.append('""')
+        elif c == '"' or (c == "b" and nxt == '"'):
+            i += 2 if c == "b" else 1
+            start_line = line
+            while i < n:
+                if src[i] == "\\":
+                    i += 2
+                elif src[i] == '"':
+                    i += 1
+                    break
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            else:
+                errors.append(
+                    "%s:%d: unterminated string" % (path, start_line)
+                )
+            out.append('""')
+        elif c == "'":
+            # Char literal vs lifetime. A char literal closes with a
+            # quote within a couple of tokens; a lifetime never closes.
+            m = re.match(r"'(\\.[^']*|[^'\\])'", src[i:])
+            if m:
+                i += m.end()
+                out.append("' '")
+            else:
+                out.append(c)
+                i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out), errors
+
+
+def _raw_string_at(src, i):
+    """Return (hash_count, index_after_open_quote) if a raw string
+    starts at i, else None."""
+    m = re.match(r'(?:r|br)(#*)"', src[i:])
+    if not m:
+        return None
+    # Guard against identifiers ending in r, e.g. `var"` can't happen
+    # lexically, but `foo.r#"` can't either; require non-ident before.
+    if i > 0 and (src[i - 1].isalnum() or src[i - 1] == "_"):
+        return None
+    return (len(m.group(1)), i + m.end())
+
+
+def check_balance(stripped, path):
+    errors = []
+    stack = []
+    pairs = {")": "(", "]": "[", "}": "{"}
+    line = 1
+    for ch in stripped:
+        if ch == "\n":
+            line += 1
+        elif ch in "([{":
+            stack.append((ch, line))
+        elif ch in ")]}":
+            if not stack:
+                errors.append(
+                    "%s:%d: unmatched closing '%s'" % (path, line, ch)
+                )
+            else:
+                opener, oline = stack.pop()
+                if opener != pairs[ch]:
+                    errors.append(
+                        "%s:%d: mismatched '%s' (opened '%s' at line %d)"
+                        % (path, line, ch, opener, oline)
+                    )
+    for opener, oline in stack:
+        errors.append("%s:%d: unclosed '%s'" % (path, oline, opener))
+    return errors
+
+
+# ------------------------------------------------------------ module tree
+
+
+def module_files(crate_root):
+    """Walk `mod` declarations from the crate roots; return
+    (reachable_files, errors, module_of_file)."""
+    errors = []
+    reachable = {}
+    roots = []
+    for name in ("lib.rs", "main.rs"):
+        p = os.path.join(crate_root, name)
+        if os.path.exists(p):
+            roots.append((p, ()))
+    seen = set()
+    while roots:
+        path, modpath = roots.pop()
+        if path in seen:
+            continue
+        seen.add(path)
+        reachable[path] = modpath
+        try:
+            src = open(path, encoding="utf-8").read()
+        except OSError as e:
+            errors.append("%s: unreadable: %s" % (path, e))
+            continue
+        stripped, _ = strip_tokens(src, path)
+        base = os.path.dirname(path)
+        is_root = os.path.basename(path) in ("lib.rs", "main.rs")
+        is_mod_rs = os.path.basename(path) == "mod.rs"
+        for m in re.finditer(
+            r"^\s*(?:pub(?:\([^)]*\))?\s+)?mod\s+([A-Za-z_][A-Za-z0-9_]*)\s*;",
+            stripped,
+            re.M,
+        ):
+            name = m.group(1)
+            if is_root or is_mod_rs:
+                cand = [
+                    os.path.join(base, name + ".rs"),
+                    os.path.join(base, name, "mod.rs"),
+                ]
+            else:
+                stem = os.path.splitext(os.path.basename(path))[0]
+                cand = [
+                    os.path.join(base, stem, name + ".rs"),
+                    os.path.join(base, stem, name, "mod.rs"),
+                ]
+            hits = [c for c in cand if os.path.exists(c)]
+            if not hits:
+                errors.append(
+                    "%s: `mod %s;` has no file (looked for %s)"
+                    % (path, name, ", ".join(os.path.relpath(c, REPO) for c in cand))
+                )
+            else:
+                roots.append((hits[0], modpath + (name,)))
+    return reachable, errors
+
+
+def orphan_files(crate_root, reachable):
+    errors = []
+    for dirpath, _, files in os.walk(crate_root):
+        for f in files:
+            if not f.endswith(".rs"):
+                continue
+            p = os.path.join(dirpath, f)
+            if p not in reachable:
+                errors.append(
+                    "%s: not reachable from any `mod` declaration"
+                    % os.path.relpath(p, REPO)
+                )
+    return errors
+
+
+# --------------------------------------------------------- cargo targets
+
+
+def cargo_targets(cargo_toml):
+    """Minimal TOML scrape: return list of (section, name, path)."""
+    targets = []
+    section = None
+    name = path = None
+    for raw in open(cargo_toml, encoding="utf-8"):
+        stripped = raw.strip()
+        if stripped.startswith("[["):
+            if section and path:
+                targets.append((section, name, path))
+            section = stripped.strip("[]")
+            name = path = None
+        elif stripped.startswith("["):
+            if section and path:
+                targets.append((section, name, path))
+            section = None
+        elif section and "=" in stripped:
+            key, _, val = stripped.partition("=")
+            key = key.strip()
+            val = val.strip().strip('"')
+            if key == "name":
+                name = val
+            elif key == "path":
+                path = val
+    if section and path:
+        targets.append((section, name, path))
+    return targets
+
+
+def check_targets(cargo_toml):
+    errors = []
+    targets = cargo_targets(cargo_toml)
+    registered = set()
+    for section, name, path in targets:
+        full = os.path.join(REPO, path)
+        registered.add(os.path.normpath(full))
+        if not os.path.exists(full):
+            errors.append(
+                "Cargo.toml: [[%s]] %s points at missing %s"
+                % (section, name, path)
+            )
+    for d, section in (
+        ("rust/tests", "test"),
+        ("benches", "bench"),
+        ("examples", "example"),
+    ):
+        full_d = os.path.join(REPO, d)
+        if not os.path.isdir(full_d):
+            continue
+        for f in sorted(os.listdir(full_d)):
+            if not f.endswith(".rs"):
+                continue
+            p = os.path.normpath(os.path.join(full_d, f))
+            if p not in registered:
+                errors.append(
+                    "%s/%s: on disk but not registered as a [[%s]] target "
+                    "(autodiscovery is off; it will never build)"
+                    % (d, f, section)
+                )
+    return errors
+
+
+def declared_features(cargo_toml):
+    feats = set()
+    in_features = False
+    for raw in open(cargo_toml, encoding="utf-8"):
+        s = raw.strip()
+        if s.startswith("["):
+            in_features = s == "[features]"
+        elif in_features and "=" in s and not s.startswith("#"):
+            feats.add(s.partition("=")[0].strip())
+    return feats
+
+
+# ------------------------------------------------------------- symbols
+
+
+ITEM_RE = re.compile(
+    r"^\s*(?:pub(?:\([^)]*\))?\s+)?"
+    r"(?:unsafe\s+)?(?:async\s+)?(?:const\s+)?(?:extern\s+\S+\s+)?"
+    r"(fn|struct|enum|trait|union|type|static|mod|macro_rules!)\s+"
+    r"([A-Za-z_][A-Za-z0-9_]*)",
+    re.M,
+)
+CONST_RE = re.compile(
+    r"^\s*(?:pub(?:\([^)]*\))?\s+)?const\s+([A-Z_][A-Za-z0-9_]*)\s*:", re.M
+)
+USE_RE = re.compile(
+    r"^\s*(?:pub(?:\([^)]*\))?\s+)?use\s+([A-Za-z_][A-Za-z0-9_:]*)", re.M
+)
+
+
+def top_level_spans(stripped):
+    """Yield (offset, line) of positions at brace depth 0."""
+    depth = 0
+    line = 1
+    spans = []
+    for idx, ch in enumerate(stripped):
+        if ch == "\n":
+            line += 1
+        elif ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth = max(0, depth - 1)
+        spans.append(depth)
+    return spans
+
+
+def check_duplicates(stripped, path):
+    """Duplicate top-level items of the same kind+name in one file."""
+    depths = top_level_spans(stripped)
+    seen = {}
+    errors = []
+    for m in ITEM_RE.finditer(stripped):
+        if depths[m.start(2)] != 0:
+            continue
+        kind, name = m.group(1), m.group(2)
+        if kind in ("mod",):  # `mod tests {}` + `mod x;` collisions are rare
+            continue
+        line = stripped.count("\n", 0, m.start()) + 1
+        key = (kind, name)
+        if key in seen:
+            errors.append(
+                "%s:%d: duplicate top-level %s `%s` (first at line %d)"
+                % (path, line, kind, name, seen[key])
+            )
+        else:
+            seen[key] = line
+    return errors
+
+
+def crate_root_names(crate_root):
+    """Public names visible as crate::<name>: modules declared in
+    lib.rs plus items and re-exports defined there."""
+    names = set()
+    lib = os.path.join(crate_root, "lib.rs")
+    if not os.path.exists(lib):
+        return names
+    src = open(lib, encoding="utf-8").read()
+    stripped, _ = strip_tokens(src, lib)
+    for m in re.finditer(
+        r"^\s*(?:pub(?:\([^)]*\))?\s+)?mod\s+([A-Za-z_][A-Za-z0-9_]*)", stripped, re.M
+    ):
+        names.add(m.group(1))
+    for m in ITEM_RE.finditer(stripped):
+        names.add(m.group(2))
+    for m in re.finditer(
+        r"^\s*pub\s+use\s+[A-Za-z_][A-Za-z0-9_:]*::\{([^}]*)\}", stripped, re.M
+    ):
+        for part in m.group(1).split(","):
+            part = part.strip()
+            if part:
+                names.add(part.split(" as ")[-1].strip().split("::")[-1])
+    for m in re.finditer(
+        r"^\s*pub\s+use\s+([A-Za-z_][A-Za-z0-9_:]*)\s*(?:as\s+([A-Za-z_][A-Za-z0-9_]*))?;",
+        stripped,
+        re.M,
+    ):
+        names.add(m.group(2) or m.group(1).split("::")[-1])
+    return names
+
+
+def check_use_paths(stripped, path, root_names):
+    errors = []
+    for m in USE_RE.finditer(stripped):
+        segs = m.group(1).split("::")
+        if segs[0] != "crate" or len(segs) < 2:
+            continue
+        if segs[1] not in root_names:
+            line = stripped.count("\n", 0, m.start()) + 1
+            errors.append(
+                "%s:%d: `use crate::%s` — `%s` is not a module or public "
+                "item of the crate root" % (path, line, "::".join(segs[1:]), segs[1])
+            )
+    return errors
+
+
+def check_cfg_features(stripped, path, feats):
+    errors = []
+    for m in re.finditer(r'feature\s*=\s*"([^"]+)"', stripped):
+        if m.group(1) not in feats:
+            line = stripped.count("\n", 0, m.start()) + 1
+            errors.append(
+                '%s:%d: cfg feature "%s" not declared in Cargo.toml [features]'
+                % (path, line, m.group(1))
+            )
+    return errors
+
+
+def check_leftovers(stripped, path):
+    warnings = []
+    if "/tests/" in path or path.endswith("tests.rs"):
+        return warnings
+    for m in re.finditer(r"\b(todo!|unimplemented!|dbg!)\s*\(", stripped):
+        line = stripped.count("\n", 0, m.start()) + 1
+        warnings.append("%s:%d: leftover %s(...)" % (path, line, m.group(1)))
+    return warnings
+
+
+# ---------------------------------------------------------------- main
+
+
+def rust_files():
+    out = []
+    for top in ("rust", "benches", "examples", "vendor"):
+        for dirpath, _, files in os.walk(os.path.join(REPO, top)):
+            for f in sorted(files):
+                if f.endswith(".rs"):
+                    out.append(os.path.join(dirpath, f))
+    return sorted(out)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--warn-only", action="store_true")
+    args = ap.parse_args()
+
+    errors = []
+    warnings = []
+
+    cargo_toml = os.path.join(REPO, "Cargo.toml")
+    errors += check_targets(cargo_toml)
+    feats = declared_features(cargo_toml)
+    # cfg(test)/cfg(doctest) style cfgs plus cargo-implicit feature deps.
+    feats |= {"default", "pjrt"}
+
+    crate_root = os.path.join(REPO, "rust", "src")
+    reachable, mod_errors = module_files(crate_root)
+    errors += mod_errors
+    errors += orphan_files(crate_root, reachable)
+    for vend in ("vendor/anyhow/src", "vendor/xla/src"):
+        vroot = os.path.join(REPO, vend)
+        vreach, verr = module_files(vroot)
+        errors += verr
+        errors += orphan_files(vroot, vreach)
+
+    root_names = crate_root_names(crate_root)
+
+    for path in rust_files():
+        rel = os.path.relpath(path, REPO)
+        src = open(path, encoding="utf-8").read()
+        stripped, lex_errors = strip_tokens(src, rel)
+        errors += lex_errors
+        errors += check_balance(stripped, rel)
+        errors += check_duplicates(stripped, rel)
+        errors += check_cfg_features(stripped, rel, feats)
+        warnings += check_leftovers(stripped, rel)
+        if rel.startswith(("rust/tests", "benches", "examples")):
+            # Integration targets import through the crate's public API.
+            pass
+        elif rel.startswith("rust/src"):
+            errors += check_use_paths(stripped, rel, root_names)
+
+    for w in warnings:
+        print("warning: %s" % w)
+    for e in errors:
+        print("error: %s" % e)
+    total = len(rust_files())
+    if errors:
+        print(
+            "\nstatic gate: %d error(s), %d warning(s) across %d files"
+            % (len(errors), len(warnings), total)
+        )
+        return 0 if args.warn_only else 1
+    print(
+        "static gate: OK (%d files checked, %d warning(s))"
+        % (total, len(warnings))
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
