@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test verify static-gate bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
+.PHONY: build test verify static-gate lint bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
 
 build:
 	cargo build --release
@@ -11,14 +11,22 @@ test:
 
 # The full verification gate in one command — what CI runs, locally:
 # static structural gate, fmt, clippy -D warnings, tier-1 build+tests,
-# doctests, and the release stress/cluster suites.
+# doctests, the design-rule sweep, and the release stress/cluster
+# suites.
 verify: static-gate
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings
 	cargo build --release
 	cargo test -q
 	cargo test --doc
+	cargo run --release -- lint --all
 	cargo test --release --test stress_server --test cluster_server
+
+# Static design-rule checker (DRC) over every configs/*.json, the
+# design catalogue, and the default serving shape. Exit 1 on any
+# Error-severity finding; deterministic sorted output.
+lint:
+	cargo run --release -- lint --all
 
 # Toolchain-free structural checks (runs anywhere python3 exists):
 # balanced delimiters, mod-tree vs filesystem, Cargo target

@@ -1,0 +1,223 @@
+//! Lint drivers: walk configs and the design catalogue, collect one
+//! [`Report`] per subject, and render a deterministic, golden-stable
+//! text report for the `lint` CLI subcommand.
+
+use std::path::Path;
+
+use crate::api::{designs, Design};
+use crate::codegen::config::PuConfig;
+use crate::util::json::Json;
+
+use super::serving::{check_placement, check_serving, ServeShape};
+use super::{Diagnostic, Location, Report, RuleId, Severity};
+
+/// The result of a lint run: one report per subject, in a stable
+/// order (config files sorted by name, then catalogue designs, then
+/// the serving shape).
+#[derive(Debug, Default)]
+pub struct Lint {
+    pub subjects: Vec<(String, Report)>,
+}
+
+impl Lint {
+    pub fn push(&mut self, origin: impl Into<String>, report: Report) {
+        self.subjects.push((origin.into(), report));
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.subjects.iter().map(|(_, r)| r.count(sev)).sum()
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.subjects.iter().any(|(_, r)| r.has_errors())
+    }
+
+    /// Does any subject's report carry this rule?
+    pub fn has(&self, rule: RuleId) -> bool {
+        self.subjects.iter().any(|(_, r)| r.has(rule))
+    }
+
+    /// Render the whole run: subjects in order, findings sorted within
+    /// each, and a one-line summary. Byte-stable for a given tree —
+    /// origins are bare file names / design labels, never absolute
+    /// paths — so goldens can pin it.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (origin, report) in &self.subjects {
+            out.push_str(&format!("== {origin}\n"));
+            if report.is_empty() {
+                out.push_str("   OK\n");
+                continue;
+            }
+            for d in report.sorted() {
+                out.push_str(&format!("   {}\n", d.grouped_line()));
+                if let Some(h) = &d.hint {
+                    out.push_str(&format!("      hint: {h}\n"));
+                }
+            }
+        }
+        out.push_str(&format!(
+            "lint: {} subjects checked, {} errors, {} warnings, {} infos\n",
+            self.subjects.len(),
+            self.count(Severity::Error),
+            self.count(Severity::Warn),
+            self.count(Severity::Info),
+        ));
+        out
+    }
+}
+
+/// Lint one config's JSON text. Unparseable text is itself a finding
+/// (DRC-000), not a driver error — `lint` never aborts mid-run.
+pub fn lint_config_text(text: &str, origin: &str) -> Report {
+    let root = match Json::parse(text) {
+        Ok(root) => root,
+        Err(e) => {
+            let mut r = Report::new();
+            r.push(Diagnostic::new(
+                RuleId::ConfigInvalid,
+                Location::new(origin),
+                format!("not valid JSON: {e}"),
+            ));
+            return r;
+        }
+    };
+    let artifact = root.get("artifact").and_then(Json::as_str).map(String::from);
+    match PuConfig::from_json(&root) {
+        Ok(cfg) => super::rules::check_config(&cfg, artifact.as_deref(), origin),
+        Err(e) => {
+            let mut r = Report::new();
+            r.push(Diagnostic::new(
+                RuleId::ConfigInvalid,
+                Location::new(origin),
+                format!("not a PU config: {e:#}"),
+            ));
+            r
+        }
+    }
+}
+
+/// Lint one config file. The subject label is the bare file name so
+/// reports stay path-independent.
+pub fn lint_path(path: &Path) -> Report {
+    let origin = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .unwrap_or("<config>")
+        .to_string();
+    match std::fs::read_to_string(path) {
+        Ok(text) => lint_config_text(&text, &origin),
+        Err(e) => {
+            let mut r = Report::new();
+            r.push(Diagnostic::new(
+                RuleId::ConfigInvalid,
+                Location::new(origin),
+                format!("unreadable: {e}"),
+            ));
+            r
+        }
+    }
+}
+
+/// Lint a validated [`Design`] (catalogue entries, `--app` designs).
+pub fn lint_design(d: &Design) -> Report {
+    super::rules::check_design(d)
+}
+
+/// The `lint --all` sweep: every `*.json` under `configs_dir` (sorted
+/// by file name), the four catalogue designs, and the serving shape
+/// linted against the catalogue with its replicated placement map.
+pub fn lint_all(configs_dir: &Path, shape: &ServeShape) -> Lint {
+    let mut lint = Lint::default();
+
+    let mut files: Vec<std::path::PathBuf> = Vec::new();
+    match std::fs::read_dir(configs_dir) {
+        Ok(entries) => {
+            for entry in entries.flatten() {
+                let p = entry.path();
+                if p.extension().map(|e| e == "json").unwrap_or(false) {
+                    files.push(p);
+                }
+            }
+        }
+        Err(e) => {
+            let mut r = Report::new();
+            r.push(Diagnostic::new(
+                RuleId::ConfigInvalid,
+                Location::new(configs_dir.display().to_string()),
+                format!("cannot list config directory: {e}"),
+            ));
+            lint.push(configs_dir.display().to_string(), r);
+        }
+    }
+    files.sort();
+    for path in &files {
+        let origin = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("<config>")
+            .to_string();
+        lint.push(origin, lint_path(path));
+    }
+
+    let catalogue = designs::catalogue();
+    for d in &catalogue {
+        lint.push(format!("design({})", d.name()), lint_design(d));
+    }
+
+    // The serving shape over the catalogue, with the same replicated
+    // placement `Deployment::start` would build.
+    let mut artifacts: Vec<String> = Vec::new();
+    for d in &catalogue {
+        if !artifacts.iter().any(|a| a == d.artifact()) {
+            artifacts.push(d.artifact().to_string());
+        }
+    }
+    let placement = vec![artifacts.clone(); shape.shards];
+    let label = shape.label();
+    let mut report = check_serving(&catalogue, shape, &label);
+    report.merge(check_placement(&artifacts, &placement, &label));
+    lint.push(label, report);
+
+    lint
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn garbage_text_is_a_config_invalid_finding() {
+        let r = lint_config_text("not json at all", "junk.json");
+        assert!(r.has(RuleId::ConfigInvalid));
+        assert!(r.has_errors());
+        let r = lint_config_text(r#"{"name": "x"}"#, "partial.json");
+        assert!(r.has(RuleId::ConfigInvalid), "{:?}", r.sorted());
+    }
+
+    #[test]
+    fn missing_file_is_a_finding_not_a_panic() {
+        let r = lint_path(Path::new("/no/such/config.json"));
+        assert!(r.has(RuleId::ConfigInvalid));
+    }
+
+    #[test]
+    fn render_is_grouped_with_summary() {
+        let mut lint = Lint::default();
+        lint.push("clean.json", Report::new());
+        let mut bad = Report::new();
+        bad.push(Diagnostic::new(
+            RuleId::ArrayBudget,
+            Location::new("bad.json"),
+            "too many cores",
+        ));
+        lint.push("bad.json", bad);
+        let text = lint.render();
+        assert!(text.contains("== clean.json\n   OK\n"), "{text}");
+        assert!(text.contains("== bad.json\n   error[DRC-001]"), "{text}");
+        assert!(
+            text.ends_with("lint: 2 subjects checked, 1 errors, 0 warnings, 0 infos\n"),
+            "{text}"
+        );
+    }
+}

@@ -1,0 +1,515 @@
+//! Static design-rule checker (DRC).
+//!
+//! The codegen and serving layers validate eagerly but locally: an
+//! over-budget PST or a placement map that strands an artifact only
+//! surfaces as a runtime error deep inside `generate()`/`deploy()`.
+//! This module is the opposite: a cheap, total, *static* pass over a
+//! design (or raw config, or emitted graph text, or serving shape)
+//! that reports **every** violated rule at once as structured
+//! [`Diagnostic`]s, never panics, and never touches a runtime.
+//!
+//! Layering:
+//! - [`rules`] — per-design rules (array/PLIO budgets, placement
+//!   dry-run on [`crate::sim::array::AieArray`], port arithmetic,
+//!   kernel catalogue checks, graph-wiring audits of emitted code).
+//! - [`serving`] — cluster-shape lints (stranded artifacts, zero
+//!   capacity, queue/batch interactions, declared-rate overload).
+//! - [`lint`] — drivers that walk `configs/*.json` + the
+//!   [`crate::api::designs`] catalogue and render deterministic,
+//!   golden-stable reports for the `lint` CLI subcommand.
+//!
+//! Integration seams: `Design::check()` runs [`rules::check_design`];
+//! `Design::generate()`/`deploy()` gate on it (errors fail with the
+//! diagnostic text, warnings print to stderr); `lint --all` is part of
+//! `make verify` and CI. The ROADMAP autotuner prunes with this same
+//! oracle.
+
+pub mod lint;
+pub mod rules;
+pub mod serving;
+
+pub use lint::{lint_all, lint_config_text, lint_design, lint_path, Lint};
+pub use rules::{check_config, check_config_on, check_design, check_graph_text};
+pub use serving::{check_placement, check_serving, ServeShape};
+
+use std::fmt;
+
+/// How bad a finding is. Ordering is by decreasing severity so that
+/// `Error < Warn < Info` sorts errors first in rendered reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warning",
+            Severity::Info => "info",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The stable rule registry. Codes are permanent once shipped:
+/// `DRC-0xx` are design/graph rules, `DRC-1xx` are serving rules.
+/// Declaration order is sort order (derive `Ord`), and matches the
+/// numeric code order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum RuleId {
+    /// DRC-000: the config could not be parsed at all.
+    ConfigInvalid,
+    /// DRC-001: copies x PU cores exceed the AIE array core budget.
+    ArrayBudget,
+    /// DRC-002: copies x PU PLIOs exceed the device PLIO budget.
+    PlioBudget,
+    /// DRC-003: the PU footprint cannot be placed on the array even
+    /// though the raw core budget fits (column-span fragmentation).
+    UnplaceablePu,
+    /// DRC-004: a CC cascade chain is longer than one array column.
+    CascadeLongChain,
+    /// DRC-005: a DAC/DCC declares more PLIOs than cores it serves.
+    PlioOversubscribed,
+    /// DRC-006: DAC or DCC serve ranges sum past the CC core count.
+    CoreSliceOverrun,
+    /// DRC-007: the named kernel is not in the kernel catalogue.
+    KernelUnknown,
+    /// DRC-008: the kernel's class does not match the PU class.
+    KernelClassMismatch,
+    /// DRC-009: the resolved artifact is not a builtin manifest entry.
+    ArtifactNotBuiltin,
+    /// DRC-010: predicted comm time exceeds compute time (comm-bound).
+    CommBound,
+    /// DRC-011: per-core tile I/O footprint exceeds core local memory.
+    CoreMemOverflow,
+    /// DRC-012: the graph code generator refused the config.
+    GraphEmitFailed,
+    /// DRC-013: a core port or PLIO is wired more than once in the
+    /// emitted graph code.
+    GraphDoubleWire,
+    /// DRC-014: a declared PLIO port is never wired in the emitted
+    /// graph code.
+    GraphDanglingPort,
+    /// DRC-101: an artifact in the deploy set is on no shard's
+    /// placement map.
+    PlacementStranded,
+    /// DRC-102: a shard's placement map is empty (it can serve
+    /// nothing).
+    PlacementEmptyShard,
+    /// DRC-103: a placement map names an artifact outside the deploy
+    /// set.
+    PlacementUnknownArtifact,
+    /// DRC-104: max_batch exceeds queue_cap, so a full batch can never
+    /// accumulate.
+    BatchExceedsQueue,
+    /// DRC-105: a serving dimension (shards/workers/queue/batch) is 0.
+    ZeroCapacity,
+    /// DRC-106: the declared arrival rate exceeds predicted service
+    /// capacity, guaranteeing shedding once the queue fills.
+    RateOverload,
+}
+
+impl RuleId {
+    /// Every rule, in code order. Fixture tests iterate this to prove
+    /// the registry stays sorted and collision-free.
+    pub const ALL: [RuleId; 21] = [
+        RuleId::ConfigInvalid,
+        RuleId::ArrayBudget,
+        RuleId::PlioBudget,
+        RuleId::UnplaceablePu,
+        RuleId::CascadeLongChain,
+        RuleId::PlioOversubscribed,
+        RuleId::CoreSliceOverrun,
+        RuleId::KernelUnknown,
+        RuleId::KernelClassMismatch,
+        RuleId::ArtifactNotBuiltin,
+        RuleId::CommBound,
+        RuleId::CoreMemOverflow,
+        RuleId::GraphEmitFailed,
+        RuleId::GraphDoubleWire,
+        RuleId::GraphDanglingPort,
+        RuleId::PlacementStranded,
+        RuleId::PlacementEmptyShard,
+        RuleId::PlacementUnknownArtifact,
+        RuleId::BatchExceedsQueue,
+        RuleId::ZeroCapacity,
+        RuleId::RateOverload,
+    ];
+
+    /// The stable `DRC-xxx` code.
+    pub fn code(&self) -> &'static str {
+        match self {
+            RuleId::ConfigInvalid => "DRC-000",
+            RuleId::ArrayBudget => "DRC-001",
+            RuleId::PlioBudget => "DRC-002",
+            RuleId::UnplaceablePu => "DRC-003",
+            RuleId::CascadeLongChain => "DRC-004",
+            RuleId::PlioOversubscribed => "DRC-005",
+            RuleId::CoreSliceOverrun => "DRC-006",
+            RuleId::KernelUnknown => "DRC-007",
+            RuleId::KernelClassMismatch => "DRC-008",
+            RuleId::ArtifactNotBuiltin => "DRC-009",
+            RuleId::CommBound => "DRC-010",
+            RuleId::CoreMemOverflow => "DRC-011",
+            RuleId::GraphEmitFailed => "DRC-012",
+            RuleId::GraphDoubleWire => "DRC-013",
+            RuleId::GraphDanglingPort => "DRC-014",
+            RuleId::PlacementStranded => "DRC-101",
+            RuleId::PlacementEmptyShard => "DRC-102",
+            RuleId::PlacementUnknownArtifact => "DRC-103",
+            RuleId::BatchExceedsQueue => "DRC-104",
+            RuleId::ZeroCapacity => "DRC-105",
+            RuleId::RateOverload => "DRC-106",
+        }
+    }
+
+    /// Short kebab-case slug used in rendered diagnostics.
+    pub fn slug(&self) -> &'static str {
+        match self {
+            RuleId::ConfigInvalid => "config-invalid",
+            RuleId::ArrayBudget => "array-core-budget",
+            RuleId::PlioBudget => "plio-budget",
+            RuleId::UnplaceablePu => "unplaceable-pu",
+            RuleId::CascadeLongChain => "cascade-long-chain",
+            RuleId::PlioOversubscribed => "plio-oversubscribed",
+            RuleId::CoreSliceOverrun => "core-slice-overrun",
+            RuleId::KernelUnknown => "kernel-unknown",
+            RuleId::KernelClassMismatch => "kernel-class-mismatch",
+            RuleId::ArtifactNotBuiltin => "artifact-not-builtin",
+            RuleId::CommBound => "comm-bound",
+            RuleId::CoreMemOverflow => "core-mem-overflow",
+            RuleId::GraphEmitFailed => "graph-emit-failed",
+            RuleId::GraphDoubleWire => "graph-double-wire",
+            RuleId::GraphDanglingPort => "graph-dangling-port",
+            RuleId::PlacementStranded => "placement-stranded",
+            RuleId::PlacementEmptyShard => "placement-empty-shard",
+            RuleId::PlacementUnknownArtifact => "placement-unknown-artifact",
+            RuleId::BatchExceedsQueue => "batch-exceeds-queue",
+            RuleId::ZeroCapacity => "zero-capacity",
+            RuleId::RateOverload => "rate-overload",
+        }
+    }
+
+    /// The severity every finding of this rule carries.
+    pub fn severity(&self) -> Severity {
+        match self {
+            RuleId::ConfigInvalid
+            | RuleId::ArrayBudget
+            | RuleId::PlioBudget
+            | RuleId::UnplaceablePu
+            | RuleId::PlioOversubscribed
+            | RuleId::CoreSliceOverrun
+            | RuleId::KernelUnknown
+            | RuleId::KernelClassMismatch
+            | RuleId::GraphEmitFailed
+            | RuleId::GraphDoubleWire
+            | RuleId::GraphDanglingPort
+            | RuleId::PlacementStranded
+            | RuleId::ZeroCapacity => Severity::Error,
+            RuleId::CascadeLongChain
+            | RuleId::CommBound
+            | RuleId::CoreMemOverflow
+            | RuleId::PlacementEmptyShard
+            | RuleId::PlacementUnknownArtifact
+            | RuleId::BatchExceedsQueue
+            | RuleId::RateOverload => Severity::Warn,
+            RuleId::ArtifactNotBuiltin => Severity::Info,
+        }
+    }
+
+    /// One-line description for `lint --rules` style listings.
+    pub fn summary(&self) -> &'static str {
+        match self {
+            RuleId::ConfigInvalid => "config file does not parse as a PU config",
+            RuleId::ArrayBudget => "copies x PU cores exceed the AIE array core budget",
+            RuleId::PlioBudget => "copies x PU PLIOs exceed the device PLIO budget",
+            RuleId::UnplaceablePu => "PU footprint cannot be placed (column fragmentation)",
+            RuleId::CascadeLongChain => "CC cascade chain longer than one array column",
+            RuleId::PlioOversubscribed => "DAC/DCC declares more PLIOs than cores it serves",
+            RuleId::CoreSliceOverrun => "DAC/DCC serve ranges overrun the CC core count",
+            RuleId::KernelUnknown => "kernel name not present in the kernel catalogue",
+            RuleId::KernelClassMismatch => "kernel class incompatible with the PU class",
+            RuleId::ArtifactNotBuiltin => "resolved artifact is not a builtin manifest entry",
+            RuleId::CommBound => "predicted communication time exceeds compute time",
+            RuleId::CoreMemOverflow => "per-core tile I/O exceeds core local memory",
+            RuleId::GraphEmitFailed => "graph code generator refused the config",
+            RuleId::GraphDoubleWire => "core port or PLIO wired more than once in graph code",
+            RuleId::GraphDanglingPort => "declared PLIO port never wired in graph code",
+            RuleId::PlacementStranded => "artifact deployed on no shard's placement map",
+            RuleId::PlacementEmptyShard => "shard placement map is empty",
+            RuleId::PlacementUnknownArtifact => "placement names an artifact outside the deploy set",
+            RuleId::BatchExceedsQueue => "max_batch exceeds queue_cap; full batches never form",
+            RuleId::ZeroCapacity => "a serving dimension (shards/workers/queue/batch) is zero",
+            RuleId::RateOverload => "declared arrival rate exceeds predicted service capacity",
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} {}", self.code(), self.slug())
+    }
+}
+
+/// Where a finding points: a subject (`mm.json`, `design(fft)`,
+/// `deployment`) plus an optional finer-grained detail
+/// (`copy#26`, `pst#1/dac#0`, `shard#2`).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Location {
+    pub origin: String,
+    pub detail: Option<String>,
+}
+
+impl Location {
+    pub fn new(origin: impl Into<String>) -> Self {
+        Location { origin: origin.into(), detail: None }
+    }
+
+    pub fn at(origin: impl Into<String>, detail: impl Into<String>) -> Self {
+        Location { origin: origin.into(), detail: Some(detail.into()) }
+    }
+}
+
+impl fmt::Display for Location {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.detail {
+            Some(d) => write!(f, "{} ({})", self.origin, d),
+            None => f.write_str(&self.origin),
+        }
+    }
+}
+
+/// One finding: a rule, where it fired, what happened, and (usually)
+/// how to fix it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub rule: RuleId,
+    pub severity: Severity,
+    pub location: Location,
+    pub message: String,
+    pub hint: Option<String>,
+}
+
+impl Diagnostic {
+    /// Severity is taken from the rule; it is per-rule, not per-site.
+    pub fn new(rule: RuleId, location: Location, message: impl Into<String>) -> Self {
+        Diagnostic {
+            rule,
+            severity: rule.severity(),
+            location,
+            message: message.into(),
+            hint: None,
+        }
+    }
+
+    pub fn hint(mut self, hint: impl Into<String>) -> Self {
+        self.hint = Some(hint.into());
+        self
+    }
+
+    /// Single-line form with the origin elided, for reports already
+    /// grouped by subject. The detail (if any) stays.
+    pub fn grouped_line(&self) -> String {
+        match &self.location.detail {
+            Some(d) => format!(
+                "{}[{}] {} at {}: {}",
+                self.severity,
+                self.rule.code(),
+                self.rule.slug(),
+                d,
+                self.message
+            ),
+            None => format!(
+                "{}[{}] {}: {}",
+                self.severity,
+                self.rule.code(),
+                self.rule.slug(),
+                self.message
+            ),
+        }
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}[{}] {} at {}: {}",
+            self.severity,
+            self.rule.code(),
+            self.rule.slug(),
+            self.location,
+            self.message
+        )?;
+        if let Some(h) = &self.hint {
+            write!(f, "\n    hint: {h}")?;
+        }
+        Ok(())
+    }
+}
+
+/// An ordered collection of findings for one or more subjects.
+/// Rendering is deterministic: sorted by (origin, severity, rule,
+/// detail, message) so golden tests can pin output byte-stable.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    diags: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    pub fn push(&mut self, diag: Diagnostic) {
+        self.diags.push(diag);
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.diags.extend(other.diags);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.diags.len()
+    }
+
+    /// Findings in deterministic render order.
+    pub fn sorted(&self) -> Vec<&Diagnostic> {
+        let mut v: Vec<&Diagnostic> = self.diags.iter().collect();
+        v.sort_by(|a, b| {
+            (&a.location.origin, a.severity, a.rule, &a.location.detail, &a.message).cmp(&(
+                &b.location.origin,
+                b.severity,
+                b.rule,
+                &b.location.detail,
+                &b.message,
+            ))
+        });
+        v
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Diagnostic> {
+        self.diags.iter()
+    }
+
+    /// Did any finding fire for this rule?
+    pub fn has(&self, rule: RuleId) -> bool {
+        self.diags.iter().any(|d| d.rule == rule)
+    }
+
+    pub fn has_errors(&self) -> bool {
+        self.diags.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity == sev).count()
+    }
+
+    /// All Error-severity findings rendered one per line, sorted.
+    pub fn render_errors(&self) -> String {
+        let mut out = String::new();
+        for d in self.sorted() {
+            if d.severity == Severity::Error {
+                out.push_str(&format!("  {d}\n"));
+            }
+        }
+        out
+    }
+
+    /// Errors-fail / warnings-print gate used by `Design::generate()`
+    /// and `Deployment::start`: non-error findings go to stderr, any
+    /// error aborts with the full diagnostic text in the error chain.
+    pub fn gate(&self, what: &str) -> anyhow::Result<()> {
+        for d in self.sorted() {
+            if d.severity != Severity::Error {
+                eprintln!("{d}");
+            }
+        }
+        if self.has_errors() {
+            anyhow::bail!(
+                "{what} fails the design-rule check:\n{}",
+                self.render_errors().trim_end()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_codes_unique_and_sorted() {
+        let codes: Vec<&str> = RuleId::ALL.iter().map(|r| r.code()).collect();
+        let mut dedup = codes.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), codes.len(), "duplicate rule codes");
+        // Declaration order must match code order (Ord derives from it).
+        let mut by_code = codes.clone();
+        by_code.sort();
+        assert_eq!(codes, by_code, "RuleId declaration order != code order");
+        let mut slugs: Vec<&str> = RuleId::ALL.iter().map(|r| r.slug()).collect();
+        slugs.sort();
+        slugs.dedup();
+        assert_eq!(slugs.len(), RuleId::ALL.len(), "duplicate rule slugs");
+    }
+
+    #[test]
+    fn severity_orders_errors_first() {
+        assert!(Severity::Error < Severity::Warn);
+        assert!(Severity::Warn < Severity::Info);
+    }
+
+    #[test]
+    fn report_sorts_and_gates() {
+        let mut r = Report::new();
+        r.push(Diagnostic::new(
+            RuleId::CommBound,
+            Location::new("b"),
+            "warn here",
+        ));
+        r.push(
+            Diagnostic::new(RuleId::ArrayBudget, Location::new("a"), "too big")
+                .hint("reduce copies"),
+        );
+        let sorted = r.sorted();
+        assert_eq!(sorted[0].rule, RuleId::ArrayBudget);
+        assert!(r.has(RuleId::ArrayBudget));
+        assert!(r.has_errors());
+        assert_eq!(r.count(Severity::Error), 1);
+        assert_eq!(r.count(Severity::Warn), 1);
+        let err = r.gate("subject x").unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("subject x fails the design-rule check"), "{text}");
+        assert!(text.contains("DRC-001"), "{text}");
+        assert!(text.contains("too big"), "{text}");
+    }
+
+    #[test]
+    fn diagnostic_display_includes_hint_and_detail() {
+        let d = Diagnostic::new(
+            RuleId::PlioOversubscribed,
+            Location::at("mm.json", "pst#0/dac#1"),
+            "4 plios serve 2 cores",
+        )
+        .hint("drop plios to <= serves");
+        let s = format!("{d}");
+        assert!(s.contains("error[DRC-005] plio-oversubscribed at mm.json (pst#0/dac#1)"), "{s}");
+        assert!(s.contains("hint: drop plios"), "{s}");
+        assert!(d.grouped_line().starts_with("error[DRC-005] plio-oversubscribed at pst#0/dac#1:"));
+    }
+}

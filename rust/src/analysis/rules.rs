@@ -1,0 +1,494 @@
+//! The per-design rule set: budgets, placeability, port arithmetic,
+//! kernel-catalogue compatibility, cost-model smells, and wiring
+//! audits of the emitted graph code.
+//!
+//! Everything here is total and static: no rule panics, touches a
+//! runtime, or stops at the first finding — a bad design gets *all*
+//! of its diagnostics in one pass, which is what makes this usable as
+//! the autotuner's pruning oracle.
+
+use crate::api::Design;
+use crate::codegen::config::PuConfig;
+use crate::codegen::generator;
+use crate::codegen::repository;
+use crate::runtime::Manifest;
+use crate::sim::array::AieArray;
+use crate::sim::params::HwParams;
+
+use super::{Diagnostic, Location, Report, RuleId};
+
+/// Check a validated [`Design`] (the `Design::check()` facade): the
+/// full config rule set with the design's resolved artifact.
+pub fn check_design(d: &Design) -> Report {
+    check_config_on(
+        &HwParams::vck5000(),
+        d.config(),
+        Some(d.artifact()),
+        &format!("design({})", d.name()),
+    )
+}
+
+/// Check a raw config against the VCK5000. `artifact` is the runtime
+/// artifact override (a design's `.artifact(...)` / the JSON
+/// `"artifact"` key); without it the Kernel Manager mapping applies.
+pub fn check_config(cfg: &PuConfig, artifact: Option<&str>, origin: &str) -> Report {
+    check_config_on(&HwParams::vck5000(), cfg, artifact, origin)
+}
+
+/// [`check_config`] against explicit hardware parameters.
+pub fn check_config_on(
+    p: &HwParams,
+    cfg: &PuConfig,
+    artifact: Option<&str>,
+    origin: &str,
+) -> Report {
+    let mut r = Report::new();
+    let cores = cfg.pu.cores();
+    let total_cores = cores * cfg.copies;
+
+    // DRC-001: raw core budget.
+    if total_cores > p.total_aie {
+        r.push(
+            Diagnostic::new(
+                RuleId::ArrayBudget,
+                Location::new(origin),
+                format!(
+                    "{} copies x {cores} cores = {total_cores} AIE cores, \
+                     but the array has {}",
+                    cfg.copies, p.total_aie
+                ),
+            )
+            .hint(format!(
+                "at most {} copies of this PU fit the core budget",
+                p.total_aie / cores.max(1)
+            )),
+        );
+    }
+
+    // DRC-002: PLIO budget.
+    let plios = cfg.pu.total_plios();
+    let total_plios = plios * cfg.copies;
+    if total_plios > p.total_plio {
+        r.push(
+            Diagnostic::new(
+                RuleId::PlioBudget,
+                Location::new(origin),
+                format!(
+                    "{} copies x {plios} PLIOs = {total_plios} ports, \
+                     but the device has {}",
+                    cfg.copies, p.total_plio
+                ),
+            )
+            .hint(format!(
+                "at most {} copies of this PU fit the PLIO budget",
+                p.total_plio / plios.max(1)
+            )),
+        );
+    }
+
+    // DRC-003: placement dry-run. Only meaningful when the raw budget
+    // fits — an over-budget design already failed DRC-001 and would
+    // trivially fail here too.
+    if total_cores <= p.total_aie {
+        let mut arr = AieArray::new(p);
+        for copy in 0..cfg.copies {
+            if let Err(e) = arr.place(cores) {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::UnplaceablePu,
+                        Location::at(origin, format!("copy#{}", copy + 1)),
+                        format!("placement dry-run failed: {e}"),
+                    )
+                    .hint(
+                        "partial trailing columns fragment the array; prefer PU \
+                         shapes that tile the 8-row column height",
+                    ),
+                );
+                break;
+            }
+        }
+    }
+
+    // Per-PST structural rules.
+    for (pi, pst) in cfg.pu.psts.iter().enumerate() {
+        let cc_cores = pst.cc.cores();
+
+        // DRC-004: cascade chains run along array rows; a chain longer
+        // than one row span needs a turn, which costs an extra hop the
+        // cost model does not see.
+        let depth = pst.cc.chain_depth();
+        if depth > p.array_rows {
+            r.push(
+                Diagnostic::new(
+                    RuleId::CascadeLongChain,
+                    Location::at(origin, format!("pst#{}", pi + 1)),
+                    format!(
+                        "cascade chain depth {depth} exceeds the {}-row column \
+                         height; the chain must fold across columns",
+                        p.array_rows
+                    ),
+                )
+                .hint(format!(
+                    "split into Parallel<n>*Cascade<k> with k <= {}",
+                    p.array_rows
+                )),
+            );
+        }
+
+        // DRC-005: per-DAC/DCC port oversubscription.
+        for (di, dac) in pst.dacs.iter().enumerate() {
+            if dac.plios > dac.serves_cores {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::PlioOversubscribed,
+                        Location::at(origin, format!("pst#{}/dac#{di}", pi + 1)),
+                        format!(
+                            "DAC {} has {} PLIOs but serves only {} cores",
+                            dac.label(),
+                            dac.plios,
+                            dac.serves_cores
+                        ),
+                    )
+                    .hint("each PLIO wire needs its own leader core: plios <= serves"),
+                );
+            }
+        }
+        for (di, dcc) in pst.dccs.iter().enumerate() {
+            if dcc.plios > dcc.serves_cores {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::PlioOversubscribed,
+                        Location::at(origin, format!("pst#{}/dcc#{di}", pi + 1)),
+                        format!(
+                            "DCC {} has {} PLIOs but serves only {} cores",
+                            dcc.mode.name(),
+                            dcc.plios,
+                            dcc.serves_cores
+                        ),
+                    )
+                    .hint("each PLIO wire needs its own leader core: plios <= serves"),
+                );
+            }
+        }
+
+        // DRC-006: serve-slice sums past the CC's kernel array.
+        let dac_serves: usize = pst.dacs.iter().map(|d| d.serves_cores).sum();
+        if dac_serves > cc_cores {
+            r.push(
+                Diagnostic::new(
+                    RuleId::CoreSliceOverrun,
+                    Location::at(origin, format!("pst#{}/dacs", pi + 1)),
+                    format!(
+                        "DACs serve {dac_serves} cores in total but the CC has {cc_cores}"
+                    ),
+                )
+                .hint("DAC core slices are disjoint; their serves must sum to <= CC cores"),
+            );
+        }
+        let dcc_serves: usize = pst.dccs.iter().map(|d| d.serves_cores).sum();
+        if dcc_serves > cc_cores {
+            r.push(
+                Diagnostic::new(
+                    RuleId::CoreSliceOverrun,
+                    Location::at(origin, format!("pst#{}/dccs", pi + 1)),
+                    format!(
+                        "DCCs serve {dcc_serves} cores in total but the CC has {cc_cores}"
+                    ),
+                )
+                .hint("DCC core slices are disjoint; their serves must sum to <= CC cores"),
+            );
+        }
+    }
+
+    // DRC-007/008: Kernel Manager compatibility.
+    let mut resolved_artifact = artifact.map(String::from);
+    match repository::find_kernel(&cfg.kernel) {
+        None => {
+            let known: Vec<&str> =
+                repository::kernel_catalogue().iter().map(|k| k.name).collect();
+            r.push(
+                Diagnostic::new(
+                    RuleId::KernelUnknown,
+                    Location::new(origin),
+                    format!("kernel {:?} is not in the kernel catalogue", cfg.kernel),
+                )
+                .hint(format!("known kernels: {}", known.join(", "))),
+            );
+        }
+        Some(info) => {
+            if info.class != cfg.pu.class {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::KernelClassMismatch,
+                        Location::new(origin),
+                        format!(
+                            "config class {:?} does not match kernel {:?}'s class {:?}",
+                            cfg.pu.class, cfg.kernel, info.class
+                        ),
+                    )
+                    .hint("pick a kernel of the config's class or fix the class field"),
+                );
+            }
+            if resolved_artifact.is_none() {
+                resolved_artifact = Some(info.artifact.to_string());
+            }
+        }
+    }
+
+    // DRC-009: the resolved artifact should exist in the builtin
+    // manifest, or serving will only work with a custom artifact dir.
+    if let Some(name) = &resolved_artifact {
+        if Manifest::builtin(Manifest::default_dir()).get(name).is_err() {
+            r.push(
+                Diagnostic::new(
+                    RuleId::ArtifactNotBuiltin,
+                    Location::new(origin),
+                    format!("artifact {name:?} is not a builtin manifest entry"),
+                )
+                .hint("deployment needs a manifest that carries this artifact"),
+            );
+        }
+    }
+
+    // DRC-010: comm-bound designs waste the array (the paper's whole
+    // point is communication avoidance).
+    let io_bytes = cfg.pu.in_bytes_per_iter + cfg.pu.out_bytes_per_iter;
+    if io_bytes > 0 {
+        let comm = cfg.pu.comm_secs(p);
+        let compute = cfg.pu.compute_secs(p);
+        if comm > compute {
+            r.push(
+                Diagnostic::new(
+                    RuleId::CommBound,
+                    Location::new(origin),
+                    format!(
+                        "communication {:.2} us exceeds compute {:.2} us per iteration",
+                        comm * 1e6,
+                        compute * 1e6
+                    ),
+                )
+                .hint("add PLIOs, shrink the per-iteration tile, or raise ops_per_iter"),
+            );
+        }
+    }
+
+    // DRC-011: double-buffered per-core tile I/O vs core-local memory.
+    if cores > 0 {
+        let per_core = 2 * io_bytes / cores;
+        if per_core > p.core_mem_bytes {
+            r.push(
+                Diagnostic::new(
+                    RuleId::CoreMemOverflow,
+                    Location::new(origin),
+                    format!(
+                        "double-buffered tile I/O needs ~{per_core} B per core, \
+                         but cores have {} B",
+                        p.core_mem_bytes
+                    ),
+                )
+                .hint("shrink the per-iteration tile or spread it over more cores"),
+            );
+        }
+    }
+
+    // DRC-012..014: the graph code generator and its emitted wiring.
+    match generator::generate(cfg) {
+        Err(e) => {
+            r.push(
+                Diagnostic::new(
+                    RuleId::GraphEmitFailed,
+                    Location::new(origin),
+                    format!("graph code generator refused the config: {e:#}"),
+                )
+                .hint("fix the port/slice arithmetic the generator reported"),
+            );
+        }
+        Ok(proj) => {
+            r.merge(check_graph_text(&proj.graph_h, origin));
+        }
+    }
+
+    r
+}
+
+/// Scraped shape of an emitted `graph.h`.
+struct GraphShape {
+    in_ports: usize,
+    out_ports: usize,
+    /// Kernel-array sizes per PST index.
+    kernels: Vec<usize>,
+}
+
+fn scrape_graph(graph_h: &str) -> GraphShape {
+    let mut shape = GraphShape { in_ports: 0, out_ports: 0, kernels: Vec::new() };
+    for line in graph_h.lines() {
+        let t = line.trim_start();
+        if let Some(rest) = t.strip_prefix("input_plio  in[") {
+            if let Some(n) = rest.strip_suffix("];").and_then(|s| s.parse().ok()) {
+                shape.in_ports = n;
+            }
+        } else if let Some(rest) = t.strip_prefix("output_plio out[") {
+            if let Some(n) = rest.strip_suffix("];").and_then(|s| s.parse().ok()) {
+                shape.out_ports = n;
+            }
+        } else if let Some(rest) = t.strip_prefix("kernel k") {
+            if let Some((pi, tail)) = rest.split_once('[') {
+                if let (Ok(pi), Some(Ok(n))) = (
+                    pi.parse::<usize>(),
+                    tail.strip_suffix("];").map(|s| s.parse::<usize>()),
+                ) {
+                    if shape.kernels.len() <= pi {
+                        shape.kernels.resize(pi + 1, 0);
+                    }
+                    shape.kernels[pi] = n;
+                }
+            }
+        }
+    }
+    shape
+}
+
+/// Audit emitted ADF graph code (`graph.h` text) for wiring legality:
+/// every declared PLIO port wired exactly once, every core's stream
+/// `in[0]`/`out[0]` wired at most once. Cascade wires (loop-emitted,
+/// index `base + i`) are inter-core accumulator links and exempt.
+///
+/// In the pipeline this runs on freshly generated output as a
+/// regression net behind the generator's own validation; it equally
+/// accepts hand-edited or stored graph text.
+pub fn check_graph_text(graph_h: &str, origin: &str) -> Report {
+    let mut r = Report::new();
+    let shape = scrape_graph(graph_h);
+
+    // PLIO ports: exactly one wire each.
+    for port in 0..shape.in_ports {
+        let pat = format!("(in[{port}].out[0],");
+        match graph_h.matches(&pat).count() {
+            0 => r.push(
+                Diagnostic::new(
+                    RuleId::GraphDanglingPort,
+                    Location::at(origin, format!("in[{port}]")),
+                    "declared input PLIO is never wired to a core".to_string(),
+                )
+                .hint("drop the port from the DAC plios count or wire it"),
+            ),
+            1 => {}
+            n => r.push(
+                Diagnostic::new(
+                    RuleId::GraphDoubleWire,
+                    Location::at(origin, format!("in[{port}]")),
+                    format!("input PLIO is wired {n} times; ADF allows one"),
+                ),
+            ),
+        }
+    }
+    for port in 0..shape.out_ports {
+        let pat = format!(" out[{port}].in[0]);");
+        match graph_h.matches(&pat).count() {
+            0 => r.push(
+                Diagnostic::new(
+                    RuleId::GraphDanglingPort,
+                    Location::at(origin, format!("out[{port}]")),
+                    "declared output PLIO is never fed by a core".to_string(),
+                )
+                .hint("drop the port from the DCC plios count or wire it"),
+            ),
+            1 => {}
+            n => r.push(
+                Diagnostic::new(
+                    RuleId::GraphDoubleWire,
+                    Location::at(origin, format!("out[{port}]")),
+                    format!("output PLIO is fed {n} times; ADF allows one"),
+                ),
+            ),
+        }
+    }
+
+    // Core stream ports: at most one wire each (interior cores are fed
+    // over cascade wires instead and legitimately have zero).
+    for (pi, &cores) in shape.kernels.iter().enumerate() {
+        for core in 0..cores {
+            let feed = format!("k{pi}[{core}].in[0])");
+            let n = graph_h.matches(&feed).count();
+            if n > 1 {
+                r.push(Diagnostic::new(
+                    RuleId::GraphDoubleWire,
+                    Location::at(origin, format!("k{pi}[{core}].in[0]")),
+                    format!("core stream input is fed {n} times; ADF allows one"),
+                ));
+            }
+            let drain = format!("connect<stream>(k{pi}[{core}].out[0]");
+            let n = graph_h.matches(&drain).count();
+            if n > 1 {
+                r.push(Diagnostic::new(
+                    RuleId::GraphDoubleWire,
+                    Location::at(origin, format!("k{pi}[{core}].out[0]")),
+                    format!("core stream output is drained {n} times; ADF allows one"),
+                ));
+            }
+        }
+    }
+
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::designs;
+
+    #[test]
+    fn catalogue_designs_are_clean() {
+        for d in designs::catalogue() {
+            let r = check_design(&d);
+            assert!(
+                r.is_empty(),
+                "design {} should be DRC-clean:\n{:?}",
+                d.name(),
+                r.sorted()
+            );
+        }
+    }
+
+    #[test]
+    fn generated_catalogue_graphs_audit_clean() {
+        for d in designs::catalogue() {
+            let proj = generator::generate(d.config()).unwrap();
+            let r = check_graph_text(&proj.graph_h, d.name());
+            assert!(r.is_empty(), "{}: {:?}", d.name(), r.sorted());
+        }
+    }
+
+    #[test]
+    fn over_budget_copies_trip_array_budget() {
+        let mut cfg = designs::mm().config().clone();
+        cfg.copies = 7; // 7 x 64 = 448 > 400
+        let r = check_config(&cfg, None, "mm7");
+        assert!(r.has(RuleId::ArrayBudget), "{:?}", r.sorted());
+        assert!(!r.has(RuleId::PlioBudget));
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn fragmentation_trips_unplaceable_only() {
+        // 12-core PUs (1.5 columns) consume a 2-column span each; 33
+        // copies = 396 cores fit the raw budget but only 25 place.
+        let cfg = PuConfig::from_json_text(
+            r#"{
+            "name": "frag", "kernel": "mm32", "class": "f32mac", "copies": 33,
+            "psts": [{
+                "dacs": [{"modes": ["SWH"], "plios": 1, "serves": 12}],
+                "cc": "Parallel<4>*Cascade<3>",
+                "dccs": [{"mode": "SWH", "plios": 1, "serves": 12}]
+            }],
+            "ops_per_iter": 786432, "in_bytes": 1024, "out_bytes": 1024
+        }"#,
+        )
+        .unwrap();
+        let r = check_config(&cfg, None, "frag");
+        assert!(r.has(RuleId::UnplaceablePu), "{:?}", r.sorted());
+        assert!(!r.has(RuleId::ArrayBudget));
+        let diag = r.iter().find(|d| d.rule == RuleId::UnplaceablePu).unwrap();
+        assert_eq!(diag.location.detail.as_deref(), Some("copy#26"));
+    }
+}

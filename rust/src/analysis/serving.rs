@@ -1,0 +1,244 @@
+//! Serving-layer lints: cluster shapes and placement maps that are
+//! legal to construct but can never serve well — stranded artifacts,
+//! zero-capacity dimensions, batches that outgrow the queue, and
+//! declared arrival rates the predicted service capacity cannot match.
+
+use crate::api::Design;
+use crate::coordinator::ServerConfig;
+use crate::sim::params::HwParams;
+
+use super::{Diagnostic, Location, Report, RuleId};
+
+/// The serving shape the lints reason about: the cluster dimensions of
+/// `DeployOptions`/`ClusterConfig` plus an optional declared open-loop
+/// arrival rate (`--rate`, jobs/s; 0 = closed-loop, no rate lint).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeShape {
+    pub shards: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    pub rate: f64,
+}
+
+impl Default for ServeShape {
+    /// One shard with the stock per-shard tuning, closed loop.
+    fn default() -> Self {
+        let sc = ServerConfig::default();
+        ServeShape {
+            shards: 1,
+            workers: sc.n_workers,
+            max_batch: sc.max_batch,
+            queue_cap: sc.queue_cap,
+            rate: 0.0,
+        }
+    }
+}
+
+impl ServeShape {
+    /// Deterministic subject label for lint reports and goldens.
+    pub fn label(&self) -> String {
+        let rate = if self.rate > 0.0 {
+            format!("{}/s", self.rate)
+        } else {
+            "closed".to_string()
+        };
+        format!(
+            "serving(shards={}, workers={}, batch={}, queue={}, rate={rate})",
+            self.shards, self.workers, self.max_batch, self.queue_cap
+        )
+    }
+}
+
+/// Lint a serving shape against the designs it would carry.
+pub fn check_serving(designs: &[Design], shape: &ServeShape, origin: &str) -> Report {
+    let mut r = Report::new();
+
+    // DRC-105: a zero dimension means the cluster can serve nothing
+    // (or `Router::start` fails outright).
+    for (dim, value) in [
+        ("shards", shape.shards),
+        ("workers", shape.workers),
+        ("max_batch", shape.max_batch),
+        ("queue_cap", shape.queue_cap),
+    ] {
+        if value == 0 {
+            r.push(
+                Diagnostic::new(
+                    RuleId::ZeroCapacity,
+                    Location::at(origin, dim),
+                    format!("{dim} is 0; the cluster cannot serve"),
+                )
+                .hint("every serving dimension must be >= 1"),
+            );
+        }
+    }
+    let dims_ok = shape.shards > 0
+        && shape.workers > 0
+        && shape.max_batch > 0
+        && shape.queue_cap > 0;
+
+    // DRC-104: the dispatcher can never coalesce a full batch if the
+    // admission queue cannot even hold one.
+    if shape.max_batch > shape.queue_cap && shape.queue_cap > 0 {
+        r.push(
+            Diagnostic::new(
+                RuleId::BatchExceedsQueue,
+                Location::new(origin),
+                format!(
+                    "max_batch {} exceeds queue_cap {}; full batches can never form",
+                    shape.max_batch, shape.queue_cap
+                ),
+            )
+            .hint("raise queue_cap or lower max_batch"),
+        );
+    }
+
+    // DRC-106: declared open-loop rate vs predicted service capacity.
+    // Capacity = shards x workers x mean per-design batch throughput,
+    // straight off the cost model (no runtime needed). A rate above it
+    // guarantees the queue fills and jobs shed.
+    if shape.rate > 0.0 && dims_ok && !designs.is_empty() {
+        let p = HwParams::vck5000();
+        let mean_tput = designs
+            .iter()
+            .map(|d| {
+                let pred = d.predict_on(&p, shape.max_batch);
+                shape.max_batch as f64 / pred.latency_secs.max(1e-12)
+            })
+            .sum::<f64>()
+            / designs.len() as f64;
+        let capacity = (shape.shards * shape.workers) as f64 * mean_tput;
+        if shape.rate > capacity {
+            let fill_secs =
+                (shape.shards * shape.queue_cap) as f64 / (shape.rate - capacity);
+            r.push(
+                Diagnostic::new(
+                    RuleId::RateOverload,
+                    Location::new(origin),
+                    format!(
+                        "declared rate {:.0} jobs/s exceeds predicted capacity \
+                         {capacity:.0} jobs/s; queues fill in ~{:.1} ms and \
+                         arrivals shed",
+                        shape.rate,
+                        fill_secs * 1e3
+                    ),
+                )
+                .hint("add shards/workers, raise max_batch, or lower the rate"),
+            );
+        }
+    }
+
+    r
+}
+
+/// Lint a placement map (`placement[shard] = artifacts served there`)
+/// against the artifact set a deployment carries.
+pub fn check_placement(
+    artifacts: &[String],
+    placement: &[Vec<String>],
+    origin: &str,
+) -> Report {
+    let mut r = Report::new();
+
+    // DRC-101: an artifact on no shard is undeployable — every submit
+    // for it is rejected even though the deployment "carries" it.
+    for a in artifacts {
+        if !placement.iter().any(|shard| shard.contains(a)) {
+            r.push(
+                Diagnostic::new(
+                    RuleId::PlacementStranded,
+                    Location::new(origin),
+                    format!("artifact {a:?} is on no shard's placement map"),
+                )
+                .hint("place the artifact on at least one shard or drop its design"),
+            );
+        }
+    }
+
+    for (si, shard) in placement.iter().enumerate() {
+        // DRC-102: a shard that serves nothing still burns workers.
+        if shard.is_empty() {
+            r.push(
+                Diagnostic::new(
+                    RuleId::PlacementEmptyShard,
+                    Location::at(origin, format!("shard#{si}")),
+                    "shard placement map is empty; its workers serve nothing"
+                        .to_string(),
+                )
+                .hint("place at least one artifact on the shard or drop it"),
+            );
+        }
+        // DRC-103: a placed name outside the deploy set is dead config.
+        for name in shard {
+            if !artifacts.iter().any(|a| a == name) {
+                r.push(
+                    Diagnostic::new(
+                        RuleId::PlacementUnknownArtifact,
+                        Location::at(origin, format!("shard#{si}")),
+                        format!("placement names {name:?}, which the deployment does not carry"),
+                    )
+                    .hint("placement maps may only name deployed artifacts"),
+                );
+            }
+        }
+    }
+
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::designs;
+
+    #[test]
+    fn default_shape_is_clean() {
+        let r = check_serving(&designs::catalogue(), &ServeShape::default(), "serve");
+        assert!(r.is_empty(), "{:?}", r.sorted());
+    }
+
+    #[test]
+    fn zero_workers_is_an_error() {
+        let shape = ServeShape { workers: 0, ..ServeShape::default() };
+        let r = check_serving(&designs::catalogue(), &shape, "serve");
+        assert!(r.has(RuleId::ZeroCapacity));
+        assert!(r.has_errors());
+    }
+
+    #[test]
+    fn absurd_rate_warns_with_fill_time() {
+        let shape = ServeShape { rate: 1e9, ..ServeShape::default() };
+        let r = check_serving(&designs::catalogue(), &shape, "serve");
+        assert!(r.has(RuleId::RateOverload), "{:?}", r.sorted());
+        assert!(!r.has_errors(), "rate overload is a warning");
+        let d = r.iter().find(|d| d.rule == RuleId::RateOverload).unwrap();
+        assert!(d.message.contains("ms"), "{}", d.message);
+    }
+
+    #[test]
+    fn placement_lints_fire() {
+        let arts = vec!["mm_pu128".to_string(), "fft1024".to_string()];
+        let placement = vec![
+            vec!["mm_pu128".to_string(), "ghost".to_string()],
+            Vec::new(),
+        ];
+        let r = check_placement(&arts, &placement, "deployment");
+        assert!(r.has(RuleId::PlacementStranded)); // fft1024 nowhere
+        assert!(r.has(RuleId::PlacementEmptyShard)); // shard#1
+        assert!(r.has(RuleId::PlacementUnknownArtifact)); // ghost
+    }
+
+    #[test]
+    fn label_is_deterministic() {
+        assert_eq!(
+            ServeShape::default().label(),
+            "serving(shards=1, workers=4, batch=8, queue=256, rate=closed)"
+        );
+        let open = ServeShape { rate: 2000.0, ..ServeShape::default() };
+        assert_eq!(
+            open.label(),
+            "serving(shards=1, workers=4, batch=8, queue=256, rate=2000/s)"
+        );
+    }
+}

@@ -93,6 +93,26 @@ impl Deployment {
             },
         };
         let placement = vec![artifacts.clone(); opts.shards];
+
+        // Static design-rule check before any thread spawns: every
+        // design's rule set plus the serving-shape and placement lints.
+        // Errors fail the deployment with the diagnostic text; warnings
+        // print and deployment proceeds.
+        let mut report = crate::analysis::Report::new();
+        for d in designs {
+            report.merge(d.check());
+        }
+        let shape = crate::analysis::ServeShape {
+            shards: opts.shards,
+            workers: opts.workers,
+            max_batch: opts.max_batch,
+            queue_cap: opts.queue_cap,
+            rate: 0.0,
+        };
+        report.merge(crate::analysis::check_serving(designs, &shape, "deployment"));
+        report.merge(crate::analysis::check_placement(&artifacts, &placement, "deployment"));
+        report.gate("deployment")?;
+
         let router = Router::start_with_placement(
             opts.backend,
             cluster,

@@ -196,9 +196,25 @@ impl Design {
 
     // -- pipeline stages ---------------------------------------------------
 
+    /// Run the static design-rule checker over this design: budgets,
+    /// placeability, port arithmetic, kernel compatibility, cost-model
+    /// smells, and a wiring audit of the emitted graph — every violated
+    /// rule as a structured [`crate::analysis::Diagnostic`], no runtime
+    /// touched. [`Design::generate`] and [`Design::deploy`] gate on
+    /// this report (errors fail, warnings print); call it directly for
+    /// the findings themselves, e.g. to prune a design search.
+    pub fn check(&self) -> crate::analysis::Report {
+        crate::analysis::check_design(self)
+    }
+
     /// Run the AIE Graph Code Generator: the compilable graph project
-    /// plus the `pu_config.json` topology handoff.
+    /// plus the `pu_config.json` topology handoff. Gated on
+    /// [`Design::check`]: Error-severity findings fail with the
+    /// diagnostic text, warnings print to stderr and generation
+    /// proceeds.
     pub fn generate(&self) -> Result<GeneratedProject> {
+        self.check()
+            .gate(&format!("design {:?}", self.config.name))?;
         generator::generate(&self.config)
     }
 

@@ -13,7 +13,8 @@
 //!   frontend of the same object) over the computing
 //!   engine ([`engine::compute`]), data engine ([`engine::data`]),
 //!   controller/scheduler ([`coordinator`]), the AIE Graph code generator
-//!   ([`codegen`]), the four accelerators ([`apps`]) and the SOTA
+//!   ([`codegen`]), the static design-rule checker ([`analysis`], the
+//!   `lint` subcommand), the four accelerators ([`apps`]) and the SOTA
 //!   baselines ([`baselines`]) — running over a calibrated VCK5000
 //!   simulator ([`sim`]) with real numerics executed through a pluggable
 //!   [`runtime::Backend`]: the pure-Rust interpreter (default, hermetic),
@@ -27,6 +28,7 @@
 //! tier-1 tests and regenerate the paper tables; README.md covers
 //! building with and without the `pjrt` feature.
 
+pub mod analysis;
 pub mod api;
 pub mod apps;
 pub mod baselines;

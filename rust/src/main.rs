@@ -12,6 +12,7 @@
 //!   exec      — route real task data through the runtime (numerics)
 //!   serve     — leader/worker request serving over per-worker runtimes
 //!   generate  — run the AIE Graph Code Generator on a config file
+//!   lint      — static design-rule checker over configs/designs
 //!   resources — print the Table 5 resource-utilisation table
 //!   info      — backend platform + artifact inventory
 //!
@@ -56,7 +57,7 @@ fn main() {
 }
 
 fn usage() -> String {
-    "ea4rca <run|exec|serve|generate|resources|info> [options]\n\
+    "ea4rca <run|exec|serve|generate|lint|resources|info> [options]\n\
      \n\
      ea4rca run --app mm --size 768 --pus 6 [--trace] [--backend interp|sim|pjrt]\n\
      ea4rca run --app filter2d --height 3480 --width 2160 --pus 44\n\
@@ -71,6 +72,9 @@ fn usage() -> String {
      ea4rca sweep --table 6|7|8|9            (regenerate a paper table)\n\
      ea4rca generate --config configs/mm.json --out generated/mm\n\
      ea4rca fuse --configs configs/fft.json,configs/mm_small.json --out generated/fused\n\
+     ea4rca lint --all                       (design-rule check configs/, the catalogue, the serving shape)\n\
+     ea4rca lint --config configs/mm.json\n\
+     ea4rca lint --app mm                    (also: filter2d | fft | mmt)\n\
      ea4rca resources\n\
      ea4rca info\n\
      \n\
@@ -108,6 +112,7 @@ fn real_main() -> Result<()> {
         "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "generate" => cmd_generate(rest),
+        "lint" => cmd_lint(rest),
         "fuse" => cmd_fuse(rest),
         "resources" => cmd_resources(),
         "info" => cmd_info(),
@@ -482,6 +487,62 @@ fn cmd_generate(args: &[String]) -> Result<()> {
             design.total_plios(),
             design.copies()
         );
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &[String]) -> Result<()> {
+    use ea4rca::analysis::{lint_all, lint_design, lint_path, Lint, ServeShape};
+    let cli = Cli::new("ea4rca lint", "static design-rule checker (DRC)")
+        .opt("config", "", "lint one graph configuration file")
+        .opt("app", "", "lint one catalogue design: mm | filter2d | fft | mmt")
+        .opt("size", "1024", "FFT points for --app fft")
+        .opt("configs-dir", "configs", "config directory swept by --all")
+        .opt("shards", "1", "serving shape checked by --all: array shards")
+        .opt("workers", "4", "serving shape: worker threads per shard")
+        .opt("batch", "8", "serving shape: max micro-batch size")
+        .opt("queue-cap", "256", "serving shape: admission queue capacity")
+        .opt("rate", "0", "declared open-loop arrival rate in jobs/s (0 = closed loop)")
+        .flag("all", "lint every configs/*.json, the design catalogue, and the serving shape")
+        .parse(args)?;
+    let shape = ServeShape {
+        shards: cli.get_usize("shards")?,
+        workers: cli.get_usize("workers")?,
+        max_batch: cli.get_usize("batch")?,
+        queue_cap: cli.get_usize("queue-cap")?,
+        rate: cli.get_f64("rate")?,
+    };
+    let config = cli.get("config")?;
+    let app = cli.get("app")?;
+    let lint = if cli.has("all") {
+        lint_all(std::path::Path::new(&cli.get("configs-dir")?), &shape)
+    } else if !config.is_empty() {
+        let path = std::path::PathBuf::from(&config);
+        let origin = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .unwrap_or("<config>")
+            .to_string();
+        let mut lint = Lint::default();
+        lint.push(origin, lint_path(&path));
+        lint
+    } else if !app.is_empty() {
+        let design = designs::for_app(&app, cli.get_usize("size")?)?;
+        let mut lint = Lint::default();
+        lint.push(format!("design({})", design.name()), lint_design(&design));
+        lint
+    } else {
+        return Err(CliError {
+            msg: format!("lint needs --config <file>, --app <name>, or --all\n\n{}", usage()),
+            help: false,
+        }
+        .into());
+    };
+    print!("{}", lint.render());
+    if lint.has_errors() {
+        // findings already printed in full; exit 1 without main()'s
+        // "error:" wrapper repeating them
+        std::process::exit(1);
     }
     Ok(())
 }

@@ -1,0 +1,352 @@
+//! Integration tests for the static design-rule checker (DRC): one
+//! negative fixture per rule in the registry (asserted by `RuleId`),
+//! the errors-fail / warnings-pass gate semantics on
+//! `Design::generate()` / `Design::deploy()`, and a golden test
+//! pinning `lint --all`'s rendered output byte-stable over the shipped
+//! configs, the design catalogue, and the default serving shape.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use ea4rca::analysis::{
+    check_config, check_graph_text, check_placement, check_serving, lint_all,
+    lint_config_text, Report, RuleId, ServeShape, Severity,
+};
+use ea4rca::api::designs;
+use ea4rca::codegen::config::PuConfig;
+use ea4rca::{DeployOptions, Design};
+
+// --- config fixtures, one per design rule ------------------------------
+
+/// DRC-001: the paper's MM PU at 7 copies — 7 x 64 = 448 cores > 400.
+const MM7: &str = r#"{
+    "name": "mm7", "kernel": "mm32", "class": "f32mac", "copies": 7,
+    "psts": [{
+        "dacs": [{"modes": ["SWH", "BDC"], "plios": 8, "serves": 64}],
+        "cc": "Parallel<16>*Cascade<4>",
+        "dccs": [{"mode": "SWH", "plios": 4, "serves": 64}]
+    }],
+    "ops_per_iter": 4194304, "in_bytes": 131072, "out_bytes": 65536
+}"#;
+
+/// DRC-002: 128 PLIOs per copy x 2 copies = 256 ports > 156, while the
+/// 128 cores stay well inside the 400-core budget.
+const WIDE: &str = r#"{
+    "name": "wide", "kernel": "mm32", "class": "f32mac", "copies": 2,
+    "psts": [{
+        "dacs": [{"modes": ["SWH"], "plios": 64, "serves": 64}],
+        "cc": "Parallel<64>*Single",
+        "dccs": [{"mode": "SWH", "plios": 64, "serves": 64}]
+    }],
+    "ops_per_iter": 4194304, "in_bytes": 131072, "out_bytes": 65536
+}"#;
+
+/// DRC-003: 12-core PUs (1.5 columns) consume a 2-column span each; 33
+/// copies = 396 cores fit the raw budget but only 25 place.
+const FRAG: &str = r#"{
+    "name": "frag", "kernel": "mm32", "class": "f32mac", "copies": 33,
+    "psts": [{
+        "dacs": [{"modes": ["SWH"], "plios": 1, "serves": 12}],
+        "cc": "Parallel<4>*Cascade<3>",
+        "dccs": [{"mode": "SWH", "plios": 1, "serves": 12}]
+    }],
+    "ops_per_iter": 786432, "in_bytes": 1024, "out_bytes": 1024
+}"#;
+
+/// DRC-004 (warning): a 16-deep cascade chain on an 8-row array.
+const DEEP: &str = r#"{
+    "name": "deep", "kernel": "mm32", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["DIR"], "plios": 1, "serves": 1}],
+        "cc": "Cascade<16>",
+        "dccs": [{"mode": "DIR", "plios": 1, "serves": 1}]
+    }],
+    "ops_per_iter": 524288, "in_bytes": 0, "out_bytes": 0
+}"#;
+
+/// DRC-005 (+ DRC-012: the generator refuses the same arithmetic): a
+/// DAC with more PLIO wires than leader cores to land them on.
+const FAT: &str = r#"{
+    "name": "fat", "kernel": "mm32", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["SWH"], "plios": 4, "serves": 2}],
+        "cc": "Cascade<2>",
+        "dccs": [{"mode": "SWH", "plios": 1, "serves": 2}]
+    }],
+    "ops_per_iter": 524288, "in_bytes": 1024, "out_bytes": 1024
+}"#;
+
+/// DRC-006 (+ DRC-012): two DACs whose serve slices sum to 8 on a
+/// 4-core CC.
+const OVER: &str = r#"{
+    "name": "over", "kernel": "mm32", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["SWH"], "plios": 2, "serves": 4},
+                 {"modes": ["BDC"], "plios": 2, "serves": 4}],
+        "cc": "Parallel<4>*Single",
+        "dccs": [{"mode": "SWH", "plios": 1, "serves": 4}]
+    }],
+    "ops_per_iter": 524288, "in_bytes": 1024, "out_bytes": 1024
+}"#;
+
+/// DRC-007: a kernel name the Kernel Manager has never heard of.
+const MYSTERY: &str = r#"{
+    "name": "mystery", "kernel": "nope", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["DIR"], "plios": 1, "serves": 1}],
+        "cc": "Cascade<8>",
+        "dccs": [{"mode": "DIR", "plios": 1, "serves": 1}]
+    }],
+    "ops_per_iter": 524288, "in_bytes": 0, "out_bytes": 0
+}"#;
+
+/// DRC-008: the filter2d kernel (i32mac) under an f32mac PU class.
+const MISMATCH: &str = r#"{
+    "name": "mismatch", "kernel": "filter2d", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["SWH"], "plios": 1, "serves": 8}],
+        "cc": "Parallel<8>*Single",
+        "dccs": [{"mode": "SWH", "plios": 1, "serves": 8}]
+    }],
+    "ops_per_iter": 409600, "in_bytes": 10368, "out_bytes": 8192
+}"#;
+
+/// DRC-010 (warning): the MM PU pushed to a 512 KiB input tile — comm
+/// ~13.7 us per iteration against ~4.2 us of compute.
+const CHATTY: &str = r#"{
+    "name": "chatty", "kernel": "mm32", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["SWH", "BDC"], "plios": 8, "serves": 64}],
+        "cc": "Parallel<16>*Cascade<4>",
+        "dccs": [{"mode": "SWH", "plios": 4, "serves": 64}]
+    }],
+    "ops_per_iter": 4194304, "in_bytes": 524288, "out_bytes": 65536
+}"#;
+
+/// DRC-011 (warning): a 16 MiB input tile double-buffered over 64
+/// cores needs ~514 KiB per core against 32 KiB of local memory; the
+/// inflated ops_per_iter keeps the design compute-bound so DRC-010
+/// stays quiet.
+const HOG: &str = r#"{
+    "name": "hog", "kernel": "mm32", "class": "f32mac", "copies": 1,
+    "psts": [{
+        "dacs": [{"modes": ["SWH", "BDC"], "plios": 8, "serves": 64}],
+        "cc": "Parallel<16>*Cascade<4>",
+        "dccs": [{"mode": "SWH", "plios": 4, "serves": 64}]
+    }],
+    "ops_per_iter": 1000000000, "in_bytes": 16777216, "out_bytes": 65536
+}"#;
+
+// --- graph-text fixtures (DRC-013/014) ---------------------------------
+
+/// DRC-013: in[0] wired to two cores (and k0[0].in fed twice).
+const DOUBLE_WIRE_GRAPH: &str = "\
+  input_plio  in[1];
+  output_plio out[1];
+  kernel k0[2];
+  connect<stream>(in[0].out[0], k0[0].in[0]);
+  connect<stream>(in[0].out[0], k0[1].in[0]);
+  connect<stream>(k0[1].out[0], out[0].in[0]);
+";
+
+/// DRC-014: in[1] is declared but never wired to any core.
+const DANGLING_GRAPH: &str = "\
+  input_plio  in[2];
+  output_plio out[1];
+  kernel k0[2];
+  connect<stream>(in[0].out[0], k0[0].in[0]);
+  connect<stream>(k0[1].out[0], out[0].in[0]);
+";
+
+fn cfg(json: &str) -> PuConfig {
+    PuConfig::from_json_text(json).expect("fixture configs parse")
+}
+
+fn mm_clean() -> PuConfig {
+    let text = std::fs::read_to_string("configs/mm.json").expect("shipped config");
+    cfg(&text)
+}
+
+/// Every rule in the registry paired with a report that must trip it.
+fn fixture_reports() -> Vec<(RuleId, Report)> {
+    let catalogue = designs::catalogue();
+    let zero_workers = ServeShape { workers: 0, ..ServeShape::default() };
+    let fat_batch = ServeShape { max_batch: 512, queue_cap: 256, ..ServeShape::default() };
+    let firehose = ServeShape { rate: 1e9, ..ServeShape::default() };
+    let arts = vec!["mm_pu128".to_string(), "fft1024".to_string()];
+    let placement = vec![vec!["mm_pu128".to_string(), "ghost".to_string()], Vec::new()];
+    vec![
+        (RuleId::ConfigInvalid, lint_config_text("{ not json", "broken.json")),
+        (RuleId::ArrayBudget, check_config(&cfg(MM7), None, "mm7")),
+        (RuleId::PlioBudget, check_config(&cfg(WIDE), None, "wide")),
+        (RuleId::UnplaceablePu, check_config(&cfg(FRAG), None, "frag")),
+        (RuleId::CascadeLongChain, check_config(&cfg(DEEP), None, "deep")),
+        (RuleId::PlioOversubscribed, check_config(&cfg(FAT), None, "fat")),
+        (RuleId::CoreSliceOverrun, check_config(&cfg(OVER), None, "over")),
+        (RuleId::KernelUnknown, check_config(&cfg(MYSTERY), None, "mystery")),
+        (RuleId::KernelClassMismatch, check_config(&cfg(MISMATCH), None, "mismatch")),
+        (RuleId::ArtifactNotBuiltin, check_config(&mm_clean(), Some("bogus"), "bogus")),
+        (RuleId::CommBound, check_config(&cfg(CHATTY), None, "chatty")),
+        (RuleId::CoreMemOverflow, check_config(&cfg(HOG), None, "hog")),
+        (RuleId::GraphEmitFailed, check_config(&cfg(FAT), None, "fat")),
+        (RuleId::GraphDoubleWire, check_graph_text(DOUBLE_WIRE_GRAPH, "double")),
+        (RuleId::GraphDanglingPort, check_graph_text(DANGLING_GRAPH, "dangling")),
+        (RuleId::PlacementStranded, check_placement(&arts, &placement, "deployment")),
+        (RuleId::PlacementEmptyShard, check_placement(&arts, &placement, "deployment")),
+        (RuleId::PlacementUnknownArtifact, check_placement(&arts, &placement, "deployment")),
+        (RuleId::BatchExceedsQueue, check_serving(&catalogue, &fat_batch, "shape")),
+        (RuleId::ZeroCapacity, check_serving(&catalogue, &zero_workers, "shape")),
+        (RuleId::RateOverload, check_serving(&catalogue, &firehose, "shape")),
+    ]
+}
+
+#[test]
+fn every_rule_has_a_negative_fixture() {
+    let fixtures = fixture_reports();
+    let mut covered: BTreeSet<&'static str> = BTreeSet::new();
+    for (rule, report) in &fixtures {
+        assert!(
+            report.has(*rule),
+            "fixture for {} did not trip it; findings: {:?}",
+            rule,
+            report.sorted()
+        );
+        covered.insert(rule.code());
+    }
+    let all: BTreeSet<&'static str> = RuleId::ALL.iter().map(|r| r.code()).collect();
+    assert_eq!(covered, all, "every registry rule needs a negative fixture");
+}
+
+// --- precision: fixtures trip their rule without collateral noise -----
+
+#[test]
+fn over_budget_trips_array_rule_without_plio_noise() {
+    let r = check_config(&cfg(MM7), None, "mm7");
+    assert!(r.has(RuleId::ArrayBudget));
+    assert!(!r.has(RuleId::PlioBudget), "{:?}", r.sorted());
+    // over-budget configs skip the placement dry-run (DRC-001 subsumes it)
+    assert!(!r.has(RuleId::UnplaceablePu), "{:?}", r.sorted());
+    assert!(r.has_errors());
+}
+
+#[test]
+fn plio_budget_trips_without_core_noise() {
+    let r = check_config(&cfg(WIDE), None, "wide");
+    assert!(r.has(RuleId::PlioBudget));
+    assert!(!r.has(RuleId::ArrayBudget), "{:?}", r.sorted());
+}
+
+#[test]
+fn comm_bound_and_mem_overflow_do_not_cross_fire() {
+    let chatty = check_config(&cfg(CHATTY), None, "chatty");
+    assert!(chatty.has(RuleId::CommBound), "{:?}", chatty.sorted());
+    assert!(!chatty.has(RuleId::CoreMemOverflow), "{:?}", chatty.sorted());
+    assert!(!chatty.has_errors(), "comm-bound is a warning");
+
+    let hog = check_config(&cfg(HOG), None, "hog");
+    assert!(hog.has(RuleId::CoreMemOverflow), "{:?}", hog.sorted());
+    assert!(!hog.has(RuleId::CommBound), "{:?}", hog.sorted());
+}
+
+#[test]
+fn unknown_artifact_is_info_only() {
+    let r = check_config(&mm_clean(), Some("bogus"), "bogus");
+    assert!(r.has(RuleId::ArtifactNotBuiltin));
+    assert!(!r.has_errors(), "{:?}", r.sorted());
+    assert_eq!(r.count(Severity::Info), 1);
+    assert_eq!(r.len(), 1, "the clean MM config gains exactly the artifact info");
+}
+
+#[test]
+fn dangling_port_points_at_the_unwired_port() {
+    let r = check_graph_text(DANGLING_GRAPH, "dangling");
+    assert_eq!(r.len(), 1, "{:?}", r.sorted());
+    let d = r.sorted()[0].clone();
+    assert_eq!(d.rule, RuleId::GraphDanglingPort);
+    assert_eq!(d.location.detail.as_deref(), Some("in[1]"));
+}
+
+#[test]
+fn port_arithmetic_fixtures_also_fail_the_generator() {
+    for (json, origin) in [(FAT, "fat"), (OVER, "over")] {
+        let r = check_config(&cfg(json), None, origin);
+        assert!(r.has(RuleId::GraphEmitFailed), "{origin}: {:?}", r.sorted());
+    }
+}
+
+// --- gate semantics: errors fail generate/deploy, warnings pass --------
+
+#[test]
+fn error_findings_fail_generate_and_deploy_with_the_rule_code() {
+    // over-budget designs construct fine (no budget check in the
+    // builder) — the DRC gate is what stops them
+    let d = Design::from_json_text(MM7).expect("constructs; the gate rejects later");
+    let err = format!("{:#}", d.generate().unwrap_err());
+    assert!(err.contains("fails the design-rule check"), "{err}");
+    assert!(err.contains("DRC-001"), "{err}");
+    assert!(err.contains("448"), "the diagnostic text carries the arithmetic: {err}");
+
+    let err = format!("{:#}", d.deploy(&DeployOptions::default()).unwrap_err());
+    assert!(err.contains("fails the design-rule check"), "{err}");
+    assert!(err.contains("DRC-001"), "{err}");
+}
+
+#[test]
+fn warning_findings_do_not_block_generate() {
+    let d = Design::from_json_text(DEEP).unwrap();
+    let r = d.check();
+    assert!(r.has(RuleId::CascadeLongChain), "{:?}", r.sorted());
+    assert!(!r.has_errors());
+    assert!(d.generate().is_ok(), "warnings print, generation proceeds");
+}
+
+#[test]
+fn catalogue_designs_pass_the_gate() {
+    for d in designs::catalogue() {
+        assert!(d.check().is_empty(), "design {} should be DRC-clean", d.name());
+        assert!(d.generate().is_ok(), "design {} should generate", d.name());
+    }
+}
+
+// --- the golden: lint --all over the shipped tree ----------------------
+
+#[test]
+fn lint_all_over_the_shipped_tree_is_clean_and_byte_stable() {
+    let lint = lint_all(Path::new("configs"), &ServeShape::default());
+    assert!(!lint.has_errors(), "{}", lint.render());
+    let expected = "\
+== fft.json
+   OK
+== filter2d.json
+   OK
+== mm.json
+   OK
+== mm_small.json
+   OK
+== mmt.json
+   OK
+== design(mm)
+   OK
+== design(filter2d)
+   OK
+== design(fft)
+   OK
+== design(mmt)
+   OK
+== serving(shards=1, workers=4, batch=8, queue=256, rate=closed)
+   OK
+lint: 10 subjects checked, 0 errors, 0 warnings, 0 infos
+";
+    assert_eq!(lint.render(), expected);
+}
+
+#[test]
+fn lint_findings_render_sorted_and_deterministic() {
+    let r = check_config(&cfg(FAT), None, "fat");
+    let lines: Vec<String> = r.sorted().iter().map(|d| d.grouped_line()).collect();
+    // rendering is a pure function of the findings: re-rendering the
+    // same report must be a fixed point
+    assert_eq!(lines, r.sorted().iter().map(|d| d.grouped_line()).collect::<Vec<_>>());
+    assert!(lines.iter().any(|l| l.starts_with("error[DRC-005]")), "{lines:?}");
+    assert!(lines.iter().any(|l| l.starts_with("error[DRC-012]")), "{lines:?}");
+}

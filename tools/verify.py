@@ -22,7 +22,12 @@ catches the mechanical breakage class that desk-checking misses:
   5. duplicate top-level item definitions in one module;
   6. `#[cfg(feature = "...")]` gates naming features Cargo.toml does
      not declare (clippy/rustc would reject unexpected cfgs);
-  7. leftover `todo!` / `unimplemented!` / `dbg!` in non-test code.
+  7. leftover `todo!` / `unimplemented!` / `dbg!` in non-test code;
+  8. `.unwrap()` / `.expect()` in non-test library code under
+     rust/src/coordinator/ and rust/src/api/ — a panic on the serving
+     path takes a worker thread (and every job queued behind it) down.
+     Vetted sites are enumerated in tools/unwrap_allowlist.txt as
+     `path:line-fragment` entries; stale entries are warnings.
 
 Exit status: 0 clean, 1 findings. `--warn-only` downgrades to 0.
 """
@@ -429,6 +434,84 @@ def check_cfg_features(stripped, path, feats):
     return errors
 
 
+# ------------------------------------------------------ unwrap policy
+
+
+UNWRAP_RE = re.compile(r"\.(unwrap|expect)\s*\(")
+# Modules where a panic unwinds a serving worker, not just a CLI run.
+UNWRAP_DIRS = ("rust/src/coordinator/", "rust/src/api/")
+UNWRAP_ALLOWLIST = os.path.join("tools", "unwrap_allowlist.txt")
+
+
+def load_unwrap_allowlist():
+    """Parse tools/unwrap_allowlist.txt: one `path:line-fragment` per
+    line, `#` comments. Returns [(path, fragment, raw_entry)]."""
+    entries = []
+    full = os.path.join(REPO, UNWRAP_ALLOWLIST)
+    if not os.path.exists(full):
+        return entries
+    for raw in open(full, encoding="utf-8"):
+        s = raw.strip()
+        if not s or s.startswith("#"):
+            continue
+        p, _, frag = s.partition(":")
+        if p and frag:
+            entries.append((p.strip(), frag.strip(), s))
+    return entries
+
+
+def blank_test_blocks(stripped):
+    """Blank the brace-matched block following every `#[cfg(test)]`
+    (newlines kept, so line numbers survive)."""
+    out = list(stripped)
+    for m in re.finditer(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]", stripped):
+        i = stripped.find("{", m.end())
+        if i == -1:
+            continue
+        depth, j = 0, i
+        while j < len(stripped):
+            if stripped[j] == "{":
+                depth += 1
+            elif stripped[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        for k in range(i, min(j + 1, len(stripped))):
+            if out[k] != "\n":
+                out[k] = " "
+    return "".join(out)
+
+
+def check_unwraps(stripped, src, rel, allowlist, used):
+    """`.unwrap()` / `.expect()` outside `#[cfg(test)]` blocks in the
+    serving-path modules. Detection runs on stripped text (comments and
+    string literals blanked); the allowlist fragment matches against the
+    original source line, so entries can quote the expect message."""
+    if not rel.startswith(UNWRAP_DIRS):
+        return []
+    errors = []
+    code = blank_test_blocks(stripped)
+    src_lines = src.splitlines()
+    for idx, line_text in enumerate(code.splitlines(), 1):
+        for m in UNWRAP_RE.finditer(line_text):
+            original = src_lines[idx - 1] if idx <= len(src_lines) else line_text
+            hit = None
+            for p, frag, raw in allowlist:
+                if p == rel and frag in original:
+                    hit = raw
+                    break
+            if hit:
+                used.add(hit)
+            else:
+                errors.append(
+                    "%s:%d: .%s() in non-test library code — return a "
+                    "Result, or vet the site into %s"
+                    % (rel, idx, m.group(1), UNWRAP_ALLOWLIST)
+                )
+    return errors
+
+
 def check_leftovers(stripped, path):
     warnings = []
     if "/tests/" in path or path.endswith("tests.rs"):
@@ -477,6 +560,8 @@ def main():
         errors += orphan_files(vroot, vreach)
 
     root_names = crate_root_names(crate_root)
+    allowlist = load_unwrap_allowlist()
+    allow_used = set()
 
     for path in rust_files():
         rel = os.path.relpath(path, REPO)
@@ -486,12 +571,20 @@ def main():
         errors += check_balance(stripped, rel)
         errors += check_duplicates(stripped, rel)
         errors += check_cfg_features(stripped, rel, feats)
+        errors += check_unwraps(stripped, src, rel, allowlist, allow_used)
         warnings += check_leftovers(stripped, rel)
         if rel.startswith(("rust/tests", "benches", "examples")):
             # Integration targets import through the crate's public API.
             pass
         elif rel.startswith("rust/src"):
             errors += check_use_paths(stripped, rel, root_names)
+
+    for _, _, raw in allowlist:
+        if raw not in allow_used:
+            warnings.append(
+                "%s: stale entry `%s` (no matching site)"
+                % (UNWRAP_ALLOWLIST, raw)
+            )
 
     for w in warnings:
         print("warning: %s" % w)
