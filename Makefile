@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test verify static-gate lint bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke artifacts pytest probe
+.PHONY: build test verify static-gate lint bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke tier-test tier-bench artifacts pytest probe
 
 build:
 	cargo build --release
@@ -21,6 +21,7 @@ verify: static-gate
 	cargo test --doc
 	cargo run --release -- lint --all
 	cargo test --release --test stress_server --test cluster_server
+	$(MAKE) tier-test
 
 # Static design-rule checker (DRC) over every configs/*.json, the
 # design catalogue, and the default serving shape. Exit 1 on any
@@ -41,6 +42,7 @@ bench-baseline:
 	cargo bench --bench serve_throughput
 	cargo bench --bench prepared_cache
 	cargo bench --bench cost_model
+	cargo bench --bench kernel_tiers
 
 # full serving stress suite (500-job mixed streams, seeds 1-5)
 stress:
@@ -66,6 +68,18 @@ sim-serve:
 # survey the AIE cost model's predictions (and check determinism)
 cost-bench:
 	cargo bench --bench cost_model
+
+# kernel-tier parity suite, twice: once under the environment's tier
+# (simd where the CPU has AVX2+FMA) and once with the scalar tier
+# forced — the runtime-fallback drill every SIMD change must survive
+tier-test:
+	cargo test --release --test kernel_tiers
+	EA4RCA_KERNEL_TIER=scalar cargo test --release --test kernel_tiers
+
+# scalar vs simd vs simd+pool micro-batch throughput per hot kernel,
+# plus the >=4x batched-f32-matmul acceptance line (BENCH_kernel_tiers)
+tier-bench:
+	cargo bench --bench kernel_tiers
 
 # the design-entry facade end to end: config round-trips, builder/JSON/
 # apps parity, predict-without-a-runtime, and Design::deploy smoke on

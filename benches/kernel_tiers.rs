@@ -1,0 +1,164 @@
+//! §Perf — kernel dispatch tiers: scalar vs SIMD vs SIMD+pool.
+//!
+//! ISSUE #9's acceptance bench. For every hot interp kernel at its
+//! paper shape, measure micro-batch throughput under three
+//! configurations of the same backend:
+//!
+//! * **scalar**   — `TierConfig::scalar()`: portable reference kernels,
+//!   no worker pool (the pre-tier baseline);
+//! * **simd**     — the detected kernel tier, pool disabled: isolates
+//!   the AVX2/FMA micro-kernel win;
+//! * **simd+pool** — detected tier plus a worker pool as wide as the
+//!   machine: the full batch path `serve` runs.
+//!
+//! On a CPU without AVX2+FMA the "simd" rows honestly degrade to the
+//! scalar tier (the config resolves to scalar and the table says so) —
+//! the comparison is still emitted, which is the point: the committed
+//! `BENCH_kernel_tiers.json` always records what this machine can do,
+//! never silently skips.
+//!
+//! Acceptance line: batched f32 matmul (mm_pu128) at least 4x scalar
+//! under simd+pool. A one-core machine cannot pass the pool leg and a
+//! non-AVX2 machine cannot pass the SIMD leg; the MISS is printed, not
+//! hidden.
+//!
+//! Run: `cargo bench --bench kernel_tiers` (or `make tier-bench`)
+
+use std::time::Instant;
+
+use ea4rca::runtime::backend::interp::InterpBackend;
+use ea4rca::runtime::backend::Backend;
+use ea4rca::runtime::tensor::DType;
+use ea4rca::runtime::{KernelTier, Manifest, Tensor, TierConfig};
+use ea4rca::util::bench::BenchRecorder;
+use ea4rca::util::rng::Rng;
+use ea4rca::util::stats::summarize;
+use ea4rca::util::table::{fmt_f, Table};
+
+/// Dispatches per measurement (each dispatch is one `execute_batch`).
+const ITERS: usize = 12;
+/// Jobs per micro-batch — comfortably past MIN_PARALLEL_JOBS so the
+/// pool leg actually engages.
+const BATCH: usize = 16;
+
+struct Leg {
+    label: &'static str,
+    cfg: TierConfig,
+}
+
+fn legs() -> Vec<Leg> {
+    let detected = TierConfig::detect();
+    vec![
+        Leg { label: "scalar", cfg: TierConfig::scalar() },
+        Leg { label: "simd", cfg: TierConfig { tier: detected.tier, pool_threads: 1 } },
+        Leg { label: "simd+pool", cfg: detected },
+    ]
+}
+
+fn gen_jobs(meta: &ea4rca::runtime::manifest::ArtifactMeta, rng: &mut Rng) -> Vec<Vec<Tensor>> {
+    (0..BATCH)
+        .map(|_| {
+            meta.inputs
+                .iter()
+                .map(|tm| match tm.dtype {
+                    DType::F32 => Tensor::f32(&tm.shape, rng.normal_vec(tm.elements())),
+                    DType::I32 => {
+                        Tensor::i32(&tm.shape, rng.int_vec_i32(tm.elements(), -128, 127))
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Mean seconds per dispatch of `jobs` on `backend` (one warm-up
+/// dispatch first, so prepare cost never rides a sample).
+fn time_dispatch(
+    backend: &InterpBackend,
+    meta: &ea4rca::runtime::manifest::ArtifactMeta,
+    jobs: &[Vec<Tensor>],
+) -> f64 {
+    backend.execute_batch(meta, jobs).expect("warmup dispatch");
+    let samples: Vec<f64> = (0..ITERS)
+        .map(|_| {
+            let t0 = Instant::now();
+            backend.execute_batch(meta, jobs).expect("dispatch");
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    summarize(&samples).mean
+}
+
+fn main() {
+    let manifest = Manifest::builtin("artifacts");
+    let mut rng = Rng::new(59);
+    let mut rec = BenchRecorder::new("kernel_tiers");
+    let detected = TierConfig::detect();
+    rec.note("iters", ITERS)
+        .note("batch_jobs", BATCH)
+        .note("detected_tier", detected.tier)
+        .note("pool_threads", detected.pool_threads)
+        .note(
+            "workload",
+            "per-kernel micro-batch throughput: scalar vs simd vs simd+pool (interp)",
+        );
+
+    let mut t = Table::new(
+        "kernel dispatch tiers: micro-batch throughput (interp)",
+        &["artifact", "scalar j/s", "simd j/s", "simd+pool j/s", "simd x", "pool x"],
+    );
+
+    // the hot kernels at their paper shapes (Tables 6-8 workloads)
+    let artifacts =
+        ["mm32", "mm_pu128", "mmt_cascade8", "mm32_i8", "filter2d_pu8", "fft1024", "fft4096"];
+    let mut mm_pu128_speedup = 0.0;
+    for name in artifacts {
+        let meta = manifest.get(name).expect("builtin artifact");
+        let jobs = gen_jobs(meta, &mut rng);
+        let mut jps = Vec::new();
+        for leg in legs() {
+            let backend = InterpBackend::with_tiers(leg.cfg);
+            let secs = time_dispatch(&backend, meta, &jobs);
+            let rate = BATCH as f64 / secs;
+            jps.push(rate);
+            rec.metric(&format!("{name}.{}.jobs_per_sec", leg.label), rate, "jobs/s");
+        }
+        let simd_x = jps[1] / jps[0];
+        let pool_x = jps[2] / jps[0];
+        if name == "mm_pu128" {
+            mm_pu128_speedup = pool_x;
+        }
+        rec.metric(&format!("{name}.simd_speedup"), simd_x, "x")
+            .metric(&format!("{name}.pool_speedup"), pool_x, "x");
+        t.row(&[
+            name.to_string(),
+            fmt_f(jps[0], 1),
+            fmt_f(jps[1], 1),
+            fmt_f(jps[2], 1),
+            format!("{simd_x:.2}x"),
+            format!("{pool_x:.2}x"),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "detected tier: {} (pool={} threads); simd column runs the {} tier",
+        detected.tier,
+        detected.pool_threads,
+        if KernelTier::simd_supported() { "AVX2/FMA" } else { "scalar-fallback" },
+    );
+    // the acceptance comparison is emitted on every machine: a one-core
+    // or non-AVX2 box prints its MISS instead of skipping the line
+    println!(
+        "acceptance (mm_pu128 batched f32 matmul, simd+pool >= 4x scalar): {} ({:.2}x)",
+        if mm_pu128_speedup >= 4.0 { "PASS" } else { "MISS" },
+        mm_pu128_speedup
+    );
+    rec.metric("acceptance.mm_pu128_speedup", mm_pu128_speedup, "x")
+        .metric(
+            "acceptance.pass",
+            if mm_pu128_speedup >= 4.0 { 1.0 } else { 0.0 },
+            "bool",
+        );
+    rec.write();
+}

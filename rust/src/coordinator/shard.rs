@@ -274,6 +274,10 @@ pub struct ArtifactServeStats {
     pub predicted_energy_j: f64,
     /// Batches that carried a cost-model prediction.
     pub predicted_batches: u64,
+    /// The kernel tier that served this lane (from the worker runtime's
+    /// prepared-artifact cache; `None` on tier-less substrates). Makes
+    /// a debug-mode or non-AVX2 serving run self-describing.
+    pub tier: Option<crate::runtime::tier::KernelTier>,
 }
 
 impl ArtifactServeStats {
@@ -284,6 +288,9 @@ impl ArtifactServeStats {
         self.predicted_exec_secs += other.predicted_exec_secs;
         self.predicted_energy_j += other.predicted_energy_j;
         self.predicted_batches += other.predicted_batches;
+        // workers of one deployment resolve the same tier; keep the
+        // first seen
+        self.tier = self.tier.or(other.tier);
     }
 
     /// Predicted/measured mean-batch-latency ratio, when both exist.
@@ -812,6 +819,9 @@ fn worker_main(
             lane.jobs += k as u64;
             lane.batches += 1;
             lane.measured_exec_secs += exec;
+            if lane.tier.is_none() {
+                lane.tier = rt.kernel_tier(&artifact);
+            }
             if let Some(p) = &predicted {
                 lane.predicted_exec_secs += p.latency_secs;
                 lane.predicted_energy_j += p.energy_j;
@@ -1020,6 +1030,7 @@ mod tests {
             predicted_exec_secs: 1.0,
             predicted_energy_j: 0.5,
             predicted_batches: 2,
+            tier: None,
         };
         let b = ArtifactServeStats {
             jobs: 2,
@@ -1028,12 +1039,15 @@ mod tests {
             predicted_exec_secs: 3.0,
             predicted_energy_j: 0.5,
             predicted_batches: 2,
+            tier: Some(crate::runtime::tier::KernelTier::Scalar),
         };
         a.merge(&b);
         assert_eq!(a.jobs, 6);
         assert_eq!(a.batches, 4);
         // measured mean 1.0 s/batch, predicted mean 1.0 s/batch
         assert!((a.ratio().unwrap() - 1.0).abs() < 1e-12);
+        // the merge adopts the first tier seen
+        assert_eq!(a.tier, Some(crate::runtime::tier::KernelTier::Scalar));
         let empty = ArtifactServeStats::default();
         assert!(empty.ratio().is_none());
     }

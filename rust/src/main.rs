@@ -383,6 +383,14 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         warm: !cli.has("no-warm"),
     };
     println!("backend: {}", opts.backend.name());
+    // the kernel-dispatch configuration the workers will resolve (same
+    // environment, same detection) — so a scalar-fallback run announces
+    // itself up front, not just in the post-run lane table
+    let tiers = ea4rca::runtime::TierConfig::from_env_lenient();
+    println!(
+        "kernels: {} tier, pool={} threads (EA4RCA_KERNEL_TIER / EA4RCA_POOL_THREADS)",
+        tiers.tier, tiers.pool_threads
+    );
     let deployment = Deployment::start(&designs::catalogue(), &opts)?;
     if deployment.shards() > 1 {
         println!(
@@ -454,8 +462,10 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         );
     }
     // the cost model's view of the run, against what actually happened
+    // — plus which kernel tier served each lane (interp runs carry the
+    // tier even without predictions)
     let pvm = report.predicted_vs_measured();
-    if pvm.values().any(|s| s.predicted_batches > 0) {
+    if pvm.values().any(|s| s.predicted_batches > 0 || s.tier.is_some()) {
         let mut t = ea4rca::report::cost_table("predicted vs measured (AIE cost model)");
         for (artifact, lane) in &pvm {
             ea4rca::report::cost_row(&mut t, artifact, lane);
@@ -654,6 +664,10 @@ fn cmd_info() -> Result<()> {
     println!("ea4rca v{}", ea4rca::VERSION);
     let rt = Runtime::new()?;
     println!("backend: {} ({})", rt.backend_kind().name(), rt.platform());
+    println!(
+        "kernel tiers: simd {} on this CPU (EA4RCA_KERNEL_TIER / EA4RCA_POOL_THREADS)",
+        if ea4rca::runtime::KernelTier::simd_supported() { "available" } else { "unavailable" }
+    );
     println!("artifacts ({}):", rt.manifest().dir.display());
     for (name, meta) in &rt.manifest().artifacts {
         let ins: Vec<String> = meta

@@ -77,7 +77,7 @@ pub fn tasks_sci(tps: f64) -> String {
 pub fn cost_table(title: &str) -> Table {
     Table::new(
         title,
-        &["Artifact", "Jobs", "Batches", "Measured ms/b", "Predicted ms/b",
+        &["Artifact", "Tier", "Jobs", "Batches", "Measured ms/b", "Predicted ms/b",
           "Pred/Meas", "Energy (mJ/b)"],
     )
 }
@@ -96,6 +96,7 @@ pub fn cost_row(t: &mut Table, artifact: &str, s: &ArtifactServeStats) {
     };
     t.row(&[
         artifact.to_string(),
+        s.tier.map(|k| k.name().to_string()).unwrap_or_else(|| "n/a".into()),
         s.jobs.to_string(),
         s.batches.to_string(),
         fmt_f(measured_ms, 3),
@@ -142,6 +143,7 @@ mod tests {
                 predicted_exec_secs: 3e-3,
                 predicted_energy_j: 2e-4,
                 predicted_batches: 2,
+                tier: Some(crate::runtime::tier::KernelTier::Simd),
             },
         );
         cost_row(&mut t, "fft1024", &ArtifactServeStats {
@@ -151,7 +153,9 @@ mod tests {
             ..Default::default()
         });
         let r = t.render();
+        assert!(r.contains("Tier"));
         assert!(r.contains("mm_pu128"));
+        assert!(r.contains("simd"), "{r}");
         assert!(r.contains("0.75x"), "{r}");
         assert!(r.contains("n/a"), "{r}");
     }

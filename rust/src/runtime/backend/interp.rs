@@ -13,10 +13,22 @@
 //! Per-artifact setup is paid once: [`Backend::prepare`] resolves the
 //! kernel dispatch, validates the metadata shapes, and builds a
 //! [`PreparedArtifact`] (FFT plan with bit-reversal + per-stage
-//! twiddles, matmul blocking dims, filter2d tiling metadata) into a
-//! per-backend cache keyed by artifact name. The execute paths only
-//! look that state up — the single-job and micro-batch fft paths share
-//! the *same* plan, so their results are bitwise identical.
+//! twiddles, matmul blocking dims, filter2d tiling metadata, **and the
+//! kernel tier that will serve the artifact**) into a per-backend cache
+//! keyed by artifact name. The execute paths only look that state up —
+//! the single-job and micro-batch paths share the *same* prepared
+//! state, so within a tier their results are bitwise identical.
+//!
+//! Two performance layers sit on top of the reference semantics (see
+//! DESIGN.md, "Kernel dispatch tiers"):
+//!
+//! * a kernel tier ([`KernelTier`]) resolved once per backend from
+//!   `EA4RCA_KERNEL_TIER` + runtime CPU detection — scalar reference
+//!   kernels or explicit AVX2/FMA micro-kernels ([`super::super::simd`]);
+//! * a worker-pool batch path ([`super::super::parallel`]) that fans a
+//!   micro-batch of `>= MIN_PARALLEL_JOBS` jobs across
+//!   `EA4RCA_POOL_THREADS` scoped threads, running the *same* per-job
+//!   kernel on disjoint output chunks — so pooling never changes bits.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -25,9 +37,11 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Result};
 
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
+use crate::runtime::parallel;
 use crate::runtime::tensor::{
-    filter2d_ref, matmul_batch_into, matmul_ref, FftPlan, Tensor,
+    filter2d_job_into, matmul_i32_job_into, matmul_job_into, matmul_tiered, FftPlan, Tensor,
 };
+use crate::runtime::tier::{KernelTier, TierConfig};
 
 use super::{Backend, CacheStats};
 
@@ -98,31 +112,19 @@ fn wrap_to_bits(v: i32, bits: u32) -> i32 {
     (v << shift) >> shift
 }
 
-/// Integer matmul with exact int32 accumulation (wrapping, like the
-/// hardware accumulator).
-fn matmul_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
-    let mut c = vec![0i32; m * n];
-    for i in 0..m {
-        for p in 0..k {
-            let av = a[i * k + p];
-            if av == 0 {
-                continue;
-            }
-            let brow = &b[p * n..(p + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
-            }
-        }
-    }
-    c
-}
-
 /// Reusable per-artifact execution state, built once by
 /// [`Backend::prepare`] (or lazily on first use) and shared by the
 /// single-job and micro-batch paths. This is the interpreter's analogue
 /// of the paper's one-time graph construction + twiddle generation.
-enum PreparedArtifact {
+/// The tier is part of the prepared state: an artifact is served by one
+/// kernel family for the life of the cache entry, and the serve report
+/// can say which (see [`Backend::kernel_tier`]).
+struct PreparedArtifact {
+    tier: KernelTier,
+    kind: PreparedKind,
+}
+
+enum PreparedKind {
     /// Blocking descriptor: A[m,k] @ B[k,n].
     MatmulF32 { m: usize, k: usize, n: usize },
     MatmulAccF32 { m: usize, k: usize, n: usize },
@@ -136,11 +138,11 @@ enum PreparedArtifact {
 impl PreparedArtifact {
     /// Resolve kernel dispatch + validate the metadata shapes, so
     /// execute-time errors are only about data.
-    fn build(meta: &ArtifactMeta) -> Result<PreparedArtifact> {
-        match kernel_for(meta)? {
+    fn build(meta: &ArtifactMeta, tier: KernelTier) -> Result<PreparedArtifact> {
+        let kind = match kernel_for(meta)? {
             Kernel::MatmulF32 => {
                 let (m, k, n) = mm_dims(meta)?;
-                Ok(PreparedArtifact::MatmulF32 { m, k, n })
+                PreparedKind::MatmulF32 { m, k, n }
             }
             Kernel::MatmulAccF32 => {
                 let (m, k, n) = mm_dims(meta)?;
@@ -151,11 +153,11 @@ impl PreparedArtifact {
                         meta.inputs[2].shape
                     );
                 }
-                Ok(PreparedArtifact::MatmulAccF32 { m, k, n })
+                PreparedKind::MatmulAccF32 { m, k, n }
             }
             Kernel::MatmulInt { bits } => {
                 let (m, k, n) = mm_dims(meta)?;
-                Ok(PreparedArtifact::MatmulInt { bits, m, k, n })
+                PreparedKind::MatmulInt { bits, m, k, n }
             }
             Kernel::Filter2d => {
                 if meta.inputs.len() != 2 {
@@ -176,14 +178,14 @@ impl PreparedArtifact {
                     bail!("artifact {}: tile smaller than the kernel", meta.name);
                 }
                 let (batch, ih, iw) = (x.shape[0], x.shape[1], x.shape[2]);
-                Ok(PreparedArtifact::Filter2d {
+                PreparedKind::Filter2d {
                     batch,
                     ih,
                     iw,
                     taps,
                     oh: ih - (taps - 1),
                     ow: iw - (taps - 1),
-                })
+                }
             }
             Kernel::Fft => {
                 let n = meta
@@ -199,9 +201,10 @@ impl PreparedArtifact {
                         meta.inputs.iter().map(|t| &t.shape).collect::<Vec<_>>()
                     );
                 }
-                Ok(PreparedArtifact::Fft { plan: FftPlan::new(n) })
+                PreparedKind::Fft { plan: FftPlan::new(n) }
             }
-        }
+        };
+        Ok(PreparedArtifact { tier, kind })
     }
 }
 
@@ -216,23 +219,53 @@ struct BatchScratch {
 }
 
 /// The interpreter substrate: a prepared-artifact cache (kernel
-/// dispatch + validated shapes + plans, built once per artifact) plus
-/// the reference-kernel execute paths.
+/// dispatch + validated shapes + plans + tier, built once per artifact)
+/// plus the reference-kernel execute paths.
 pub struct InterpBackend {
+    tiers: TierConfig,
     cache: Mutex<HashMap<String, Arc<PreparedArtifact>>>,
     builds: AtomicU64,
     hits: AtomicU64,
+    simd_artifacts: AtomicU64,
+    scalar_artifacts: AtomicU64,
+    pooled_batches: AtomicU64,
     scratch: Mutex<BatchScratch>,
 }
 
 impl InterpBackend {
+    /// Environment-configured backend (lenient: a malformed knob falls
+    /// back to auto-detection with a stderr note). The CLI entry points
+    /// go through [`InterpBackend::from_env`] instead, which fails
+    /// loudly.
     pub fn new() -> InterpBackend {
+        InterpBackend::with_tiers(TierConfig::from_env_lenient())
+    }
+
+    /// Strict environment resolution: a malformed `EA4RCA_KERNEL_TIER` /
+    /// `EA4RCA_POOL_THREADS`, or `simd` forced on a CPU without
+    /// AVX2+FMA, is a startup error instead of a silent degrade.
+    pub fn from_env() -> Result<InterpBackend> {
+        Ok(InterpBackend::with_tiers(TierConfig::from_env()?))
+    }
+
+    /// Explicit tier configuration (tests, benches, embedders).
+    pub fn with_tiers(tiers: TierConfig) -> InterpBackend {
         InterpBackend {
+            tiers,
             cache: Mutex::new(HashMap::new()),
             builds: AtomicU64::new(0),
             hits: AtomicU64::new(0),
+            simd_artifacts: AtomicU64::new(0),
+            scalar_artifacts: AtomicU64::new(0),
+            pooled_batches: AtomicU64::new(0),
             scratch: Mutex::new(BatchScratch::default()),
         }
+    }
+
+    /// The resolved kernel-dispatch configuration this backend serves
+    /// with.
+    pub fn tier_config(&self) -> TierConfig {
+        self.tiers
     }
 
     /// Cache lookup, building on miss. The lock is held across a build
@@ -243,51 +276,71 @@ impl InterpBackend {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
         }
-        let built = Arc::new(PreparedArtifact::build(meta)?);
+        let built = Arc::new(PreparedArtifact::build(meta, self.tiers.tier)?);
         self.builds.fetch_add(1, Ordering::Relaxed);
+        match built.tier {
+            KernelTier::Simd => self.simd_artifacts.fetch_add(1, Ordering::Relaxed),
+            KernelTier::Scalar => self.scalar_artifacts.fetch_add(1, Ordering::Relaxed),
+        };
         cache.insert(meta.name.clone(), Arc::clone(&built));
         Ok(built)
+    }
+
+    fn note_pool(&self, workers_used: usize) {
+        if workers_used > 1 {
+            self.pooled_batches.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// One job through prepared state (shared by execute and the
     /// non-stacking batch paths).
     fn run_one(&self, prep: &PreparedArtifact, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        match prep {
-            PreparedArtifact::MatmulF32 { m, k, n } => {
+        let tier = prep.tier;
+        match &prep.kind {
+            PreparedKind::MatmulF32 { m, k, n } => {
                 let (m, k, n) = (*m, *k, *n);
-                let c = matmul_ref(inputs[0].as_f32()?, inputs[1].as_f32()?, m, k, n);
+                let c = matmul_tiered(inputs[0].as_f32()?, inputs[1].as_f32()?, m, k, n, tier);
                 Ok(vec![Tensor::f32(&[m, n], c)])
             }
-            PreparedArtifact::MatmulAccF32 { m, k, n } => {
+            PreparedKind::MatmulAccF32 { m, k, n } => {
                 let (m, k, n) = (*m, *k, *n);
-                let mut c = matmul_ref(inputs[0].as_f32()?, inputs[1].as_f32()?, m, k, n);
+                let mut c = matmul_tiered(inputs[0].as_f32()?, inputs[1].as_f32()?, m, k, n, tier);
                 for (ci, acc) in c.iter_mut().zip(inputs[2].as_f32()?) {
                     *ci += acc;
                 }
                 Ok(vec![Tensor::f32(&[m, n], c)])
             }
-            PreparedArtifact::MatmulInt { bits, m, k, n } => {
+            PreparedKind::MatmulInt { bits, m, k, n } => {
                 let (bits, m, k, n) = (*bits, *m, *k, *n);
                 let a: Vec<i32> =
                     inputs[0].as_i32()?.iter().map(|&v| wrap_to_bits(v, bits)).collect();
                 let b: Vec<i32> =
                     inputs[1].as_i32()?.iter().map(|&v| wrap_to_bits(v, bits)).collect();
-                Ok(vec![Tensor::i32(&[m, n], matmul_i32(&a, &b, m, k, n))])
+                let mut c = vec![0i32; m * n];
+                matmul_i32_job_into(&a, &b, m, k, n, &mut c, tier);
+                Ok(vec![Tensor::i32(&[m, n], c)])
             }
-            PreparedArtifact::Filter2d { batch, ih, iw, taps, oh, ow } => {
+            PreparedKind::Filter2d { batch, ih, iw, taps, oh, ow } => {
                 let (batch, ih, iw, taps, oh, ow) = (*batch, *ih, *iw, *taps, *oh, *ow);
                 let tiles = inputs[0].as_i32()?;
                 let kern = inputs[1].as_i32()?;
-                let mut out = Vec::with_capacity(batch * oh * ow);
+                let mut out = vec![0i32; batch * oh * ow];
                 for t in 0..batch {
-                    let tile = &tiles[t * ih * iw..(t + 1) * ih * iw];
-                    out.extend(filter2d_ref(tile, ih, iw, kern, taps));
+                    filter2d_job_into(
+                        &tiles[t * ih * iw..(t + 1) * ih * iw],
+                        ih,
+                        iw,
+                        kern,
+                        taps,
+                        &mut out[t * oh * ow..(t + 1) * oh * ow],
+                        tier,
+                    );
                 }
                 Ok(vec![Tensor::i32(&[batch, oh, ow], out)])
             }
-            PreparedArtifact::Fft { plan } => {
+            PreparedKind::Fft { plan } => {
                 let n = plan.points();
-                let (re, im) = plan.run(inputs[0].as_f32()?, inputs[1].as_f32()?);
+                let (re, im) = plan.run_with_tier(inputs[0].as_f32()?, inputs[1].as_f32()?, tier);
                 Ok(vec![Tensor::f32(&[n], re), Tensor::f32(&[n], im)])
             }
         }
@@ -302,7 +355,10 @@ impl Default for InterpBackend {
 
 impl Backend for InterpBackend {
     fn platform(&self) -> String {
-        "interp-cpu (pure-Rust reference kernels)".to_string()
+        format!(
+            "interp-cpu (pure-Rust reference kernels; {} tier, pool={})",
+            self.tiers.tier, self.tiers.pool_threads
+        )
     }
 
     fn prepare(&self, _manifest: &Manifest, meta: &ArtifactMeta) -> Result<()> {
@@ -313,7 +369,14 @@ impl Backend for InterpBackend {
         CacheStats {
             builds: self.builds.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
+            simd_artifacts: self.simd_artifacts.load(Ordering::Relaxed),
+            scalar_artifacts: self.scalar_artifacts.load(Ordering::Relaxed),
+            pooled_batches: self.pooled_batches.load(Ordering::Relaxed),
         }
+    }
+
+    fn kernel_tier(&self, meta: &ArtifactMeta) -> Option<KernelTier> {
+        self.cache.lock().unwrap().get(&meta.name).map(|p| p.tier)
     }
 
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -322,21 +385,25 @@ impl Backend for InterpBackend {
     }
 
     /// The micro-batch fast path: stack compatible jobs along a leading
-    /// batch dimension; the kernel/shape metadata comes out of the
+    /// batch dimension; the kernel/shape/tier metadata comes out of the
     /// prepared-artifact cache (resolved once per artifact, not per
-    /// dispatch).
+    /// dispatch). Batches of `>= MIN_PARALLEL_JOBS` jobs additionally
+    /// fan out across the worker pool ([`parallel::for_each_job`]) when
+    /// `pool_threads > 1` — each worker runs the *same* per-job kernel
+    /// on its disjoint output chunk, so pooled and sequential results
+    /// are bitwise identical within a tier.
     ///
     /// * mm — operands packed into `[batch, m, k]` / `[batch, k, n]`
     ///   (into per-backend scratch reused across dispatches) and run
-    ///   through the cache-blocked [`matmul_batch_into`] kernel
-    ///   (bitwise-identical accumulation order to `matmul_ref`).
+    ///   per job through [`matmul_job_into`] (scalar leg bitwise
+    ///   identical to `matmul_ref`; SIMD leg under the DESIGN.md
+    ///   tolerance contract).
     /// * fft — the *cached* [`FftPlan`] (bit-reversal table + per-stage
     ///   twiddles) is shared by every transform in the batch and by the
     ///   single-job path, so batched and sequential results are bitwise
     ///   identical and the trig cost is paid once per artifact, ever.
-    /// * filter2d — per-job kernels differ, so tiles run per job but
-    ///   with the dispatch/dims resolved once.
-    /// * everything else falls back to the per-job loop.
+    /// * filter2d / int mm / acc mm — per-job kernels through the same
+    ///   tiered entry points as `execute`, pooled when wide enough.
     fn execute_batch(&self, meta: &ArtifactMeta, jobs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
         if jobs.is_empty() {
             return Ok(Vec::new());
@@ -345,8 +412,10 @@ impl Backend for InterpBackend {
         if jobs.len() < 2 {
             return jobs.iter().map(|inputs| self.run_one(&prep, inputs)).collect();
         }
-        match &*prep {
-            PreparedArtifact::MatmulF32 { m, k, n } => {
+        let tier = prep.tier;
+        let threads = self.tiers.pool_threads;
+        match &prep.kind {
+            PreparedKind::MatmulF32 { m, k, n } => {
                 let (m, k, n) = (*m, *k, *n);
                 let batch = jobs.len();
                 // per-backend scratch; fall back to a throwaway set if
@@ -366,25 +435,131 @@ impl Backend for InterpBackend {
                     sc.b.extend_from_slice(job[1].as_f32()?);
                 }
                 let BatchScratch { a, b, c } = sc;
-                matmul_batch_into(a, b, batch, m, k, n, c);
+                c.clear();
+                c.resize(batch * m * n, 0.0f32);
+                let (a, b): (&[f32], &[f32]) = (a, b);
+                let used = parallel::for_each_job(c, batch, m * n, threads, |t, ct| {
+                    matmul_job_into(
+                        &a[t * m * k..(t + 1) * m * k],
+                        &b[t * k * n..(t + 1) * k * n],
+                        m,
+                        k,
+                        n,
+                        ct,
+                        tier,
+                    )
+                });
+                self.note_pool(used);
                 Ok(c
                     .chunks_exact(m * n)
                     .map(|cj| vec![Tensor::f32(&[m, n], cj.to_vec())])
                     .collect())
             }
-            PreparedArtifact::Fft { plan } => {
-                let n = plan.points();
-                jobs.iter()
-                    .map(|job| {
-                        let (re, im) = plan.run(job[0].as_f32()?, job[1].as_f32()?);
-                        Ok(vec![Tensor::f32(&[n], re), Tensor::f32(&[n], im)])
-                    })
-                    .collect()
+            PreparedKind::MatmulAccF32 { m, k, n } => {
+                let (m, k, n) = (*m, *k, *n);
+                let ins: Vec<(&[f32], &[f32], &[f32])> = jobs
+                    .iter()
+                    .map(|j| Ok((j[0].as_f32()?, j[1].as_f32()?, j[2].as_f32()?)))
+                    .collect::<Result<_>>()?;
+                let mut out = vec![0.0f32; jobs.len() * m * n];
+                let used = parallel::for_each_job(&mut out, jobs.len(), m * n, threads, |t, ct| {
+                    let (a, b, acc) = ins[t];
+                    matmul_job_into(a, b, m, k, n, ct, tier);
+                    for (v, &ac) in ct.iter_mut().zip(acc) {
+                        *v += ac;
+                    }
+                });
+                self.note_pool(used);
+                Ok(out
+                    .chunks_exact(m * n)
+                    .map(|cj| vec![Tensor::f32(&[m, n], cj.to_vec())])
+                    .collect())
             }
-            PreparedArtifact::Filter2d { .. }
-            | PreparedArtifact::MatmulAccF32 { .. }
-            | PreparedArtifact::MatmulInt { .. } => {
-                jobs.iter().map(|inputs| self.run_one(&prep, inputs)).collect()
+            PreparedKind::MatmulInt { bits, m, k, n } => {
+                let (bits, m, k, n) = (*bits, *m, *k, *n);
+                let ins: Vec<(&[i32], &[i32])> = jobs
+                    .iter()
+                    .map(|j| Ok((j[0].as_i32()?, j[1].as_i32()?)))
+                    .collect::<Result<_>>()?;
+                let mut out = vec![0i32; jobs.len() * m * n];
+                let used =
+                    parallel::for_each_job_i32(&mut out, jobs.len(), m * n, threads, |t, ct| {
+                        // operand wrapping rides the worker, not the
+                        // dispatcher thread
+                        let (ar, br) = ins[t];
+                        let a: Vec<i32> = ar.iter().map(|&v| wrap_to_bits(v, bits)).collect();
+                        let b: Vec<i32> = br.iter().map(|&v| wrap_to_bits(v, bits)).collect();
+                        matmul_i32_job_into(&a, &b, m, k, n, ct, tier);
+                    });
+                self.note_pool(used);
+                Ok(out
+                    .chunks_exact(m * n)
+                    .map(|cj| vec![Tensor::i32(&[m, n], cj.to_vec())])
+                    .collect())
+            }
+            PreparedKind::Filter2d { batch, ih, iw, taps, oh, ow } => {
+                let (fb, ih, iw, taps, oh, ow) = (*batch, *ih, *iw, *taps, *oh, *ow);
+                let job_len = fb * oh * ow;
+                let ins: Vec<(&[i32], &[i32])> = jobs
+                    .iter()
+                    .map(|j| Ok((j[0].as_i32()?, j[1].as_i32()?)))
+                    .collect::<Result<_>>()?;
+                let mut out = vec![0i32; jobs.len() * job_len];
+                let used =
+                    parallel::for_each_job_i32(&mut out, jobs.len(), job_len, threads, |t, ot| {
+                        let (tiles, kern) = ins[t];
+                        for ti in 0..fb {
+                            filter2d_job_into(
+                                &tiles[ti * ih * iw..(ti + 1) * ih * iw],
+                                ih,
+                                iw,
+                                kern,
+                                taps,
+                                &mut ot[ti * oh * ow..(ti + 1) * oh * ow],
+                                tier,
+                            );
+                        }
+                    });
+                self.note_pool(used);
+                Ok(out
+                    .chunks_exact(job_len)
+                    .map(|cj| vec![Tensor::i32(&[fb, oh, ow], cj.to_vec())])
+                    .collect())
+            }
+            PreparedKind::Fft { plan } => {
+                let n = plan.points();
+                let ins: Vec<(&[f32], &[f32])> = jobs
+                    .iter()
+                    .map(|j| Ok((j[0].as_f32()?, j[1].as_f32()?)))
+                    .collect::<Result<_>>()?;
+                if threads > 1 && jobs.len() >= crate::runtime::tier::MIN_PARALLEL_JOBS {
+                    // pooled path: stacked [batch, 2n] output, each job's
+                    // transform computed (and copied) on its worker
+                    let mut out = vec![0.0f32; jobs.len() * 2 * n];
+                    let used =
+                        parallel::for_each_job(&mut out, jobs.len(), 2 * n, threads, |t, ot| {
+                            let (re, im) = plan.run_with_tier(ins[t].0, ins[t].1, tier);
+                            ot[..n].copy_from_slice(&re);
+                            ot[n..].copy_from_slice(&im);
+                        });
+                    self.note_pool(used);
+                    Ok(out
+                        .chunks_exact(2 * n)
+                        .map(|cj| {
+                            vec![
+                                Tensor::f32(&[n], cj[..n].to_vec()),
+                                Tensor::f32(&[n], cj[n..].to_vec()),
+                            ]
+                        })
+                        .collect())
+                } else {
+                    ins.iter()
+                        .map(|(re, im)| {
+                            let (re, im) = plan.run_with_tier(re, im, tier);
+                            Ok(vec![Tensor::f32(&[n], re), Tensor::f32(&[n], im)])
+                        })
+                        .collect()
+                }
             }
         }
     }
@@ -473,12 +648,51 @@ mod tests {
             for (j, job) in jobs.iter().enumerate() {
                 let single = b.execute(meta, job).unwrap();
                 // exact: every family routes the batch through the same
-                // prepared state as the single-job path (the fft plan is
-                // shared, the stacked matmul accumulates in matmul_ref's
-                // order), so batching is bitwise invisible
+                // prepared state — and the same tiered per-job kernel —
+                // as the single-job path, so batching is bitwise
+                // invisible within a tier
                 assert_eq!(single, batched[j], "{name} job {j}");
             }
         }
+    }
+
+    #[test]
+    fn pooled_batches_match_sequential_bitwise() {
+        use crate::util::rng::Rng;
+        // same tier, pool on vs off: results must be bitwise identical
+        // (each worker runs the identical per-job kernel on a disjoint
+        // chunk) — this holds on any machine because the tier is pinned
+        let seq = InterpBackend::with_tiers(TierConfig::scalar());
+        let pooled = InterpBackend::with_tiers(TierConfig {
+            tier: KernelTier::Scalar,
+            pool_threads: 4,
+        });
+        let m = Manifest::builtin("artifacts");
+        let mut rng = Rng::new(47);
+        for name in ["mm32", "mm32_acc", "mm32_i16", "filter2d_pu8", "fft1024"] {
+            let meta = m.get(name).unwrap();
+            let jobs: Vec<Vec<Tensor>> = (0..6)
+                .map(|_| {
+                    meta.inputs
+                        .iter()
+                        .map(|tm| match tm.dtype {
+                            crate::runtime::tensor::DType::F32 => {
+                                Tensor::f32(&tm.shape, rng.normal_vec(tm.elements()))
+                            }
+                            crate::runtime::tensor::DType::I32 => {
+                                Tensor::i32(&tm.shape, rng.int_vec_i32(tm.elements(), -40, 40))
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let a = seq.execute_batch(meta, &jobs).unwrap();
+            let b = pooled.execute_batch(meta, &jobs).unwrap();
+            assert_eq!(a, b, "{name}");
+        }
+        // the pool actually engaged (6 jobs >= MIN_PARALLEL_JOBS)
+        assert!(pooled.cache_stats().pooled_batches >= 1);
+        assert_eq!(seq.cache_stats().pooled_batches, 0);
     }
 
     #[test]
@@ -487,7 +701,9 @@ mod tests {
         let (b, m) = backend_and_manifest();
         let meta = m.get("fft1024").unwrap();
         assert_eq!(b.cache_stats(), CacheStats::default());
+        assert_eq!(b.kernel_tier(meta), None, "tier is recorded at build time");
         b.prepare(&m, meta).unwrap(); // the one build
+        assert_eq!(b.kernel_tier(meta), Some(b.tier_config().tier));
         let mut rng = Rng::new(43);
         let job = vec![
             Tensor::f32(&[1024], rng.normal_vec(1024)),
@@ -502,9 +718,24 @@ mod tests {
         assert_eq!(cs.builds, 1, "fft plan must be built exactly once");
         // 5 executes + 1 batch dispatch, each one cache lookup
         assert_eq!(cs.hits, 6);
+        // the one build is attributed to exactly one tier counter
+        assert_eq!(cs.simd_artifacts + cs.scalar_artifacts, 1);
         // re-preparing is also just a hit
         b.prepare(&m, meta).unwrap();
-        assert_eq!(b.cache_stats(), CacheStats { builds: 1, hits: 7 });
+        assert_eq!(b.cache_stats().hits, 7);
+        assert_eq!(b.cache_stats().builds, 1);
+    }
+
+    #[test]
+    fn forced_scalar_config_reports_itself() {
+        let b = InterpBackend::with_tiers(TierConfig::scalar());
+        let m = Manifest::builtin("artifacts");
+        let meta = m.get("mm32").unwrap();
+        b.prepare(&m, meta).unwrap();
+        assert_eq!(b.kernel_tier(meta), Some(KernelTier::Scalar));
+        let cs = b.cache_stats();
+        assert_eq!((cs.scalar_artifacts, cs.simd_artifacts), (1, 0));
+        assert!(b.platform().contains("scalar tier"), "{}", b.platform());
     }
 
     #[test]
@@ -524,7 +755,8 @@ mod tests {
         let batched = b.execute_batch(meta, &jobs).unwrap();
         for (j, job) in jobs.iter().enumerate() {
             let single = b.execute(meta, job).unwrap();
-            // bitwise, not within-tolerance: both paths run FftPlan::run
+            // bitwise, not within-tolerance: both paths run the same
+            // plan through the same tier
             assert_eq!(single, batched[j], "job {j}");
         }
     }

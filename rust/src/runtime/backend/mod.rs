@@ -50,6 +50,14 @@ pub struct CacheStats {
     pub builds: u64,
     /// Lookups served from the cache without rebuilding anything.
     pub hits: u64,
+    /// Of `builds`: artifacts prepared onto the SIMD kernel tier.
+    pub simd_artifacts: u64,
+    /// Of `builds`: artifacts prepared onto the scalar kernel tier —
+    /// so a debug-mode or non-AVX2 run is self-describing.
+    pub scalar_artifacts: u64,
+    /// Micro-batch dispatches that actually fanned out across the
+    /// worker pool (> 1 worker; see `runtime::parallel`).
+    pub pooled_batches: u64,
 }
 
 /// Predicted execution cost of one dispatch (a single job or a
@@ -108,6 +116,15 @@ pub trait Backend {
     /// (all zeros) is for substrates with nothing to cache.
     fn cache_stats(&self) -> CacheStats {
         CacheStats::default()
+    }
+
+    /// The kernel tier that serves this artifact, once prepared — the
+    /// interp/sim backends record it in the prepared-artifact cache so
+    /// the serve report can say which kernel family ran. The default
+    /// `None` is for substrates without a tier notion (PJRT) or
+    /// artifacts not yet prepared.
+    fn kernel_tier(&self, _meta: &ArtifactMeta) -> Option<crate::runtime::tier::KernelTier> {
+        None
     }
 
     /// Predicted cost of dispatching `batch` jobs of this artifact, for
@@ -184,11 +201,14 @@ impl BackendKind {
         }
     }
 
-    /// Instantiate the backend.
+    /// Instantiate the backend. Tiered backends resolve
+    /// `EA4RCA_KERNEL_TIER` / `EA4RCA_POOL_THREADS` strictly here, so a
+    /// CLI run with a malformed knob (or `simd` forced on a CPU without
+    /// AVX2+FMA) fails readably at startup instead of degrading.
     pub fn create(self) -> Result<Box<dyn Backend>> {
         match self {
-            BackendKind::Interp => Ok(Box::new(interp::InterpBackend::new())),
-            BackendKind::Sim => Ok(Box::new(sim::SimBackend::new())),
+            BackendKind::Interp => Ok(Box::new(interp::InterpBackend::from_env()?)),
+            BackendKind::Sim => Ok(Box::new(sim::SimBackend::from_env()?)),
             BackendKind::Pjrt => {
                 #[cfg(feature = "pjrt")]
                 {

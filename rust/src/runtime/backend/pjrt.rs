@@ -81,6 +81,8 @@ impl Backend for PjrtBackend {
         CacheStats {
             builds: self.builds.load(Ordering::Relaxed),
             hits: self.hits.load(Ordering::Relaxed),
+            // PJRT has no kernel-tier notion: XLA owns its codegen
+            ..CacheStats::default()
         }
     }
 

@@ -211,9 +211,22 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Environment-configured backend (lenient tier resolution, like
+    /// [`InterpBackend::new`]).
     pub fn new() -> SimBackend {
+        SimBackend::over(InterpBackend::new())
+    }
+
+    /// Strict tier resolution — a malformed `EA4RCA_KERNEL_TIER` /
+    /// `EA4RCA_POOL_THREADS` is a startup error (used by
+    /// `BackendKind::create`).
+    pub fn from_env() -> Result<SimBackend> {
+        Ok(SimBackend::over(InterpBackend::from_env()?))
+    }
+
+    fn over(interp: InterpBackend) -> SimBackend {
         SimBackend {
-            interp: InterpBackend::new(),
+            interp,
             params: HwParams::vck5000(),
             models: Mutex::new(HashMap::new()),
         }
@@ -265,6 +278,11 @@ impl Backend for SimBackend {
         // cost models build 1:1 with the interpreter's prepared
         // artifacts, so the numeric cache counters tell the whole story
         self.interp.cache_stats()
+    }
+
+    fn kernel_tier(&self, meta: &ArtifactMeta) -> Option<crate::runtime::tier::KernelTier> {
+        // numerics (and therefore the tier) are the interpreter's
+        self.interp.kernel_tier(meta)
     }
 
     fn predict(&self, meta: &ArtifactMeta, batch: usize) -> Option<CostPrediction> {

@@ -14,6 +14,7 @@ use anyhow::{bail, Result};
 use crate::runtime::backend::{Backend, BackendKind, CacheStats, CostPrediction};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
+use crate::runtime::tier::KernelTier;
 
 /// Per-artifact execution statistics (hot-path observability).
 #[derive(Debug, Default, Clone)]
@@ -31,6 +32,10 @@ pub struct ExecStats {
     /// Times the prepared-artifact guard was consulted and the artifact
     /// was already built — the hot path never re-resolving metadata.
     pub prepare_hits: u64,
+    /// Which kernel tier served this artifact (recorded at prepare
+    /// time; `None` on substrates without a tier notion). Makes a
+    /// debug-mode or non-AVX2 run self-describing in the serve report.
+    pub tier: Option<KernelTier>,
 }
 
 /// The execution runtime. Thread-safe: preparation happens under a
@@ -104,6 +109,7 @@ impl Runtime {
         let s = stats.entry(meta.name.clone()).or_default();
         s.compile_secs += dt;
         s.prepare_builds += 1;
+        s.tier = self.backend.kernel_tier(meta);
         Ok(false)
     }
 
@@ -252,6 +258,14 @@ impl Runtime {
     pub fn predict(&self, name: &str, batch: usize) -> Option<CostPrediction> {
         let meta = self.manifest.get(name).ok()?;
         self.backend.predict(meta, batch)
+    }
+
+    /// The kernel tier serving artifact `name` on this runtime's
+    /// backend, once prepared (`None` for unprepared artifacts and
+    /// tier-less substrates).
+    pub fn kernel_tier(&self, name: &str) -> Option<KernelTier> {
+        let meta = self.manifest.get(name).ok()?;
+        self.backend.kernel_tier(meta)
     }
 
     /// Mean execution seconds for an artifact, if it has run.

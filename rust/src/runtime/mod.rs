@@ -16,9 +16,13 @@
 pub mod backend;
 pub mod engine;
 pub mod manifest;
+pub mod parallel;
+pub mod simd;
 pub mod tensor;
+pub mod tier;
 
 pub use backend::{Backend, BackendKind, CacheStats, CostPrediction};
 pub use engine::Runtime;
 pub use manifest::{ArtifactMeta, Manifest, PuTopology, TensorMeta};
 pub use tensor::{DType, Tensor};
+pub use tier::{KernelTier, TierConfig};

@@ -1,0 +1,171 @@
+//! Hand-rolled worker-pool fan-out for micro-batches (no registry
+//! deps — the workspace is hermetic, so no rayon).
+//!
+//! The interp backend's `execute_batch` path turns a coalesced
+//! micro-batch into `jobs` independent per-job kernel invocations over
+//! disjoint slices of one stacked output buffer. [`for_each_job`]
+//! splits that output into **contiguous per-thread chunks** with
+//! `split_at_mut` and runs each chunk on a scoped `std::thread` worker:
+//!
+//! * Contiguous chunking keeps each worker streaming through adjacent
+//!   cache lines instead of interleaving.
+//! * `std::thread::scope` lets workers borrow the batch inputs and the
+//!   output slices directly — no `Arc`, no `'static` bounds, no
+//!   channels; the join is the scope exit.
+//! * Each job runs the *same* kernel closure the sequential path runs,
+//!   on the same disjoint slice, so the fan-out is invisible to the
+//!   numerics: batch==sequential stays bitwise per tier (pinned by
+//!   `rust/tests/kernel_tiers.rs`).
+//!
+//! The pool engages only when `threads > 1` and
+//! `jobs >= MIN_PARALLEL_JOBS` (see [`super::tier`]); otherwise the
+//! sequential loop runs inline with zero spawn cost.
+
+use super::tier::MIN_PARALLEL_JOBS;
+
+/// Run `job(t, out_t)` for every `t in 0..jobs`, where `out_t` is job
+/// t's disjoint `job_len` slice of `out`. Fans out across up to
+/// `threads` scoped workers when the batch is wide enough; runs the
+/// identical sequential loop otherwise. Returns the number of worker
+/// threads actually used (1 = sequential).
+///
+/// `job` must be `Sync` (shared by reference across workers) and is
+/// handed disjoint output slices, so interior order is the caller's
+/// kernel order — the parallel and sequential paths produce bitwise
+/// identical buffers.
+///
+/// Panics if `out.len() != jobs * job_len`. A worker panic propagates
+/// out of the scope (no torn silent state).
+pub fn for_each_job<F>(
+    out: &mut [f32],
+    jobs: usize,
+    job_len: usize,
+    threads: usize,
+    job: F,
+) -> usize
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    for_each_job_impl(out, jobs, job_len, threads, job)
+}
+
+/// [`for_each_job`] for i32 outputs (the low-bit matmul and filter2d
+/// artifacts). Same contract.
+pub fn for_each_job_i32<F>(
+    out: &mut [i32],
+    jobs: usize,
+    job_len: usize,
+    threads: usize,
+    job: F,
+) -> usize
+where
+    F: Fn(usize, &mut [i32]) + Sync,
+{
+    for_each_job_impl(out, jobs, job_len, threads, job)
+}
+
+fn for_each_job_impl<T, F>(
+    out: &mut [T],
+    jobs: usize,
+    job_len: usize,
+    threads: usize,
+    job: F,
+) -> usize
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert_eq!(out.len(), jobs * job_len, "stacked output length mismatch");
+    let workers = threads.min(jobs).max(1);
+    if workers == 1 || jobs < MIN_PARALLEL_JOBS {
+        for (t, chunk) in out.chunks_mut(job_len.max(1)).take(jobs).enumerate() {
+            job(t, chunk);
+        }
+        return 1;
+    }
+    // Contiguous chunks: worker w takes jobs [w*per .. min((w+1)*per, jobs)).
+    let per = jobs.div_ceil(workers);
+    let jobref = &job;
+    std::thread::scope(|scope| {
+        let mut rest = &mut out[..];
+        let mut first = 0;
+        for _ in 0..workers {
+            if first >= jobs {
+                break;
+            }
+            let count = per.min(jobs - first);
+            let (mine, tail) = rest.split_at_mut(count * job_len);
+            rest = tail;
+            let base = first;
+            scope.spawn(move || {
+                for (off, chunk) in mine.chunks_mut(job_len.max(1)).take(count).enumerate() {
+                    jobref(base + off, chunk);
+                }
+            });
+            first += count;
+        }
+    });
+    workers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fill(t: usize, chunk: &mut [f32]) {
+        for (i, v) in chunk.iter_mut().enumerate() {
+            *v = (t * 1000 + i) as f32;
+        }
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let jobs = 9; // deliberately not a multiple of the worker count
+        let job_len = 7;
+        let mut seq = vec![0.0f32; jobs * job_len];
+        let used_seq = for_each_job(&mut seq, jobs, job_len, 1, fill);
+        assert_eq!(used_seq, 1);
+        for threads in [2, 3, 4, 16] {
+            let mut par = vec![0.0f32; jobs * job_len];
+            let used = for_each_job(&mut par, jobs, job_len, threads, fill);
+            assert!(used >= 1 && used <= threads.min(jobs));
+            assert_eq!(par, seq, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn small_batches_stay_sequential() {
+        let jobs = MIN_PARALLEL_JOBS - 1;
+        let mut out = vec![0.0f32; jobs * 3];
+        assert_eq!(for_each_job(&mut out, jobs, 3, 8, fill), 1);
+    }
+
+    #[test]
+    fn i32_variant_covers_every_job_once() {
+        let jobs = 11;
+        let job_len = 5;
+        let mut out = vec![-1i32; jobs * job_len];
+        for_each_job_i32(&mut out, jobs, job_len, 4, |t, chunk| {
+            for v in chunk.iter_mut() {
+                assert_eq!(*v, -1, "job {t} saw an already-written cell");
+                *v = t as i32;
+            }
+        });
+        for (idx, &v) in out.iter().enumerate() {
+            assert_eq!(v, (idx / job_len) as i32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "stacked output length mismatch")]
+    fn length_mismatch_is_loud() {
+        let mut out = vec![0.0f32; 5];
+        for_each_job(&mut out, 2, 3, 1, fill);
+    }
+
+    #[test]
+    fn zero_jobs_is_a_noop() {
+        let mut out: Vec<f32> = vec![];
+        assert_eq!(for_each_job(&mut out, 0, 16, 8, fill), 1);
+    }
+}

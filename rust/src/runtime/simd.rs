@@ -1,0 +1,433 @@
+//! Explicit x86_64 AVX2/FMA micro-kernels for the interpreter's hot
+//! paths, in the GotoBLAS2 packed-micro-kernel tradition the paper's
+//! AIE kernels mirror (broadcast one A element, stream a B row through
+//! vector lanes, keep C live in registers).
+//!
+//! Every public function here is **safe** and returns `bool`: `true`
+//! means the SIMD kernel ran, `false` means the caller must take its
+//! scalar fallback (non-x86_64 build, or a CPU without AVX2+FMA). The
+//! runtime feature check is an atomic-load-cheap `std::is_x86_feature_
+//! detected!` consult; tier selection already happened once per backend
+//! (see [`super::tier`]), this per-call gate is only what makes the
+//! wrappers sound to call from safe code.
+//!
+//! Numerics contracts (pinned by `rust/tests/kernel_tiers.rs`, table in
+//! DESIGN.md):
+//!
+//! * `matmul_i32` / `filter2d_i32` — wrapping int32 arithmetic is
+//!   associative, so lane order is invisible: **bitwise identical** to
+//!   the scalar kernels.
+//! * `fft_stage` — each butterfly performs the same IEEE f64 mul/sub/
+//!   add sequence as the scalar stage, two butterflies per vector:
+//!   **bitwise identical**.
+//! * `matmul_f32` — per output element the accumulation visits k in the
+//!   same ascending order as the scalar kernel, but through
+//!   `vfmadd231ps`: the fused multiply-add rounds once where the scalar
+//!   kernel rounds twice, so results differ within the documented
+//!   bound |simd − scalar| ≤ 2·k·ε_f32·Σ_p|a_ip·b_pj| per element
+//!   (standard forward-error analysis; both accumulations are within
+//!   γ_k·Σ|ab| of the exact dot product). The scalar tail lanes use
+//!   `f32::mul_add` so the contract is uniform across n % 8 elements.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// C[m,n] = A[m,k] @ B[k,n], row-major, overwriting `c`.
+    ///
+    /// j is blocked 4 vectors (32 floats) wide so four independent FMA
+    /// chains hide the fused-add latency; k is the innermost loop with
+    /// the C block held in registers (zero C traffic inside the k loop,
+    /// the same accumulation order per element as the scalar kernels).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available and slice lengths
+    /// match (`a` = m*k, `b` = k*n, `c` = m*n) — the safe wrapper
+    /// checks both.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn matmul_f32(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+        let bp = b.as_ptr();
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 32 <= n {
+                let mut acc0 = _mm256_setzero_ps();
+                let mut acc1 = _mm256_setzero_ps();
+                let mut acc2 = _mm256_setzero_ps();
+                let mut acc3 = _mm256_setzero_ps();
+                for (p, &av) in arow.iter().enumerate() {
+                    let avv = _mm256_set1_ps(av);
+                    let row = bp.add(p * n + j);
+                    acc0 = _mm256_fmadd_ps(avv, _mm256_loadu_ps(row), acc0);
+                    acc1 = _mm256_fmadd_ps(avv, _mm256_loadu_ps(row.add(8)), acc1);
+                    acc2 = _mm256_fmadd_ps(avv, _mm256_loadu_ps(row.add(16)), acc2);
+                    acc3 = _mm256_fmadd_ps(avv, _mm256_loadu_ps(row.add(24)), acc3);
+                }
+                _mm256_storeu_ps(cp.add(j), acc0);
+                _mm256_storeu_ps(cp.add(j + 8), acc1);
+                _mm256_storeu_ps(cp.add(j + 16), acc2);
+                _mm256_storeu_ps(cp.add(j + 24), acc3);
+                j += 32;
+            }
+            while j + 8 <= n {
+                let mut acc = _mm256_setzero_ps();
+                for (p, &av) in arow.iter().enumerate() {
+                    acc = _mm256_fmadd_ps(
+                        _mm256_set1_ps(av),
+                        _mm256_loadu_ps(bp.add(p * n + j)),
+                        acc,
+                    );
+                }
+                _mm256_storeu_ps(cp.add(j), acc);
+                j += 8;
+            }
+            // scalar tail: fused like the lanes, so one tolerance
+            // contract covers every element
+            while j < n {
+                let mut acc = 0.0f32;
+                for (p, &av) in arow.iter().enumerate() {
+                    acc = av.mul_add(b[p * n + j], acc);
+                }
+                crow[j] = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// Wrapping-int32 matmul (the i8/i16 low-bit artifacts after their
+    /// operand wrap). Bitwise identical to the scalar kernel.
+    ///
+    /// # Safety
+    /// AVX2 available; slice lengths checked by the safe wrapper.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn matmul_i32(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) {
+        let bp = b.as_ptr();
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            let cp = crow.as_mut_ptr();
+            let mut j = 0;
+            while j + 16 <= n {
+                let mut acc0 = _mm256_setzero_si256();
+                let mut acc1 = _mm256_setzero_si256();
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0 {
+                        // exact for integers: adding 0 never changes bits
+                        continue;
+                    }
+                    let avv = _mm256_set1_epi32(av);
+                    let row = bp.add(p * n + j);
+                    acc0 = _mm256_add_epi32(
+                        acc0,
+                        _mm256_mullo_epi32(avv, _mm256_loadu_si256(row as *const __m256i)),
+                    );
+                    acc1 = _mm256_add_epi32(
+                        acc1,
+                        _mm256_mullo_epi32(
+                            avv,
+                            _mm256_loadu_si256(row.add(8) as *const __m256i),
+                        ),
+                    );
+                }
+                _mm256_storeu_si256(cp.add(j) as *mut __m256i, acc0);
+                _mm256_storeu_si256(cp.add(j + 8) as *mut __m256i, acc1);
+                j += 16;
+            }
+            while j + 8 <= n {
+                let mut acc = _mm256_setzero_si256();
+                for (p, &av) in arow.iter().enumerate() {
+                    if av == 0 {
+                        continue;
+                    }
+                    acc = _mm256_add_epi32(
+                        acc,
+                        _mm256_mullo_epi32(
+                            _mm256_set1_epi32(av),
+                            _mm256_loadu_si256(bp.add(p * n + j) as *const __m256i),
+                        ),
+                    );
+                }
+                _mm256_storeu_si256(cp.add(j) as *mut __m256i, acc);
+                j += 8;
+            }
+            while j < n {
+                let mut acc = 0i32;
+                for (p, &av) in arow.iter().enumerate() {
+                    acc = acc.wrapping_add(av.wrapping_mul(b[p * n + j]));
+                }
+                crow[j] = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// Valid-mode int32 correlation of one tile, 8 output columns per
+    /// vector, kernel tap broadcast. Bitwise identical to
+    /// `filter2d_ref` (wrapping integer arithmetic).
+    ///
+    /// # Safety
+    /// AVX2 available; `x` holds at least `(oh+taps-1)*xw` elements
+    /// with `ow+taps-1 <= xw`, `out` holds `oh*ow` — the safe wrapper
+    /// checks all of it.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn filter2d_i32(
+        x: &[i32],
+        xw: usize,
+        kern: &[i32],
+        taps: usize,
+        oh: usize,
+        ow: usize,
+        out: &mut [i32],
+    ) {
+        let xp = x.as_ptr();
+        for i in 0..oh {
+            let orow = &mut out[i * ow..(i + 1) * ow];
+            let op = orow.as_mut_ptr();
+            let mut j = 0;
+            while j + 8 <= ow {
+                let mut acc = _mm256_setzero_si256();
+                for u in 0..taps {
+                    let base = xp.add((i + u) * xw + j);
+                    for v in 0..taps {
+                        let kv = _mm256_set1_epi32(kern[u * taps + v]);
+                        let xv = _mm256_loadu_si256(base.add(v) as *const __m256i);
+                        acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(kv, xv));
+                    }
+                }
+                _mm256_storeu_si256(op.add(j) as *mut __m256i, acc);
+                j += 8;
+            }
+            while j < ow {
+                let mut acc = 0i32;
+                for u in 0..taps {
+                    for v in 0..taps {
+                        let xv = x[(i + u) * xw + (j + v)];
+                        acc = acc.wrapping_add(xv.wrapping_mul(kern[u * taps + v]));
+                    }
+                }
+                orow[j] = acc;
+                j += 1;
+            }
+        }
+    }
+
+    /// One radix-2 FFT stage (`len >= 4`) over the interleaved (re, im)
+    /// f64 buffer: two butterflies per iteration through 256-bit lanes.
+    ///
+    /// Per butterfly the lane arithmetic is exactly the scalar stage's
+    /// `tr = wr*or − wi*oi; ti = wr*oi + wi*or; e ± t` — `addsub`
+    /// performs one IEEE sub on even lanes and one IEEE add on odd
+    /// lanes of already-rounded products, so the result is bitwise
+    /// identical to the scalar tier.
+    ///
+    /// # Safety
+    /// AVX2 available; `buf.len()` = 2n with `len` dividing n,
+    /// `tw.len()` = len (interleaved half-stage twiddles), `len >= 4`
+    /// — the safe wrapper checks all of it.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn fft_stage(buf: &mut [f64], tw: &[f64], len: usize) {
+        let n = buf.len() / 2;
+        let half = len / 2;
+        let bp = buf.as_mut_ptr();
+        let mut start = 0;
+        while start < n {
+            let mut k = 0;
+            while k < half {
+                // [wr0, wi0, wr1, wi1] for butterflies k and k+1
+                let w = _mm256_loadu_pd(tw.as_ptr().add(2 * k));
+                let e_ptr = bp.add(2 * (start + k));
+                let o_ptr = bp.add(2 * (start + k + half));
+                let e = _mm256_loadu_pd(e_ptr);
+                let o = _mm256_loadu_pd(o_ptr);
+                let wr = _mm256_movedup_pd(w); //      [wr0, wr0, wr1, wr1]
+                let wi = _mm256_permute_pd(w, 0b1111); // [wi0, wi0, wi1, wi1]
+                let osw = _mm256_permute_pd(o, 0b0101); // [oi0, or0, oi1, or1]
+                // even lanes wr*or − wi*oi (= tr), odd wr*oi + wi*or (= ti)
+                let t = _mm256_addsub_pd(_mm256_mul_pd(wr, o), _mm256_mul_pd(wi, osw));
+                _mm256_storeu_pd(e_ptr, _mm256_add_pd(e, t));
+                _mm256_storeu_pd(o_ptr, _mm256_sub_pd(e, t));
+                k += 2;
+            }
+            start += len;
+        }
+    }
+}
+
+/// Runtime capability gate for the SIMD tier: AVX2 (integer/f64 lanes)
+/// plus FMA (the f32 matmul contract). `false` on non-x86_64 builds.
+pub fn available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Batched f32 matmul over operands stacked along a leading batch dim
+/// (`a` = [batch, m, k], `b` = [batch, k, n], `c` = [batch, m, n],
+/// overwritten). Returns `false` (untouched `c`) when the SIMD tier is
+/// unavailable. A single job is `batch == 1` — the single-job and
+/// batched paths run the *same* kernel, so batching stays bitwise
+/// invisible within the tier.
+pub fn matmul_f32_batch_into(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+) -> bool {
+    assert_eq!(a.len(), batch * m * k, "stacked A shape mismatch");
+    assert_eq!(b.len(), batch * k * n, "stacked B shape mismatch");
+    assert_eq!(c.len(), batch * m * n, "stacked C shape mismatch");
+    if !available() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        for t in 0..batch {
+            // Safety: `available()` just confirmed AVX2+FMA; slice
+            // bounds established by the asserts above.
+            unsafe {
+                x86::matmul_f32(
+                    &a[t * m * k..(t + 1) * m * k],
+                    &b[t * k * n..(t + 1) * k * n],
+                    m,
+                    k,
+                    n,
+                    &mut c[t * m * n..(t + 1) * m * n],
+                );
+            }
+        }
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        unreachable!("available() is false off x86_64")
+    }
+}
+
+/// Wrapping-int32 matmul; `c` is overwritten. Returns `false`
+/// (untouched `c`) when the SIMD tier is unavailable.
+pub fn matmul_i32_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) -> bool {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert_eq!(c.len(), m * n, "C shape mismatch");
+    if !available() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Safety: AVX2 confirmed; bounds established above.
+        unsafe { x86::matmul_i32(a, b, m, k, n, c) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        unreachable!("available() is false off x86_64")
+    }
+}
+
+/// Valid-mode int32 correlation of one `xh x xw` tile with a square
+/// `taps x taps` kernel into `out` (`oh*ow`). Returns `false` when the
+/// SIMD tier is unavailable.
+pub fn filter2d_i32_into(
+    x: &[i32],
+    xh: usize,
+    xw: usize,
+    kern: &[i32],
+    taps: usize,
+    out: &mut [i32],
+) -> bool {
+    assert!(taps >= 1 && xh >= taps && xw >= taps, "tile smaller than the kernel");
+    let (oh, ow) = (xh - (taps - 1), xw - (taps - 1));
+    assert_eq!(x.len(), xh * xw, "tile shape mismatch");
+    assert_eq!(kern.len(), taps * taps, "kernel shape mismatch");
+    assert_eq!(out.len(), oh * ow, "output shape mismatch");
+    if !available() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Safety: AVX2 confirmed; the asserts pin every access —
+        // max load index (oh-1+taps-1)*xw + (ow-8)+taps-1+7 < xh*xw.
+        unsafe { x86::filter2d_i32(x, xw, kern, taps, oh, ow, out) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        unreachable!("available() is false off x86_64")
+    }
+}
+
+/// One radix-2 FFT stage over the interleaved (re, im) f64 buffer.
+/// `tw` is the stage's interleaved twiddle slice (`len` values = len/2
+/// complex factors). Returns `false` when the SIMD tier is unavailable
+/// or the stage is too narrow to vectorize (`len < 4` — the caller's
+/// scalar stage handles it).
+pub fn fft_stage(buf: &mut [f64], tw: &[f64], len: usize) -> bool {
+    let n = buf.len() / 2;
+    assert_eq!(buf.len() % 2, 0, "interleaved buffer must be even-length");
+    assert!(len.is_power_of_two() && len <= n.max(1), "stage width out of range");
+    assert_eq!(tw.len(), len, "stage twiddle slice must hold len/2 complex values");
+    if len < 4 || !available() {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        // Safety: AVX2 confirmed; len >= 4 makes half even, so the
+        // 2-butterfly steps tile each group exactly.
+        unsafe { x86::fft_stage(buf, tw, len) };
+        true
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        unreachable!("available() is false off x86_64")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Cross-tier parity is pinned exhaustively in
+    // rust/tests/kernel_tiers.rs; these unit tests cover the wrapper
+    // contracts that hold on every machine.
+
+    #[test]
+    fn wrappers_refuse_nothing_silently() {
+        // On a non-SIMD machine every wrapper must return false and
+        // leave the output untouched; on a SIMD machine they must run.
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let mut c = vec![-1.0f32; 4];
+        let ran = matmul_f32_batch_into(&a, &b, 1, 2, 2, 2, &mut c);
+        assert_eq!(ran, available());
+        if !ran {
+            assert!(c.iter().all(|&v| v == -1.0), "fallback must not scribble");
+        } else {
+            assert_eq!(c, vec![2.0, 2.0, 2.0, 2.0]);
+        }
+    }
+
+    #[test]
+    fn narrow_fft_stage_defers_to_scalar() {
+        // len == 2 stages are always the caller's scalar loop
+        let mut buf = vec![0.0f64; 8];
+        let tw = vec![1.0, 0.0];
+        assert!(!fft_stage(&mut buf, &tw, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "stacked A shape mismatch")]
+    fn wrapper_asserts_shapes_before_any_unsafe() {
+        let mut c = vec![0.0f32; 4];
+        matmul_f32_batch_into(&[0.0; 3], &[0.0; 4], 1, 2, 2, 2, &mut c);
+    }
+}

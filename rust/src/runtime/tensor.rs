@@ -7,6 +7,9 @@
 use anyhow::Context;
 use anyhow::{bail, Result};
 
+use super::simd;
+use super::tier::KernelTier;
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
     F32,
@@ -171,7 +174,7 @@ pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32
 ///
 /// Per output element the additions happen in the same ascending-k
 /// order as [`matmul_ref`], so results are bitwise identical to `batch`
-/// independent `matmul_ref` calls — batching must never change what a
+/// independent [`matmul_ref`] calls — batching must never change what a
 /// client observes.
 pub fn matmul_batch_ref(
     a: &[f32],
@@ -204,36 +207,165 @@ pub fn matmul_batch_into(
     c.clear();
     c.resize(batch * m * n, 0.0f32);
     for t in 0..batch {
-        let a = &a[t * m * k..(t + 1) * m * k];
-        let b = &b[t * k * n..(t + 1) * k * n];
-        let c = &mut c[t * m * n..(t + 1) * m * n];
-        for i in 0..m {
-            let arow = &a[i * k..(i + 1) * k];
-            let crow = &mut c[i * n..(i + 1) * n];
-            let mut p = 0;
-            while p + 4 <= k {
-                let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
-                let b0 = &b[p * n..(p + 1) * n];
-                let b1 = &b[(p + 1) * n..(p + 2) * n];
-                let b2 = &b[(p + 2) * n..(p + 3) * n];
-                let b3 = &b[(p + 3) * n..(p + 4) * n];
-                for j in 0..n {
-                    let mut v = crow[j];
-                    v += a0 * b0[j];
-                    v += a1 * b1[j];
-                    v += a2 * b2[j];
-                    v += a3 * b3[j];
-                    crow[j] = v;
-                }
-                p += 4;
+        matmul_block_into(
+            &a[t * m * k..(t + 1) * m * k],
+            &b[t * k * n..(t + 1) * k * n],
+            m,
+            k,
+            n,
+            &mut c[t * m * n..(t + 1) * m * n],
+        );
+    }
+}
+
+/// [`matmul_batch_into`] dispatched by kernel tier: the SIMD tier runs
+/// each job through the AVX2/FMA micro-kernel (tolerance contract, see
+/// DESIGN.md "Kernel dispatch tiers"), the scalar tier is exactly
+/// [`matmul_batch_into`].
+pub fn matmul_batch_into_tiered(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut Vec<f32>,
+    tier: KernelTier,
+) {
+    assert_eq!(a.len(), batch * m * k, "stacked A shape mismatch");
+    assert_eq!(b.len(), batch * k * n, "stacked B shape mismatch");
+    c.clear();
+    c.resize(batch * m * n, 0.0f32);
+    if tier == KernelTier::Simd && simd::matmul_f32_batch_into(a, b, batch, m, k, n, c) {
+        return;
+    }
+    for t in 0..batch {
+        matmul_block_into(
+            &a[t * m * k..(t + 1) * m * k],
+            &b[t * k * n..(t + 1) * k * n],
+            m,
+            k,
+            n,
+            &mut c[t * m * n..(t + 1) * m * n],
+        );
+    }
+}
+
+/// One job's f32 matmul into a **zeroed** caller slice, dispatched by
+/// tier. The single-job, sequential-batch and pooled-batch interp paths
+/// all run exactly this kernel, which is what keeps batch==sequential
+/// bitwise *within* a tier (cross-tier, the f32 family is a tolerance
+/// contract — see DESIGN.md).
+pub fn matmul_job_into(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [f32],
+    tier: KernelTier,
+) {
+    if tier == KernelTier::Simd && simd::matmul_f32_batch_into(a, b, 1, m, k, n, c) {
+        return;
+    }
+    matmul_block_into(a, b, m, k, n, c);
+}
+
+/// [`matmul_ref`] through the selected tier (fresh output allocation).
+pub fn matmul_tiered(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tier: KernelTier,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    matmul_job_into(a, b, m, k, n, &mut c, tier);
+    c
+}
+
+/// The scalar per-job body of [`matmul_batch_into`]: 4-way k-unrolled,
+/// accumulating into a zeroed `c` slice. Per output element the
+/// additions happen in [`matmul_ref`]'s ascending-k order, so this is
+/// bitwise identical to [`matmul_ref`].
+fn matmul_block_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        let mut p = 0;
+        while p + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[p], arow[p + 1], arow[p + 2], arow[p + 3]);
+            let b0 = &b[p * n..(p + 1) * n];
+            let b1 = &b[(p + 1) * n..(p + 2) * n];
+            let b2 = &b[(p + 2) * n..(p + 3) * n];
+            let b3 = &b[(p + 3) * n..(p + 4) * n];
+            for j in 0..n {
+                let mut v = crow[j];
+                v += a0 * b0[j];
+                v += a1 * b1[j];
+                v += a2 * b2[j];
+                v += a3 * b3[j];
+                crow[j] = v;
             }
-            while p < k {
-                let av = arow[p];
-                let brow = &b[p * n..(p + 1) * n];
-                for j in 0..n {
-                    crow[j] += av * brow[j];
-                }
-                p += 1;
+            p += 4;
+        }
+        while p < k {
+            let av = arow[p];
+            let brow = &b[p * n..(p + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+            p += 1;
+        }
+    }
+}
+
+/// Integer matmul with exact int32 accumulation (wrapping, like the
+/// hardware accumulator). Lives beside the f32 kernels so the tiers
+/// share one home; the interp backend's low-bit artifacts wrap their
+/// operands first.
+pub fn matmul_i32_ref(a: &[i32], b: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    matmul_i32_scalar_into(a, b, m, k, n, &mut c);
+    c
+}
+
+/// One job's int32 matmul into a **zeroed** caller slice, dispatched by
+/// tier. Wrapping int32 arithmetic is associative, so both tiers are
+/// bitwise identical to [`matmul_i32_ref`].
+pub fn matmul_i32_job_into(
+    a: &[i32],
+    b: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    c: &mut [i32],
+    tier: KernelTier,
+) {
+    if tier == KernelTier::Simd && simd::matmul_i32_into(a, b, m, k, n, c) {
+        return;
+    }
+    matmul_i32_scalar_into(a, b, m, k, n, c);
+}
+
+fn matmul_i32_scalar_into(a: &[i32], b: &[i32], m: usize, k: usize, n: usize, c: &mut [i32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p];
+            if av == 0 {
+                // exact for integers: adding 0 never changes bits
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] = crow[j].wrapping_add(av.wrapping_mul(brow[j]));
             }
         }
     }
@@ -249,14 +381,19 @@ pub fn matmul_batch_into(
 /// [`FftPlan::run`] evaluates the same butterfly dataflow as
 /// [`fft_ref`] — identical twiddle angles, identical f64 arithmetic per
 /// output — so planned FFT results match the recursive oracle, and any
-/// two paths through the plan match each other bitwise.
+/// two paths through the plan (scalar, SIMD, batched, pooled) match
+/// each other bitwise: the SIMD stage performs the same IEEE mul/sub/
+/// add sequence per butterfly, just two butterflies per vector.
 pub struct FftPlan {
     n: usize,
     /// Bit-reversal permutation of the input indices.
     rev: Vec<u32>,
-    /// Stage twiddles, concatenated: stage `len` contributes `len/2`
-    /// factors `e^{-2πik/len}`, for len = 2, 4, …, n (n-1 in total).
-    tw: Vec<(f64, f64)>,
+    /// Stage twiddles, interleaved (re, im) and concatenated: stage
+    /// `len` contributes `len/2` factors `e^{-2πik/len}` (= `len` f64
+    /// values), for len = 2, 4, …, n. Interleaved rather than tupled so
+    /// the SIMD stage can load them directly — `(f64, f64)` layout is
+    /// not guaranteed, `[f64]` is.
+    tw: Vec<f64>,
 }
 
 impl FftPlan {
@@ -268,12 +405,13 @@ impl FftPlan {
             let bits = n.trailing_zeros();
             (0..n as u32).map(|i| i.reverse_bits() >> (32 - bits)).collect()
         };
-        let mut tw = Vec::with_capacity(n.saturating_sub(1));
+        let mut tw = Vec::with_capacity(2 * n.saturating_sub(1));
         let mut len = 2;
         while len <= n {
             for k in 0..len / 2 {
                 let ang = -2.0 * std::f64::consts::PI * k as f64 / len as f64;
-                tw.push((ang.cos(), ang.sin()));
+                tw.push(ang.cos());
+                tw.push(ang.sin());
             }
             len <<= 1;
         }
@@ -284,41 +422,60 @@ impl FftPlan {
         self.n
     }
 
-    /// Transform one split-plane (re, im) pair.
+    /// Transform one split-plane (re, im) pair through the scalar tier.
     pub fn run(&self, re: &[f32], im: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.run_with_tier(re, im, KernelTier::Scalar)
+    }
+
+    /// Transform one split-plane (re, im) pair through the selected
+    /// tier. Both tiers produce bitwise identical results (see the type
+    /// docs); the tier only changes how many butterflies fly per
+    /// instruction.
+    pub fn run_with_tier(&self, re: &[f32], im: &[f32], tier: KernelTier) -> (Vec<f32>, Vec<f32>) {
         let n = self.n;
         assert_eq!(re.len(), n, "re plane length");
         assert_eq!(im.len(), n, "im plane length");
         if n <= 1 {
             return (re.to_vec(), im.to_vec());
         }
-        let mut buf: Vec<(f64, f64)> = (0..n)
-            .map(|i| {
-                let s = self.rev[i] as usize;
-                (re[s] as f64, im[s] as f64)
-            })
-            .collect();
+        // interleaved (re, im) working buffer — the layout both tiers
+        // share
+        let mut buf: Vec<f64> = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            let s = self.rev[i] as usize;
+            buf.push(re[s] as f64);
+            buf.push(im[s] as f64);
+        }
         let mut base = 0;
         let mut len = 2;
         while len <= n {
             let half = len / 2;
-            for start in (0..n).step_by(len) {
-                for k in 0..half {
-                    let (wr, wi) = self.tw[base + k];
-                    let (er, ei) = buf[start + k];
-                    let (or_, oi) = buf[start + k + half];
-                    let tr = wr * or_ - wi * oi;
-                    let ti = wr * oi + wi * or_;
-                    buf[start + k] = (er + tr, ei + ti);
-                    buf[start + k + half] = (er - tr, ei - ti);
+            let tw = &self.tw[2 * base..2 * base + len];
+            // the len==2 stage and non-SIMD machines take the scalar
+            // loop; a vectorized stage is bitwise identical to it
+            if !(tier == KernelTier::Simd && simd::fft_stage(&mut buf, tw, len)) {
+                for start in (0..n).step_by(len) {
+                    for k in 0..half {
+                        let (wr, wi) = (tw[2 * k], tw[2 * k + 1]);
+                        let e = 2 * (start + k);
+                        let o = 2 * (start + k + half);
+                        let (er, ei) = (buf[e], buf[e + 1]);
+                        let (or_, oi) = (buf[o], buf[o + 1]);
+                        let tr = wr * or_ - wi * oi;
+                        let ti = wr * oi + wi * or_;
+                        buf[e] = er + tr;
+                        buf[e + 1] = ei + ti;
+                        buf[o] = er - tr;
+                        buf[o + 1] = ei - ti;
+                    }
                 }
             }
             base += half;
             len <<= 1;
         }
         (
-            buf.iter().map(|c| c.0 as f32).collect(),
-            buf.iter().map(|c| c.1 as f32).collect(),
+            buf.chunks_exact(2).map(|c| c[0] as f32).collect(),
+            buf.chunks_exact(2).map(|c| c[1] as f32).collect(),
         )
     }
 }
@@ -328,6 +485,32 @@ pub fn filter2d_ref(x: &[i32], xh: usize, xw: usize, k: &[i32], taps: usize) -> 
     let oh = xh - (taps - 1);
     let ow = xw - (taps - 1);
     let mut out = vec![0i32; oh * ow];
+    filter2d_scalar_into(x, xh, xw, k, taps, &mut out);
+    out
+}
+
+/// One tile's valid-mode correlation into a caller slice (`oh*ow`,
+/// overwritten), dispatched by tier. Wrapping int32 arithmetic makes
+/// both tiers bitwise identical to [`filter2d_ref`].
+pub fn filter2d_job_into(
+    x: &[i32],
+    xh: usize,
+    xw: usize,
+    k: &[i32],
+    taps: usize,
+    out: &mut [i32],
+    tier: KernelTier,
+) {
+    if tier == KernelTier::Simd && simd::filter2d_i32_into(x, xh, xw, k, taps, out) {
+        return;
+    }
+    filter2d_scalar_into(x, xh, xw, k, taps, out);
+}
+
+fn filter2d_scalar_into(x: &[i32], xh: usize, xw: usize, k: &[i32], taps: usize, out: &mut [i32]) {
+    let oh = xh - (taps - 1);
+    let ow = xw - (taps - 1);
+    assert_eq!(out.len(), oh * ow, "output shape mismatch");
     for i in 0..oh {
         for j in 0..ow {
             let mut acc = 0i32;
@@ -341,7 +524,6 @@ pub fn filter2d_ref(x: &[i32], xh: usize, xw: usize, k: &[i32], taps: usize) -> 
             out[i * ow + j] = acc;
         }
     }
-    out
 }
 
 /// Rust-side complex FFT oracle (radix-2 recursive, f64 internally).
@@ -469,6 +651,52 @@ mod tests {
         let mut c = Vec::new();
         matmul_batch_into(&a, &eye, 1, 2, 2, 2, &mut c);
         assert_eq!(c, matmul_ref(&a, &eye, 2, 2, 2));
+    }
+
+    #[test]
+    fn scalar_tier_is_exactly_the_reference_kernels() {
+        // the tiered entry points with KernelTier::Scalar must be
+        // bitwise the reference kernels on every machine (the SIMD leg
+        // is pinned machine-dependently in tests/kernel_tiers.rs)
+        let (m, k, n) = (5usize, 7usize, 6usize);
+        let a: Vec<f32> = (0..m * k).map(|i| (i as f32 * 0.31).sin()).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i as f32 * 0.17).cos()).collect();
+        assert_eq!(matmul_tiered(&a, &b, m, k, n, KernelTier::Scalar), matmul_ref(&a, &b, m, k, n));
+        let mut c = Vec::new();
+        matmul_batch_into_tiered(&a[..m * k], &b[..k * n], 1, m, k, n, &mut c, KernelTier::Scalar);
+        assert_eq!(c, matmul_ref(&a, &b, m, k, n));
+
+        let ai: Vec<i32> = (0..m * k).map(|i| i as i32 % 7 - 3).collect();
+        let bi: Vec<i32> = (0..k * n).map(|i| 5 - i as i32 % 9).collect();
+        let mut ci = vec![0i32; m * n];
+        matmul_i32_job_into(&ai, &bi, m, k, n, &mut ci, KernelTier::Scalar);
+        assert_eq!(ci, matmul_i32_ref(&ai, &bi, m, k, n));
+
+        let x: Vec<i32> = (0..36).collect();
+        let kern: Vec<i32> = (0..9).map(|i| i - 4).collect();
+        let mut out = vec![0i32; 16];
+        filter2d_job_into(&x, 6, 6, &kern, 3, &mut out, KernelTier::Scalar);
+        assert_eq!(out, filter2d_ref(&x, 6, 6, &kern, 3));
+    }
+
+    #[test]
+    fn fft_run_is_the_scalar_tier() {
+        let n = 64;
+        let re: Vec<f32> = (0..n).map(|i| (i as f32 * 0.23).sin()).collect();
+        let im: Vec<f32> = (0..n).map(|i| (i as f32 * 0.41).cos()).collect();
+        let plan = FftPlan::new(n);
+        assert_eq!(plan.run(&re, &im), plan.run_with_tier(&re, &im, KernelTier::Scalar));
+    }
+
+    #[test]
+    fn matmul_i32_ref_identity_and_wrap() {
+        // identity pick-out plus a wrapping product
+        let a = vec![i32::MAX, 2, 3, 4];
+        let eye = vec![1, 0, 0, 1];
+        assert_eq!(matmul_i32_ref(&a, &eye, 2, 2, 2), a);
+        let two = vec![2, 0, 0, 2];
+        let c = matmul_i32_ref(&a, &two, 2, 2, 2);
+        assert_eq!(c[0], i32::MAX.wrapping_mul(2));
     }
 
     #[test]

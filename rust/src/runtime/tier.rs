@@ -1,0 +1,248 @@
+//! Kernel dispatch tiers for the interpreter backend.
+//!
+//! EA4RCA's premise is that kernel throughput, not communication, should
+//! be the ceiling for regular CA algorithms — so the default numerics
+//! path cannot stay scalar, unblocked-at-the-ISA-level Rust. The interp
+//! backend now carries two kernel tiers:
+//!
+//! * [`KernelTier::Scalar`] — the portable reference kernels
+//!   (`tensor::matmul_ref` and friends). Always available, on every
+//!   architecture; the bitwise ground truth the parity suite pins the
+//!   other tier against.
+//! * [`KernelTier::Simd`] — explicit `std::arch` x86_64 AVX2/FMA
+//!   kernels (see [`super::simd`]), selected only after runtime feature
+//!   detection. Integer kernels and the FFT butterflies are bitwise
+//!   identical to the scalar tier; the f32 matmul family trades bitwise
+//!   equality for FMA lanes under a pinned tolerance contract (see
+//!   DESIGN.md, "Kernel dispatch tiers").
+//!
+//! The tier is resolved **once per backend instance** (and recorded in
+//! every `PreparedArtifact` it builds), never per call: detection is a
+//! startup decision, the hot path only branches on an enum. On top of
+//! either tier sits the worker-pool parallel batch path
+//! ([`super::parallel`]), sized by [`TierConfig::pool_threads`].
+//!
+//! Knobs (environment, read at backend construction):
+//!
+//! * `EA4RCA_KERNEL_TIER` = `auto` (default) | `scalar` | `simd`.
+//!   `scalar` forces the portable tier anywhere (the runtime-fallback
+//!   drill CI runs); `simd` demands AVX2+FMA and fails loudly when the
+//!   CPU lacks it, so a "fast" deployment can never silently degrade.
+//! * `EA4RCA_POOL_THREADS` = worker-pool width for micro-batch fan-out
+//!   (default: `available_parallelism`; `1` disables the pool — the
+//!   right setting when the serving layer already runs one worker per
+//!   core, see README).
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use super::simd;
+
+/// Which kernel implementation family serves an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelTier {
+    /// Portable scalar reference kernels (every architecture).
+    Scalar,
+    /// x86_64 AVX2/FMA kernels behind runtime feature detection.
+    Simd,
+}
+
+impl KernelTier {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelTier::Scalar => "scalar",
+            KernelTier::Simd => "simd",
+        }
+    }
+
+    /// Whether this build + CPU can run the SIMD tier (runtime
+    /// detection; always `false` off x86_64).
+    pub fn simd_supported() -> bool {
+        simd::available()
+    }
+}
+
+impl fmt::Display for KernelTier {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A micro-batch must be at least this many jobs before the worker pool
+/// engages: below it, thread spawn + join costs more than the fan-out
+/// saves (the sequential stacked kernels are already amortized).
+pub const MIN_PARALLEL_JOBS: usize = 4;
+
+/// The backend's resolved kernel-dispatch configuration: which tier
+/// every `PreparedArtifact` will record, and how wide the micro-batch
+/// worker pool fans out. Resolved once at backend construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierConfig {
+    pub tier: KernelTier,
+    /// Worker-pool width for `execute_batch` fan-out (1 = disabled).
+    pub pool_threads: usize,
+}
+
+impl TierConfig {
+    /// Auto-detect: SIMD when the CPU supports it, pool as wide as the
+    /// machine. Ignores the environment (see [`TierConfig::from_env`]).
+    pub fn detect() -> TierConfig {
+        TierConfig {
+            tier: if simd::available() { KernelTier::Simd } else { KernelTier::Scalar },
+            pool_threads: default_pool_threads(),
+        }
+    }
+
+    /// The portable configuration: scalar kernels, no pool. What the
+    /// parity suite compares everything against.
+    pub fn scalar() -> TierConfig {
+        TierConfig { tier: KernelTier::Scalar, pool_threads: 1 }
+    }
+
+    /// Strict environment resolution (`EA4RCA_KERNEL_TIER`,
+    /// `EA4RCA_POOL_THREADS`): unknown values and an unsatisfiable
+    /// `simd` request are loud errors. `BackendKind::create` uses this,
+    /// so a CLI run with a bad knob fails readably at startup.
+    pub fn from_env() -> Result<TierConfig> {
+        TierConfig::resolve(
+            std::env::var("EA4RCA_KERNEL_TIER").ok().as_deref(),
+            std::env::var("EA4RCA_POOL_THREADS").ok().as_deref(),
+            simd::available(),
+            default_pool_threads(),
+        )
+    }
+
+    /// Lenient environment resolution for infallible constructors
+    /// (`InterpBackend::new`): a bad knob falls back to auto-detection
+    /// with a note on stderr instead of a panic or a silent ignore.
+    pub fn from_env_lenient() -> TierConfig {
+        match TierConfig::from_env() {
+            Ok(cfg) => cfg,
+            Err(e) => {
+                eprintln!("note: {e}; using the auto-detected kernel tier");
+                TierConfig::detect()
+            }
+        }
+    }
+
+    /// The pure resolution rule behind [`TierConfig::from_env`], split
+    /// out so tests can exercise every branch without touching
+    /// process-global environment variables.
+    pub fn resolve(
+        tier_req: Option<&str>,
+        pool_req: Option<&str>,
+        simd_supported: bool,
+        default_threads: usize,
+    ) -> Result<TierConfig> {
+        let tier = match tier_req {
+            None | Some("") | Some("auto") => {
+                if simd_supported {
+                    KernelTier::Simd
+                } else {
+                    KernelTier::Scalar
+                }
+            }
+            Some("scalar") => KernelTier::Scalar,
+            Some("simd") => {
+                if !simd_supported {
+                    bail!(
+                        "EA4RCA_KERNEL_TIER=simd but this CPU/build has no AVX2+FMA \
+                         (use auto or scalar)"
+                    );
+                }
+                KernelTier::Simd
+            }
+            Some(other) => {
+                bail!(
+                    "unknown EA4RCA_KERNEL_TIER {other:?} (expected auto | scalar | simd)"
+                )
+            }
+        };
+        let pool_threads = match pool_req {
+            None | Some("") => default_threads.max(1),
+            Some(s) => match s.parse::<usize>() {
+                // 0 and 1 both mean "no pool": a pool of one thread is
+                // the sequential path with extra steps
+                Ok(n) => n.max(1),
+                Err(_) => {
+                    bail!("EA4RCA_POOL_THREADS must be an integer, got {s:?}")
+                }
+            },
+        };
+        Ok(TierConfig { tier, pool_threads })
+    }
+}
+
+fn default_pool_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_follows_detection() {
+        let on = TierConfig::resolve(None, None, true, 4).unwrap();
+        assert_eq!(on.tier, KernelTier::Simd);
+        assert_eq!(on.pool_threads, 4);
+        let off = TierConfig::resolve(Some("auto"), None, false, 4).unwrap();
+        assert_eq!(off.tier, KernelTier::Scalar);
+    }
+
+    #[test]
+    fn scalar_is_always_satisfiable() {
+        for supported in [true, false] {
+            let cfg = TierConfig::resolve(Some("scalar"), None, supported, 8).unwrap();
+            assert_eq!(cfg.tier, KernelTier::Scalar);
+        }
+    }
+
+    #[test]
+    fn forced_simd_without_hardware_is_a_readable_error() {
+        let err = TierConfig::resolve(Some("simd"), None, false, 2).unwrap_err().to_string();
+        assert!(err.contains("AVX2"), "{err}");
+        assert_eq!(
+            TierConfig::resolve(Some("simd"), None, true, 2).unwrap().tier,
+            KernelTier::Simd
+        );
+    }
+
+    #[test]
+    fn unknown_tier_lists_the_vocabulary() {
+        let err = TierConfig::resolve(Some("waffle"), None, true, 2).unwrap_err().to_string();
+        assert!(err.contains("auto | scalar | simd"), "{err}");
+    }
+
+    #[test]
+    fn pool_parsing_and_floor() {
+        assert_eq!(TierConfig::resolve(None, Some("6"), false, 2).unwrap().pool_threads, 6);
+        // 0 and 1 both disable the pool
+        assert_eq!(TierConfig::resolve(None, Some("0"), false, 2).unwrap().pool_threads, 1);
+        assert_eq!(TierConfig::resolve(None, Some("1"), false, 2).unwrap().pool_threads, 1);
+        assert!(TierConfig::resolve(None, Some("many"), false, 2).is_err());
+    }
+
+    #[test]
+    fn detection_agrees_with_the_simd_module() {
+        assert_eq!(KernelTier::simd_supported(), simd::available());
+        let cfg = TierConfig::detect();
+        if KernelTier::simd_supported() {
+            assert_eq!(cfg.tier, KernelTier::Simd);
+        } else {
+            assert_eq!(cfg.tier, KernelTier::Scalar);
+        }
+        assert!(cfg.pool_threads >= 1);
+        assert_eq!(TierConfig::scalar(), TierConfig {
+            tier: KernelTier::Scalar,
+            pool_threads: 1
+        });
+    }
+
+    #[test]
+    fn tier_names_render() {
+        assert_eq!(KernelTier::Scalar.name(), "scalar");
+        assert_eq!(format!("{}", KernelTier::Simd), "simd");
+    }
+}
