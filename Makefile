@@ -1,7 +1,7 @@
 # Convenience entry points. The rust build is hermetic; `artifacts` is
 # only needed for the PJRT backend (requires jax).
 
-.PHONY: build test verify static-gate lint bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke tier-test tier-bench artifacts pytest probe
+.PHONY: build test verify static-gate race-gate lint bench-baseline stress cluster-stress warm-bench sim-serve cost-bench api-smoke tier-test tier-bench artifacts pytest probe
 
 build:
 	cargo build --release
@@ -10,10 +10,10 @@ test:
 	cargo build --release && cargo test -q
 
 # The full verification gate in one command — what CI runs, locally:
-# static structural gate, fmt, clippy -D warnings, tier-1 build+tests,
-# doctests, the design-rule sweep, and the release stress/cluster
-# suites.
-verify: static-gate
+# static structural gate, concurrency/unsafe race gate, fmt, clippy
+# -D warnings, tier-1 build+tests, doctests, the design-rule sweep,
+# and the release stress/cluster suites.
+verify: static-gate race-gate
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings
 	cargo build --release
@@ -34,6 +34,15 @@ lint:
 # registration, crate-root import resolution, feature-gate names.
 static-gate:
 	python3 tools/verify.py
+
+# Concurrency + unsafe-contract gate (toolchain-free, python3 only):
+# inter-procedural lock-order graph (deadlock cycles, locks across
+# Condvar waits and long/blocking calls), unsafe/SAFETY-comment and
+# #[target_feature] guard audit, shared-state hygiene. Runs its own
+# negative-fixture self-test first so the rules are proven live.
+race-gate:
+	python3 -m tools.analyze --self-test
+	python3 -m tools.analyze
 
 # Refresh the committed BENCH_*.json baselines (release mode only —
 # a debug-mode file is marked "build_mode": "debug" and must not be

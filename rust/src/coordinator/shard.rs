@@ -41,27 +41,19 @@
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{mpsc, Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::runtime::{BackendKind, CostPrediction, Runtime, Tensor};
+// Poison-recovering lock shared with the runtime backends (see
+// `util::sync` for the recovery rationale). All lock sites in this
+// module go through `lock_clean` or the matching
+// `unwrap_or_else(PoisonError::into_inner)` on condvar waits.
+use crate::util::sync::lock_clean;
 
-/// Poison-recovering lock. A thread that panics while holding one of
-/// the serving locks (admission state, cost book) poisons the mutex;
-/// with bare `.lock().unwrap()` that one crash cascades — submitters,
-/// the dispatcher, and finally `drain()` all panic in turn. Every
-/// critical section here leaves the protected state consistent at each
-/// unlock point (plain queue/map mutations, no multi-step invariants
-/// spanning an unwind), so recovering the guard is safe and keeps the
-/// shard serving. All lock sites in this module go through this
-/// helper or the matching `unwrap_or_else(PoisonError::into_inner)` on
-/// condvar waits.
-pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
+use crate::runtime::{BackendKind, CostPrediction, Runtime, Tensor};
 
 /// How long a blocking submit waits for queue space before giving up
 /// with [`SubmitError::Saturated`] (blocking forever would hide

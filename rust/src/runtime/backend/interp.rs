@@ -42,6 +42,7 @@ use crate::runtime::tensor::{
     filter2d_job_into, matmul_i32_job_into, matmul_job_into, matmul_tiered, FftPlan, Tensor,
 };
 use crate::runtime::tier::{KernelTier, TierConfig};
+use crate::util::sync::lock_clean;
 
 use super::{Backend, CacheStats};
 
@@ -271,7 +272,7 @@ impl InterpBackend {
     /// Cache lookup, building on miss. The lock is held across a build
     /// so concurrent first-uses of one artifact construct its plan once.
     fn prepared_for(&self, meta: &ArtifactMeta) -> Result<Arc<PreparedArtifact>> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_clean(&self.cache);
         if let Some(p) = cache.get(&meta.name) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::clone(p));
@@ -376,7 +377,7 @@ impl Backend for InterpBackend {
     }
 
     fn kernel_tier(&self, meta: &ArtifactMeta) -> Option<KernelTier> {
-        self.cache.lock().unwrap().get(&meta.name).map(|p| p.tier)
+        lock_clean(&self.cache).get(&meta.name).map(|p| p.tier)
     }
 
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {

@@ -13,12 +13,13 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
 use crate::runtime::manifest::{ArtifactMeta, Manifest};
 use crate::runtime::tensor::Tensor;
+use crate::util::sync::lock_clean;
 
 use super::{Backend, CacheStats};
 
@@ -32,9 +33,15 @@ use super::{Backend, CacheStats};
 /// an unprepared artifact is a readable error, never a hidden compile
 /// on the hot path. Build/hit counters surface through
 /// [`Backend::cache_stats`] like the interpreter's.
+///
+/// Executables are cached behind `Arc` so the execute paths clone the
+/// handle and release the cache lock *before* running: holding the map
+/// lock across `execute` would serialize every caller of this backend
+/// behind one job's device time (the lock-order gate's RACE-003 lint
+/// caught exactly that in the original layout).
 pub struct PjrtBackend {
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
     builds: AtomicU64,
     hits: AtomicU64,
 }
@@ -49,6 +56,17 @@ impl PjrtBackend {
             hits: AtomicU64::new(0),
         })
     }
+
+    /// Clone the prepared executable handle for `meta`, holding the
+    /// cache lock only for the map lookup — never across device time.
+    fn executable(&self, meta: &ArtifactMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let cache = lock_clean(&self.cache);
+        let Some(exe) = cache.get(&meta.name) else {
+            bail!("artifact {} was not prepared before execute", meta.name);
+        };
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Ok(Arc::clone(exe))
+    }
 }
 
 impl Backend for PjrtBackend {
@@ -57,7 +75,7 @@ impl Backend for PjrtBackend {
     }
 
     fn prepare(&self, manifest: &Manifest, meta: &ArtifactMeta) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_clean(&self.cache);
         if cache.contains_key(&meta.name) {
             self.hits.fetch_add(1, Ordering::Relaxed);
             return Ok(());
@@ -73,7 +91,7 @@ impl Backend for PjrtBackend {
             .compile(&comp)
             .with_context(|| format!("compiling artifact {}", meta.name))?;
         self.builds.fetch_add(1, Ordering::Relaxed);
-        cache.insert(meta.name.clone(), exe);
+        cache.insert(meta.name.clone(), Arc::new(exe));
         Ok(())
     }
 
@@ -87,24 +105,16 @@ impl Backend for PjrtBackend {
     }
 
     fn execute(&self, meta: &ArtifactMeta, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let cache = self.cache.lock().unwrap();
-        let Some(exe) = cache.get(&meta.name) else {
-            bail!("artifact {} was not prepared before execute", meta.name);
-        };
-        self.hits.fetch_add(1, Ordering::Relaxed);
-        run_one(exe, meta, inputs)
+        let exe = self.executable(meta)?;
+        run_one(&exe, meta, inputs)
     }
 
     /// Micro-batch path: one executable-cache lookup (and lock) for the
     /// whole batch; each job still marshals its own literals — PJRT has
     /// no cross-job fusion for distinct operand sets.
     fn execute_batch(&self, meta: &ArtifactMeta, jobs: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
-        let cache = self.cache.lock().unwrap();
-        let Some(exe) = cache.get(&meta.name) else {
-            bail!("artifact {} was not prepared before execute", meta.name);
-        };
-        self.hits.fetch_add(1, Ordering::Relaxed);
-        jobs.iter().map(|inputs| run_one(exe, meta, inputs)).collect()
+        let exe = self.executable(meta)?;
+        jobs.iter().map(|inputs| run_one(&exe, meta, inputs)).collect()
     }
 }
 

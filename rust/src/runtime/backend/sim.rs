@@ -37,6 +37,7 @@ use crate::sim::core::{fft_ops, filter_ops, mm_ops, KernelClass};
 use crate::sim::memory::ResourceUsage;
 use crate::sim::params::HwParams;
 use crate::sim::power::{estimate, PowerBreakdownInput};
+use crate::util::sync::lock_clean;
 
 use super::interp::InterpBackend;
 use super::{Backend, CacheStats, CostPrediction};
@@ -235,7 +236,7 @@ impl SimBackend {
     /// Prediction with a loud error path (prepare uses this; the trait's
     /// `predict` flattens it to `Option`).
     fn predict_inner(&self, meta: &ArtifactMeta, batch: usize) -> Result<CostPrediction> {
-        let mut models = self.models.lock().unwrap();
+        let mut models = lock_clean(&self.models);
         let model = match models.entry(meta.name.clone()) {
             Entry::Occupied(e) => e.into_mut(),
             Entry::Vacant(v) => v.insert(CostModel::build(meta)?),

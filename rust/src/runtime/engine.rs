@@ -15,6 +15,7 @@ use crate::runtime::backend::{Backend, BackendKind, CacheStats, CostPrediction};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::tier::KernelTier;
+use crate::util::sync::lock_clean;
 
 /// Per-artifact execution statistics (hot-path observability).
 #[derive(Debug, Default, Clone)]
@@ -97,7 +98,7 @@ impl Runtime {
     /// — the hot path pays one set lookup here, no extra lock and no
     /// String clone.
     fn prepare(&self, meta: &crate::runtime::manifest::ArtifactMeta) -> Result<bool> {
-        let mut prepared = self.prepared.lock().unwrap();
+        let mut prepared = lock_clean(&self.prepared);
         if prepared.contains(&meta.name) {
             return Ok(true);
         }
@@ -105,7 +106,7 @@ impl Runtime {
         self.backend.prepare(&self.manifest, meta)?;
         let dt = t0.elapsed().as_secs_f64();
         prepared.insert(meta.name.clone());
-        let mut stats = self.stats.lock().unwrap();
+        let mut stats = lock_clean(&self.stats);
         let s = stats.entry(meta.name.clone()).or_default();
         s.compile_secs += dt;
         s.prepare_builds += 1;
@@ -119,9 +120,7 @@ impl Runtime {
             let meta = self.manifest.get(n)?;
             if self.prepare(meta)? {
                 // not hot: account the redundant warm-up as a hit here
-                self.stats
-                    .lock()
-                    .unwrap()
+                lock_clean(&self.stats)
                     .entry(meta.name.clone())
                     .or_default()
                     .prepare_hits += 1;
@@ -146,7 +145,7 @@ impl Runtime {
         let outputs = self.backend.execute(meta, inputs)?;
         let dt = t0.elapsed().as_secs_f64();
         {
-            let mut stats = self.stats.lock().unwrap();
+            let mut stats = lock_clean(&self.stats);
             let s = stats.entry(name.to_string()).or_default();
             s.executions += 1;
             s.total_exec_secs += dt;
@@ -213,7 +212,7 @@ impl Runtime {
             // fallback path a job's backend error is its own result,
             // not an execution)
             let ok_jobs = outputs.iter().filter(|r| r.is_ok()).count() as u64;
-            let mut stats = self.stats.lock().unwrap();
+            let mut stats = lock_clean(&self.stats);
             let s = stats.entry(name.to_string()).or_default();
             s.executions += ok_jobs;
             s.total_exec_secs += dt;
@@ -242,7 +241,7 @@ impl Runtime {
     }
 
     pub fn stats(&self) -> HashMap<String, ExecStats> {
-        self.stats.lock().unwrap().clone()
+        lock_clean(&self.stats).clone()
     }
 
     /// Backend-level prepared-artifact cache counters (builds should
@@ -270,7 +269,7 @@ impl Runtime {
 
     /// Mean execution seconds for an artifact, if it has run.
     pub fn mean_exec_secs(&self, name: &str) -> Option<f64> {
-        let stats = self.stats.lock().unwrap();
+        let stats = lock_clean(&self.stats);
         stats.get(name).and_then(|s| {
             (s.executions > 0).then(|| s.total_exec_secs / s.executions as f64)
         })

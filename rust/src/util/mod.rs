@@ -10,6 +10,8 @@
 //! * [`stats`] — mean/stddev/percentile helpers for measurements.
 //! * [`cli`]   — tiny flag/option parser (replaces `clap`).
 //! * [`bench`] — `BENCH_*.json` emission for the measuring benches.
+//! * [`sync`]  — poison-recovering lock helper shared by the serving
+//!   path (coordinator + runtime backends).
 
 pub mod bench;
 pub mod cli;
@@ -17,4 +19,5 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod table;

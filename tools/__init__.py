@@ -1,0 +1,3 @@
+# Marks tools/ as a package so `python3 -m tools.analyze` resolves from
+# the repo root. The scripts here are zero-dependency by policy (they
+# must run in authoring containers that only ship a Python interpreter).

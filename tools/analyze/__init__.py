@@ -1,0 +1,36 @@
+"""Toolchain-free concurrency + unsafe-contract static analyzer.
+
+Three passes over ``rust/src/`` (see ``tools/analyze/__main__.py`` for
+the rule table and exit contract):
+
+* ``lockgraph``     — RACE-001/002/003: inter-procedural lock-order
+  graph, condvar cross-waits, locks held across long calls.
+* ``unsafe_audit``  — UNSAFE-001/002/003: SAFETY comments,
+  ``#[target_feature]`` reachability guards, module allowlist.
+* ``shared_state``  — RACE-010/011/012: ``static mut``, thread-private
+  locks moved into spawns, non-counter ``Ordering::Relaxed``.
+
+Zero-dependency Python in the same style as ``tools/verify.py``: the
+lexer blanks comments/strings and ``#[cfg(test)]`` blocks, everything
+downstream is regex + brace matching over the blanked text. This is a
+*linter*, not a model checker — each pass documents what it can and
+cannot prove in DESIGN.md ("Static analysis layers").
+"""
+
+from collections import namedtuple
+
+# One diagnostic. `line_text` carries the original source line so
+# allowlist fragments can match against what the author actually wrote
+# (mirrors the unwrap allowlist contract in tools/verify.py).
+Finding = namedtuple("Finding", "code path line message line_text")
+
+
+def render(f):
+    """Stable single-line rendering: `CODE path:line: message`."""
+    return "%s %s:%d: %s" % (f.code, f.path, f.line, f.message)
+
+
+def sort_findings(findings):
+    """Deterministic order: by code, then path, then line, then text —
+    the golden self-test pins the output byte-stable on this."""
+    return sorted(findings, key=lambda f: (f.code, f.path, f.line, f.message))

@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Concurrency + unsafe-contract gate for the EA4RCA serving stack.
+
+Usage:
+    python3 -m tools.analyze               # analyze rust/src, exit 1 on findings
+    python3 -m tools.analyze --self-test   # fixture corpus + golden run
+    python3 -m tools.analyze --list-rules  # rule table
+
+Rules (see DESIGN.md "Static analysis layers" for the full contract):
+
+    RACE-001   lock-order cycle in the inter-procedural acquired-while-
+               held graph (potential deadlock)
+    RACE-002   lock held across a Condvar wait guarding a different lock
+    RACE-003   blocking guard held across a long/blocking call
+               (Backend::execute*, thread::scope, .join(), .recv*,
+               thread::sleep) — directly or through the call graph
+    RACE-010   `static mut`
+    RACE-011   bare (non-Arc) lock local moved into a spawned thread
+    RACE-012   Ordering::Relaxed outside a pure counter
+    UNSAFE-001 unsafe fn/impl/block without a SAFETY comment
+    UNSAFE-002 #[target_feature] fn called without a feature-detection
+               guard in the caller
+    UNSAFE-003 unsafe outside the modules vetted in
+               tools/unsafe_allowlist.txt
+
+Allowlists:
+    tools/unsafe_allowlist.txt  path fragments of modules vetted to
+                                contain unsafe (UNSAFE-003).
+    tools/race_allowlist.txt    `path:fragment` entries suppressing an
+                                individual RACE-xxx / UNSAFE-001/002
+                                finding; the fragment must appear in the
+                                flagged source line (or, for multi-site
+                                findings like RACE-001, in the message).
+    A stale entry in either list fails the gate (exit 1) — the same
+    no-rot contract tools/verify.py enforces for the unwrap allowlist.
+
+Exit status: 0 clean, 1 findings (or a failed self-test).
+Zero-dependency Python by policy; runs in any authoring container.
+"""
+
+import argparse
+import os
+import sys
+
+from . import render, sort_findings
+from .lexer import REPO, functions, parse_file, rust_sources
+from . import lockgraph, shared_state, unsafe_audit
+
+RUST_SRC = os.path.join(REPO, "rust", "src")
+UNSAFE_ALLOWLIST = os.path.join("tools", "unsafe_allowlist.txt")
+RACE_ALLOWLIST = os.path.join("tools", "race_allowlist.txt")
+FIXTURES = os.path.join(REPO, "tools", "analyze", "fixtures")
+
+ALL_RULES = (
+    "RACE-001", "RACE-002", "RACE-003", "RACE-010", "RACE-011", "RACE-012",
+    "UNSAFE-001", "UNSAFE-002", "UNSAFE-003",
+)
+
+
+def load_fragments(rel_path, split_path=False):
+    """Allowlist loader. `split_path=True` parses `path:fragment` pairs
+    (race allowlist); otherwise each line is one path fragment (unsafe
+    allowlist). Returns a list of entries plus the raw line for
+    stale-entry accounting."""
+    entries = []
+    full = os.path.join(REPO, rel_path)
+    if not os.path.exists(full):
+        return entries
+    for raw in open(full, encoding="utf-8"):
+        s = raw.strip()
+        if not s or s.startswith("#"):
+            continue
+        if split_path:
+            p, _, frag = s.partition(":")
+            if p and frag:
+                entries.append(((p.strip(), frag.strip()), s))
+        else:
+            entries.append((s, s))
+    return entries
+
+
+def analyze_tree(sources, unsafe_allow, race_allow):
+    """Run all three passes. Returns (findings, stats, stale_errors)."""
+    fns_by_file = {sf.rel: functions(sf) for sf in sources}
+    unsafe_used, race_used = set(), set()
+
+    findings = []
+    findings += lockgraph.analyze(sources, fns_by_file)
+    findings += shared_state.analyze(sources, fns_by_file)
+    findings += unsafe_audit.analyze(sources, fns_by_file, unsafe_allow, unsafe_used)
+
+    # race allowlist: suppress individually vetted findings
+    kept = []
+    for f in findings:
+        hit = None
+        for (p, frag), raw in race_allow:
+            if p == f.path and (frag in f.line_text or frag in f.message):
+                hit = raw
+                break
+        if hit:
+            race_used.add(hit)
+        else:
+            kept.append(f)
+
+    stale = []
+    for _, raw in race_allow:
+        if raw not in race_used:
+            stale.append(
+                "%s: stale entry `%s` (suppresses nothing) — remove it"
+                % (RACE_ALLOWLIST, raw)
+            )
+
+    nlocks = sum(
+        len(v) for v in lockgraph.collect_decls(sources)[0].values()
+    )
+    stats = {
+        "files": len(sources),
+        "fns": sum(len(v) for v in fns_by_file.values()),
+        "locks": nlocks,
+    }
+    return sort_findings(kept), stats, stale
+
+
+def run_gate():
+    sources = [parse_file(full, rel) for rel, full in rust_sources(RUST_SRC)]
+    unsafe_allow = load_fragments(UNSAFE_ALLOWLIST)
+    race_allow = load_fragments(RACE_ALLOWLIST, split_path=True)
+    findings, stats, stale = analyze_tree(sources, unsafe_allow, race_allow)
+
+    out = []
+    for f in findings:
+        out.append(render(f))
+    for s in stale:
+        out.append("allowlist-error %s" % s)
+    if out:
+        out.append(
+            "race gate: %d finding(s) across %d files — fix them or vet "
+            "them into the allowlists with a justification"
+            % (len(findings) + len(stale), stats["files"])
+        )
+        print("\n".join(out))
+        return 1
+    print(
+        "race gate: OK (%d files, %d fns, %d lock fields; "
+        "lock-order + unsafe-contract + shared-state passes clean)"
+        % (stats["files"], stats["fns"], stats["locks"])
+    )
+    return 0
+
+
+def run_gate_to_string():
+    """The golden self-test needs the gate's exact output twice."""
+    import io
+    from contextlib import redirect_stdout
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        code = run_gate()
+    return code, buf.getvalue()
+
+
+def self_test():
+    failures = []
+    fixture_files = sorted(
+        f for f in os.listdir(FIXTURES) if f.endswith(".rs")
+    )
+    covered = set()
+    for fname in fixture_files:
+        full = os.path.join(FIXTURES, fname)
+        first = open(full, encoding="utf-8").readline()
+        if "expect:" not in first:
+            failures.append("%s: missing `// expect: CODE` header" % fname)
+            continue
+        expected = first.split("expect:")[1].strip()
+        covered.add(expected)
+        rel = "tools/analyze/fixtures/" + fname
+        sf = parse_file(full, rel)
+        # Fixtures exercising anything but the module policy run with
+        # the fixtures dir allowlisted, so their (intentional) unsafe
+        # doesn't drag UNSAFE-003 into every expectation. The UNSAFE-003
+        # fixture runs with an empty allowlist, and unsafe-free fixtures
+        # get none either (an unused entry would trip the stale check).
+        has_unsafe = "unsafe" in sf.stripped
+        unsafe_allow = (
+            [("tools/analyze/fixtures", "tools/analyze/fixtures")]
+            if has_unsafe and expected != "UNSAFE-003" else []
+        )
+        findings, _, _ = analyze_tree([sf], unsafe_allow, [])
+        codes = {f.code for f in findings}
+        if codes != {expected}:
+            failures.append(
+                "%s: expected exactly {%s}, analyzer said %s%s"
+                % (fname, expected, sorted(codes) or "{}",
+                   "".join("\n    " + render(f) for f in findings))
+            )
+    missing = [r for r in ALL_RULES if r not in covered]
+    if missing:
+        failures.append("no tripping fixture for rule(s): %s" % ", ".join(missing))
+
+    # Golden run: the shipped tree is clean and the output byte-stable.
+    code1, out1 = run_gate_to_string()
+    code2, out2 = run_gate_to_string()
+    if code1 != 0:
+        failures.append("golden: shipped tree is not clean:\n%s" % out1)
+    if out1 != out2:
+        failures.append("golden: analyzer output is not byte-stable")
+
+    if failures:
+        print("self-test: %d failure(s)" % len(failures))
+        for f in failures:
+            print("  - %s" % f)
+        return 1
+    print(
+        "self-test: OK (%d fixtures, %d rules covered, golden run "
+        "byte-stable and clean)" % (len(fixture_files), len(covered))
+    )
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        prog="tools.analyze", description=__doc__.splitlines()[0]
+    )
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the fixture corpus + golden run")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    args = ap.parse_args()
+    if args.list_rules:
+        print(__doc__)
+        return 0
+    if args.self_test:
+        return self_test()
+    return run_gate()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

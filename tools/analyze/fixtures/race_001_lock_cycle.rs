@@ -1,0 +1,30 @@
+// expect: RACE-001
+// The seeded deadlock: two coordinator-style functions acquire the
+// same pair of locks in opposite orders — submit_path holds `alpha`
+// while (through drain_queue) taking `beta`; report_path holds `beta`
+// while taking `alpha`. The analyzer must stitch the inter-procedural
+// edge alpha -> beta through the call graph and close the cycle.
+
+use std::sync::Mutex;
+
+struct Coordinator {
+    alpha: Mutex<u32>,
+    beta: Mutex<u32>,
+}
+
+fn submit_path(c: &Coordinator) {
+    let a = c.alpha.lock().unwrap();
+    drain_queue(c);
+    drop(a);
+}
+
+fn drain_queue(c: &Coordinator) {
+    let b = c.beta.lock().unwrap();
+    let _ = *b + 1;
+}
+
+fn report_path(c: &Coordinator) -> u32 {
+    let b = c.beta.lock().unwrap();
+    let a = c.alpha.lock().unwrap();
+    *b + *a
+}

@@ -1,0 +1,23 @@
+// expect: RACE-002
+// A thread parks on `not_empty` (which guards `state`) while still
+// holding `stats` — every other taker of `stats` now blocks for the
+// whole wait, and if the waker needs `stats` to signal, nobody ever
+// wakes.
+
+use std::sync::{Condvar, Mutex};
+
+struct Shard {
+    state: Mutex<u32>,
+    stats: Mutex<u32>,
+    not_empty: Condvar,
+}
+
+fn wait_holding_extra(sh: &Shard) {
+    let held = sh.stats.lock().unwrap();
+    let mut st = sh.state.lock().unwrap();
+    while *st == 0 {
+        st = sh.not_empty.wait(st).unwrap();
+    }
+    drop(st);
+    drop(held);
+}

@@ -1,0 +1,16 @@
+// expect: RACE-003
+// A blocking guard held across Backend::execute_batch — the whole
+// micro-batch's device time serializes every other taker of `cache`
+// behind this one dispatch.
+
+use std::sync::Mutex;
+
+struct Worker {
+    cache: Mutex<u32>,
+}
+
+fn dispatch_under_lock(w: &Worker, rt: &Runtime, jobs: &JobSet) {
+    let guard = w.cache.lock().unwrap();
+    let _results = rt.execute_batch(jobs);
+    drop(guard);
+}

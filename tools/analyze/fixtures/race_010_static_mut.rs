@@ -1,0 +1,8 @@
+// expect: RACE-010
+// A `static mut` global: every access is an unsynchronized data race
+// waiting to happen (and unsafe to even touch). Use an atomic, a
+// Mutex, or OnceLock.
+
+static mut DISPATCH_COUNT: u64 = 0;
+
+pub fn noop() {}

@@ -1,0 +1,15 @@
+// expect: RACE-011
+// A bare Mutex local moved into a spawned thread: the lock is now
+// private to that thread — nothing else can ever contend it, and the
+// state it "guards" is lost when the thread exits. Share it with
+// Arc::new(Mutex::new(..)) instead.
+
+use std::sync::Mutex;
+
+fn spawn_with_private_lock() {
+    let shared = Mutex::new(0u32);
+    std::thread::spawn(move || {
+        let mut g = shared.lock().unwrap();
+        *g += 1;
+    });
+}

@@ -1,0 +1,11 @@
+// expect: RACE-012
+// A Relaxed *store* used as a publication flag: nothing orders the
+// writes that happened before it, so a reader that sees `true` may
+// still read stale data. Publication needs Release (paired with an
+// Acquire load).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+fn publish(ready: &AtomicBool) {
+    ready.store(true, Ordering::Relaxed);
+}

@@ -1,0 +1,7 @@
+// expect: UNSAFE-001
+// An unsafe block with no SAFETY comment: the invariant that makes the
+// raw-pointer read sound lives only in the author's head.
+
+fn read_first(xs: &[f32]) -> f32 {
+    unsafe { *xs.as_ptr() }
+}

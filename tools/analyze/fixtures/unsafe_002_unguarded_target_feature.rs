@@ -1,0 +1,20 @@
+// expect: UNSAFE-002
+// A #[target_feature] kernel called from a wrapper that never checks
+// is_x86_feature_detected! (and calls no guard fn): executing the AVX2
+// instruction on a CPU without the feature is immediate UB (SIGILL at
+// best).
+
+/// # Safety
+/// Caller must ensure AVX2 is available on the executing CPU.
+#[target_feature(enable = "avx2")]
+unsafe fn kernel(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x += 1.0;
+    }
+}
+
+pub fn wrapper(xs: &mut [f32]) {
+    // SAFETY: slice is valid — but nothing established AVX2 support,
+    // which is exactly what this fixture is about.
+    unsafe { kernel(xs) }
+}

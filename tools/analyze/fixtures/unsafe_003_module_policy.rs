@@ -1,0 +1,10 @@
+// expect: UNSAFE-003
+// Perfectly documented unsafe — in a module nobody vetted for unsafe.
+// The module policy is the point: unsafe stays corralled in the
+// allowlisted files where reviewers know to look.
+
+fn read_last(xs: &[i64]) -> i64 {
+    // SAFETY: the caller guarantees xs is non-empty, so len() - 1 is a
+    // valid in-bounds offset from the base pointer.
+    unsafe { *xs.as_ptr().add(xs.len() - 1) }
+}

@@ -1,0 +1,241 @@
+"""Rust micro-lexer for the concurrency analyzer.
+
+Shares the philosophy (and the blanking technique) of the lexer in
+``tools/verify.py`` but is deliberately standalone: the analyzer must
+keep working even when verify.py's internals move, and it needs two
+extra products the gate does not — a *flat* view of each file (newlines
+replaced by spaces so regexes cross statement-wrapping line breaks while
+offsets still map back to real lines) and per-function body extraction
+with a brace-depth array for guard-lifetime tracking.
+
+Everything downstream operates on ``stripped`` text: comments, string
+literals, char literals and raw strings blanked with spaces (newlines
+preserved, quote *delimiters* kept so a blanked argument can never read
+as empty parens — `.join(", ")` must not look like `.join()`), then
+every ``#[cfg(test)]``-gated block blanked the same way. The *original* source is kept alongside for the one pass that needs
+comments — the SAFETY-comment audit.
+"""
+
+import os
+import re
+from collections import namedtuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+# A parsed source file. `stripped` has comments/strings/test blocks
+# blanked; `flat` is `stripped` with newlines turned into spaces (same
+# length, so any offset is valid in both); `src_lines` is the original
+# source split into lines (for SAFETY-comment lookup and allowlist
+# fragment matching).
+SourceFile = namedtuple("SourceFile", "rel stripped flat src_lines")
+
+# One function item: name, file, 1-based line of the `fn` keyword, and
+# the [body_start, body_end) offsets of its brace-delimited body within
+# the file's stripped text (body_start points *at* the opening brace).
+Fn = namedtuple("Fn", "name rel line body_start body_end")
+
+
+def _raw_string_at(src, i):
+    m = re.match(r'(?:r|br)(#*)"', src[i:])
+    if not m:
+        return None
+    if i > 0 and (src[i - 1].isalnum() or src[i - 1] == "_"):
+        return None
+    return (len(m.group(1)), i + m.end())
+
+
+def strip_tokens(src):
+    """Blank comments, string/char literals and raw strings (spaces for
+    removed spans, newlines preserved). Lexical *errors* are not this
+    tool's business — tools/verify.py gates them; here a malformed file
+    simply yields best-effort blanked text."""
+    out = []
+    i, n = 0, len(src)
+    while i < n:
+        c = src[i]
+        nxt = src[i + 1] if i + 1 < n else ""
+        if c == "\n":
+            out.append(c)
+            i += 1
+        elif c == "/" and nxt == "/":
+            while i < n and src[i] != "\n":
+                out.append(" ")
+                i += 1
+        elif c == "/" and nxt == "*":
+            depth = 1
+            out.append("  ")
+            i += 2
+            while i < n and depth:
+                if src.startswith("/*", i):
+                    depth += 1
+                    out.append("  ")
+                    i += 2
+                elif src.startswith("*/", i):
+                    depth -= 1
+                    out.append("  ")
+                    i += 2
+                else:
+                    out.append("\n" if src[i] == "\n" else " ")
+                    i += 1
+        elif c in "rb" and _raw_string_at(src, i):
+            _, j = _raw_string_at(src, i)
+            hashes = _raw_string_at(src, i)[0]
+            close = '"' + "#" * hashes
+            end = src.find(close, j)
+            end = n if end == -1 else end + len(close)
+            for k in range(i, end):
+                if src[k] == "\n":
+                    out.append("\n")
+                elif k in (j - 1, end - 1 - hashes) and src[k] == '"':
+                    out.append('"')
+                else:
+                    out.append(" ")
+            i = end
+        elif c == '"' or (c == "b" and nxt == '"'):
+            start = i
+            i += 2 if c == "b" else 1
+            while i < n:
+                if src[i] == "\\":
+                    i += 2
+                elif src[i] == '"':
+                    i += 1
+                    break
+                else:
+                    i += 1
+            stop = min(i, n)
+            for k in range(start, stop):
+                if src[k] == "\n":
+                    out.append("\n")
+                elif src[k] == '"' and (k <= start + 1 or k == stop - 1):
+                    out.append('"')
+                else:
+                    out.append(" ")
+        elif c == "'":
+            m = re.match(r"'(\\.[^']*|[^'\\])'", src[i:])
+            if m:
+                out.append("'" + " " * (m.end() - 2) + "'")
+                i += m.end()
+            else:
+                out.append(c)
+                i += 1
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def blank_test_blocks(stripped):
+    """Blank the brace-matched block following every ``#[cfg(test)]``
+    (same technique as tools/verify.py): test-only code must not feed
+    the lock graph — tests intentionally poison mutexes, spawn bare
+    threads, etc."""
+    out = list(stripped)
+    for m in re.finditer(r"#\s*\[\s*cfg\s*\(\s*test\s*\)\s*\]", stripped):
+        i = stripped.find("{", m.end())
+        if i == -1:
+            continue
+        depth, j = 0, i
+        while j < len(stripped):
+            if stripped[j] == "{":
+                depth += 1
+            elif stripped[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        for k in range(i, min(j + 1, len(stripped))):
+            if out[k] != "\n":
+                out[k] = " "
+    return "".join(out)
+
+
+def parse_file(path, rel):
+    """Read + lex one file into a SourceFile."""
+    src = open(path, encoding="utf-8").read()
+    stripped = blank_test_blocks(strip_tokens(src))
+    flat = stripped.replace("\n", " ")
+    return SourceFile(rel, stripped, flat, src.splitlines())
+
+
+def line_of(text, offset):
+    """1-based line number of `offset` in `text` (works on stripped or
+    flat text interchangeably — they are the same length)."""
+    return text.count("\n", 0, offset) + 1
+
+
+_FN_RE = re.compile(
+    r"(?:^|[^\w#])fn\s+([A-Za-z_]\w*)\s*(?:<[^>{};]*>)?\s*\(", re.S
+)
+
+
+def functions(sf):
+    """Extract every `fn` item with a brace body from a SourceFile.
+
+    Walks `fn NAME ... (` matches, skips the signature to the first `{`
+    at signature level (not inside the parameter list or a where-clause
+    bound's braces — Rust signatures cannot contain `{` before the body
+    except in const generics, which this tree does not use), then brace-
+    matches the body. Trait-method *declarations* (`fn f(...);`) have no
+    body and are skipped.
+    """
+    out = []
+    text = sf.stripped
+    n = len(text)
+    for m in _FN_RE.finditer(text):
+        name = m.group(1)
+        # find the parameter list's closing paren
+        i = m.end() - 1  # at '('
+        depth = 0
+        while i < n:
+            if text[i] == "(":
+                depth += 1
+            elif text[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            i += 1
+        # scan to body '{' or a ';' that ends a bodyless declaration
+        j = i + 1
+        while j < n and text[j] not in "{;":
+            j += 1
+        if j >= n or text[j] == ";":
+            continue
+        # brace-match the body
+        depth, k = 0, j
+        while k < n:
+            if text[k] == "{":
+                depth += 1
+            elif text[k] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            k += 1
+        out.append(Fn(name, sf.rel, line_of(text, m.start(1)), j, min(k + 1, n)))
+    return out
+
+
+def depth_array(text, start, end):
+    """Brace depth at every offset in [start, end), relative to `start`
+    (depth *before* processing the character at that offset). Used to
+    scope guard lifetimes to their enclosing block."""
+    depths = [0] * (end - start)
+    d = 0
+    for i in range(start, end):
+        depths[i - start] = d
+        if text[i] == "{":
+            d += 1
+        elif text[i] == "}":
+            d -= 1
+    return depths
+
+
+def rust_sources(root):
+    """Every .rs file under `root` (absolute), sorted by relative path
+    for deterministic output."""
+    out = []
+    for dirpath, _, files in os.walk(root):
+        for f in files:
+            if f.endswith(".rs"):
+                full = os.path.join(dirpath, f)
+                out.append((os.path.relpath(full, REPO).replace(os.sep, "/"), full))
+    return sorted(out)

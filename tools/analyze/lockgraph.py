@@ -1,0 +1,479 @@
+"""Lock-order pass: RACE-001/002/003.
+
+Model
+-----
+* A *lock* is a struct field declared `name: Mutex<..>` / `RwLock<..>`;
+  a `Condvar` field is tracked separately for wait-site resolution.
+  Lock identity is the field name qualified by the declaring file's stem
+  (`shard.state`); a field name declared in several files collapses to
+  the bare name only when an acquisition can't be attributed (merging is
+  conservative: it can add edges, never hide them).
+* A *guard* is born at `let g = lock_clean(&path.field)` /
+  `let g = path.field.lock()...;` (with a small set of adapter calls
+  like `.unwrap()` / `.unwrap_or_else(..)` / `.ok()` tolerated between
+  the acquisition and the `;`), and dies at `drop(g)` or when its
+  enclosing brace block closes — whichever comes first. An acquisition
+  that is *not* such a binding is a transient: held to the end of its
+  statement.
+* Condvar waits (`g = cv.wait(g)`, `let (g2, ..) = cv.wait_timeout(g,
+  ..)`) transfer the guard: the result binding guards the same lock.
+* `try_lock`/`try_read`/`try_write` guards are non-blocking: they can't
+  participate in a deadlock cycle as the *waiting* side and holding one
+  across a long call is the documented fallback pattern (the interp
+  scratch pool), so they are exempt from RACE-001 targets and RACE-003
+  sources — but they still count as *held* when computing what a
+  blocking acquisition waits behind.
+
+Rules
+-----
+RACE-001  cycle in the inter-procedural acquired-while-held graph
+          (potential deadlock).
+RACE-002  a lock held across a `Condvar` wait that guards a *different*
+          lock (the sleeping thread keeps the extra lock for the whole
+          wait).
+RACE-003  a blocking guard held across a long/blocking call —
+          `Backend::execute`/`execute_batch`, `thread::scope`,
+          `.join()`, `.recv()`/`.recv_timeout()`, `thread::sleep` —
+          directly or transitively through the call graph.
+
+What this pass can prove: every *textual* acquisition order and every
+guard lifetime that follows the binding idioms above. What it cannot:
+aliasing through references, guards smuggled through struct fields or
+returned from functions, trait-object dispatch narrower than
+"every fn with that bare name and matching self-ness".
+"""
+
+import re
+from collections import defaultdict, namedtuple
+
+from . import Finding
+from .lexer import depth_array, line_of
+
+DECL_RE = re.compile(
+    r"(?:^|[({,\n]\s*)(?:pub(?:\s*\([^)]*\))?\s+)?([a-z_]\w*)\s*:\s*"
+    r"((?:\w+::)*)(Mutex|RwLock|Condvar)\b(?!\s*::)"
+)
+ACQ_RE = re.compile(
+    r"(?:\block_clean\s*\(\s*&?\s*(?P<lc>[\w.]+)\s*\))"
+    r"|(?:(?<![\w.])(?P<recv>[\w.]+)\."
+    r"(?P<meth>try_lock|try_read|try_write|lock|read|write)\s*\(\s*\))"
+)
+WAIT_RE = re.compile(
+    r"(?P<cv>[\w.]+)\."
+    r"(?P<wm>wait_timeout_while|wait_timeout|wait_while|wait)\s*\(\s*(?P<g>\w+)\b"
+)
+DROP_RE = re.compile(r"(?<![\w.])drop\s*\(\s*(\w+)\s*\)")
+# `!` must stay out of the lookbehind: `if !flush_ready(..)` is a
+# negated call, not a macro (a macro's `!` follows the name, where it
+# already breaks the `name(` adjacency this regex requires).
+CALL_RE = re.compile(r"(?<!\w)([a-z_]\w*)\s*(?:::\s*<[^>(]*>\s*)?\(")
+ADAPTER_RE = re.compile(r"\s*\.\s*(unwrap|expect|unwrap_or_else|ok|map_err)\s*\(")
+
+# Long/blocking calls a *blocking* guard must not be held across.
+MARKERS = [
+    ("Backend::execute", re.compile(r"\.execute\s*(?:::\s*<[^>(]*>\s*)?\(")),
+    ("Backend::execute_batch", re.compile(r"\.execute_batch\s*\(")),
+    ("thread::scope", re.compile(r"thread\s*::\s*scope\s*\(")),
+    ("JoinHandle::join", re.compile(r"\.join\s*\(\s*\)")),
+    ("channel recv", re.compile(r"\.recv(?:_timeout)?\s*\(")),
+    ("thread::sleep", re.compile(r"thread\s*::\s*sleep\s*\(")),
+]
+
+# Method names that are lock/wait machinery, not user calls.
+NOT_CALLEES = {
+    "lock", "read", "write", "try_lock", "try_read", "try_write",
+    "wait", "wait_timeout", "wait_while", "wait_timeout_while",
+    "lock_clean", "drop",
+}
+
+BLOCKING_METHS = {"lock", "read", "write"}
+
+Interval = namedtuple("Interval", "lock start end blocking line")
+
+
+def _last_component(path_expr):
+    return path_expr.rstrip(".").split(".")[-1]
+
+
+def _stem(rel):
+    return rel.rsplit("/", 1)[-1][:-3]
+
+
+def _consume_adapters(flat, i, limit):
+    while True:
+        m = ADAPTER_RE.match(flat, i, limit)
+        if not m:
+            return i
+        j = m.end() - 1  # at '('
+        depth = 0
+        while j < limit:
+            if flat[j] == "(":
+                depth += 1
+            elif flat[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        i = j + 1
+
+
+class FnInfo:
+    def __init__(self, fn, sf):
+        self.fn = fn
+        self.sf = sf
+        self.intervals = []   # Interval list (guards + transients)
+        self.acquisitions = []  # (lock, offset, blocking)
+        self.waits = []       # (cv_lockid, offset, guarded_lock)
+        self.calls = []       # (name, offset, is_method)
+        self.markers = []     # (marker_name, offset)
+        self.locks_used = set()
+        self.marker_reach = set()  # marker names reachable (self + callees)
+
+
+def collect_decls(sources):
+    """(lock_decls, condvar_decls): name -> set of declaring rel paths."""
+    locks, condvars = defaultdict(set), defaultdict(set)
+    for sf in sources:
+        for m in DECL_RE.finditer(sf.stripped):
+            name, kind = m.group(1), m.group(3)
+            (condvars if kind == "Condvar" else locks)[name].add(sf.rel)
+    return locks, condvars
+
+
+def _resolver(decls):
+    def resolve(name, rel):
+        files = decls.get(name)
+        if not files:
+            return None
+        if rel in files:
+            return "%s.%s" % (_stem(rel), name)
+        if len(files) == 1:
+            return "%s.%s" % (_stem(next(iter(files))), name)
+        return name  # ambiguous: merged node
+    return resolve
+
+
+def build_fn_infos(sources, fns_by_file, resolve_lock, resolve_cv, fn_names):
+    """Extract per-function events. `fn_names` maps bare name ->
+    {"method": bool} describing whether any fn with that name is a
+    method / free fn (for call-site resolution)."""
+    infos = []
+    for sf in sources:
+        for fn in fns_by_file[sf.rel]:
+            info = FnInfo(fn, sf)
+            flat, bs, be = sf.flat, fn.body_start, fn.body_end
+            depths = depth_array(sf.stripped, bs, be)
+            guards = defaultdict(list)  # name -> [Interval index] (shadowing)
+
+            def block_end(offset):
+                d = depths[offset - bs]
+                for i in range(offset + 1, be):
+                    if depths[i - bs] < d:
+                        return i
+                return be
+
+            # -- acquisitions (guards + transients)
+            for m in ACQ_RE.finditer(flat, bs, be):
+                target = m.group("lc") or m.group("recv")
+                meth = m.group("meth")
+                lock = resolve_lock(_last_component(target), sf.rel)
+                if lock is None:
+                    continue
+                blocking = meth is None or meth in BLOCKING_METHS
+                info.acquisitions.append((lock, m.start(), blocking))
+                info.locks_used.add(lock)
+                after = _consume_adapters(flat, m.end(), be)
+                bind = re.search(
+                    r"let\s+(?:mut\s+)?(\w+)\s*=\s*\Z",
+                    flat[max(bs, m.start() - 60):m.start()],
+                )
+                if bind and bind.group(1) != "_" and re.match(r"\s*;", flat[after:after + 4]):
+                    # `let _ = lock()` drops immediately in Rust, so `_`
+                    # falls through to the transient branch below.
+                    end = block_end(m.start())
+                    guards[bind.group(1)].append(len(info.intervals))
+                    info.intervals.append(
+                        Interval(lock, m.start(), end, blocking,
+                                 line_of(sf.stripped, m.start()))
+                    )
+                else:
+                    semi = flat.find(";", m.end(), be)
+                    end = semi if semi != -1 else be
+                    info.intervals.append(
+                        Interval(lock, m.start(), end, blocking,
+                                 line_of(sf.stripped, m.start()))
+                    )
+
+            # -- condvar waits: RACE-002 sites + guard transfer
+            for m in WAIT_RE.finditer(flat, bs, be):
+                cv = resolve_cv(_last_component(m.group("cv")), sf.rel)
+                if cv is None:
+                    continue
+                gname = m.group("g")
+                idxs = guards.get(gname) or []
+                # the innermost live binding at the wait site, else the
+                # lexically latest one before it
+                live = [i for i in idxs
+                        if info.intervals[i].start < m.start() <= info.intervals[i].end]
+                idx = live[-1] if live else (idxs[-1] if idxs else None)
+                guarded = info.intervals[idx].lock if idx is not None else None
+                info.waits.append((cv, m.start(), guarded))
+                # transfer: `g2 = cv.wait(g)` / `let (g2, ..) = cv.wait_timeout(g, ..)`
+                head = flat[max(bs, m.start() - 60):m.start()]
+                tgt = re.search(r"(?:let\s+(?:mut\s+)?\(?\s*)?(\w+)\s*(?:,[^)=]*\)?)?\s*=\s*\Z", head)
+                if tgt and tgt.group(1) != "_" and guarded is not None:
+                    end = block_end(m.start())
+                    guards[tgt.group(1)].append(len(info.intervals))
+                    info.intervals.append(
+                        Interval(guarded, m.start(), end, True,
+                                 line_of(sf.stripped, m.start()))
+                    )
+
+            # -- explicit drops end every live same-named guard early
+            for m in DROP_RE.finditer(flat, bs, be):
+                for idx in guards.get(m.group(1), []):
+                    iv = info.intervals[idx]
+                    if iv.start < m.start() < iv.end:
+                        info.intervals[idx] = iv._replace(end=m.start())
+
+            # -- long-call markers
+            for mname, mre in MARKERS:
+                for m in mre.finditer(flat, bs, be):
+                    info.markers.append((mname, m.start()))
+
+            # -- calls into the local fn table
+            for m in CALL_RE.finditer(flat, bs, be):
+                name = m.group(1)
+                if name in NOT_CALLEES or name not in fn_names:
+                    continue
+                is_method = m.start() > 0 and flat[m.start() - 1] == "."
+                info.calls.append((name, m.start(), is_method))
+
+            infos.append(info)
+    return infos
+
+
+def analyze(sources, fns_by_file):
+    lock_decls, cv_decls = collect_decls(sources)
+    resolve_lock = _resolver(lock_decls)
+    resolve_cv = _resolver(cv_decls)
+
+    # bare fn name -> [FnInfo]; also whether each named fn is a method
+    # (takes self) so `.name(` only resolves to methods and `name(` /
+    # `path::name(` only to free fns — this keeps e.g. `engine.run(..)`
+    # (a &self method) from conflating with free `apps::mm::run(..)`.
+    fn_names = set()
+    for sf in sources:
+        for fn in fns_by_file[sf.rel]:
+            fn_names.add(fn.name)
+    infos = build_fn_infos(sources, fns_by_file, resolve_lock, resolve_cv, fn_names)
+
+    by_name = defaultdict(list)
+    for info in infos:
+        by_name[info.fn.name].append(info)
+        sf = info.sf
+        # method-ness: `self` in the parameter list right after the name
+        sig_start = sf.flat.find("(", sf.flat.rfind("fn", 0, info.fn.body_start))
+        sig = sf.flat[sig_start:sf.flat.find(")", sig_start) + 1] if sig_start != -1 else ""
+        info.is_method = bool(re.search(r"(?:^|[(&\s])(?:mut\s+)?self\b", sig))
+
+    def callees(info):
+        out = []
+        for name, off, is_method in info.calls:
+            for cal in by_name.get(name, []):
+                if cal is info:
+                    continue
+                if is_method == cal.is_method:
+                    out.append((cal, name, off))
+        return out
+
+    # -- fixpoints: transitive locks_used and marker reachability
+    for info in infos:
+        info.marker_reach = {m for m, _ in info.markers}
+    changed = True
+    while changed:
+        changed = False
+        for info in infos:
+            for cal, _, _ in callees(info):
+                if not cal.locks_used <= info.locks_used:
+                    info.locks_used |= cal.locks_used
+                    changed = True
+                if not cal.marker_reach <= info.marker_reach:
+                    info.marker_reach |= cal.marker_reach
+                    changed = True
+
+    findings = []
+    # Edges of the acquired-while-held graph: lock A -> lock B with the
+    # site where B was acquired (or the call through which it will be).
+    edges = defaultdict(list)  # (A, B) -> [(rel, line, how, b_blocking)]
+    ever_blocking = defaultdict(bool)
+    for info in infos:
+        for lock, _, blocking in info.acquisitions:
+            ever_blocking[lock] |= blocking
+
+    for info in infos:
+        sf, fn = info.sf, info.fn
+
+        def held_at(off):
+            return {iv.lock for iv in info.intervals if iv.start < off <= iv.end}
+
+        for lock, off, blocking in info.acquisitions:
+            for held in held_at(off):
+                if held != lock:
+                    edges[(held, lock)].append(
+                        (sf.rel, line_of(sf.stripped, off), "acquired directly", blocking)
+                    )
+        for cal, name, off in callees(info):
+            held = held_at(off)
+            if not held:
+                continue
+            for lock in cal.locks_used:
+                if lock not in held:
+                    for h in held:
+                        edges[(h, lock)].append(
+                            (sf.rel, line_of(sf.stripped, off),
+                             "via call to %s()" % name, ever_blocking[lock])
+                        )
+
+        # RACE-002: other locks held across a condvar wait
+        for cv, off, guarded in info.waits:
+            if guarded is None:
+                continue
+            for h in held_at(off):
+                if h != guarded:
+                    findings.append(Finding(
+                        "RACE-002", sf.rel, line_of(sf.stripped, off),
+                        "lock `%s` held across `%s` wait (which guards `%s`) — "
+                        "the sleeping thread keeps `%s` locked for the whole wait"
+                        % (h, cv, guarded, h),
+                        _src_line(sf, line_of(sf.stripped, off)),
+                    ))
+
+        # RACE-003: blocking guard held across a long/blocking call
+        seen = set()
+        for iv in info.intervals:
+            if not iv.blocking:
+                continue
+            for mname, off in info.markers:
+                if iv.start < off <= iv.end:
+                    key = (iv.lock, off)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    findings.append(Finding(
+                        "RACE-003", sf.rel, line_of(sf.stripped, off),
+                        "lock `%s` held across %s — blocking/long call under a lock"
+                        % (iv.lock, mname),
+                        _src_line(sf, line_of(sf.stripped, off)),
+                    ))
+            for cal, name, off in callees(info):
+                if iv.start < off <= iv.end and cal.marker_reach:
+                    key = (iv.lock, off, name)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    findings.append(Finding(
+                        "RACE-003", sf.rel, line_of(sf.stripped, off),
+                        "lock `%s` held across call to %s() which reaches %s"
+                        % (iv.lock, name, sorted(cal.marker_reach)[0]),
+                        _src_line(sf, line_of(sf.stripped, off)),
+                    ))
+
+    # RACE-001: cycles among blocking edges
+    adj = defaultdict(set)
+    for (a, b), sites in edges.items():
+        if any(blk for (_, _, _, blk) in sites):
+            adj[a].add(b)
+    for cyc in _cycles(adj):
+        sites = []
+        for a, b in zip(cyc, cyc[1:] + cyc[:1]):
+            rel, line, how, _ = sorted(edges[(a, b)])[0]
+            sites.append("%s:%d (%s -> %s, %s)" % (rel, line, a, b, how))
+        rel0, line0 = sorted(edges[(cyc[0], cyc[1 % len(cyc)])])[0][:2]
+        findings.append(Finding(
+            "RACE-001", rel0, line0,
+            "potential deadlock: lock-order cycle %s; edges: %s"
+            % (" -> ".join(cyc + [cyc[0]]), "; ".join(sites)),
+            "",
+        ))
+    return findings
+
+
+def _src_line(sf, line):
+    return sf.src_lines[line - 1] if 0 < line <= len(sf.src_lines) else ""
+
+
+def _cycles(adj):
+    """Elementary cycles, canonicalized (rotated to the smallest node,
+    deduped, sorted) — the graphs here are tiny, so a simple DFS per
+    strongly-connected component is plenty."""
+    # Tarjan SCCs, iteratively.
+    index, low, on, stack, sccs = {}, {}, set(), [], []
+    counter = [0]
+
+    def strongconnect(v):
+        work = [(v, iter(sorted(adj.get(v, ()))))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on.add(w)
+                    work.append((w, iter(sorted(adj.get(w, ())))))
+                    advanced = True
+                    break
+                elif w in on:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                scc = []
+                while True:
+                    w = stack.pop()
+                    on.discard(w)
+                    scc.append(w)
+                    if w == node:
+                        break
+                sccs.append(scc)
+
+    nodes = set(adj) | {b for bs in adj.values() for b in bs}
+    for v in sorted(nodes):
+        if v not in index:
+            strongconnect(v)
+
+    out = []
+    for scc in sccs:
+        members = set(scc)
+        if len(scc) == 1:
+            v = scc[0]
+            if v in adj.get(v, ()):
+                out.append([v])
+            continue
+        # one representative cycle through the SCC: walk greedily from
+        # the smallest node until it closes.
+        start = min(scc)
+        path, seen = [start], {start}
+        node = start
+        while True:
+            nxts = sorted(n for n in adj.get(node, ()) if n in members)
+            nxt = next((n for n in nxts if n == start), None)
+            if nxt is None:
+                nxt = next((n for n in nxts if n not in seen), None)
+            if nxt is None or nxt == start:
+                break
+            path.append(nxt)
+            seen.add(nxt)
+            node = nxt
+        out.append(path)
+    return sorted(out)

@@ -1,0 +1,114 @@
+"""Shared-state pass: RACE-010/011/012.
+
+RACE-010  `static mut` — mutable global state; every access is unsafe
+          and unsynchronized by construction. Use an atomic, a
+          `Mutex`, or `OnceLock`.
+RACE-011  a bare `Mutex`/`RwLock`/`Condvar` local (not wrapped in
+          `Arc::new` on the same binding) moved into a `thread::spawn`/
+          `scope.spawn` closure — the "shared" lock becomes private to
+          one thread, which is virtually always a bug (nothing else
+          can ever contend it, and the state it guards is lost).
+RACE-012  `Ordering::Relaxed` anywhere except a pure counter: allowed
+          forms are `.load(Ordering::Relaxed)` and
+          `.fetch_add/.fetch_sub(<integer literal>, Ordering::Relaxed)`.
+          A Relaxed store/swap/CAS (or a data-dependent fetch) is a
+          publication attempt with no ordering — use Acquire/Release
+          (or SeqCst) instead.
+
+Can prove: the textual pattern. Cannot prove: locks smuggled into
+spawns through struct fields, or that a flagged Relaxed is benign on
+x86 (it may be — the rule is about portable intent).
+"""
+
+import re
+
+from . import Finding
+from .lexer import line_of
+
+STATIC_MUT_RE = re.compile(r"\bstatic\s+mut\b")
+BARE_LOCK_LET = re.compile(
+    r"let\s+(?:mut\s+)?(\w+)\s*(?::[^=;]+)?=\s*"
+    r"(?:(?:std\s*::\s*)?sync\s*::\s*)?(Mutex|RwLock|Condvar)\s*::\s*new\s*\("
+)
+SPAWN_RE = re.compile(r"(?:\bthread\s*::\s*|\.\s*)spawn\s*\(")
+RELAXED_RE = re.compile(r"Ordering\s*::\s*Relaxed")
+RELAXED_OK = [
+    re.compile(r"\.\s*load\s*\(\s*Ordering\s*::\s*Relaxed\s*\)"),
+    re.compile(
+        r"\.\s*fetch_(?:add|sub)\s*\(\s*\d+(?:_\w+)?\s*,\s*Ordering\s*::\s*Relaxed\s*\)"
+    ),
+]
+
+
+def _balanced_paren_span(flat, open_idx, limit):
+    depth, j = 0, open_idx
+    while j < limit:
+        if flat[j] == "(":
+            depth += 1
+        elif flat[j] == ")":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+        j += 1
+    return limit
+
+
+def analyze(sources, fns_by_file):
+    findings = []
+    for sf in sources:
+        # RACE-010: static mut anywhere in the file
+        for m in STATIC_MUT_RE.finditer(sf.stripped):
+            line = line_of(sf.stripped, m.start())
+            findings.append(Finding(
+                "RACE-010", sf.rel, line,
+                "`static mut` global — unsynchronized mutable state; use an "
+                "atomic, a Mutex, or OnceLock",
+                _src(sf, line),
+            ))
+
+        # RACE-012: non-counter Relaxed orderings
+        ok_spans = []
+        for pat in RELAXED_OK:
+            ok_spans += [(m.start(), m.end()) for m in pat.finditer(sf.flat)]
+        for m in RELAXED_RE.finditer(sf.flat):
+            if any(s <= m.start() < e for s, e in ok_spans):
+                continue
+            line = line_of(sf.stripped, m.start())
+            findings.append(Finding(
+                "RACE-012", sf.rel, line,
+                "Ordering::Relaxed outside a pure counter (only "
+                "`.load(Relaxed)` and `.fetch_add/sub(<literal>, Relaxed)` "
+                "are counter-shaped) — publication needs Acquire/Release",
+                _src(sf, line),
+            ))
+
+        # RACE-011: bare lock locals moved into spawn closures
+        for fn in fns_by_file[sf.rel]:
+            flat, bs, be = sf.flat, fn.body_start, fn.body_end
+            bare = {}  # local name -> offset of its bare-lock binding
+            for m in BARE_LOCK_LET.finditer(flat, bs, be):
+                bare[m.group(1)] = m.start()
+            if not bare:
+                continue
+            for m in SPAWN_RE.finditer(flat, bs, be):
+                open_idx = m.end() - 1
+                end = _balanced_paren_span(flat, open_idx, be)
+                arg = flat[open_idx:end]
+                if not re.search(r"\bmove\b", arg[:160]):
+                    continue
+                for name, decl_off in sorted(bare.items()):
+                    if decl_off < m.start() and re.search(r"\b%s\b" % re.escape(name), arg):
+                        line = line_of(sf.stripped, m.start())
+                        findings.append(Finding(
+                            "RACE-011", sf.rel, line,
+                            "bare `%s` (a lock not wrapped in Arc) moved into "
+                            "a spawned thread — the lock becomes private to "
+                            "that thread; share it via Arc::new(..) instead"
+                            % name,
+                            _src(sf, line),
+                        ))
+    return findings
+
+
+def _src(sf, line):
+    return sf.src_lines[line - 1] if 0 < line <= len(sf.src_lines) else ""

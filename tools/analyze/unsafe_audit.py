@@ -1,0 +1,212 @@
+"""Unsafe-contract pass: UNSAFE-001/002/003.
+
+UNSAFE-001  every `unsafe fn` / `unsafe impl` / `unsafe {}` block must
+            carry a SAFETY comment: a `// SAFETY:` / `// Safety:` line
+            (or `/// # Safety` doc section) in the contiguous run of
+            comments/attributes immediately above the `unsafe` token
+            (or on the same line). Matched case-insensitively on the
+            word "safety" so house styles don't churn.
+UNSAFE-002  a `#[target_feature]` fn may only be *called* from (a) a fn
+            that checks `is_x86_feature_detected!` / `cfg!(target_
+            feature ...)` itself, (b) a fn that calls such a guard fn
+            (transitively — `available()` counts), or (c) another
+            `#[target_feature]` fn (already inside the contract).
+            Everything else is an unguarded ISA call: UB on a CPU
+            without the feature.
+UNSAFE-003  `unsafe` appears only in modules vetted into
+            `tools/unsafe_allowlist.txt` (path-fragment matched; a
+            stale entry — matching no file that still contains
+            `unsafe` — is an error, same contract as the unwrap
+            allowlist).
+
+Can prove: the textual presence of the contract comment and of a
+feature-detection guard somewhere in the calling fn. Cannot prove: that
+the comment is *true*, that the guard dominates the call on every
+control-flow path, or anything about unsafe reached through function
+pointers.
+"""
+
+import re
+
+from . import Finding
+from .lexer import line_of
+
+UNSAFE_RE = re.compile(r"\bunsafe\b\s*(fn|impl|trait|\{)?")
+TF_ATTR_RE = re.compile(r"#\s*\[\s*target_feature[^\]]*\]")
+GUARD_RE = re.compile(r"is_x86_feature_detected\s*!|cfg\s*!\s*\(\s*target_feature")
+SAFETY_RE = re.compile(r"safety", re.I)
+# A call to `%s`: optional path prefix, then the name directly followed
+# by `(`. The lookbehind must NOT exclude `!` — `if !available()` is a
+# negated *call*; macro invocations are excluded by the `!` that would
+# sit between the name and the paren instead.
+CALL_NAME = r"(?<!\w)(?:\w+\s*::\s*)*%s\s*\("
+
+
+def _unsafe_spans(sf):
+    """[start, end) offsets of every `unsafe {}` block body and
+    `unsafe fn` body in `sf.stripped`. A #[target_feature] fn is an
+    `unsafe fn`, so a *call to it* can only occur inside one of these
+    spans — a same-named call in safe code is a safe wrapper."""
+    spans = []
+    text = sf.stripped
+    n = len(text)
+    for m in UNSAFE_RE.finditer(text):
+        kind = m.group(1)
+        if kind == "{":
+            i = m.end() - 1
+        elif kind == "fn":
+            i = text.find("{", m.end())
+            semi = text.find(";", m.end())
+            if i == -1 or (semi != -1 and semi < i):
+                continue  # bodyless trait declaration
+        else:
+            continue
+        depth, j = 0, i
+        while j < n:
+            if text[j] == "{":
+                depth += 1
+            elif text[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        spans.append((i, min(j + 1, n)))
+    return spans
+
+
+def _has_safety_comment(sf, line):
+    """SAFETY marker on the unsafe line itself or in the contiguous
+    comment/attribute run directly above it (original source — comments
+    are exactly what this rule is about)."""
+    lines = sf.src_lines
+    if 0 < line <= len(lines) and SAFETY_RE.search(_comment_part(lines[line - 1])):
+        return True
+    i = line - 2  # 0-based index of the line above
+    while i >= 0:
+        s = lines[i].strip()
+        if s.startswith(("//", "#[", "#![")) or (s.startswith("pub") and "unsafe" in s):
+            if SAFETY_RE.search(s):
+                return True
+            i -= 1
+            continue
+        break
+    return False
+
+
+def _comment_part(line):
+    k = line.find("//")
+    return line[k:] if k != -1 else ""
+
+
+def analyze(sources, fns_by_file, allowlist_entries, allow_used):
+    findings = []
+
+    # --- per-file unsafe occurrences: UNSAFE-001 + UNSAFE-003
+    files_with_unsafe = []
+    for sf in sources:
+        hits = []
+        for m in UNSAFE_RE.finditer(sf.stripped):
+            kind = m.group(1)
+            if kind is None:
+                # `unsafe` in some position we don't classify (e.g. a
+                # fn-pointer type) — still unsafe surface for -003.
+                kind = "use"
+            hits.append((m.start(), kind))
+        if not hits:
+            continue
+        files_with_unsafe.append(sf.rel)
+        allowed = False
+        for frag, raw in allowlist_entries:
+            if frag in sf.rel:
+                allowed = True
+                allow_used.add(raw)
+        for off, kind in hits:
+            line = line_of(sf.stripped, off)
+            what = {"{": "unsafe block"}.get(kind, "unsafe " + kind)
+            if not allowed:
+                findings.append(Finding(
+                    "UNSAFE-003", sf.rel, line,
+                    "%s in a module not vetted for unsafe — fix it or add "
+                    "the module to tools/unsafe_allowlist.txt with a "
+                    "justification" % what,
+                    _src(sf, line),
+                ))
+            if not _has_safety_comment(sf, line):
+                findings.append(Finding(
+                    "UNSAFE-001", sf.rel, line,
+                    "%s without a SAFETY comment — state the invariant that "
+                    "makes it sound on the line(s) above" % what,
+                    _src(sf, line),
+                ))
+
+    # --- UNSAFE-002: #[target_feature] fns reached without a guard
+    tf_fns = set()   # (rel, name)
+    for sf in sources:
+        for m in TF_ATTR_RE.finditer(sf.stripped):
+            nm = re.search(r"fn\s+(\w+)", sf.stripped[m.end():m.end() + 300])
+            if nm:
+                tf_fns.add(nm.group(1))
+
+    if tf_fns:
+        all_fns = []
+        for sf in sources:
+            for fn in fns_by_file[sf.rel]:
+                body = sf.flat[fn.body_start:fn.body_end]
+                all_fns.append((sf, fn, body))
+        guarded = set()   # fn names containing a guard macro directly
+        for _, fn, body in all_fns:
+            if GUARD_RE.search(body):
+                guarded.add(fn.name)
+        # transitive: a fn that calls a guard fn is guarded
+        changed = True
+        while changed:
+            changed = False
+            for _, fn, body in all_fns:
+                if fn.name in guarded:
+                    continue
+                for g in list(guarded):
+                    if re.search(CALL_NAME % re.escape(g), body):
+                        guarded.add(fn.name)
+                        changed = True
+                        break
+        spans_by_rel = {}
+        for sf, fn, body in all_fns:
+            if fn.name in tf_fns:
+                continue  # TF-to-TF calls live inside the contract
+            if sf.rel not in spans_by_rel:
+                spans_by_rel[sf.rel] = _unsafe_spans(sf)
+            for t in sorted(tf_fns):
+                for m in re.finditer(CALL_NAME % re.escape(t), body):
+                    if fn.name in guarded:
+                        continue
+                    off = fn.body_start + m.start()
+                    # a TF fn is `unsafe fn`: callable only inside an
+                    # unsafe span — a match in safe code is a same-named
+                    # safe wrapper, not the kernel.
+                    if not any(a <= off < b for a, b in spans_by_rel[sf.rel]):
+                        continue
+                    line = line_of(sf.stripped, fn.body_start + m.start())
+                    findings.append(Finding(
+                        "UNSAFE-002", sf.rel, line,
+                        "#[target_feature] fn `%s` called from `%s`, which "
+                        "neither checks is_x86_feature_detected! nor calls a "
+                        "guard fn — UB on CPUs without the feature"
+                        % (t, fn.name),
+                        _src(sf, line),
+                    ))
+
+    # --- stale allowlist entries are errors (same contract as the
+    #     unwrap allowlist: the list must not rot)
+    for frag, raw in allowlist_entries:
+        if raw not in allow_used:
+            findings.append(Finding(
+                "UNSAFE-003", "tools/unsafe_allowlist.txt", 0,
+                "stale entry `%s` — no analyzed file matching it still "
+                "contains unsafe; remove it" % raw,
+                "",
+            ))
+    return findings
+
+
+def _src(sf, line):
+    return sf.src_lines[line - 1] if 0 < line <= len(sf.src_lines) else ""

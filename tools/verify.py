@@ -24,10 +24,15 @@ catches the mechanical breakage class that desk-checking misses:
      not declare (clippy/rustc would reject unexpected cfgs);
   7. leftover `todo!` / `unimplemented!` / `dbg!` in non-test code;
   8. `.unwrap()` / `.expect()` in non-test library code under
-     rust/src/coordinator/ and rust/src/api/ — a panic on the serving
-     path takes a worker thread (and every job queued behind it) down.
-     Vetted sites are enumerated in tools/unwrap_allowlist.txt as
-     `path:line-fragment` entries; stale entries are warnings.
+     rust/src/coordinator/, rust/src/api/ and rust/src/runtime/ — a
+     panic on the serving path takes a worker thread (and every job
+     queued behind it) down. Vetted sites are enumerated in
+     tools/unwrap_allowlist.txt as `path:line-fragment` entries; a
+     stale entry (matching no site) is an error so the list can't rot.
+
+The concurrency / unsafe-contract layer (lock-order graph, SAFETY
+comments, shared-state hygiene) lives in its own analyzer: see
+`tools/analyze` (`make race-gate`).
 
 Exit status: 0 clean, 1 findings. `--warn-only` downgrades to 0.
 """
@@ -439,7 +444,9 @@ def check_cfg_features(stripped, path, feats):
 
 UNWRAP_RE = re.compile(r"\.(unwrap|expect)\s*\(")
 # Modules where a panic unwinds a serving worker, not just a CLI run.
-UNWRAP_DIRS = ("rust/src/coordinator/", "rust/src/api/")
+# runtime/ joined the list when the worker pool + kernel tiers put it
+# on the serving path (every shard worker owns a Runtime).
+UNWRAP_DIRS = ("rust/src/coordinator/", "rust/src/api/", "rust/src/runtime/")
 UNWRAP_ALLOWLIST = os.path.join("tools", "unwrap_allowlist.txt")
 
 
@@ -579,11 +586,14 @@ def main():
         elif rel.startswith("rust/src"):
             errors += check_use_paths(stripped, rel, root_names)
 
+    # A stale entry is an error, not a warning: it means the vetted site
+    # changed (or vanished) and the justification no longer covers
+    # anything — the allowlist must not rot into a blanket waiver.
     for _, _, raw in allowlist:
         if raw not in allow_used:
-            warnings.append(
-                "%s: stale entry `%s` (no matching site)"
-                % (UNWRAP_ALLOWLIST, raw)
+            errors.append(
+                "%s: stale entry `%s` (no matching site) — remove it or "
+                "re-point it at the current line" % (UNWRAP_ALLOWLIST, raw)
             )
 
     for w in warnings:
